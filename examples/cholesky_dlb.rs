@@ -1,0 +1,23 @@
+//! The paper's headline experiment at full scale (DES): block Cholesky of
+//! N = 20 000 on a 2×5 process grid, DLB off vs on, with the §6
+//! calibration protocol and ASCII workload traces (Fig 4 left).
+//!
+//! Run: `cargo run --release --example cholesky_dlb`
+
+use ductr::experiments::fig4;
+
+fn main() -> anyhow::Result<()> {
+    let spec = &fig4::CASES[0]; // N=20000, P=10, 2×5
+    println!("running {} (DES, S/R = 40, δ = 10 ms) ...", spec.name);
+
+    let case = fig4::run_case(spec, 1)?;
+    println!("{}", case.render(10));
+
+    println!("calibrated W_T       : {}", case.calibrated_wt);
+    println!("makespan without DLB : {:.4} s", case.off.makespan);
+    println!("makespan with DLB    : {:.4} s", case.on.makespan);
+    println!("improvement          : {:+.2}%  (paper: 5–6%)", case.improvement() * 100.0);
+    println!("tasks migrated       : {}", case.on.counters.tasks_exported);
+    println!("pairing              : {}", case.on.counters.summary_line());
+    Ok(())
+}

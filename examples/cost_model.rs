@@ -1,0 +1,46 @@
+//! §4 cost-model explorer: when does migrating a task pay?
+//!
+//! Prints Q = (S/R)(D/F) for every task kind across block sizes, local vs
+//! remote completion times, and the W_T guideline the paper derives from Q.
+//!
+//! Run: `cargo run --release --example cost_model`
+
+use ductr::core::task::TaskKind;
+use ductr::dlb::costmodel::CostModel;
+
+fn main() {
+    // Rackham-like machine balance (paper §4): S/R = 40.
+    let mut model = CostModel::new(8.8e9, 2.2e8);
+    model.latency = 2e-6;
+
+    println!("machine: S = {:.1e} flop/s, R = {:.1e} doubles/s, S/R = {:.0}\n",
+        model.flops_per_sec, model.doubles_per_sec, model.s_over_r());
+
+    println!("{:<8} {:>7} {:>12} {:>12} {:>10} {:>9}", "kind", "block", "T_local", "T_remote", "Q", "W_T floor");
+    for kind in [TaskKind::Gemm, TaskKind::Syrk, TaskKind::Trsm, TaskKind::Potrf, TaskKind::Gemv] {
+        for b in [64u64, 256, 1024, 2500] {
+            let f = kind.flops_for_block(b);
+            let d = (model.q_kind(kind, b) * f as f64 / model.s_over_r()) as u64;
+            println!(
+                "{:<8} {:>7} {:>11.3}ms {:>11.3}ms {:>10.4} {:>9}",
+                kind.to_string(),
+                b,
+                model.local_time(f) * 1e3,
+                model.remote_time(f, d) * 1e3,
+                model.q_kind(kind, b),
+                model.wt_guideline(kind, b),
+            );
+        }
+        println!();
+    }
+
+    println!("paper's worked examples:");
+    println!(
+        "  gemm, D = 3m² (paper's count): Q = 60/m  → m=1000 gives {:.3}",
+        model.q(2 * 1000u64.pow(3), 3 * 1000 * 1000)
+    );
+    println!(
+        "  gemv, D = m²: Q = {:.1}  → \"20 tasks can be executed locally in the\nsame time as one task is migrated\"",
+        model.q(2 * 1000 * 1000, 1000 * 1000)
+    );
+}

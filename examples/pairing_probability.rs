@@ -1,0 +1,29 @@
+//! Fig 1 standalone: why 5 tries per round is enough.
+//!
+//! Prints the exact hypergeometric success probability of the randomized
+//! partner search (eq. 1), its Monte-Carlo validation over the actual
+//! implementation draw, and the P → ∞ asymptote the paper quotes.
+//!
+//! Run: `cargo run --release --example pairing_probability`
+
+use ductr::experiments::fig1;
+use ductr::prob::hypergeom::Hypergeometric;
+
+fn main() {
+    let fig = fig1::run(10, 10_000, 7);
+    println!("{}", fig.render_panel(10));
+    println!("{}", fig.render_panel(100));
+
+    println!("tries needed for ≥ 95% success at K = P/2 (the hardest mix):");
+    for &p in &[10u64, 100, 1000, 100_000] {
+        let n_needed = (1..=20)
+            .find(|&n| Hypergeometric::new(p, p / 2, n).success_probability() >= 0.95)
+            .expect("under 20 tries");
+        println!("  P = {p:>7}: n = {n_needed}");
+    }
+    println!(
+        "\nasymptote (P→∞, K=P/2): 1 − 2⁻ⁿ; n = 5 gives {:.4} — the paper's\n\
+         reason for fixing 5 tries per round.",
+        Hypergeometric::asymptotic_success(0.5, 5)
+    );
+}

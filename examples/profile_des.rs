@@ -1,0 +1,20 @@
+fn main() {
+    use ductr::cholesky::{self, ProcessGrid};
+    use ductr::config::{Config, Grid};
+    use ductr::sim::engine::SimEngine;
+    use std::sync::Arc;
+    let mut cfg = Config::default();
+    cfg.processes = 10;
+    cfg.grid = Some(Grid::new(2, 5));
+    cfg.nb = 12;
+    cfg.block = 1667;
+    cfg.dlb_enabled = true;
+    cfg.wt = 5;
+    cfg.validate().unwrap();
+    for _ in 0..50 {
+        let dag = cholesky::build(cfg.nb, cfg.block, ProcessGrid::new(cfg.effective_grid()));
+        let mut eng = SimEngine::from_config(&cfg, Arc::clone(&dag.graph));
+        let r = eng.run().unwrap();
+        std::hint::black_box(r.makespan);
+    }
+}

@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 model + L1 kernels + AOT lowering.
+
+Nothing in this package is imported at runtime; the Rust coordinator only
+consumes the HLO-text artifacts emitted by ``python -m compile.aot``.
+"""

@@ -1,0 +1,20 @@
+"""L1 Pallas kernels for the block Cholesky task types (+ §4's GEMV).
+
+Public surface re-exported here; the pure-jnp oracles live in ``ref``.
+"""
+
+from .factor import potrf, trsm  # noqa: F401
+from .update import gemm, gemv, syrk  # noqa: F401
+from . import ref  # noqa: F401
+from .common import DEFAULT_TILE_CAP, pick_tile  # noqa: F401
+
+__all__ = [
+    "potrf",
+    "trsm",
+    "syrk",
+    "gemm",
+    "gemv",
+    "ref",
+    "pick_tile",
+    "DEFAULT_TILE_CAP",
+]

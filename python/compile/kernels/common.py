@@ -1,0 +1,53 @@
+"""Shared helpers for the Pallas kernel layer (L1).
+
+Everything here is build-time only: kernels are AOT-lowered to HLO text by
+``compile/aot.py`` and executed from Rust via PJRT.  Pallas is always invoked
+with ``interpret=True`` — the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode (which lowers to plain HLO) is the portable
+path.  See DESIGN.md §3 for the TPU tiling rationale.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: Tile-size cap for the MXU-oriented tiling.  On a real TPU the MXU wants
+#: multiples of (8, 128) for f32; on the laptop-scale AOT shapes we cap at 64
+#: so that the common block sizes (32/64/128/256) tile evenly.
+DEFAULT_TILE_CAP = 64
+
+
+def pick_tile(n: int, cap: int = DEFAULT_TILE_CAP) -> int:
+    """Largest power-of-two divisor of ``n`` that is ``<= cap``.
+
+    Guarantees ``n % pick_tile(n) == 0`` so BlockSpecs tile exactly; falls
+    back to ``n`` itself when ``n`` has no power-of-two factor (odd sizes),
+    i.e. the kernel runs as a single tile.
+    """
+    if n <= 0:
+        raise ValueError(f"tile target must be positive, got {n}")
+    best = 1
+    t = 1
+    while t <= min(n, cap):
+        if n % t == 0:
+            best = t
+        t *= 2
+    if best == 1 and n <= cap:
+        return n
+    return best
+
+
+def supported_dtype(dtype) -> bool:
+    """Dtypes the kernels are tested against (f32 always; f64 when x64 on)."""
+    return jnp.dtype(dtype) in (jnp.dtype(jnp.float32), jnp.dtype(jnp.float64))
+
+
+def check_square(name: str, x) -> None:
+    if x.ndim != 2 or x.shape[0] != x.shape[1]:
+        raise ValueError(f"{name}: expected a square 2-D block, got {x.shape}")
+
+
+def check_same_shape(name: str, *xs) -> None:
+    shapes = {tuple(x.shape) for x in xs}
+    if len(shapes) != 1:
+        raise ValueError(f"{name}: blocks must share a shape, got {shapes}")

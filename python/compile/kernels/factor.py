@@ -1,0 +1,87 @@
+"""Sequential panel kernels: POTRF (unblocked Cholesky) and TRSM.
+
+Both operate on one VMEM-resident block — they are the latency-bound,
+inherently sequential kernels of a blocked factorization, so there is no
+grid: the whole block is a single Pallas invocation and the column recurrence
+runs as a ``lax.fori_loop`` inside the kernel.
+
+The column updates are written in masked-vector form (no data-dependent
+dynamic slices beyond a single column scatter), which keeps the interpret-mode
+lowering to plain HLO and maps onto the TPU VPU as full-lane vector ops.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _chol_unblocked(a):
+    """Cholesky–Banachiewicz with masked column updates.
+
+    Column j of L:  c = a[:, j] − L · (row j of L restricted to cols < j);
+    then l[j, j] = sqrt(c[j]) and l[i, j] = c[i] / l[j, j] for i > j.
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, l):
+        mask = (idx < j).astype(a.dtype)
+        lj = l[j, :] * mask  # row j of L, columns < j
+        c = a[:, j] - l @ lj
+        d = jnp.sqrt(c[j])
+        col = jnp.where(idx == j, d, jnp.where(idx > j, c / d, jnp.zeros_like(c)))
+        return l.at[:, j].set(col)
+
+    return lax.fori_loop(0, n, body, jnp.zeros_like(a))
+
+
+def _trsm_unblocked(l, b):
+    """Solve X·Lᵀ = B by forward substitution over columns of X.
+
+    x[:, j] = (b[:, j] − X[:, :j] · L[j, :j]ᵀ) / l[j, j]
+    """
+    n = l.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, x):
+        mask = (idx < j).astype(b.dtype)
+        lj = l[j, :] * mask
+        c = b[:, j] - x @ lj
+        return x.at[:, j].set(c / l[j, j])
+
+    return lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def _potrf_kernel(a_ref, l_ref):
+    l_ref[...] = _chol_unblocked(a_ref[...])
+
+
+def _trsm_kernel(l_ref, b_ref, x_ref):
+    x_ref[...] = _trsm_unblocked(l_ref[...], b_ref[...])
+
+
+def potrf(a):
+    """Pallas POTRF: lower Cholesky factor of one SPD block (upper zeroed)."""
+    common.check_square("potrf", a)
+    return pl.pallas_call(
+        _potrf_kernel,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=True,
+    )(a)
+
+
+def trsm(l, b):
+    """Pallas TRSM: X with X·Lᵀ = B, L lower-triangular."""
+    common.check_square("trsm", l)
+    if b.shape[1] != l.shape[0]:
+        raise ValueError(f"trsm: B cols {b.shape[1]} != L order {l.shape[0]}")
+    return pl.pallas_call(
+        _trsm_kernel,
+        out_shape=jax.ShapeDtypeStruct(b.shape, b.dtype),
+        interpret=True,
+    )(l, b)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle implementations for every L1 kernel.
+
+These are the correctness ground truth: ``python/tests/test_kernels.py``
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels match
+these to tight tolerances.  The Rust side additionally validates the whole
+factorization numerically (L·Lᵀ ≈ A).
+
+Signatures mirror the task types of the right-looking block Cholesky
+(paper §5, Fig 2):
+
+- ``potrf(a)``        → lower Cholesky factor of the diagonal block
+- ``trsm(l, b)``      → X with X·Lᵀ = B   (panel update below the diagonal)
+- ``syrk(c, a)``      → C − A·Aᵀ          (trailing diagonal update)
+- ``gemm(c, a, b)``   → C − A·Bᵀ          (trailing off-diagonal update)
+- ``gemv(a, x)``      → A·x               (§4 low-intensity comparison task)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsla
+
+
+def potrf(a):
+    """Lower Cholesky factor with explicit zero upper triangle."""
+    return jnp.tril(jnp.linalg.cholesky(a))
+
+
+def trsm(l, b):
+    """Solve X · Lᵀ = B for X (right-side, lower-triangular, transposed)."""
+    # solve L · Xᵀ = Bᵀ  →  X = (L⁻¹ Bᵀ)ᵀ
+    return jsla.solve_triangular(l, b.T, lower=True).T
+
+
+def syrk(c, a):
+    """Symmetric rank-k update C − A·Aᵀ (full block; callers use the lower part)."""
+    return c - a @ a.T
+
+
+def gemm(c, a, b):
+    """General update C − A·Bᵀ."""
+    return c - a @ b.T
+
+
+def gemv(a, x):
+    """Matrix–vector product A·x."""
+    return a @ x

@@ -1,0 +1,113 @@
+"""Throughput kernels: tiled GEMM / SYRK trailing updates and GEMV.
+
+These are the MXU-facing kernels.  The HBM↔VMEM schedule the paper's CPU
+implementation got from the BLAS is expressed here with ``BlockSpec``s:
+
+- grid = (M/bm, N/bn, K/bk); the (i, j) output tile stays resident in the
+  output ref while the k axis sweeps, i.e. a classic accumulate-in-VMEM
+  matmul.  The output BlockSpec's index map ignores the k axis, which is what
+  pins the tile.
+- tiles are square powers of two capped at ``common.DEFAULT_TILE_CAP``; on a
+  real TPU bm×bk, bk×bn, bm×bn ≤ 64² f32 = 16 KiB each, three orders of
+  magnitude under VMEM, leaving room for double-buffered prefetch.
+
+Semantics (see ref.py):  gemm(c,a,b) = c − a·bᵀ,  syrk(c,a) = c − a·aᵀ,
+gemv(a,x) = a·x.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _gemm_kernel(c_ref, a_ref, b_ref, o_ref):
+    """o(i,j) = c(i,j) − Σ_k a(i,k) · b(j,k)ᵀ, accumulated over the k axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] = o_ref[...] - a_ref[...] @ b_ref[...].T
+
+
+def gemm(c, a, b, tile: int | None = None):
+    """Pallas tiled GEMM update: C − A·Bᵀ.
+
+    Shapes: c (m, n), a (m, k), b (n, k).  ``tile`` overrides the automatic
+    square tile choice (must divide all three dims).
+    """
+    m, n = c.shape
+    am, k = a.shape
+    bn, bk = b.shape
+    if am != m or bn != n or bk != k:
+        raise ValueError(f"gemm: inconsistent shapes c{c.shape} a{a.shape} b{b.shape}")
+    tm = tile or common.pick_tile(m)
+    tn = tile or common.pick_tile(n)
+    tk = tile or common.pick_tile(k)
+    if m % tm or n % tn or k % tk:
+        raise ValueError(f"gemm: tile ({tm},{tn},{tk}) does not divide ({m},{n},{k})")
+    grid = (m // tm, n // tn, k // tk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tn, tk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        interpret=True,
+    )(c, a, b)
+
+
+def syrk(c, a, tile: int | None = None):
+    """Pallas SYRK update: C − A·Aᵀ (computed as gemm with b = a).
+
+    The symmetric saving (skip upper tiles) is a real-TPU optimization; in
+    interpret mode we keep the full computation so the artifact matches the
+    oracle block-for-block.  Shapes: c (n, n), a (n, k).
+    """
+    common.check_square("syrk", c)
+    if a.shape[0] != c.shape[0]:
+        raise ValueError(f"syrk: a rows {a.shape[0]} != c order {c.shape[0]}")
+    return gemm(c, a, a, tile=tile)
+
+
+def _gemv_kernel(a_ref, x_ref, o_ref):
+    """o(i) = Σ_k a(i,k) · x(k), accumulated over the k axis."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] = o_ref[...] + a_ref[...] @ x_ref[...]
+
+
+def gemv(a, x, tile: int | None = None):
+    """Pallas tiled GEMV: A·x with row-tile grid and k accumulation."""
+    m, k = a.shape
+    if x.shape != (k,):
+        raise ValueError(f"gemv: x shape {x.shape} != ({k},)")
+    tm = tile or common.pick_tile(m)
+    tk = tile or common.pick_tile(k)
+    if m % tm or k % tk:
+        raise ValueError(f"gemv: tile ({tm},{tk}) does not divide ({m},{k})")
+    grid = (m // tm, k // tk)
+    return pl.pallas_call(
+        _gemv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, kk: (i, kk)),
+            pl.BlockSpec((tk,), lambda i, kk: (kk,)),
+        ],
+        out_specs=pl.BlockSpec((tm,), lambda i, kk: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=True,
+    )(a, x)

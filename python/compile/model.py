@@ -1,0 +1,171 @@
+"""L2: the JAX compute graph for each DuctTeip task type.
+
+Each of the paper's Cholesky task types (Fig 2) — POTRF, TRSM, SYRK, GEMM —
+plus the §4 GEMV comparison task is a jitted JAX function that calls the L1
+Pallas kernel.  ``compile/aot.py`` lowers each one per block size to HLO text
+for the Rust PJRT runtime.
+
+This module also contains ``block_cholesky``: the full right-looking blocked
+factorization composed from the task functions.  It is never shipped to Rust
+(the Rust coordinator *is* the composition — it builds the task DAG and runs
+one artifact per task); it exists to validate at build time that the task
+algebra reproduces ``jnp.linalg.cholesky`` exactly, and to serve as the L2
+fusion-audit target for the §Perf pass.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+
+# --------------------------------------------------------------------------
+# Task functions (one per DuctTeip task type)
+# --------------------------------------------------------------------------
+
+
+@jax.jit
+def potrf_task(a):
+    """Factorize a diagonal block: A[j,j] → L[j,j]."""
+    return kernels.potrf(a)
+
+
+@jax.jit
+def trsm_task(l, b):
+    """Panel update: A[i,j] → A[i,j] · L[j,j]⁻ᵀ."""
+    return kernels.trsm(l, b)
+
+
+@jax.jit
+def syrk_task(c, a):
+    """Trailing diagonal update: A[i,i] −= A[i,j] · A[i,j]ᵀ."""
+    return kernels.syrk(c, a)
+
+
+@jax.jit
+def gemm_task(c, a, b):
+    """Trailing off-diagonal update: A[i,k] −= A[i,j] · A[k,j]ᵀ."""
+    return kernels.gemm(c, a, b)
+
+
+@jax.jit
+def gemv_task(a, x):
+    """§4 low-intensity task: y = A·x."""
+    return kernels.gemv(a, x)
+
+
+# --------------------------------------------------------------------------
+# Task metadata — must stay in sync with rust/src/dlb/costmodel.rs
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TaskSpec:
+    """AOT metadata for one (task type, block size) artifact.
+
+    ``flops``/``doubles_moved`` implement the paper's §4 F and D for the
+    task: F = floating point ops, D = doubles that must cross the network to
+    run the task remotely (inputs shipped + output returned).
+    """
+
+    name: str
+    arity: int
+    fn: object
+
+    def arg_shapes(self, b: int) -> list[tuple[int, ...]]:
+        if self.name == "potrf":
+            return [(b, b)]
+        if self.name == "trsm":
+            return [(b, b), (b, b)]
+        if self.name == "syrk":
+            return [(b, b), (b, b)]
+        if self.name == "gemm":
+            return [(b, b), (b, b), (b, b)]
+        if self.name == "gemv":
+            return [(b, b), (b,)]
+        raise KeyError(self.name)
+
+    def flops(self, b: int) -> int:
+        # Standard LAPACK op counts for square b×b blocks.
+        if self.name == "potrf":
+            return b**3 // 3
+        if self.name == "trsm":
+            return b**3
+        if self.name == "syrk":
+            return b**3  # b² rows × b cols × b MACs (full block, see kernel)
+        if self.name == "gemm":
+            return 2 * b**3
+        if self.name == "gemv":
+            return 2 * b**2
+        raise KeyError(self.name)
+
+    def doubles_moved(self, b: int) -> int:
+        # Σ inputs + output, in elements (paper counts doubles; we emit f32
+        # artifacts but keep the element count — §4's Q only uses the ratio).
+        shapes = self.arg_shapes(b)
+        out = b if self.name == "gemv" else b * b
+        return sum(int(jnp.prod(jnp.array(s))) for s in shapes) + out
+
+
+TASKS: dict[str, TaskSpec] = {
+    "potrf": TaskSpec("potrf", 1, potrf_task),
+    "trsm": TaskSpec("trsm", 2, trsm_task),
+    "syrk": TaskSpec("syrk", 2, syrk_task),
+    "gemm": TaskSpec("gemm", 3, gemm_task),
+    "gemv": TaskSpec("gemv", 2, gemv_task),
+}
+
+
+# --------------------------------------------------------------------------
+# Build-time validation target: the full right-looking block Cholesky
+# --------------------------------------------------------------------------
+
+
+def block_cholesky(a_blocks):
+    """Right-looking blocked Cholesky over an NB×NB grid of b×b blocks.
+
+    ``a_blocks`` is an (NB, NB, b, b) array of the lower-triangular blocks of
+    an SPD matrix.  Returns the (NB, NB, b, b) array of L blocks.  Mirrors
+    exactly the task DAG the Rust coordinator generates (cholesky/dag.rs):
+
+        for j in 0..NB:
+            L[j,j]  = potrf(A[j,j])
+            L[i,j]  = trsm(L[j,j], A[i,j])            i in j+1..NB
+            A[i,i] -= syrk(A[i,i], L[i,j])            i in j+1..NB
+            A[i,k] -= gemm(A[i,k], L[i,j], L[k,j])    j < k < i
+    """
+    nb = a_blocks.shape[0]
+    blocks = [[a_blocks[i, j] for j in range(nb)] for i in range(nb)]
+    for j in range(nb):
+        blocks[j][j] = potrf_task(blocks[j][j])
+        for i in range(j + 1, nb):
+            blocks[i][j] = trsm_task(blocks[j][j], blocks[i][j])
+        for i in range(j + 1, nb):
+            blocks[i][i] = syrk_task(blocks[i][i], blocks[i][j])
+            for k in range(j + 1, i):
+                blocks[i][k] = gemm_task(blocks[i][k], blocks[i][j], blocks[k][j])
+    return jnp.stack([jnp.stack(row) for row in blocks])
+
+
+def assemble(blocks):
+    """(NB, NB, b, b) block array → (NB·b, NB·b) dense matrix."""
+    nb, _, b, _ = blocks.shape
+    return blocks.transpose(0, 2, 1, 3).reshape(nb * b, nb * b)
+
+
+def split(a, nb: int):
+    """(NB·b, NB·b) dense matrix → (NB, NB, b, b) block array."""
+    n = a.shape[0]
+    b = n // nb
+    return a.reshape(nb, b, nb, b).transpose(0, 2, 1, 3)
+
+
+def random_spd(n: int, seed: int = 0, dtype=jnp.float32):
+    """Well-conditioned random SPD test matrix (M·Mᵀ + n·I)."""
+    m = jax.random.normal(jax.random.PRNGKey(seed), (n, n), dtype=dtype)
+    return m @ m.T + n * jnp.eye(n, dtype=dtype)

@@ -1,0 +1,30 @@
+"""Shared pytest fixtures for the kernel/model test suite."""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Run `pytest tests/` from the python/ directory; make `compile` importable
+# regardless of invocation cwd.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+# Enable x64 so the f64 sweeps exercise a second dtype path.
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(20180507)
+
+
+def make_spd(n: int, dtype, seed: int = 0):
+    """Well-conditioned SPD block for POTRF/TRSM tests."""
+    r = np.random.default_rng(seed)
+    m = r.standard_normal((n, n)).astype(dtype)
+    return m @ m.T + n * np.eye(n, dtype=dtype)

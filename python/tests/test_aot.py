@@ -1,0 +1,63 @@
+"""AOT pipeline: HLO-text lowering and manifest emission.
+
+These tests lower real modules (slow-ish) so they use the smallest block and
+assert structural properties the Rust loader depends on.
+"""
+
+from __future__ import annotations
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+class TestLowering:
+    @pytest.mark.parametrize("name", list(model.TASKS))
+    def test_lowers_to_hlo_text(self, name):
+        text = aot.lower_task(model.TASKS[name], 8)
+        assert "HloModule" in text
+        assert "ROOT" in text
+        # return_tuple=True → root is a tuple; the Rust side calls to_tuple1.
+        assert "tuple(" in text or "(f32[" in text
+
+    def test_entry_params_match_arity(self):
+        text = aot.lower_task(model.TASKS["gemm"], 8)
+        params = [l for l in text.splitlines() if "parameter(" in l and "f32[8,8]" in l]
+        assert len(params) >= 3
+
+    def test_shape_str(self):
+        assert aot.shape_str((8, 8)) == "8x8"
+        assert aot.shape_str((8,)) == "8"
+
+
+class TestEmit:
+    def test_emit_writes_manifest_and_files(self, tmp_path):
+        out = str(tmp_path / "artifacts")
+        aot.emit(out, [8], verify=False)
+        manifest = open(os.path.join(out, "manifest.txt")).read().splitlines()
+        data_lines = [l for l in manifest if l.startswith("kernel ")]
+        assert len(data_lines) == len(model.TASKS)
+        for line in data_lines:
+            parts = line.split()
+            # kernel <name> <block> <path> <arity> <dtype> <shapes...> <F> <D>
+            assert parts[0] == "kernel"
+            name, block, path, arity = parts[1], int(parts[2]), parts[3], int(parts[4])
+            assert name in model.TASKS
+            assert block == 8
+            assert os.path.exists(os.path.join(out, path))
+            assert arity == model.TASKS[name].arity
+            flops, doubles = int(parts[-2]), int(parts[-1])
+            assert flops == model.TASKS[name].flops(8)
+            assert doubles == model.TASKS[name].doubles_moved(8)
+
+    def test_version_line_present(self, tmp_path):
+        out = str(tmp_path / "artifacts")
+        aot.emit(out, [8], verify=False)
+        lines = open(os.path.join(out, "manifest.txt")).read().splitlines()
+        assert any(l.strip() == "version 1" for l in lines)
+
+    def test_main_rejects_bad_blocks(self):
+        with pytest.raises(SystemExit):
+            aot.main(["--out", "/tmp/x", "--blocks", "-4"])

@@ -1,0 +1,242 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; fixed-case tests pin the exact AOT
+shapes.  Tolerances are dtype-aware: f32 kernels accumulate in f32, so the
+bound scales with the reduction length.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import kernels
+from compile.kernels import ref
+from tests.conftest import make_spd
+
+DTYPES = [np.float32, np.float64]
+
+
+def tol(dtype, n):
+    eps = np.finfo(dtype).eps
+    return 60 * eps * max(n, 1)
+
+
+def assert_close(actual, expected, dtype, n, label):
+    t = tol(dtype, n)
+    scale = max(1.0, float(np.max(np.abs(expected))))
+    np.testing.assert_allclose(
+        np.asarray(actual), np.asarray(expected), rtol=t, atol=t * scale, err_msg=label
+    )
+
+
+# --------------------------------------------------------------------------
+# pick_tile
+# --------------------------------------------------------------------------
+
+
+class TestPickTile:
+    @given(st.integers(min_value=1, max_value=4096))
+    def test_divides(self, n):
+        t = kernels.pick_tile(n)
+        assert n % t == 0
+        assert 1 <= t <= max(n, 1)
+
+    @given(st.integers(min_value=1, max_value=4096), st.integers(min_value=1, max_value=256))
+    def test_respects_cap_for_pow2(self, n, cap):
+        t = kernels.pick_tile(n, cap)
+        # power-of-two tiles never exceed the cap; odd fallback may equal n
+        if t & (t - 1) == 0 and t != n:
+            assert t <= cap
+
+    def test_exact_values(self):
+        assert kernels.pick_tile(128) == 64  # capped
+        assert kernels.pick_tile(128, cap=128) == 128
+        assert kernels.pick_tile(96) == 32
+        assert kernels.pick_tile(7) == 7  # odd fallback: single tile
+        assert kernels.pick_tile(1) == 1
+
+    def test_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            kernels.pick_tile(0)
+
+
+# --------------------------------------------------------------------------
+# POTRF
+# --------------------------------------------------------------------------
+
+
+class TestPotrf:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("n", [1, 2, 3, 8, 16, 32, 64])
+    def test_matches_oracle(self, dtype, n):
+        a = make_spd(n, dtype, seed=n)
+        assert_close(kernels.potrf(a), ref.potrf(a), dtype, n, f"potrf n={n}")
+
+    @pytest.mark.parametrize("n", [8, 32])
+    def test_upper_triangle_zero(self, n):
+        a = make_spd(n, np.float32, seed=n)
+        l = np.asarray(kernels.potrf(a))
+        assert np.all(np.triu(l, 1) == 0.0)
+
+    @pytest.mark.parametrize("n", [8, 32])
+    def test_reconstructs(self, n):
+        a = make_spd(n, np.float64, seed=n + 1)
+        l = np.asarray(kernels.potrf(a))
+        assert_close(l @ l.T, a, np.float64, n, "L·Lᵀ = A")
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=48),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep(self, n, seed):
+        a = make_spd(n, np.float64, seed=seed)
+        assert_close(kernels.potrf(a), ref.potrf(a), np.float64, n, f"potrf n={n}")
+
+    def test_rejects_nonsquare(self):
+        with pytest.raises(ValueError):
+            kernels.potrf(np.zeros((4, 8), np.float32))
+
+
+# --------------------------------------------------------------------------
+# TRSM
+# --------------------------------------------------------------------------
+
+
+class TestTrsm:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("n", [1, 2, 4, 16, 32, 64])
+    def test_matches_oracle(self, dtype, n):
+        l = np.asarray(ref.potrf(make_spd(n, dtype, seed=n)))
+        b = np.random.default_rng(n).standard_normal((n, n)).astype(dtype)
+        assert_close(kernels.trsm(l, b), ref.trsm(l, b), dtype, n, f"trsm n={n}")
+
+    @pytest.mark.parametrize("n", [16])
+    def test_solves_equation(self, n):
+        """X · Lᵀ = B must hold exactly up to roundoff."""
+        l = np.asarray(ref.potrf(make_spd(n, np.float64, seed=3)))
+        b = np.random.default_rng(3).standard_normal((n, n))
+        x = np.asarray(kernels.trsm(l, b))
+        assert_close(x @ l.T, b, np.float64, n, "X·Lᵀ = B")
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=40),
+        n=st.integers(min_value=1, max_value=40),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_rectangular_rhs(self, m, n, seed):
+        """B may be m×n with L n×n (DAG panels are square, kernel is general)."""
+        l = np.asarray(ref.potrf(make_spd(n, np.float64, seed=seed)))
+        b = np.random.default_rng(seed).standard_normal((m, n))
+        assert_close(kernels.trsm(l, b), ref.trsm(l, b), np.float64, max(m, n), "trsm rect")
+
+    def test_rejects_mismatched(self):
+        with pytest.raises(ValueError):
+            kernels.trsm(np.eye(4, dtype=np.float32), np.zeros((4, 8), np.float32))
+
+
+# --------------------------------------------------------------------------
+# SYRK / GEMM
+# --------------------------------------------------------------------------
+
+
+class TestUpdates:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("n", [1, 2, 8, 32, 64, 128])
+    def test_syrk_matches(self, dtype, n):
+        r = np.random.default_rng(n)
+        c = r.standard_normal((n, n)).astype(dtype)
+        a = r.standard_normal((n, n)).astype(dtype)
+        assert_close(kernels.syrk(c, a), ref.syrk(c, a), dtype, n, f"syrk n={n}")
+
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("n", [1, 2, 8, 32, 64, 128])
+    def test_gemm_matches(self, dtype, n):
+        r = np.random.default_rng(n + 7)
+        c = r.standard_normal((n, n)).astype(dtype)
+        a = r.standard_normal((n, n)).astype(dtype)
+        b = r.standard_normal((n, n)).astype(dtype)
+        assert_close(kernels.gemm(c, a, b), ref.gemm(c, a, b), dtype, n, f"gemm n={n}")
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([8, 16, 24, 32, 64]),
+        n=st.sampled_from([8, 16, 24, 32, 64]),
+        k=st.sampled_from([8, 16, 24, 32, 64]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_gemm_rectangular(self, m, n, k, seed):
+        r = np.random.default_rng(seed)
+        c = r.standard_normal((m, n))
+        a = r.standard_normal((m, k))
+        b = r.standard_normal((n, k))
+        assert_close(kernels.gemm(c, a, b), ref.gemm(c, a, b), np.float64, k, "gemm rect")
+
+    @pytest.mark.parametrize("tile", [8, 16, 32, 64])
+    def test_gemm_tile_invariance(self, tile):
+        """Result must not depend on the chosen tile size."""
+        r = np.random.default_rng(0)
+        n = 64
+        c = r.standard_normal((n, n)).astype(np.float32)
+        a = r.standard_normal((n, n)).astype(np.float32)
+        b = r.standard_normal((n, n)).astype(np.float32)
+        assert_close(
+            kernels.gemm(c, a, b, tile=tile), ref.gemm(c, a, b), np.float32, n, f"tile={tile}"
+        )
+
+    def test_gemm_rejects_bad_tile(self):
+        with pytest.raises(ValueError):
+            kernels.gemm(
+                np.zeros((64, 64), np.float32),
+                np.zeros((64, 64), np.float32),
+                np.zeros((64, 64), np.float32),
+                tile=48,
+            )
+
+    def test_gemm_rejects_shape_mismatch(self):
+        with pytest.raises(ValueError):
+            kernels.gemm(
+                np.zeros((8, 8), np.float32),
+                np.zeros((8, 4), np.float32),
+                np.zeros((4, 8), np.float32),
+            )
+
+    def test_syrk_rejects_nonsquare_c(self):
+        with pytest.raises(ValueError):
+            kernels.syrk(np.zeros((4, 8), np.float32), np.zeros((4, 4), np.float32))
+
+
+# --------------------------------------------------------------------------
+# GEMV
+# --------------------------------------------------------------------------
+
+
+class TestGemv:
+    @pytest.mark.parametrize("dtype", DTYPES)
+    @pytest.mark.parametrize("n", [1, 8, 32, 64, 256])
+    def test_matches_oracle(self, dtype, n):
+        r = np.random.default_rng(n + 13)
+        a = r.standard_normal((n, n)).astype(dtype)
+        x = r.standard_normal(n).astype(dtype)
+        assert_close(kernels.gemv(a, x), ref.gemv(a, x), dtype, n, f"gemv n={n}")
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([4, 8, 16, 32, 128]),
+        k=st.sampled_from([4, 8, 16, 32, 128]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_rectangular(self, m, k, seed):
+        r = np.random.default_rng(seed)
+        a = r.standard_normal((m, k))
+        x = r.standard_normal(k)
+        assert_close(kernels.gemv(a, x), ref.gemv(a, x), np.float64, k, "gemv rect")
+
+    def test_rejects_mismatched(self):
+        with pytest.raises(ValueError):
+            kernels.gemv(np.zeros((8, 8), np.float32), np.zeros(4, np.float32))

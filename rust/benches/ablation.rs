@@ -1,0 +1,41 @@
+//! Ablation bench: design-choice sensitivity on the Fig 4-left case —
+//! export strategy, δ back-off, and the §3 gap (hysteresis) model.
+//!
+//! Run: `cargo bench --bench ablation`
+
+use ductr::experiments::ablation;
+use ductr::util::bench::{BenchConfig, Runner};
+
+fn main() {
+    let mut r = Runner::new("ablation: strategy / δ / gap on Fig 4-left", BenchConfig::macro_bench());
+
+    let res = ablation::run(1).expect("ablation");
+    println!("{}", res.render());
+
+    r.record("baseline (DLB off)", res.baseline_makespan, "s");
+    for row in res.strategies.iter().chain(&res.deltas).chain(&res.gaps) {
+        r.record(&row.label, row.improvement_vs_off * 100.0, "%");
+    }
+
+    // sanity: the gap shrinks the busy set, so migrations fall monotonically
+    // (measured: total request traffic is dominated by idle searchers and
+    // does NOT fall — recorded as-is in EXPERIMENTS.md §Ablations)
+    let gap0 = res.gaps.iter().find(|g| g.label == "gap=0").expect("gap0");
+    let gap10 = res.gaps.iter().find(|g| g.label == "gap=10").expect("gap10");
+    assert!(
+        gap10.migrations <= gap0.migrations,
+        "gap must reduce migrations: {} vs {}",
+        gap10.migrations,
+        gap0.migrations
+    );
+
+    let dir = ductr::experiments::out_dir("ablation");
+    ductr::metrics::csv::write_rows(
+        dir.join("ablation.csv"),
+        &["row", "makespan", "improvement", "migrations", "requests", "max_w"],
+        &res.csv_rows(),
+    )
+    .expect("csv");
+    r.write_csv(dir.join("ablation_bench.csv").to_str().expect("utf8")).expect("csv");
+    println!("ablation: OK (csv in {})", dir.display());
+}

@@ -1,0 +1,51 @@
+//! Bench/regeneration target for **Fig 1**: hypergeometric success
+//! probability of the randomized partner search.
+//!
+//! Regenerates both panels (P = 10, P = 100) with Monte-Carlo validation
+//! and benches the exact evaluation (it sits on the DLB decision path when
+//! reasoning about δ).
+//!
+//! Run: `cargo bench --bench fig1_probability`
+
+use ductr::experiments::fig1;
+use ductr::prob::hypergeom::Hypergeometric;
+use ductr::util::bench::{bb, BenchConfig, Runner};
+
+fn main() {
+    let mut r = Runner::new("fig1: pairing success probability", BenchConfig::micro_bench());
+
+    r.bench("hypergeom pmf(0) P=100 K=50 n=5", || {
+        bb(Hypergeometric::new(bb(100), bb(50), bb(5)).pmf(0))
+    });
+    r.bench("success_probability P=1e6 K=5e5 n=5", || {
+        bb(Hypergeometric::new(bb(1_000_000), bb(500_000), bb(5)).success_probability())
+    });
+
+    // regenerate the figure data
+    let fig = fig1::run(10, 20_000, 1);
+    println!("{}", fig.render_panel(10));
+    println!("{}", fig.render_panel(100));
+    for c in &fig.curves {
+        let n5 = c.points.iter().find(|p| p.0 == 5).expect("n=5 present");
+        r.record(
+            &format!("P={} K={} n=5 success", c.population, c.busy),
+            n5.1,
+            "probability",
+        );
+        let mc_err = (n5.2 - n5.1).abs();
+        assert!(mc_err < 0.02, "MC vs exact at P={} K={}: {mc_err}", c.population, c.busy);
+    }
+    r.record("paper claim: K=P/2 n=5 (P=100)", fig.k_half_n5, "probability");
+    r.record("asymptote 1-2^-5", fig.asymptote_n5, "probability");
+    assert!(fig.k_half_n5 > 0.96, "paper's >96% claim must hold");
+
+    let dir = ductr::experiments::out_dir("fig1");
+    ductr::metrics::csv::write_rows(
+        dir.join("fig1.csv"),
+        &["population", "busy", "tries", "exact", "monte_carlo"],
+        &fig.csv_rows(),
+    )
+    .expect("csv");
+    r.write_csv(dir.join("fig1_bench.csv").to_str().expect("utf8")).expect("csv");
+    println!("fig1: OK (csv in {})", dir.display());
+}

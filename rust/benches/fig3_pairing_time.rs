@@ -1,0 +1,56 @@
+//! Bench/regeneration target for **Fig 3**: average (and max) time to find
+//! a busy–idle pair, measured on the live protocol in the DES.
+//!
+//! Paper shape targets: the average grows slowly with P; the hardest mix is
+//! ~50% busy; with δ = 10 ms the averages justify δ ≈ 10 ms for the 10–15
+//! process runs of Fig 4.
+//!
+//! Run: `cargo bench --bench fig3_pairing_time`
+
+use ductr::experiments::fig3;
+use ductr::util::bench::{BenchConfig, Runner};
+
+fn main() {
+    let mut r = Runner::new("fig3: time to find a busy–idle pair", BenchConfig::macro_bench());
+
+    r.bench("single trial P=16 busy=8 δ=10ms", || {
+        fig3::pairing_time(16, 8, 0.010, 12345)
+    });
+
+    let fig = fig3::run(&[8, 16, 32, 64, 128], &[0.1, 0.3, 0.5, 0.7, 0.9], 0.010, 30, 7);
+    println!("{}", fig.render());
+    for c in &fig.cells {
+        r.record(
+            &format!("P={:<3} busy={:>2.0}% mean", c.processes, c.busy_fraction * 100.0),
+            c.mean * 1e3,
+            "ms",
+        );
+    }
+
+    // shape assertions
+    let mean_of = |p: usize, f: f64| {
+        fig.cells
+            .iter()
+            .find(|c| c.processes == p && (c.busy_fraction - f).abs() < 1e-9)
+            .expect("cell")
+            .mean
+    };
+    // grows slowly: less than 10× from P=8 to P=128 at the hardest mix
+    assert!(
+        mean_of(128, 0.5) < mean_of(8, 0.5) * 10.0,
+        "pairing time must grow slowly with P"
+    );
+    // δ = 10 ms is reasonable for P in 10..15 (paper's choice): pairing in
+    // a handful of δ
+    assert!(mean_of(16, 0.5) < 0.10, "P=16 pairing within 100 ms");
+
+    let dir = ductr::experiments::out_dir("fig3");
+    ductr::metrics::csv::write_rows(
+        dir.join("fig3.csv"),
+        &["processes", "busy_fraction", "mean_s", "max_s", "p95_s"],
+        &fig.csv_rows(),
+    )
+    .expect("csv");
+    r.write_csv(dir.join("fig3_bench.csv").to_str().expect("utf8")).expect("csv");
+    println!("fig3: OK (csv in {})", dir.display());
+}

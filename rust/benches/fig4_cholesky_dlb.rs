@@ -1,0 +1,59 @@
+//! Bench/regeneration target for **Fig 4**: the paper's headline result —
+//! block Cholesky on non-square grids, DLB off vs on.
+//!
+//! Cases (paper §6): N = 20 000, 12×12 blocks, P = 10 (2×5 grid) and
+//! N = 30 000, 12×12 blocks, P = 15 (3×5 grid); W_T calibrated as
+//! max w_i(t)/2 from a DLB-off run; δ = 10 ms; Basic strategy.
+//! Paper reports a 5–6% execution-time reduction; shape target here:
+//! measurable improvement, no regression, migrations > 0.
+//!
+//! Run: `cargo bench --bench fig4_cholesky_dlb`
+
+use ductr::experiments::fig4;
+use ductr::util::bench::{BenchConfig, Runner};
+
+fn main() {
+    let mut r = Runner::new("fig4: Cholesky DLB off vs on (DES, paper scale)", BenchConfig::macro_bench());
+
+    let results = fig4::run(1).expect("fig4 run");
+    for case in &results {
+        println!("{}", case.render(5));
+        r.record(&format!("{} makespan off", case.spec.name), case.off.makespan, "s");
+        r.record(&format!("{} makespan on", case.spec.name), case.on.makespan, "s");
+        r.record(
+            &format!("{} improvement", case.spec.name),
+            case.improvement() * 100.0,
+            "%",
+        );
+        r.record(
+            &format!("{} migrations", case.spec.name),
+            case.on.counters.tasks_exported as f64,
+            "tasks",
+        );
+        assert!(case.on.counters.tasks_exported > 0, "DLB must migrate work");
+        assert!(
+            case.improvement() > -0.05,
+            "DLB must not regress: {:+.2}%",
+            case.improvement() * 100.0
+        );
+    }
+
+    // average improvement across the two paper cases should be positive
+    let avg: f64 =
+        results.iter().map(|c| c.improvement()).sum::<f64>() / results.len() as f64;
+    r.record("average improvement (paper: 5-6%)", avg * 100.0, "%");
+    assert!(avg > 0.0, "average DLB improvement must be positive, got {:+.2}%", avg * 100.0);
+
+    let dir = ductr::experiments::out_dir("fig4");
+    for case in &results {
+        let stem = case.spec.name.replace([' ', '='], "_");
+        ductr::metrics::csv::write_rows(
+            dir.join(format!("fig4_{stem}.csv")),
+            &["process", "time", "workload", "dlb"],
+            &case.csv_rows(),
+        )
+        .expect("csv");
+    }
+    r.write_csv(dir.join("fig4_bench.csv").to_str().expect("utf8")).expect("csv");
+    println!("fig4: OK (csv in {})", dir.display());
+}

@@ -1,0 +1,50 @@
+//! Bench/regeneration target for **Fig 5**: the non-determinism of
+//! randomized DLB on the N = 100 000, P = 11 (11×1 grid) configuration.
+//!
+//! The paper shows two executions — one successful, one not.  We sweep ten
+//! seeds, report each improvement, and name the best/worst pair (the honest
+//! reproduction of the paper's lucky/unlucky runs).
+//!
+//! Run: `cargo bench --bench fig5_nondeterminism`
+
+use ductr::experiments::fig5;
+use ductr::util::bench::{BenchConfig, Runner};
+
+fn main() {
+    let mut r = Runner::new(
+        "fig5: seed-dependence of DLB, N=100000 P=11 11x1",
+        BenchConfig::macro_bench(),
+    );
+
+    let seeds: Vec<u64> = (1..=10).collect();
+    let fig = fig5::run(100_000, &seeds).expect("fig5 run");
+    println!("{}", fig.render());
+
+    r.record("baseline (DLB off) makespan", fig.baseline_makespan, "s");
+    for o in &fig.outcomes {
+        r.record(&format!("seed {:<2} improvement", o.seed), o.improvement * 100.0, "%");
+    }
+    r.record("best improvement", fig.best().improvement * 100.0, "%");
+    r.record("worst improvement", fig.worst().improvement * 100.0, "%");
+    r.record("spread (best − worst)", fig.spread() * 100.0, "%");
+
+    // paper's qualitative claims:
+    // (1) outcomes vary across runs (non-determinism is real)
+    assert!(fig.spread() > 0.001, "seeds must produce different outcomes");
+    // (2) at least one run improves (the paper's 'successful' execution)
+    assert!(
+        fig.best().improvement > 0.0,
+        "some seed should find an improvement, best = {:+.3}%",
+        fig.best().improvement * 100.0
+    );
+
+    let dir = ductr::experiments::out_dir("fig5");
+    ductr::metrics::csv::write_rows(
+        dir.join("fig5.csv"),
+        &["seed", "makespan", "improvement", "migrations"],
+        &fig.csv_rows(),
+    )
+    .expect("csv");
+    r.write_csv(dir.join("fig5_bench.csv").to_str().expect("utf8")).expect("csv");
+    println!("fig5: OK (csv in {})", dir.display());
+}

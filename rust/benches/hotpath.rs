@@ -1,0 +1,117 @@
+//! Hot-path micro-benchmarks: the L3 structures the §Perf pass optimizes.
+//!
+//! - ready-queue push/pop and strategy drains (per-transaction path)
+//! - STF graph construction (startup path)
+//! - DES event throughput on the Fig 4 workload (whole-sim path)
+//! - pairing-protocol round trip (control-plane path)
+//! - PJRT kernel execution (real-mode task path; needs artifacts)
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use std::sync::Arc;
+
+use ductr::cholesky::{self, ProcessGrid};
+use ductr::config::{Config, Grid};
+use ductr::core::graph::GraphBuilder;
+use ductr::core::ids::ProcessId;
+use ductr::core::task::TaskKind;
+use ductr::sched::queue::{ReadyQueue, ReadyTask};
+use ductr::sim::engine::SimEngine;
+use ductr::util::bench::{bb, BenchConfig, Runner};
+
+fn main() {
+    let mut micro = Runner::new("hotpath micro", BenchConfig::micro_bench());
+
+    // queue ops
+    micro.bench("ready-queue push+pop", || {
+        let mut q = ReadyQueue::new();
+        for i in 0..32 {
+            q.push(ReadyTask { task: ductr::core::ids::TaskId(i), origin: ProcessId(0) });
+        }
+        while q.pop().is_some() {}
+    });
+
+    // drain_back (export-selection primitive)
+    micro.bench("drain_back 8 of 32", || {
+        let mut q = ReadyQueue::new();
+        for i in 0..32 {
+            q.push(ReadyTask { task: ductr::core::ids::TaskId(i), origin: ProcessId(0) });
+        }
+        bb(q.drain_back(8, |_| true))
+    });
+
+    let mut meso = Runner::new("hotpath meso", BenchConfig::default());
+
+    // graph construction: the Fig 4 DAG (12×12 blocks, 378 tasks)
+    meso.bench("cholesky DAG build nb=12", || {
+        bb(cholesky::build(12, 64, ProcessGrid::new(Grid::new(2, 5))))
+    });
+    meso.bench("cholesky DAG build nb=32 (6544 tasks)", || {
+        bb(cholesky::build(32, 64, ProcessGrid::new(Grid::new(2, 5))))
+    });
+
+    // synthetic STF builder throughput
+    meso.bench("STF builder 10k independent tasks", || {
+        let mut b = GraphBuilder::new();
+        for _ in 0..10_000 {
+            let d = b.data(ProcessId(0), 8, 8);
+            b.task(TaskKind::Synthetic, vec![], d, 1, None);
+        }
+        bb(b.build())
+    });
+
+    // whole-sim throughput: Fig 4 left in the DES
+    let mut cfg = Config::default();
+    cfg.processes = 10;
+    cfg.grid = Some(Grid::new(2, 5));
+    cfg.nb = 12;
+    cfg.block = 1667;
+    cfg.dlb_enabled = true;
+    cfg.wt = 5;
+    cfg.validate().expect("valid");
+    let mut events_per_sec = 0.0;
+    let res = meso.bench("DES full fig4-left run (DLB on)", || {
+        let dag = cholesky::build(cfg.nb, cfg.block, ProcessGrid::new(cfg.effective_grid()));
+        let mut eng = SimEngine::from_config(&cfg, Arc::clone(&dag.graph));
+        let r = eng.run().expect("sim");
+        events_per_sec = r.events_processed as f64;
+        bb(r.makespan)
+    });
+    let sim_secs = res.secs_per_iter();
+    println!(
+        "DES throughput: {:.0} events/s ({:.0} events per run)",
+        events_per_sec / sim_secs,
+        events_per_sec
+    );
+
+    // PJRT kernel hot path (skipped without artifacts)
+    let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if art.join("manifest.txt").exists() {
+        let manifest =
+            Arc::new(ductr::runtime::Manifest::load(&art).expect("manifest"));
+        for block in [32usize, 64, 128] {
+            let mut lib =
+                ductr::runtime::KernelLibrary::new(Arc::clone(&manifest), block).expect("lib");
+            let c: Vec<f32> = vec![0.5; block * block];
+            let a: Vec<f32> = vec![0.25; block * block];
+            let b2: Vec<f32> = vec![0.125; block * block];
+            // warm compile outside the timer
+            let _ = lib.execute(TaskKind::Gemm, &[&c, &a, &b2]).expect("gemm");
+            let r = meso.bench(&format!("PJRT gemm b={block}"), || {
+                bb(lib.execute(TaskKind::Gemm, &[&c, &a, &b2]).expect("gemm"))
+            });
+            let flops = TaskKind::Gemm.flops_for_block(block as u64) as f64;
+            println!(
+                "  gemm b={block}: {:.2} GFLOP/s",
+                flops / r.secs_per_iter() / 1e9
+            );
+        }
+    } else {
+        println!("(PJRT benches skipped: artifacts not built)");
+    }
+
+    let dir = ductr::experiments::out_dir("hotpath");
+    micro.write_csv(dir.join("micro.csv").to_str().expect("utf8")).expect("csv");
+    meso.write_csv(dir.join("meso.csv").to_str().expect("utf8")).expect("csv");
+    println!("hotpath: OK (csv in {})", dir.display());
+}

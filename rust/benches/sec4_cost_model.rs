@@ -1,0 +1,55 @@
+//! Bench/regeneration target for the **§4 analysis**: the migration cost
+//! ratio Q = (S/R)(D/F) and its measured consequence.
+//!
+//! Paper numbers at S/R = 40: GEMM Q = 60/m (our traffic accounting gives
+//! 80/m — we also return the output), GEMV Q ≈ 20.  Measured half: an
+//! imbalanced GEMM-intensity bag benefits clearly from DLB; GEMV chains do
+//! not (until queues ≫ Q).
+//!
+//! Run: `cargo bench --bench sec4_cost_model`
+
+use ductr::experiments::sec4;
+use ductr::util::bench::{BenchConfig, Runner};
+
+fn main() {
+    let mut r = Runner::new("sec4: migration cost model Q = (S/R)(D/F)", BenchConfig::macro_bench());
+
+    let res = sec4::run(1).expect("sec4");
+    println!("{}", res.render());
+
+    for row in &res.table {
+        r.record(
+            &format!("Q {} b={}", row.kind, row.block),
+            row.q,
+            "ratio",
+        );
+    }
+    for case in &res.cases {
+        r.record(&format!("{} improvement", case.name), case.improvement() * 100.0, "%");
+    }
+
+    // paper checks
+    let gemv_row = res
+        .table
+        .iter()
+        .find(|t| t.kind == ductr::core::task::TaskKind::Gemv && t.block >= 512)
+        .expect("gemv row");
+    assert!((gemv_row.q - 20.0).abs() < 0.5, "paper: Q_gemv ≈ 20, got {}", gemv_row.q);
+    let bag = &res.cases[0];
+    let gemv = &res.cases[1];
+    assert!(
+        bag.improvement() > gemv.improvement(),
+        "high-intensity tasks must benefit more from DLB than GEMV"
+    );
+    assert!(bag.improvement() > 0.10, "gemm bag should clearly benefit");
+
+    let dir = ductr::experiments::out_dir("sec4");
+    ductr::metrics::csv::write_rows(
+        dir.join("sec4_q_table.csv"),
+        &["kind_index", "block", "q", "wt_guideline"],
+        &res.csv_rows(),
+    )
+    .expect("csv");
+    r.write_csv(dir.join("sec4_bench.csv").to_str().expect("utf8")).expect("csv");
+    println!("sec4: OK (csv in {})", dir.display());
+}

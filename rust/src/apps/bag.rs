@@ -1,0 +1,113 @@
+//! Imbalanced bag-of-tasks: independent synthetic tasks with a skewed
+//! placement — the canonical workload where DLB shines (no dependencies,
+//! pure load redistribution).
+
+use std::sync::Arc;
+
+use crate::core::graph::{GraphBuilder, TaskGraph};
+use crate::core::ids::ProcessId;
+use crate::core::task::TaskKind;
+use crate::util::rng::Rng;
+
+/// Parameters for the bag generator.
+#[derive(Debug, Clone, Copy)]
+pub struct BagParams {
+    pub tasks: usize,
+    /// Flops of an average task.
+    pub mean_flops: u64,
+    /// Placement skew ≥ 0: 0 = uniform; larger concentrates tasks on the
+    /// low-rank processes with a geometric-like profile.
+    pub skew: f64,
+    /// Spread of task sizes: each task's flops ~ mean · exp(±spread).
+    pub size_spread: f64,
+    /// Data block order (for migration-cost accounting).
+    pub block: usize,
+}
+
+impl Default for BagParams {
+    fn default() -> Self {
+        BagParams { tasks: 256, mean_flops: 50_000_000, skew: 2.0, size_spread: 0.5, block: 128 }
+    }
+}
+
+/// Build the bag over `processes` ranks.
+pub fn build(processes: usize, params: BagParams, seed: u64) -> Arc<TaskGraph> {
+    let mut rng = Rng::new(seed ^ 0xBA6);
+    let mut gb = GraphBuilder::new();
+    for _ in 0..params.tasks {
+        // skewed placement: weight ∝ exp(−skew · rank / P)
+        let home = if params.skew <= 0.0 {
+            rng.range_usize(0, processes)
+        } else {
+            // inverse-CDF draw from the exponential profile
+            let u = rng.next_f64();
+            let lam = params.skew;
+            let x = -(1.0 - u * (1.0 - (-lam).exp())).ln() / lam; // in [0,1)
+            ((x * processes as f64) as usize).min(processes - 1)
+        };
+        let d = gb.data(ProcessId(home as u32), params.block, params.block);
+        let factor = (params.size_spread * (2.0 * rng.next_f64() - 1.0)).exp();
+        let flops = ((params.mean_flops as f64) * factor) as u64;
+        gb.task(TaskKind::Synthetic, vec![], d, flops.max(1), None);
+    }
+    gb.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bag_is_independent() {
+        let g = build(4, BagParams::default(), 1);
+        assert_eq!(g.num_tasks(), 256);
+        assert!(g.tasks.iter().all(|t| t.deps.is_empty()));
+    }
+
+    #[test]
+    fn skew_concentrates_low_ranks() {
+        let p = 8;
+        let g = build(p, BagParams { skew: 3.0, ..Default::default() }, 2);
+        let mut counts = vec![0usize; p];
+        for t in &g.tasks {
+            counts[t.placement.idx()] += 1;
+        }
+        assert!(
+            counts[0] > counts[p - 1] * 2,
+            "rank 0 should be much more loaded: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn zero_skew_roughly_uniform() {
+        let p = 4;
+        let g = build(p, BagParams { skew: 0.0, tasks: 4000, ..Default::default() }, 3);
+        let mut counts = vec![0usize; p];
+        for t in &g.tasks {
+            counts[t.placement.idx()] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 1000.0).abs() < 150.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn sizes_spread_around_mean() {
+        let g = build(2, BagParams { size_spread: 1.0, ..Default::default() }, 4);
+        let flops: Vec<u64> = g.tasks.iter().map(|t| t.flops).collect();
+        let min = *flops.iter().min().expect("nonempty");
+        let max = *flops.iter().max().expect("nonempty");
+        assert!(max > min * 2, "spread expected: {min}..{max}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = build(4, BagParams::default(), 9);
+        let b = build(4, BagParams::default(), 9);
+        assert_eq!(a.tasks.len(), b.tasks.len());
+        for (x, y) in a.tasks.iter().zip(b.tasks.iter()) {
+            assert_eq!(x.flops, y.flops);
+            assert_eq!(x.placement, y.placement);
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! GEMV-chain workload — the low computational-intensity case of §4.
+//!
+//! `chains_per_proc` independent chains are seeded on a *subset* of the
+//! processes (the rest start idle), each chain being `chain_len` sequential
+//! GEMV tasks `y_{k+1} = A_k · y_k`.  With Q ≈ 20 (paper §4), migrating one
+//! GEMV costs as much as ~20 local ones: DLB should *not* pay off here
+//! unless queues are much deeper than Q — the crossover the `sec4` bench
+//! measures.
+
+use std::sync::Arc;
+
+use crate::core::graph::{GraphBuilder, TaskGraph};
+use crate::core::ids::ProcessId;
+use crate::core::task::TaskKind;
+
+/// Build the workload.  Chains are placed round-robin over the first
+/// `loaded_procs` processes; `block` is the GEMV matrix order.
+pub fn build(
+    processes: usize,
+    loaded_procs: usize,
+    chains_per_proc: usize,
+    chain_len: usize,
+    block: usize,
+) -> Arc<TaskGraph> {
+    assert!(loaded_procs >= 1 && loaded_procs <= processes);
+    let mut gb = GraphBuilder::new();
+    let total_chains = loaded_procs * chains_per_proc;
+    for c in 0..total_chains {
+        let home = ProcessId((c % loaded_procs) as u32);
+        // matrix handle reused along the chain (v0 input) + vector handles
+        let a = gb.data(home, block, block);
+        let mut y = gb.data(home, block, 1);
+        for _ in 0..chain_len {
+            let y_next = gb.data(home, block, 1);
+            gb.task(
+                TaskKind::Gemv,
+                vec![a, y],
+                y_next,
+                TaskKind::Gemv.flops_for_block(block as u64),
+                None,
+            );
+            y = y_next;
+        }
+    }
+    gb.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_count_and_kinds() {
+        let g = build(8, 4, 3, 10, 64);
+        assert_eq!(g.num_tasks(), 4 * 3 * 10);
+        assert!(g.tasks.iter().all(|t| t.kind == TaskKind::Gemv));
+    }
+
+    #[test]
+    fn chains_are_sequential() {
+        let g = build(4, 1, 1, 5, 32);
+        // single chain: tasks form a path
+        for (i, t) in g.tasks.iter().enumerate() {
+            if i == 0 {
+                assert!(t.deps.is_empty());
+            } else {
+                assert_eq!(t.deps.len(), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn only_loaded_procs_have_tasks() {
+        let g = build(8, 2, 2, 4, 32);
+        let mut owners: Vec<u32> = g.tasks.iter().map(|t| t.placement.0).collect();
+        owners.sort_unstable();
+        owners.dedup();
+        assert_eq!(owners, vec![0, 1]);
+    }
+
+    #[test]
+    fn gemv_intensity_is_low() {
+        let g = build(2, 1, 1, 1, 512);
+        let t = &g.tasks[0];
+        // F/D ≈ 2 ⇒ with S/R = 40, Q ≈ 20 (§4)
+        let q = 40.0 / t.intensity();
+        assert!((q - 20.0).abs() < 1.0, "Q = {q}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Additional workload generators beyond the Cholesky benchmark:
+//!
+//! - `gemv_chain` — the §4 low-intensity counterexample (Q ≈ 20);
+//! - `bag` — imbalanced bag-of-tasks (the cleanest DLB win);
+//! - `rand_dag` — random layered DAGs for stress/property testing.
+
+pub mod bag;
+pub mod gemv_chain;
+pub mod rand_dag;

@@ -1,0 +1,97 @@
+//! Random layered DAGs: stress and property-test workloads with
+//! non-trivial dependency structure and tunable parallelism.
+
+use std::sync::Arc;
+
+use crate::core::graph::{GraphBuilder, TaskGraph};
+use crate::core::ids::ProcessId;
+use crate::core::task::TaskKind;
+use crate::util::rng::Rng;
+
+/// Parameters for the layered-DAG generator.
+#[derive(Debug, Clone, Copy)]
+pub struct DagParams {
+    pub layers: usize,
+    pub width: usize,
+    /// Max dependencies drawn from the previous layer (≥ 1).
+    pub max_deps: usize,
+    pub mean_flops: u64,
+    pub block: usize,
+}
+
+impl Default for DagParams {
+    fn default() -> Self {
+        DagParams { layers: 10, width: 16, max_deps: 3, mean_flops: 10_000_000, block: 64 }
+    }
+}
+
+/// Build a random layered DAG over `processes` ranks with uniform random
+/// placement.
+pub fn build(processes: usize, params: DagParams, seed: u64) -> Arc<TaskGraph> {
+    assert!(params.max_deps >= 1 && params.layers >= 1 && params.width >= 1);
+    let mut rng = Rng::new(seed ^ 0xDA6);
+    let mut gb = GraphBuilder::new();
+    let mut prev_layer: Vec<crate::core::ids::DataId> = Vec::new();
+    for layer in 0..params.layers {
+        let mut this_layer = Vec::with_capacity(params.width);
+        for _ in 0..params.width {
+            let home = ProcessId(rng.range_usize(0, processes) as u32);
+            let out = gb.data(home, params.block, params.block);
+            let mut args = Vec::new();
+            if layer > 0 {
+                let ndeps = rng.range_usize(1, params.max_deps + 1).min(prev_layer.len());
+                let picks = rng.sample_distinct(prev_layer.len(), ndeps, None);
+                for p in picks {
+                    args.push(prev_layer[p]);
+                }
+            }
+            let jitter = 0.5 + rng.next_f64();
+            let flops = ((params.mean_flops as f64) * jitter) as u64;
+            gb.task(TaskKind::Synthetic, args, out, flops.max(1), None);
+            this_layer.push(out);
+        }
+        prev_layer = this_layer;
+    }
+    gb.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure_matches_params() {
+        let p = DagParams { layers: 5, width: 8, max_deps: 2, ..Default::default() };
+        let g = build(4, p, 1);
+        assert_eq!(g.num_tasks(), 40);
+        g.topo_order().expect("acyclic");
+        // layer 0 has no deps, later layers have 1..=2
+        for (i, t) in g.tasks.iter().enumerate() {
+            if i < 8 {
+                assert!(t.deps.is_empty());
+            } else {
+                assert!((1..=2).contains(&t.deps.len()), "task {i}: {:?}", t.deps.len());
+            }
+        }
+    }
+
+    #[test]
+    fn placements_cover_processes() {
+        let g = build(4, DagParams { layers: 20, width: 20, ..Default::default() }, 2);
+        let mut seen = [false; 4];
+        for t in &g.tasks {
+            seen[t.placement.idx()] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = build(3, DagParams::default(), 5);
+        let b = build(3, DagParams::default(), 5);
+        for (x, y) in a.tasks.iter().zip(b.tasks.iter()) {
+            assert_eq!(x.deps, y.deps);
+            assert_eq!(x.flops, y.flops);
+        }
+    }
+}

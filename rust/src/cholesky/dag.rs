@@ -1,0 +1,194 @@
+//! Right-looking block Cholesky task-graph generation (paper §5, Fig 2).
+//!
+//! For an nb×nb block matrix (lower triangle stored), column j produces:
+//!
+//! ```text
+//! L[j,j]  = potrf(A[j,j])
+//! L[i,j]  = trsm(L[j,j], A[i,j])            i = j+1..nb
+//! A[i,i] -= L[i,j]·L[i,j]ᵀ        (syrk)    i = j+1..nb
+//! A[i,k] -= L[i,j]·L[k,j]ᵀ        (gemm)    j < k < i
+//! ```
+//!
+//! Must stay in sync with `python/compile/model.py::block_cholesky` — the
+//! Python version is the build-time validation of the same algebra.
+
+use std::sync::Arc;
+
+use crate::core::graph::{GraphBuilder, TaskGraph};
+use crate::core::ids::DataId;
+use crate::core::task::TaskKind;
+
+use super::grid::ProcessGrid;
+
+/// The generated graph plus the handle map for block (i, j), i ≥ j.
+pub struct CholeskyDag {
+    pub graph: Arc<TaskGraph>,
+    pub nb: usize,
+    pub block: usize,
+    /// Handle of block (i, j) for i ≥ j (row-major triangular index).
+    handles: Vec<DataId>,
+}
+
+/// Triangular index of (i, j), i ≥ j.
+fn tri(i: usize, j: usize) -> usize {
+    debug_assert!(i >= j);
+    i * (i + 1) / 2 + j
+}
+
+impl CholeskyDag {
+    pub fn handle(&self, i: usize, j: usize) -> DataId {
+        self.handles[tri(i, j)]
+    }
+
+    /// Expected task count: nb potrf + C(nb,2) trsm + C(nb,2) syrk +
+    /// C(nb,3) gemm.
+    pub fn expected_tasks(nb: usize) -> usize {
+        let c2 = nb * nb.saturating_sub(1) / 2;
+        let c3 = nb * nb.saturating_sub(1) * nb.saturating_sub(2) / 6;
+        nb + 2 * c2 + c3
+    }
+}
+
+/// Build the Cholesky DAG with block-cyclic owner-computes placement.
+pub fn build(nb: usize, block: usize, grid: ProcessGrid) -> CholeskyDag {
+    assert!(nb >= 1 && block >= 1);
+    let b = block as u64;
+    let mut gb = GraphBuilder::new();
+
+    // lower-triangle block handles
+    let mut handles = vec![DataId(0); tri(nb - 1, nb - 1) + 1];
+    for i in 0..nb {
+        for j in 0..=i {
+            handles[tri(i, j)] = gb.data(grid.owner(i, j), block, block);
+        }
+    }
+    let h = |i: usize, j: usize| handles[tri(i, j)];
+
+    for j in 0..nb {
+        // L[j,j] = potrf(A[j,j])
+        gb.task(TaskKind::Potrf, vec![h(j, j)], h(j, j), TaskKind::Potrf.flops_for_block(b), None);
+        // panel: L[i,j] = trsm(L[j,j], A[i,j])
+        for i in (j + 1)..nb {
+            gb.task(
+                TaskKind::Trsm,
+                vec![h(j, j), h(i, j)],
+                h(i, j),
+                TaskKind::Trsm.flops_for_block(b),
+                None,
+            );
+        }
+        // trailing updates
+        for i in (j + 1)..nb {
+            gb.task(
+                TaskKind::Syrk,
+                vec![h(i, i), h(i, j)],
+                h(i, i),
+                TaskKind::Syrk.flops_for_block(b),
+                None,
+            );
+            for k in (j + 1)..i {
+                gb.task(
+                    TaskKind::Gemm,
+                    vec![h(i, k), h(i, j), h(k, j)],
+                    h(i, k),
+                    TaskKind::Gemm.flops_for_block(b),
+                    None,
+                );
+            }
+        }
+    }
+
+    CholeskyDag { graph: gb.build(), nb, block, handles }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Grid;
+    use crate::core::ids::ProcessId;
+
+    fn grid(r: usize, c: usize) -> ProcessGrid {
+        ProcessGrid::new(Grid::new(r, c))
+    }
+
+    #[test]
+    fn task_count_formula() {
+        for nb in 1..=8 {
+            let d = build(nb, 8, grid(2, 2));
+            assert_eq!(d.graph.num_tasks(), CholeskyDag::expected_tasks(nb), "nb={nb}");
+        }
+        // paper Fig 4: 12×12 blocks
+        let d = build(12, 8, grid(2, 5));
+        assert_eq!(d.graph.num_tasks(), 12 + 2 * 66 + 220);
+    }
+
+    #[test]
+    fn graph_is_acyclic() {
+        let d = build(6, 8, grid(2, 3));
+        d.graph.topo_order().expect("acyclic");
+    }
+
+    #[test]
+    fn kind_counts() {
+        let nb = 5;
+        let d = build(nb, 8, grid(1, 2));
+        let count = |k: TaskKind| d.graph.tasks.iter().filter(|t| t.kind == k).count();
+        assert_eq!(count(TaskKind::Potrf), nb);
+        assert_eq!(count(TaskKind::Trsm), nb * (nb - 1) / 2);
+        assert_eq!(count(TaskKind::Syrk), nb * (nb - 1) / 2);
+        assert_eq!(count(TaskKind::Gemm), nb * (nb - 1) * (nb - 2) / 6);
+    }
+
+    #[test]
+    fn placement_follows_output_owner() {
+        let g = grid(2, 3);
+        let d = build(6, 8, g);
+        for t in &d.graph.tasks {
+            let meta = d.graph.meta(t.output);
+            assert_eq!(t.placement, meta.home, "owner computes");
+        }
+    }
+
+    #[test]
+    fn first_potrf_is_sole_root_column_zero() {
+        let d = build(4, 8, grid(2, 2));
+        // the first task (potrf(0,0)) must have no deps
+        assert!(d.graph.tasks[0].deps.is_empty());
+        assert_eq!(d.graph.tasks[0].kind, TaskKind::Potrf);
+        // every trsm in column 0 depends on it
+        for t in &d.graph.tasks {
+            if t.kind == TaskKind::Trsm && t.args[0] == d.handle(0, 0) {
+                assert!(t.deps.contains(&d.graph.tasks[0].id));
+            }
+        }
+    }
+
+    #[test]
+    fn dependency_chain_depth_is_linear_in_nb() {
+        // the critical path of right-looking cholesky is Θ(nb) potrf+trsm+
+        // gemm chains, so longest path flops grows ~linearly in nb.
+        let d4 = build(4, 8, grid(2, 2));
+        let d8 = build(8, 8, grid(2, 2));
+        let c4 = d4.graph.critical_path_flops();
+        let c8 = d8.graph.critical_path_flops();
+        let ratio = c8 as f64 / c4 as f64;
+        assert!(ratio > 1.7 && ratio < 2.7, "ratio {ratio}");
+    }
+
+    #[test]
+    fn single_block_is_one_potrf() {
+        let d = build(1, 16, grid(1, 1));
+        assert_eq!(d.graph.num_tasks(), 1);
+        assert_eq!(d.graph.tasks[0].kind, TaskKind::Potrf);
+        assert_eq!(d.graph.tasks[0].placement, ProcessId(0));
+    }
+
+    #[test]
+    fn last_task_is_final_potrf() {
+        let d = build(5, 8, grid(1, 2));
+        let last = d.graph.tasks.last().expect("nonempty");
+        assert_eq!(last.kind, TaskKind::Potrf);
+        assert_eq!(last.output, d.handle(4, 4));
+        assert!(last.dependents.is_empty());
+    }
+}

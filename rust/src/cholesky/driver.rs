@@ -1,0 +1,194 @@
+//! End-to-end Cholesky drivers: set up the DAG + data, run in DES or
+//! threaded mode, verify, and report.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::core::data::Payload;
+use crate::core::ids::DataId;
+use crate::metrics::counters::DlbCounters;
+use crate::metrics::trace::RunTraces;
+use crate::runtime::threaded::{run_threaded, InitialData};
+use crate::sim::engine::SimEngine;
+use crate::util::rng::Rng;
+
+use super::dag::{build, CholeskyDag};
+use super::grid::ProcessGrid;
+use super::verify::{gather_lower, residual, Dense};
+
+/// Unified report for one Cholesky run in either mode.
+#[derive(Debug)]
+pub struct CholeskyReport {
+    pub makespan: f64,
+    pub traces: RunTraces,
+    pub counters: DlbCounters,
+    pub per_process_counters: Vec<DlbCounters>,
+    /// Relative residual of L·Lᵀ vs A (real mode only).
+    pub residual: Option<f64>,
+    /// Fraction of S·P·makespan actually spent on task flops (sim mode).
+    pub utilization: Option<f64>,
+    pub tasks: usize,
+    pub static_imbalance: f64,
+}
+
+/// Generate the deterministic SPD test matrix A = M·Mᵀ + n·I (f32).
+pub fn make_spd(n: usize, seed: u64) -> Dense {
+    let mut rng = Rng::new(seed ^ 0x5bd1e995);
+    let mut m = Dense::zeros(n);
+    for v in m.a.iter_mut() {
+        *v = (rng.next_f64() as f32) - 0.5;
+    }
+    let mut a = Dense::zeros(n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut acc = 0.0f32;
+            for k in 0..n {
+                acc += m.get(i, k) * m.get(j, k);
+            }
+            a.set(i, j, acc + if i == j { n as f32 } else { 0.0 });
+            a.set(j, i, acc + if i == j { n as f32 } else { 0.0 });
+        }
+    }
+    a
+}
+
+/// Slice block (i, j) out of a dense matrix.
+fn block_of(a: &Dense, i: usize, j: usize, b: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(b * b);
+    for r in 0..b {
+        for c in 0..b {
+            out.push(a.get(i * b + r, j * b + c));
+        }
+    }
+    out
+}
+
+/// Build the per-process initial data for a real run: each process gets the
+/// version-0 values of the lower-triangle blocks it owns.
+pub fn initial_data(dag: &CholeskyDag, a: &Dense, processes: usize) -> InitialData {
+    let mut init: InitialData = vec![Vec::new(); processes];
+    for i in 0..dag.nb {
+        for j in 0..=i {
+            let h: DataId = dag.handle(i, j);
+            let home = dag.graph.meta(h).home;
+            init[home.idx()].push((h, Payload::Real(block_of(a, i, j, dag.block))));
+        }
+    }
+    init
+}
+
+/// Run the paper's benchmark in DES mode at any scale.
+pub fn run_sim(cfg: &Config) -> Result<CholeskyReport> {
+    let grid = ProcessGrid::new(cfg.effective_grid());
+    if grid.size() != cfg.processes {
+        return Err(anyhow!("grid {}x{} != {} processes", grid.rows, grid.cols, cfg.processes));
+    }
+    let dag = build(cfg.nb, cfg.block, grid);
+    let tasks = dag.graph.num_tasks();
+    let mut eng = SimEngine::from_config(cfg, Arc::clone(&dag.graph));
+    let r = eng.run().map_err(|e| anyhow!("sim: {e}"))?;
+    Ok(CholeskyReport {
+        makespan: r.makespan,
+        traces: r.traces,
+        counters: r.counters,
+        per_process_counters: r.per_process_counters,
+        residual: None,
+        utilization: Some(r.utilization),
+        tasks,
+        static_imbalance: grid.imbalance(cfg.nb),
+    })
+}
+
+/// Run the benchmark on real threads with PJRT kernels and verify numerics.
+pub fn run_real(cfg: &Config) -> Result<CholeskyReport> {
+    let grid = ProcessGrid::new(cfg.effective_grid());
+    if grid.size() != cfg.processes {
+        return Err(anyhow!("grid {}x{} != {} processes", grid.rows, grid.cols, cfg.processes));
+    }
+    let dag = build(cfg.nb, cfg.block, grid);
+    let tasks = dag.graph.num_tasks();
+    let n = cfg.nb * cfg.block;
+    let a = make_spd(n, cfg.seed);
+    let init = initial_data(&dag, &a, cfg.processes);
+    let r = run_threaded(cfg, Arc::clone(&dag.graph), init, true)?;
+    let l = gather_lower(&dag, &r.stores).map_err(|e| anyhow!("gather: {e}"))?;
+    let res = residual(&l, &a);
+    Ok(CholeskyReport {
+        makespan: r.makespan,
+        traces: r.traces,
+        counters: r.counters,
+        per_process_counters: r.per_process_counters,
+        residual: Some(res),
+        utilization: None,
+        tasks,
+        static_imbalance: grid.imbalance(cfg.nb),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Grid;
+
+    fn sim_cfg(nb: usize, p: usize, grid: (usize, usize), dlb: bool, seed: u64) -> Config {
+        let mut c = Config::default();
+        c.processes = p;
+        c.grid = Some(Grid::new(grid.0, grid.1));
+        c.nb = nb;
+        c.block = 128;
+        c.dlb_enabled = dlb;
+        c.seed = seed;
+        c.wt = 3;
+        c.delta = 0.001;
+        c.validate().expect("valid");
+        c
+    }
+
+    #[test]
+    fn sim_run_completes_and_is_deterministic() {
+        let cfg = sim_cfg(8, 4, (2, 2), true, 42);
+        let a = run_sim(&cfg).expect("a");
+        let b = run_sim(&cfg).expect("b");
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.tasks, 8 + 2 * 28 + 56);
+        assert!(a.makespan > 0.0);
+    }
+
+    #[test]
+    fn spd_matrix_is_symmetric_dominant() {
+        let a = make_spd(32, 1);
+        for i in 0..32 {
+            for j in 0..32 {
+                assert_eq!(a.get(i, j), a.get(j, i));
+            }
+            assert!(a.get(i, i) > 16.0);
+        }
+    }
+
+    #[test]
+    fn initial_data_covers_lower_triangle() {
+        let grid = ProcessGrid::new(Grid::new(2, 2));
+        let dag = build(4, 8, grid);
+        let a = make_spd(32, 2);
+        let init = initial_data(&dag, &a, 4);
+        let total: usize = init.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 4 * 5 / 2);
+    }
+
+    #[test]
+    fn dlb_off_vs_on_sim_nonsquare_grid() {
+        // the paper's effect: on a non-square grid, DLB should not hurt and
+        // typically helps by a few percent
+        let off = run_sim(&sim_cfg(12, 10, (2, 5), false, 7)).expect("off");
+        let on = run_sim(&sim_cfg(12, 10, (2, 5), true, 7)).expect("on");
+        assert!(on.counters.transactions > 0, "expected pairing activity");
+        assert!(
+            on.makespan < off.makespan * 1.05,
+            "DLB must not make things much worse: on={} off={}",
+            on.makespan,
+            off.makespan
+        );
+    }
+}

@@ -1,0 +1,100 @@
+//! Block-cyclic distribution over a 2-D process grid (§5).
+//!
+//! Block (i, j) of the matrix lives at grid position (i mod pr, j mod pc);
+//! the paper's experiments deliberately use non-square grids (2×5, 3×5,
+//! 11×1) whose inherent imbalance DLB is asked to repair.
+
+use crate::config::Grid;
+use crate::core::ids::ProcessId;
+
+/// A process grid with block-cyclic ownership.
+#[derive(Debug, Clone, Copy)]
+pub struct ProcessGrid {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl ProcessGrid {
+    pub fn new(g: Grid) -> Self {
+        ProcessGrid { rows: g.rows, cols: g.cols }
+    }
+
+    pub fn size(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Owner of block (i, j): row-major rank of (i mod pr, j mod pc).
+    pub fn owner(&self, i: usize, j: usize) -> ProcessId {
+        let r = i % self.rows;
+        let c = j % self.cols;
+        ProcessId((r * self.cols + c) as u32)
+    }
+
+    /// Number of lower-triangle blocks (i ≥ j) of an nb×nb block matrix
+    /// owned by each process — the static load distribution whose imbalance
+    /// Fig 4/5 visualize.
+    pub fn lower_triangle_counts(&self, nb: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; self.size()];
+        for i in 0..nb {
+            for j in 0..=i {
+                counts[self.owner(i, j).idx()] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Static imbalance ratio: max / mean of the block counts (1.0 = even).
+    pub fn imbalance(&self, nb: usize) -> f64 {
+        let counts = self.lower_triangle_counts(nb);
+        let max = *counts.iter().max().expect("nonempty") as f64;
+        let mean = counts.iter().sum::<usize>() as f64 / counts.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owner_is_block_cyclic() {
+        let g = ProcessGrid::new(Grid::new(2, 3));
+        assert_eq!(g.owner(0, 0), ProcessId(0));
+        assert_eq!(g.owner(0, 1), ProcessId(1));
+        assert_eq!(g.owner(0, 2), ProcessId(2));
+        assert_eq!(g.owner(1, 0), ProcessId(3));
+        assert_eq!(g.owner(2, 0), ProcessId(0)); // wraps rows
+        assert_eq!(g.owner(0, 3), ProcessId(0)); // wraps cols
+    }
+
+    #[test]
+    fn all_processes_used() {
+        let g = ProcessGrid::new(Grid::new(2, 5));
+        let counts = g.lower_triangle_counts(12);
+        assert_eq!(counts.len(), 10);
+        assert!(counts.iter().all(|&c| c > 0));
+        let total: usize = counts.iter().sum();
+        assert_eq!(total, 12 * 13 / 2);
+    }
+
+    #[test]
+    fn square_grid_is_more_balanced_than_column() {
+        // paper §5: imbalance is minimized for square-ish grids
+        let nb = 12;
+        let sq = ProcessGrid::new(Grid::new(3, 4)).imbalance(nb);
+        let col = ProcessGrid::new(Grid::new(12, 1)).imbalance(nb);
+        assert!(sq < col, "square {sq} vs column {col}");
+    }
+
+    #[test]
+    fn paper_grids_are_imbalanced() {
+        // the Fig 4/5 configurations have real static imbalance to repair
+        assert!(ProcessGrid::new(Grid::new(2, 5)).imbalance(12) > 1.05);
+        assert!(ProcessGrid::new(Grid::new(3, 5)).imbalance(12) > 1.05);
+        assert!(ProcessGrid::new(Grid::new(11, 1)).imbalance(11) > 1.05);
+    }
+}

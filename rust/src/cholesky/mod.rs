@@ -1,0 +1,12 @@
+//! The block Cholesky benchmark (paper §5): DAG generation, block-cyclic
+//! grids, run drivers for both modes, and numeric verification.
+
+pub mod dag;
+pub mod driver;
+pub mod grid;
+pub mod verify;
+
+pub use dag::{build, CholeskyDag};
+pub use driver::{initial_data, make_spd, run_real, run_sim, CholeskyReport};
+pub use grid::ProcessGrid;
+pub use verify::{gather_lower, residual, Dense};

@@ -1,0 +1,146 @@
+//! Numeric verification of a real-mode factorization: reassemble L from the
+//! distributed stores and check L·Lᵀ ≈ A.
+
+use crate::core::data::DataStore;
+
+use super::dag::CholeskyDag;
+
+/// Dense column-major-free helper: row-major n×n matrix.
+#[derive(Debug, Clone)]
+pub struct Dense {
+    pub n: usize,
+    pub a: Vec<f32>,
+}
+
+impl Dense {
+    pub fn zeros(n: usize) -> Self {
+        Dense { n, a: vec![0.0; n * n] }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.a[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.a[i * self.n + j] = v;
+    }
+}
+
+/// Gather the lower-triangular factor from the per-process stores.
+/// Block (i, j) lives in the store of its home process.
+pub fn gather_lower(dag: &CholeskyDag, stores: &[DataStore]) -> Result<Dense, String> {
+    let b = dag.block;
+    let n = dag.nb * b;
+    let mut l = Dense::zeros(n);
+    for i in 0..dag.nb {
+        for j in 0..=i {
+            let h = dag.handle(i, j);
+            let home = dag.graph.meta(h).home;
+            let payload = stores[home.idx()]
+                .get(h)
+                .ok_or_else(|| format!("block ({i},{j}) missing from {home}"))?;
+            let buf = payload
+                .real()
+                .ok_or_else(|| format!("block ({i},{j}) is not real data"))?;
+            if buf.len() != b * b {
+                return Err(format!("block ({i},{j}) has {} elems, want {}", buf.len(), b * b));
+            }
+            for r in 0..b {
+                for c in 0..b {
+                    let (gi, gj) = (i * b + r, j * b + c);
+                    if gi >= gj {
+                        l.set(gi, gj, buf[r * b + c]);
+                    }
+                }
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Max-norm relative residual ‖L·Lᵀ − A‖ / (n·‖A‖) over the lower triangle.
+pub fn residual(l: &Dense, a: &Dense) -> f64 {
+    assert_eq!(l.n, a.n);
+    let n = l.n;
+    let mut amax = 0.0f64;
+    let mut emax = 0.0f64;
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = 0.0f64;
+            for k in 0..=j {
+                s += l.get(i, k) as f64 * l.get(j, k) as f64;
+            }
+            let av = a.get(i, j) as f64;
+            amax = amax.max(av.abs());
+            emax = emax.max((s - av).abs());
+        }
+    }
+    if amax == 0.0 {
+        return emax;
+    }
+    emax / (n as f64 * amax)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Dense reference Cholesky for the tests.
+    pub fn cholesky_dense(a: &Dense) -> Dense {
+        let n = a.n;
+        let mut l = Dense::zeros(n);
+        for j in 0..n {
+            let mut d = a.get(j, j) as f64;
+            for k in 0..j {
+                d -= (l.get(j, k) as f64).powi(2);
+            }
+            let d = d.sqrt();
+            l.set(j, j, d as f32);
+            for i in (j + 1)..n {
+                let mut s = a.get(i, j) as f64;
+                for k in 0..j {
+                    s -= l.get(i, k) as f64 * l.get(j, k) as f64;
+                }
+                l.set(i, j, (s / d) as f32);
+            }
+        }
+        l
+    }
+
+    fn spd(n: usize) -> Dense {
+        let mut m = Dense::zeros(n);
+        let mut s = 12345u64;
+        for i in 0..n * n {
+            m.a[i] = (crate::util::rng::splitmix64(&mut s) as f64 / u64::MAX as f64) as f32 - 0.5;
+        }
+        // a = m mᵀ + n i
+        let mut a = Dense::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for k in 0..n {
+                    acc += m.get(i, k) * m.get(j, k);
+                }
+                a.set(i, j, acc + if i == j { n as f32 } else { 0.0 });
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn dense_cholesky_residual_small() {
+        let a = spd(24);
+        let l = cholesky_dense(&a);
+        assert!(residual(&l, &a) < 1e-6);
+    }
+
+    #[test]
+    fn residual_detects_corruption() {
+        let a = spd(16);
+        let mut l = cholesky_dense(&a);
+        l.set(7, 3, l.get(7, 3) + 1.0);
+        assert!(residual(&l, &a) > 1e-4);
+    }
+}

@@ -1,0 +1,223 @@
+//! Lightweight CLI argument parser.
+//!
+//! Grammar: `ductr <subcommand> [--flag] [--key value] [--key=value] [pos..]`.
+//! Typed getters consume recognized keys so `finish()` can reject typos —
+//! the failure mode that silently ignores `--strateg smart` is the one we
+//! must not have in an experiment driver.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+#[error("argument error: {0}")]
+pub struct ArgError(pub String);
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    consumed: std::collections::BTreeSet<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I, S>(raw: I) -> Result<Args, ArgError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().map(Into::into).peekable();
+        // first non-flag token is the subcommand
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // `--` : everything after is positional
+                    args.positional.extend(it.by_ref());
+                    break;
+                }
+                let (key, val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if key.is_empty() {
+                    return Err(ArgError(format!("malformed flag: {tok}")));
+                }
+                let val = match val {
+                    Some(v) => v,
+                    None => {
+                        // take the next token as the value unless it looks
+                        // like a flag — then this is a boolean switch
+                        match it.peek() {
+                            Some(next) if !next.starts_with("--") => it.next().expect("peeked"),
+                            _ => String::from("true"),
+                        }
+                    }
+                };
+                args.flags.entry(key).or_default().push(val);
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the live process arguments.
+    pub fn from_env() -> Result<Args, ArgError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn take(&mut self, key: &str) -> Option<&str> {
+        if self.flags.contains_key(key) {
+            self.consumed.insert(key.to_string());
+            self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+        } else {
+            None
+        }
+    }
+
+    /// String flag.
+    pub fn get_str(&mut self, key: &str) -> Option<String> {
+        self.take(key).map(|s| s.to_string())
+    }
+
+    /// All occurrences of a repeatable flag (e.g. `--set a=1 --set b=2`).
+    pub fn get_all(&mut self, key: &str) -> Vec<String> {
+        if self.flags.contains_key(key) {
+            self.consumed.insert(key.to_string());
+            self.flags.get(key).cloned().unwrap_or_default()
+        } else {
+            Vec::new()
+        }
+    }
+
+    /// Boolean switch: `--foo`, `--foo=true/false`.
+    pub fn get_bool(&mut self, key: &str) -> Result<bool, ArgError> {
+        match self.take(key) {
+            None => Ok(false),
+            Some("true") | Some("1") | Some("yes") | Some("on") => Ok(true),
+            Some("false") | Some("0") | Some("no") | Some("off") => Ok(false),
+            Some(v) => Err(ArgError(format!("--{key}: expected bool, got {v}"))),
+        }
+    }
+
+    pub fn get_usize(&mut self, key: &str) -> Result<Option<usize>, ArgError> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| ArgError(format!("--{key}: expected integer, got {v}"))),
+        }
+    }
+
+    pub fn get_u64(&mut self, key: &str) -> Result<Option<u64>, ArgError> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| ArgError(format!("--{key}: expected integer, got {v}"))),
+        }
+    }
+
+    pub fn get_f64(&mut self, key: &str) -> Result<Option<f64>, ArgError> {
+        match self.take(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| ArgError(format!("--{key}: expected number, got {v}"))),
+        }
+    }
+
+    /// Reject any flag that no getter consumed.
+    pub fn finish(&self) -> Result<(), ArgError> {
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !self.consumed.contains(*k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(ArgError(format!(
+                "unknown flag(s): {}",
+                unknown.iter().map(|k| format!("--{k}")).collect::<Vec<_>>().join(", ")
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().copied()).expect("parse")
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let mut a = parse(&["run", "--mode", "sim", "--dlb", "--wt=5", "pos1"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get_str("mode").as_deref(), Some("sim"));
+        assert!(a.get_bool("dlb").expect("bool"));
+        assert_eq!(a.get_usize("wt").expect("usize"), Some(5));
+        assert_eq!(a.positional, vec!["pos1"]);
+        a.finish().expect("all consumed");
+    }
+
+    #[test]
+    fn equals_and_space_forms_agree() {
+        let mut a = parse(&["x", "--k=3"]);
+        let mut b = parse(&["x", "--k", "3"]);
+        assert_eq!(a.get_usize("k").expect("a"), b.get_usize("k").expect("b"));
+    }
+
+    #[test]
+    fn bool_switch_before_flag() {
+        let mut a = parse(&["x", "--verbose", "--n", "2"]);
+        assert!(a.get_bool("verbose").expect("bool"));
+        assert_eq!(a.get_usize("n").expect("n"), Some(2));
+    }
+
+    #[test]
+    fn repeatable_flags() {
+        let mut a = parse(&["x", "--set", "a=1", "--set", "b=2"]);
+        assert_eq!(a.get_all("set"), vec!["a=1", "b=2"]);
+    }
+
+    #[test]
+    fn last_occurrence_wins_for_scalar() {
+        let mut a = parse(&["x", "--n", "1", "--n", "9"]);
+        assert_eq!(a.get_usize("n").expect("n"), Some(9));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let mut a = parse(&["x", "--typo", "3"]);
+        let _ = a.get_usize("correct");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse(&["x", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn bad_number_reports_key() {
+        let mut a = parse(&["x", "--n", "abc"]);
+        let e = a.get_usize("n").expect_err("should fail");
+        assert!(e.to_string().contains("--n"));
+    }
+
+    #[test]
+    fn missing_returns_none() {
+        let mut a = parse(&["x"]);
+        assert_eq!(a.get_usize("nope").expect("ok"), None);
+        assert!(!a.get_bool("flag").expect("ok"));
+    }
+}

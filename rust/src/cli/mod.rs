@@ -1,0 +1,6 @@
+//! Command-line interface: a small argument parser (clap is unavailable
+//! offline) plus the `ductr` subcommand surface.
+
+pub mod args;
+
+pub use args::{ArgError, Args};

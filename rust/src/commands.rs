@@ -1,0 +1,345 @@
+//! Subcommand dispatch for the `ductr` binary.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use ductr::apps::{bag, gemv_chain, rand_dag};
+use ductr::cholesky;
+use ductr::cli::Args;
+use ductr::config::{Config, Grid, Mode, Strategy, Workload};
+use ductr::core::task::TaskKind;
+use ductr::dlb::threshold::calibrate_from_traces;
+use ductr::experiments::{ablation, fig1, fig3, fig4, fig5, sec4};
+use ductr::metrics::csv;
+use ductr::runtime::{KernelLibrary, Manifest};
+use ductr::sim::engine::SimEngine;
+use std::sync::Arc;
+
+const USAGE: &str = "\
+ductr — distributed dynamic load balancing for task-parallel programs
+(reproduction of Zafari & Larsson 2018)
+
+USAGE:
+    ductr <subcommand> [flags]
+
+SUBCOMMANDS:
+    run               run one workload (see flags below)
+    experiment <id>   regenerate a paper figure: fig1 | fig3 | fig4 | fig5 | sec4 | ablation | all
+    calibrate-wt      §6 calibration: run without DLB, print W_T = max w/2
+    artifacts-check   compile + smoke-run every AOT kernel artifact
+    help              this text
+
+RUN FLAGS (defaults in parentheses):
+    --config FILE       load a TOML config first
+    --mode sim|real     execution mode (sim)
+    --workload W        cholesky|gemv_chain|bag|random_dag (cholesky)
+    --p N               number of processes (10)
+    --grid RxC          process grid, must multiply to --p (squarest)
+    --nb N              blocks per matrix dimension (12)
+    --block N           block size; real mode needs a matching artifact (64)
+    --dlb on|off        dynamic load balancing (on)
+    --strategy S        basic|equalizing|smart (basic)
+    --wt N              busy threshold W_T (5)
+    --delta SECONDS     search back-off δ (0.010)
+    --seed N            run seed (1)
+    --trace FILE.csv    write per-process workload traces
+    --set sec.key=val   raw config override (repeatable)
+
+EXPERIMENT FLAGS:
+    --out DIR           CSV output directory (results/<id>)
+    --quick             reduced trial counts / scaled sizes
+";
+
+pub fn dispatch() -> Result<()> {
+    let mut args = Args::from_env().map_err(|e| anyhow!("{e}"))?;
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    match sub.as_str() {
+        "run" => cmd_run(&mut args),
+        "experiment" => cmd_experiment(&mut args),
+        "calibrate-wt" => cmd_calibrate(&mut args),
+        "artifacts-check" => cmd_artifacts_check(&mut args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}`\n\n{USAGE}"),
+    }
+}
+
+/// Assemble a Config from --config + individual flags + --set overrides.
+fn config_from_args(args: &mut Args) -> Result<Config> {
+    let mut cfg = match args.get_str("config") {
+        Some(path) => Config::from_file(&path).with_context(|| format!("loading {path}"))?,
+        None => Config::default(),
+    };
+    if let Some(m) = args.get_str("mode") {
+        cfg.mode = Mode::parse(&m)?;
+    }
+    if let Some(w) = args.get_str("workload") {
+        cfg.workload = Workload::parse(&w)?;
+    }
+    if let Some(p) = args.get_usize("p")? {
+        cfg.processes = p;
+        cfg.grid = None; // re-derive unless --grid follows
+    }
+    if let Some(g) = args.get_str("grid") {
+        cfg.grid = Some(Grid::parse(&g)?);
+    }
+    if let Some(nb) = args.get_usize("nb")? {
+        cfg.nb = nb;
+    }
+    if let Some(b) = args.get_usize("block")? {
+        cfg.block = b;
+    }
+    if let Some(d) = args.get_str("dlb") {
+        cfg.dlb_enabled = matches!(d.as_str(), "on" | "true" | "1");
+    }
+    if let Some(s) = args.get_str("strategy") {
+        cfg.strategy = Strategy::parse(&s)?;
+    }
+    if let Some(wt) = args.get_usize("wt")? {
+        cfg.wt = wt;
+    }
+    if let Some(d) = args.get_f64("delta")? {
+        cfg.delta = d;
+    }
+    if let Some(s) = args.get_u64("seed")? {
+        cfg.seed = s;
+    }
+    let overrides = args.get_all("set");
+    cfg.apply_overrides(overrides.iter().map(|s| s.as_str()))?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &mut Args) -> Result<()> {
+    let trace_out = args.get_str("trace");
+    let cfg = config_from_args(args)?;
+    args.finish().map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+
+    println!(
+        "ductr run: workload={} mode={} P={} grid={} dlb={} strategy={} W_T={} δ={}s seed={}",
+        cfg.workload,
+        cfg.mode,
+        cfg.processes,
+        cfg.effective_grid(),
+        cfg.dlb_enabled,
+        cfg.strategy,
+        cfg.wt,
+        cfg.delta,
+        cfg.seed
+    );
+
+    let (makespan, traces, counters) = match (cfg.workload, cfg.mode) {
+        (Workload::Cholesky, Mode::Sim) => {
+            let r = cholesky::run_sim(&cfg)?;
+            println!(
+                "tasks={} static-imbalance={:.3} utilization={:.1}%",
+                r.tasks,
+                r.static_imbalance,
+                r.utilization.unwrap_or(0.0) * 100.0
+            );
+            (r.makespan, r.traces, r.counters)
+        }
+        (Workload::Cholesky, Mode::Real) => {
+            let r = cholesky::run_real(&cfg)?;
+            let res = r.residual.unwrap_or(f64::NAN);
+            println!("tasks={} residual={res:.3e}", r.tasks);
+            if !(res < 1e-3) {
+                bail!("numeric verification FAILED: residual {res:.3e}");
+            }
+            (r.makespan, r.traces, r.counters)
+        }
+        (w, Mode::Sim) => {
+            let graph = match w {
+                Workload::GemvChain => gemv_chain::build(
+                    cfg.processes,
+                    (cfg.processes / 2).max(1),
+                    cfg.chains_per_proc,
+                    cfg.chain_len,
+                    cfg.block,
+                ),
+                Workload::Bag => bag::build(
+                    cfg.processes,
+                    bag::BagParams {
+                        tasks: cfg.bag_tasks,
+                        skew: cfg.bag_skew,
+                        block: cfg.block,
+                        ..Default::default()
+                    },
+                    cfg.seed,
+                ),
+                Workload::RandomDag => {
+                    rand_dag::build(cfg.processes, rand_dag::DagParams::default(), cfg.seed)
+                }
+                Workload::Cholesky => unreachable!(),
+            };
+            let r = SimEngine::from_config(&cfg, graph).run().map_err(anyhow::Error::new)?;
+            println!("utilization={:.1}%", r.utilization * 100.0);
+            (r.makespan, r.traces, r.counters)
+        }
+        (w, Mode::Real) => {
+            let graph = match w {
+                Workload::Bag => bag::build(
+                    cfg.processes,
+                    bag::BagParams {
+                        tasks: cfg.bag_tasks,
+                        skew: cfg.bag_skew,
+                        block: cfg.block,
+                        ..Default::default()
+                    },
+                    cfg.seed,
+                ),
+                Workload::RandomDag => {
+                    rand_dag::build(cfg.processes, rand_dag::DagParams::default(), cfg.seed)
+                }
+                other => bail!("real mode for `{other}` not supported (synthetic payloads)"),
+            };
+            let init = vec![Vec::new(); cfg.processes];
+            let r = ductr::runtime::run_threaded(&cfg, graph, init, false)?;
+            (r.makespan, r.traces, r.counters)
+        }
+    };
+
+    println!("makespan: {makespan:.6} s");
+    println!("dlb: {}", counters.summary_line());
+    if let Some(path) = trace_out {
+        csv::write_traces(&path, &traces)?;
+        println!("traces → {path}");
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &mut Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("experiment needs an id: fig1|fig3|fig4|fig5|sec4|ablation|all"))?;
+    let quick = args.get_bool("quick")?;
+    let out = args.get_str("out");
+    let seed = args.get_u64("seed")?.unwrap_or(1);
+    args.finish().map_err(|e| anyhow!("{e}"))?;
+
+    let run_one = |id: &str| -> Result<()> {
+        let dir = out
+            .clone()
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| ductr::experiments::out_dir(id));
+        std::fs::create_dir_all(&dir).ok();
+        match id {
+            "fig1" => {
+                let r = fig1::run(10, if quick { 1000 } else { 20_000 }, seed);
+                println!("{}", r.render_panel(10));
+                println!("{}", r.render_panel(100));
+                println!(
+                    "K=P/2, n=5: success = {:.4} (asymptote 1-2^-5 = {:.4})",
+                    r.k_half_n5, r.asymptote_n5
+                );
+                csv::write_rows(
+                    dir.join("fig1.csv"),
+                    &["population", "busy", "tries", "exact", "monte_carlo"],
+                    &r.csv_rows(),
+                )?;
+            }
+            "fig3" => {
+                let (ps, trials): (&[usize], usize) = if quick {
+                    (&[8, 16, 32], 10)
+                } else {
+                    (&[8, 16, 32, 64, 128], 40)
+                };
+                let r = fig3::run(ps, &[0.1, 0.3, 0.5, 0.7, 0.9], 0.010, trials, seed);
+                println!("{}", r.render());
+                csv::write_rows(
+                    dir.join("fig3.csv"),
+                    &["processes", "busy_fraction", "mean_s", "max_s", "p95_s"],
+                    &r.csv_rows(),
+                )?;
+            }
+            "fig4" => {
+                let results = fig4::run(seed)?;
+                for r in &results {
+                    println!("{}", r.render(5));
+                    let stem = r.spec.name.replace([' ', '='], "_");
+                    csv::write_rows(
+                        dir.join(format!("fig4_{stem}.csv")),
+                        &["process", "time", "workload", "dlb"],
+                        &r.csv_rows(),
+                    )?;
+                }
+            }
+            "fig5" => {
+                let seeds: Vec<u64> = if quick { (1..=4).collect() } else { (1..=10).collect() };
+                let r = fig5::run(100_000, &seeds)?;
+                println!("{}", r.render());
+                csv::write_rows(
+                    dir.join("fig5.csv"),
+                    &["seed", "makespan", "improvement", "migrations"],
+                    &r.csv_rows(),
+                )?;
+            }
+            "sec4" => {
+                let r = sec4::run(seed)?;
+                println!("{}", r.render());
+                csv::write_rows(
+                    dir.join("sec4_q_table.csv"),
+                    &["kind_index", "block", "q", "wt_guideline"],
+                    &r.csv_rows(),
+                )?;
+            }
+            "ablation" => {
+                let r = ablation::run(seed)?;
+                println!("{}", r.render());
+                csv::write_rows(
+                    dir.join("ablation.csv"),
+                    &["row", "makespan", "improvement", "migrations", "requests", "max_w"],
+                    &r.csv_rows(),
+                )?;
+            }
+            other => bail!("unknown experiment `{other}`"),
+        }
+        Ok(())
+    };
+
+    if id == "all" {
+        for e in ["fig1", "fig3", "fig4", "fig5", "sec4", "ablation"] {
+            println!("\n================ {e} ================");
+            run_one(e)?;
+        }
+        Ok(())
+    } else {
+        run_one(&id)
+    }
+}
+
+fn cmd_calibrate(args: &mut Args) -> Result<()> {
+    let mut cfg = config_from_args(args)?;
+    args.finish().map_err(|e| anyhow!("{e}"))?;
+    cfg.dlb_enabled = false;
+    let r = match cfg.workload {
+        Workload::Cholesky => cholesky::run_sim(&cfg)?.traces,
+        _ => bail!("calibrate-wt currently supports the cholesky workload"),
+    };
+    let wt = calibrate_from_traces(&r);
+    println!("max_t w_i(t) = {}", r.max_workload());
+    println!("W_T = max/2 = {wt}   (paper §6 rule)");
+    Ok(())
+}
+
+fn cmd_artifacts_check(args: &mut Args) -> Result<()> {
+    let dir = args.get_str("artifacts").unwrap_or_else(|| "artifacts".to_string());
+    args.finish().map_err(|e| anyhow!("{e}"))?;
+    let manifest = Arc::new(Manifest::load(&dir).map_err(|e| anyhow!("{e}"))?);
+    manifest.check_files().map_err(|e| anyhow!("{e}"))?;
+    println!("manifest: {} kernel artifacts in {dir}", manifest.entries.len());
+    let mut blocks = manifest.blocks_for(TaskKind::Gemm);
+    blocks.sort_unstable();
+    for b in blocks {
+        let mut lib = KernelLibrary::new(Arc::clone(&manifest), b)?;
+        let report = lib.smoke_all()?;
+        for (kind, dt) in report {
+            println!("  block {b:>4} {kind:<6} compile+run OK ({:.1} ms)", dt * 1e3);
+        }
+    }
+    println!("artifacts-check: all kernels OK");
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! Configuration subsystem: a TOML-subset parser (`parser`) and the typed
+//! run configuration (`schema`) with paper-aligned defaults.
+
+pub mod parser;
+pub mod schema;
+
+pub use parser::{parse, Table, Value};
+pub use schema::{Config, ConfigError, Grid, Mode, Strategy, Workload};

@@ -1,0 +1,305 @@
+//! TOML-subset parser (serde/toml are unavailable offline).
+//!
+//! Supported grammar — the subset the ductr config schema needs:
+//!
+//! ```text
+//! # comment
+//! [section]
+//! key = 42            # integer
+//! key = 4.2e-3        # float
+//! key = true          # bool
+//! key = "text"        # string (no escapes beyond \" \\ \n \t)
+//! key = [1, 2, 3]     # homogeneous scalar array
+//! ```
+//!
+//! Keys before any `[section]` land in the `""` root section.  Duplicate
+//! keys: last one wins (documented, tested).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// `section → key → value`.
+pub type Table = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// Parse error with 1-based line number.
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError { line, msg: msg.into() }
+}
+
+/// Strip a trailing comment that is not inside a string literal.
+fn strip_comment(s: &str) -> &str {
+    let mut in_str = false;
+    let mut prev_escape = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' if !prev_escape => in_str = !in_str,
+            '#' if !in_str => return &s[..i],
+            _ => {}
+        }
+        prev_escape = c == '\\' && !prev_escape;
+    }
+    s
+}
+
+fn parse_scalar(tok: &str, line: usize) -> Result<Value, ParseError> {
+    let t = tok.trim();
+    if t.is_empty() {
+        return Err(err(line, "empty value"));
+    }
+    if t == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if t == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(stripped) = t.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| err(line, format!("unterminated string: {t}")))?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(err(line, format!("bad escape \\{other:?}"))),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    // ints first (no '.', 'e'); allow underscores
+    let cleaned = t.replace('_', "");
+    if !cleaned.contains('.') && !cleaned.contains(['e', 'E']) {
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(line, format!("cannot parse value: {t}")))
+}
+
+fn parse_value(tok: &str, line: usize) -> Result<Value, ParseError> {
+    let t = tok.trim();
+    if let Some(inner) = t.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(line, "unterminated array"))?;
+        let mut items = Vec::new();
+        // split on commas outside strings
+        let mut depth_str = false;
+        let mut start = 0usize;
+        let bytes = inner.as_bytes();
+        for i in 0..bytes.len() {
+            match bytes[i] {
+                b'"' => depth_str = !depth_str,
+                b',' if !depth_str => {
+                    let piece = &inner[start..i];
+                    if !piece.trim().is_empty() {
+                        items.push(parse_scalar(piece, line)?);
+                    }
+                    start = i + 1;
+                }
+                _ => {}
+            }
+        }
+        let last = &inner[start..];
+        if !last.trim().is_empty() {
+            items.push(parse_scalar(last, line)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    parse_scalar(t, line)
+}
+
+/// Parse a full document.
+pub fn parse(text: &str) -> Result<Table, ParseError> {
+    let mut table: Table = BTreeMap::new();
+    let mut section = String::new();
+    table.entry(section.clone()).or_default();
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            section = name.to_string();
+            table.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| err(lineno, format!("expected key = value, got: {line}")))?;
+        let key = k.trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let value = parse_value(v, lineno)?;
+        table
+            .get_mut(&section)
+            .expect("section inserted above")
+            .insert(key.to_string(), value);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_value_kinds() {
+        let t = parse(
+            r#"
+            # top comment
+            root_key = 1
+            [run]
+            mode = "sim"       # trailing comment
+            seed = 42
+            frac = 0.5
+            rate = 2.2e8
+            on = true
+            off = false
+            sizes = [32, 64, 128]
+            names = ["a", "b"]
+            big = 1_000_000
+            "#,
+        )
+        .expect("parse ok");
+        assert_eq!(t[""]["root_key"], Value::Int(1));
+        assert_eq!(t["run"]["mode"], Value::Str("sim".into()));
+        assert_eq!(t["run"]["seed"], Value::Int(42));
+        assert_eq!(t["run"]["frac"], Value::Float(0.5));
+        assert_eq!(t["run"]["rate"], Value::Float(2.2e8));
+        assert_eq!(t["run"]["on"], Value::Bool(true));
+        assert_eq!(t["run"]["off"], Value::Bool(false));
+        assert_eq!(
+            t["run"]["sizes"],
+            Value::Array(vec![Value::Int(32), Value::Int(64), Value::Int(128)])
+        );
+        assert_eq!(t["run"]["big"], Value::Int(1_000_000));
+    }
+
+    #[test]
+    fn string_with_hash_and_escapes() {
+        let t = parse("s = \"a # not comment\"\ne = \"tab\\tend\\\"q\\\"\"").expect("ok");
+        assert_eq!(t[""]["s"], Value::Str("a # not comment".into()));
+        assert_eq!(t[""]["e"], Value::Str("tab\tend\"q\"".into()));
+    }
+
+    #[test]
+    fn duplicate_key_last_wins() {
+        let t = parse("k = 1\nk = 2").expect("ok");
+        assert_eq!(t[""]["k"], Value::Int(2));
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let e = parse("good = 1\nbad line without equals").expect_err("should fail");
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn unterminated_things_fail() {
+        assert!(parse("[sec").is_err());
+        assert!(parse("k = \"open").is_err());
+        assert!(parse("k = [1, 2").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse(" = 3").is_err());
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(Value::Int(3).as_f64(), Some(3.0));
+        assert_eq!(Value::Float(0.5).as_i64(), None);
+        assert_eq!(Value::Str("x".into()).as_str(), Some("x"));
+        assert_eq!(Value::Bool(true).as_bool(), Some(true));
+    }
+
+    #[test]
+    fn display_roundtrip_ints() {
+        let v = Value::Array(vec![Value::Int(1), Value::Str("s".into())]);
+        assert_eq!(v.to_string(), "[1, \"s\"]");
+    }
+}

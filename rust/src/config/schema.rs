@@ -1,0 +1,559 @@
+//! Typed configuration schema with defaults, file loading, dotted-key
+//! overrides (`--set dlb.strategy=smart`) and validation.
+//!
+//! The defaults encode the paper's §6 experimental setup: S/R = 40
+//! (Rackham's machine balance), W_T = 5, δ = 10 ms, 5 tries per round.
+
+use std::fmt;
+use std::path::Path;
+
+use super::parser::{self, Table};
+
+/// Execution mode: discrete-event simulation vs real threads + PJRT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Discrete-event simulation: virtual clock, cost-model durations.
+    Sim,
+    /// Threaded real mode: OS threads, wallclock, PJRT kernel execution.
+    Real,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "sim" => Ok(Mode::Sim),
+            "real" => Ok(Mode::Real),
+            other => Err(ConfigError::new(format!("unknown mode: {other} (sim|real)"))),
+        }
+    }
+}
+
+impl fmt::Display for Mode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Mode::Sim => "sim",
+            Mode::Real => "real",
+        })
+    }
+}
+
+/// Which workload drives the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    /// Right-looking block Cholesky (paper §5).
+    Cholesky,
+    /// Chains of GEMV tasks — §4's low-intensity counterexample.
+    GemvChain,
+    /// Imbalanced bag of independent synthetic tasks.
+    Bag,
+    /// Random layered DAG of synthetic tasks.
+    RandomDag,
+}
+
+impl Workload {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "cholesky" => Ok(Workload::Cholesky),
+            "gemv_chain" | "gemv" => Ok(Workload::GemvChain),
+            "bag" => Ok(Workload::Bag),
+            "random_dag" | "rand_dag" => Ok(Workload::RandomDag),
+            other => Err(ConfigError::new(format!(
+                "unknown workload: {other} (cholesky|gemv_chain|bag|random_dag)"
+            ))),
+        }
+    }
+}
+
+impl fmt::Display for Workload {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Workload::Cholesky => "cholesky",
+            Workload::GemvChain => "gemv_chain",
+            Workload::Bag => "bag",
+            Workload::RandomDag => "random_dag",
+        })
+    }
+}
+
+/// Task-export strategy (paper §3's three alternatives).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Send the excess above W_T; no extra information exchanged.
+    Basic,
+    /// Equalize: send w_busy − (w_busy + w_idle)/2 using the load piggybacked
+    /// on the request.
+    Equalizing,
+    /// Export only tasks predicted to finish earlier remotely, using the
+    /// performance recorder's estimates.
+    Smart,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "basic" => Ok(Strategy::Basic),
+            "equalizing" | "equal" => Ok(Strategy::Equalizing),
+            "smart" => Ok(Strategy::Smart),
+            other => Err(ConfigError::new(format!(
+                "unknown strategy: {other} (basic|equalizing|smart)"
+            ))),
+        }
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Strategy::Basic => "basic",
+            Strategy::Equalizing => "equalizing",
+            Strategy::Smart => "smart",
+        })
+    }
+}
+
+/// Process grid (pr × pc) for the block-cyclic distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Grid {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Grid {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows > 0 && cols > 0);
+        Grid { rows, cols }
+    }
+
+    pub fn size(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Parse `"2x5"` / `"11x1"`.
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        let (r, c) = s
+            .split_once(['x', 'X'])
+            .ok_or_else(|| ConfigError::new(format!("grid must look like 2x5, got {s}")))?;
+        let rows: usize = r.trim().parse().map_err(|_| ConfigError::new(format!("bad grid rows: {r}")))?;
+        let cols: usize = c.trim().parse().map_err(|_| ConfigError::new(format!("bad grid cols: {c}")))?;
+        if rows == 0 || cols == 0 {
+            return Err(ConfigError::new("grid dims must be positive"));
+        }
+        Ok(Grid { rows, cols })
+    }
+
+    /// The most-square factorization of `p` (used when no grid is given;
+    /// for prime p this degenerates to 1×p — the paper's imbalanced case).
+    pub fn squarest(p: usize) -> Grid {
+        assert!(p > 0);
+        let mut best = (1, p);
+        let mut r = 1;
+        while r * r <= p {
+            if p % r == 0 {
+                best = (r, p / r);
+            }
+            r += 1;
+        }
+        Grid { rows: best.0, cols: best.1 }
+    }
+}
+
+impl fmt::Display for Grid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}", self.rows, self.cols)
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config error: {msg}")]
+pub struct ConfigError {
+    pub msg: String,
+}
+
+impl ConfigError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        ConfigError { msg: msg.into() }
+    }
+}
+
+impl From<parser::ParseError> for ConfigError {
+    fn from(e: parser::ParseError) -> Self {
+        ConfigError::new(e.to_string())
+    }
+}
+
+/// Full run configuration.  See `Config::default()` for the paper-aligned
+/// defaults and `docs` in README for per-field meaning.
+#[derive(Debug, Clone)]
+pub struct Config {
+    // [run]
+    pub mode: Mode,
+    pub workload: Workload,
+    pub seed: u64,
+    pub processes: usize,
+    pub grid: Option<Grid>,
+    pub cores_per_process: usize,
+
+    // [cholesky]
+    pub nb: usize,
+    pub block: usize,
+
+    // [gemv] / synthetic workloads
+    pub chain_len: usize,
+    pub chains_per_proc: usize,
+    pub bag_tasks: usize,
+    pub bag_skew: f64,
+
+    // [dlb]
+    pub dlb_enabled: bool,
+    pub strategy: Strategy,
+    pub wt: usize,
+    /// Hysteresis gap (paper §3's suggested alternative): processes with
+    /// W_T < w ≤ W_T + gap are in a middle zone — neither busy nor idle —
+    /// and do not participate in pairing. 0 = the paper's base model.
+    pub wt_gap: usize,
+    pub delta: f64,
+    pub tries: usize,
+    pub confirm_timeout: f64,
+
+    // [cost]  (paper §4: S flops/s, R doubles/s; Rackham S/R ≈ 40)
+    pub flops_per_sec: f64,
+    pub doubles_per_sec: f64,
+    pub exec_jitter: f64,
+    pub task_overhead: f64,
+
+    // [network]
+    pub net_latency: f64,
+    pub control_doubles: u64,
+
+    // [artifacts]
+    pub artifacts_dir: String,
+
+    // [trace]
+    pub trace_enabled: bool,
+    pub trace_out: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            mode: Mode::Sim,
+            workload: Workload::Cholesky,
+            seed: 1,
+            processes: 10,
+            grid: None,
+            cores_per_process: 1,
+            nb: 12,
+            block: 64,
+            chain_len: 32,
+            chains_per_proc: 4,
+            bag_tasks: 256,
+            bag_skew: 2.0,
+            dlb_enabled: true,
+            strategy: Strategy::Basic,
+            wt: 5,
+            wt_gap: 0,
+            delta: 0.010,
+            tries: 5,
+            confirm_timeout: 0.050,
+            flops_per_sec: 8.8e9,
+            doubles_per_sec: 2.2e8, // S/R = 40, the paper's machine balance
+            exec_jitter: 0.0,
+            task_overhead: 5.0e-6,
+            net_latency: 2.0e-6,
+            control_doubles: 8,
+            artifacts_dir: "artifacts".to_string(),
+            trace_enabled: true,
+            trace_out: String::new(),
+        }
+    }
+}
+
+fn get_usize(t: &Table, sec: &str, key: &str, into: &mut usize) -> Result<(), ConfigError> {
+    if let Some(v) = t.get(sec).and_then(|s| s.get(key)) {
+        let i = v
+            .as_i64()
+            .ok_or_else(|| ConfigError::new(format!("[{sec}] {key}: expected integer, got {v}")))?;
+        if i < 0 {
+            return Err(ConfigError::new(format!("[{sec}] {key}: must be ≥ 0")));
+        }
+        *into = i as usize;
+    }
+    Ok(())
+}
+
+fn get_u64(t: &Table, sec: &str, key: &str, into: &mut u64) -> Result<(), ConfigError> {
+    if let Some(v) = t.get(sec).and_then(|s| s.get(key)) {
+        let i = v
+            .as_i64()
+            .ok_or_else(|| ConfigError::new(format!("[{sec}] {key}: expected integer, got {v}")))?;
+        *into = i as u64;
+    }
+    Ok(())
+}
+
+fn get_f64(t: &Table, sec: &str, key: &str, into: &mut f64) -> Result<(), ConfigError> {
+    if let Some(v) = t.get(sec).and_then(|s| s.get(key)) {
+        *into = v
+            .as_f64()
+            .ok_or_else(|| ConfigError::new(format!("[{sec}] {key}: expected number, got {v}")))?;
+    }
+    Ok(())
+}
+
+fn get_bool(t: &Table, sec: &str, key: &str, into: &mut bool) -> Result<(), ConfigError> {
+    if let Some(v) = t.get(sec).and_then(|s| s.get(key)) {
+        *into = v
+            .as_bool()
+            .ok_or_else(|| ConfigError::new(format!("[{sec}] {key}: expected bool, got {v}")))?;
+    }
+    Ok(())
+}
+
+fn get_string(t: &Table, sec: &str, key: &str, into: &mut String) -> Result<(), ConfigError> {
+    if let Some(v) = t.get(sec).and_then(|s| s.get(key)) {
+        *into = v
+            .as_str()
+            .ok_or_else(|| ConfigError::new(format!("[{sec}] {key}: expected string, got {v}")))?
+            .to_string();
+    }
+    Ok(())
+}
+
+impl Config {
+    /// Load from a TOML-subset file over the defaults.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Config, ConfigError> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            ConfigError::new(format!("cannot read {}: {e}", path.as_ref().display()))
+        })?;
+        Self::from_str_toml(&text)
+    }
+
+    /// Parse from a config document string over the defaults.
+    pub fn from_str_toml(text: &str) -> Result<Config, ConfigError> {
+        let t = parser::parse(text)?;
+        let mut c = Config::default();
+        c.apply_table(&t)?;
+        c.validate()?;
+        Ok(c)
+    }
+
+    fn apply_table(&mut self, t: &Table) -> Result<(), ConfigError> {
+        let mut mode_s = self.mode.to_string();
+        let mut workload_s = self.workload.to_string();
+        let mut strategy_s = self.strategy.to_string();
+        let mut grid_s = String::new();
+
+        get_string(t, "run", "mode", &mut mode_s)?;
+        get_string(t, "run", "workload", &mut workload_s)?;
+        get_u64(t, "run", "seed", &mut self.seed)?;
+        get_usize(t, "run", "processes", &mut self.processes)?;
+        get_string(t, "run", "grid", &mut grid_s)?;
+        get_usize(t, "run", "cores_per_process", &mut self.cores_per_process)?;
+
+        get_usize(t, "cholesky", "nb", &mut self.nb)?;
+        get_usize(t, "cholesky", "block", &mut self.block)?;
+
+        get_usize(t, "gemv", "chain_len", &mut self.chain_len)?;
+        get_usize(t, "gemv", "chains_per_proc", &mut self.chains_per_proc)?;
+        get_usize(t, "bag", "tasks", &mut self.bag_tasks)?;
+        get_f64(t, "bag", "skew", &mut self.bag_skew)?;
+
+        get_bool(t, "dlb", "enabled", &mut self.dlb_enabled)?;
+        get_string(t, "dlb", "strategy", &mut strategy_s)?;
+        get_usize(t, "dlb", "wt", &mut self.wt)?;
+        get_usize(t, "dlb", "gap", &mut self.wt_gap)?;
+        get_f64(t, "dlb", "delta", &mut self.delta)?;
+        get_usize(t, "dlb", "tries", &mut self.tries)?;
+        get_f64(t, "dlb", "confirm_timeout", &mut self.confirm_timeout)?;
+
+        get_f64(t, "cost", "flops_per_sec", &mut self.flops_per_sec)?;
+        get_f64(t, "cost", "doubles_per_sec", &mut self.doubles_per_sec)?;
+        get_f64(t, "cost", "exec_jitter", &mut self.exec_jitter)?;
+        get_f64(t, "cost", "task_overhead", &mut self.task_overhead)?;
+
+        get_f64(t, "network", "latency", &mut self.net_latency)?;
+        get_u64(t, "network", "control_doubles", &mut self.control_doubles)?;
+
+        get_string(t, "artifacts", "dir", &mut self.artifacts_dir)?;
+        get_bool(t, "trace", "enabled", &mut self.trace_enabled)?;
+        get_string(t, "trace", "out", &mut self.trace_out)?;
+
+        self.mode = Mode::parse(&mode_s)?;
+        self.workload = Workload::parse(&workload_s)?;
+        self.strategy = Strategy::parse(&strategy_s)?;
+        if !grid_s.is_empty() {
+            self.grid = Some(Grid::parse(&grid_s)?);
+        }
+        Ok(())
+    }
+
+    /// Apply `section.key=value` override strings (CLI `--set`).
+    pub fn apply_overrides<'a>(
+        &mut self,
+        overrides: impl IntoIterator<Item = &'a str>,
+    ) -> Result<(), ConfigError> {
+        let mut doc = String::new();
+        for ov in overrides {
+            let (path, val) = ov
+                .split_once('=')
+                .ok_or_else(|| ConfigError::new(format!("override must be sec.key=value: {ov}")))?;
+            let (sec, key) = path
+                .split_once('.')
+                .ok_or_else(|| ConfigError::new(format!("override key must be sec.key: {path}")))?;
+            doc.push_str(&format!("[{sec}]\n{key} = {val}\n"));
+        }
+        let t = parser::parse(&doc)?;
+        self.apply_table(&t)?;
+        self.validate()
+    }
+
+    /// Effective process grid: explicit, or the most-square factorization.
+    pub fn effective_grid(&self) -> Grid {
+        self.grid.unwrap_or_else(|| Grid::squarest(self.processes))
+    }
+
+    /// Matrix order implied by the Cholesky settings.
+    pub fn matrix_n(&self) -> usize {
+        self.nb * self.block
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.processes == 0 {
+            return Err(ConfigError::new("run.processes must be ≥ 1"));
+        }
+        if let Some(g) = self.grid {
+            if g.size() != self.processes {
+                return Err(ConfigError::new(format!(
+                    "grid {} has {} slots but run.processes = {}",
+                    g,
+                    g.size(),
+                    self.processes
+                )));
+            }
+        }
+        if self.cores_per_process == 0 {
+            return Err(ConfigError::new("run.cores_per_process must be ≥ 1"));
+        }
+        if self.nb == 0 || self.block == 0 {
+            return Err(ConfigError::new("cholesky.nb and cholesky.block must be ≥ 1"));
+        }
+        if self.tries == 0 {
+            return Err(ConfigError::new("dlb.tries must be ≥ 1"));
+        }
+        if self.delta < 0.0 || self.confirm_timeout <= 0.0 {
+            return Err(ConfigError::new("dlb.delta must be ≥ 0, confirm_timeout > 0"));
+        }
+        if self.flops_per_sec <= 0.0 || self.doubles_per_sec <= 0.0 {
+            return Err(ConfigError::new("cost rates must be positive"));
+        }
+        if !(0.0..=1.0).contains(&self.exec_jitter) {
+            return Err(ConfigError::new("cost.exec_jitter must be in [0, 1]"));
+        }
+        if self.net_latency < 0.0 {
+            return Err(ConfigError::new("network.latency must be ≥ 0"));
+        }
+        Ok(())
+    }
+
+    /// The machine-balance ratio S/R the §4 analysis is parameterized by.
+    pub fn s_over_r(&self) -> f64 {
+        self.flops_per_sec / self.doubles_per_sec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_setup() {
+        let c = Config::default();
+        assert_eq!(c.wt, 5);
+        assert!((c.delta - 0.010).abs() < 1e-12);
+        assert_eq!(c.tries, 5);
+        assert!((c.s_over_r() - 40.0).abs() < 1e-9);
+        assert_eq!(c.nb, 12);
+        c.validate().expect("defaults valid");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let doc = r#"
+            [run]
+            mode = "real"
+            workload = "gemv_chain"
+            processes = 15
+            grid = "3x5"
+            seed = 7
+            [dlb]
+            strategy = "smart"
+            wt = 9
+            delta = 0.002
+            [cost]
+            flops_per_sec = 1.0e9
+            doubles_per_sec = 2.5e7
+        "#;
+        let c = Config::from_str_toml(doc).expect("parse");
+        assert_eq!(c.mode, Mode::Real);
+        assert_eq!(c.workload, Workload::GemvChain);
+        assert_eq!(c.processes, 15);
+        assert_eq!(c.grid, Some(Grid::new(3, 5)));
+        assert_eq!(c.strategy, Strategy::Smart);
+        assert_eq!(c.wt, 9);
+        assert!((c.s_over_r() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = Config::default();
+        c.apply_overrides(["dlb.strategy=\"equalizing\"", "run.processes=11", "run.grid=\"11x1\""])
+            .expect("overrides");
+        assert_eq!(c.strategy, Strategy::Equalizing);
+        assert_eq!(c.processes, 11);
+        assert_eq!(c.grid, Some(Grid::new(11, 1)));
+    }
+
+    #[test]
+    fn bad_override_reports() {
+        let mut c = Config::default();
+        assert!(c.apply_overrides(["noequals"]).is_err());
+        assert!(c.apply_overrides(["nodot=3"]).is_err());
+        assert!(c.apply_overrides(["run.mode=\"warp\""]).is_err());
+    }
+
+    #[test]
+    fn grid_parse_and_squarest() {
+        assert_eq!(Grid::parse("2x5").expect("ok"), Grid::new(2, 5));
+        assert_eq!(Grid::parse("11X1").expect("ok"), Grid::new(11, 1));
+        assert!(Grid::parse("5").is_err());
+        assert!(Grid::parse("0x5").is_err());
+        assert_eq!(Grid::squarest(12), Grid::new(3, 4));
+        assert_eq!(Grid::squarest(11), Grid::new(1, 11)); // prime → paper's worst case
+        assert_eq!(Grid::squarest(16), Grid::new(4, 4));
+    }
+
+    #[test]
+    fn grid_size_mismatch_rejected() {
+        let doc = "[run]\nprocesses = 10\ngrid = \"3x5\"";
+        assert!(Config::from_str_toml(doc).is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = Config::default();
+        c.processes = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.exec_jitter = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.doubles_per_sec = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn matrix_n_derived() {
+        let c = Config::default();
+        assert_eq!(c.matrix_n(), 12 * 64);
+    }
+}

@@ -1,0 +1,125 @@
+//! Distributed data handles and per-process block storage.
+//!
+//! Data placement drives task placement (owner computes, as in DuctTeip);
+//! block values move between processes as message payloads.  In simulation
+//! mode payloads are size-only; in real mode they carry `f32` block data fed
+//! to the PJRT kernels.
+
+use std::collections::HashMap;
+
+use super::ids::{DataId, ProcessId};
+
+/// Static metadata for one data handle.
+#[derive(Debug, Clone)]
+pub struct DataMeta {
+    pub id: DataId,
+    /// The process that owns (hosts the canonical copy of) this handle.
+    pub home: ProcessId,
+    /// Row-major dimensions; vectors are (n, 1).
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl DataMeta {
+    pub fn elems(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+/// A block value in flight or at rest.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Control-plane only (dependency notification without data).
+    None,
+    /// Simulation mode: the value is not materialized, only its size (in
+    /// doubles) is modeled by the network.
+    Sim,
+    /// Real mode: row-major f32 block contents.
+    Real(Vec<f32>),
+}
+
+impl Payload {
+    pub fn is_real(&self) -> bool {
+        matches!(self, Payload::Real(_))
+    }
+
+    pub fn real(&self) -> Option<&[f32]> {
+        match self {
+            Payload::Real(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Per-process store of current block values.
+///
+/// Correctness of the single-buffer-per-handle design rests on the graph's
+/// WAR/WAW edges: a new version cannot be produced anywhere before every
+/// consumer of the previous version has completed (see `core::graph`).
+#[derive(Debug, Default)]
+pub struct DataStore {
+    blocks: HashMap<DataId, Payload>,
+}
+
+impl DataStore {
+    pub fn new() -> Self {
+        DataStore { blocks: HashMap::new() }
+    }
+
+    pub fn insert(&mut self, id: DataId, value: Payload) {
+        self.blocks.insert(id, value);
+    }
+
+    pub fn get(&self, id: DataId) -> Option<&Payload> {
+        self.blocks.get(&id)
+    }
+
+    pub fn contains(&self, id: DataId) -> bool {
+        self.blocks.contains_key(&id)
+    }
+
+    pub fn take(&mut self, id: DataId) -> Option<Payload> {
+        self.blocks.remove(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_roundtrip() {
+        let mut s = DataStore::new();
+        let id = DataId(3);
+        assert!(!s.contains(id));
+        s.insert(id, Payload::Real(vec![1.0, 2.0]));
+        assert!(s.contains(id));
+        assert_eq!(s.get(id).and_then(|p| p.real()), Some(&[1.0f32, 2.0][..]));
+        let taken = s.take(id).expect("present");
+        assert!(taken.is_real());
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn overwrite_replaces() {
+        let mut s = DataStore::new();
+        s.insert(DataId(0), Payload::Sim);
+        s.insert(DataId(0), Payload::Real(vec![5.0]));
+        assert!(s.get(DataId(0)).expect("present").is_real());
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn meta_elems() {
+        let m = DataMeta { id: DataId(0), home: ProcessId(1), rows: 8, cols: 4 };
+        assert_eq!(m.elems(), 32);
+    }
+}

@@ -1,0 +1,321 @@
+//! Task-graph construction with sequential-task-flow (STF) dependency
+//! inference — the DuctTeip/SuperGlue data-versioning model.
+//!
+//! The application submits tasks in program order, declaring which handles
+//! each task reads and which single handle it writes.  The builder tracks a
+//! version counter and the reader set per handle and derives:
+//!
+//! - **RAW** edges: reader depends on the producer of the version it reads;
+//! - **WAR** edges: a writer depends on all readers of the previous version
+//!   (this is what makes the single-buffer-per-handle `DataStore` safe, and
+//!   it is exactly the paper's dashed "any order but not simultaneously"
+//!   constraint between updates of one block in Fig 2);
+//! - **WAW** edges: a writer depends on the previous writer.
+//!
+//! The result is an immutable `TaskGraph` shared (`Arc`) by every process.
+
+use std::sync::Arc;
+
+use super::data::DataMeta;
+use super::ids::{DataId, ProcessId, TaskId};
+use super::task::{TaskKind, TaskNode};
+
+/// Immutable, validated task graph plus data metadata.
+#[derive(Debug)]
+pub struct TaskGraph {
+    pub tasks: Vec<TaskNode>,
+    pub data: Vec<DataMeta>,
+}
+
+impl TaskGraph {
+    pub fn task(&self, id: TaskId) -> &TaskNode {
+        &self.tasks[id.idx()]
+    }
+
+    pub fn meta(&self, id: DataId) -> &DataMeta {
+        &self.data[id.idx()]
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Tasks placed on `p` (owner-computes homes).
+    pub fn tasks_of(&self, p: ProcessId) -> impl Iterator<Item = &TaskNode> {
+        self.tasks.iter().filter(move |t| t.placement == p)
+    }
+
+    /// Total flops over all tasks (for utilization/roofline accounting).
+    pub fn total_flops(&self) -> u64 {
+        self.tasks.iter().map(|t| t.flops).sum()
+    }
+
+    /// Verify acyclicity and intra-bounds; returns a topological order.
+    /// Panics in tests only — callers get a Result.
+    pub fn topo_order(&self) -> Result<Vec<TaskId>, String> {
+        let n = self.tasks.len();
+        let mut indeg: Vec<usize> = self.tasks.iter().map(|t| t.deps.len()).collect();
+        let mut stack: Vec<TaskId> =
+            (0..n).filter(|&i| indeg[i] == 0).map(|i| TaskId(i as u32)).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(t) = stack.pop() {
+            order.push(t);
+            for &d in &self.tasks[t.idx()].dependents {
+                indeg[d.idx()] -= 1;
+                if indeg[d.idx()] == 0 {
+                    stack.push(d);
+                }
+            }
+        }
+        if order.len() != n {
+            return Err(format!("cycle: only {} of {} tasks orderable", order.len(), n));
+        }
+        Ok(order)
+    }
+
+    /// The critical-path length in flops (longest path; a lower bound on
+    /// makespan·S regardless of P — used by experiment reports).
+    pub fn critical_path_flops(&self) -> u64 {
+        let order = self.topo_order().expect("acyclic");
+        let mut dist = vec![0u64; self.tasks.len()];
+        let mut best = 0;
+        for t in order {
+            let node = &self.tasks[t.idx()];
+            let d = dist[t.idx()] + node.flops;
+            best = best.max(d);
+            for &dep in &node.dependents {
+                dist[dep.idx()] = dist[dep.idx()].max(d);
+            }
+        }
+        best
+    }
+}
+
+/// Mutable builder with STF version tracking.
+pub struct GraphBuilder {
+    tasks: Vec<TaskNode>,
+    data: Vec<DataMeta>,
+    /// Per handle: the task that produced the current version (None = initial
+    /// distribution) and the readers of the current version so far.
+    last_writer: Vec<Option<TaskId>>,
+    readers: Vec<Vec<TaskId>>,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        GraphBuilder { tasks: Vec::new(), data: Vec::new(), last_writer: Vec::new(), readers: Vec::new() }
+    }
+
+    /// Register a data handle hosted at `home`.
+    pub fn data(&mut self, home: ProcessId, rows: usize, cols: usize) -> DataId {
+        let id = DataId(self.data.len() as u32);
+        self.data.push(DataMeta { id, home, rows, cols });
+        self.last_writer.push(None);
+        self.readers.push(Vec::new());
+        id
+    }
+
+    /// Submit a task in program order.
+    ///
+    /// `args` are the kernel arguments (handles read); `output` is the handle
+    /// written.  If `output` is also among `args` the task is read-modify-
+    /// write (SYRK/GEMM trailing updates).  Placement defaults to the home of
+    /// the output handle (owner computes) unless overridden.
+    pub fn task(
+        &mut self,
+        kind: TaskKind,
+        args: Vec<DataId>,
+        output: DataId,
+        flops: u64,
+        placement: Option<ProcessId>,
+    ) -> TaskId {
+        let id = TaskId(self.tasks.len() as u32);
+        let placement = placement.unwrap_or(self.data[output.idx()].home);
+        let mut deps: Vec<TaskId> = Vec::new();
+        let mut v0_args: Vec<DataId> = Vec::new();
+
+        // RAW: depend on the producer of each argument's current version.
+        for &a in &args {
+            match self.last_writer[a.idx()] {
+                Some(w) => deps.push(w),
+                None => v0_args.push(a),
+            }
+            self.readers[a.idx()].push(id);
+        }
+        v0_args.sort_unstable();
+        v0_args.dedup();
+        // WAR: depend on all readers of the previous version of `output`
+        // (excluding ourselves; we may read our own output handle).
+        for &r in &self.readers[output.idx()] {
+            if r != id {
+                deps.push(r);
+            }
+        }
+        // WAW: depend on the previous writer of `output`.
+        if let Some(w) = self.last_writer[output.idx()] {
+            deps.push(w);
+        }
+        deps.sort_unstable();
+        deps.dedup();
+
+        // Writing bumps the version: reset the reader set.
+        self.last_writer[output.idx()] = Some(id);
+        self.readers[output.idx()].clear();
+
+        let in_doubles: u64 = args.iter().map(|a| self.data[a.idx()].elems() as u64).sum();
+        let out_doubles = self.data[output.idx()].elems() as u64;
+        let node = TaskNode {
+            id,
+            kind,
+            placement,
+            args,
+            output,
+            flops,
+            in_doubles,
+            out_doubles,
+            deps,
+            dependents: Vec::new(),
+            v0_args,
+        };
+        self.tasks.push(node);
+        id
+    }
+
+    /// Finalize: fill the dependents lists and freeze.
+    pub fn build(mut self) -> Arc<TaskGraph> {
+        let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); self.tasks.len()];
+        for t in &self.tasks {
+            for &d in &t.deps {
+                dependents[d.idx()].push(t.id);
+            }
+        }
+        for (t, deps) in self.tasks.iter_mut().zip(dependents) {
+            t.dependents = deps;
+        }
+        let g = TaskGraph { tasks: self.tasks, data: self.data };
+        debug_assert!(g.topo_order().is_ok());
+        Arc::new(g)
+    }
+}
+
+impl Default for GraphBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(i: u32) -> ProcessId {
+        ProcessId(i)
+    }
+
+    #[test]
+    fn raw_dependency() {
+        let mut b = GraphBuilder::new();
+        let x = b.data(p(0), 4, 4);
+        let y = b.data(p(1), 4, 4);
+        let t0 = b.task(TaskKind::Synthetic, vec![], x, 10, None);
+        let t1 = b.task(TaskKind::Synthetic, vec![x], y, 10, None);
+        let g = b.build();
+        assert_eq!(g.task(t1).deps, vec![t0]);
+        assert_eq!(g.task(t0).dependents, vec![t1]);
+        assert_eq!(g.task(t1).placement, p(1)); // owner computes
+    }
+
+    #[test]
+    fn war_dependency_serializes_reader_then_writer() {
+        let mut b = GraphBuilder::new();
+        let x = b.data(p(0), 2, 2);
+        let y = b.data(p(0), 2, 2);
+        let r = b.task(TaskKind::Synthetic, vec![x], y, 1, None); // reads x@v0
+        let w = b.task(TaskKind::Synthetic, vec![], x, 1, None); // writes x→v1
+        let g = b.build();
+        assert!(g.task(w).deps.contains(&r), "WAR edge reader→writer");
+    }
+
+    #[test]
+    fn waw_dependency_chains_writers() {
+        let mut b = GraphBuilder::new();
+        let x = b.data(p(0), 2, 2);
+        let w0 = b.task(TaskKind::Synthetic, vec![], x, 1, None);
+        let w1 = b.task(TaskKind::Synthetic, vec![], x, 1, None);
+        let g = b.build();
+        assert!(g.task(w1).deps.contains(&w0));
+    }
+
+    #[test]
+    fn rmw_task_does_not_self_depend() {
+        let mut b = GraphBuilder::new();
+        let c = b.data(p(0), 2, 2);
+        let a = b.data(p(0), 2, 2);
+        let t = b.task(TaskKind::Syrk, vec![c, a], c, 8, None);
+        let g = b.build();
+        assert!(!g.task(t).deps.contains(&t));
+    }
+
+    #[test]
+    fn rmw_chain_serialized_in_order() {
+        // gemm updates on the same block: must form a chain (paper's dashed
+        // edges, "any order but not at the same time" — STF fixes the order).
+        let mut b = GraphBuilder::new();
+        let c = b.data(p(0), 2, 2);
+        let a1 = b.data(p(0), 2, 2);
+        let a2 = b.data(p(0), 2, 2);
+        let u1 = b.task(TaskKind::Gemm, vec![c, a1], c, 16, None);
+        let u2 = b.task(TaskKind::Gemm, vec![c, a2], c, 16, None);
+        let g = b.build();
+        assert!(g.task(u2).deps.contains(&u1));
+    }
+
+    #[test]
+    fn doubles_accounting() {
+        let mut b = GraphBuilder::new();
+        let c = b.data(p(0), 4, 4);
+        let x = b.data(p(0), 4, 4);
+        let y = b.data(p(0), 4, 4);
+        let t = b.task(TaskKind::Gemm, vec![c, x, y], c, 128, None);
+        let g = b.build();
+        assert_eq!(g.task(t).in_doubles, 48);
+        assert_eq!(g.task(t).out_doubles, 16);
+        assert_eq!(g.task(t).migration_doubles(), 64);
+    }
+
+    #[test]
+    fn topo_order_covers_all() {
+        let mut b = GraphBuilder::new();
+        let xs: Vec<DataId> = (0..10).map(|_| b.data(p(0), 2, 2)).collect();
+        for i in 1..10 {
+            b.task(TaskKind::Synthetic, vec![xs[i - 1]], xs[i], 1, None);
+        }
+        let g = b.build();
+        let order = g.topo_order().expect("acyclic");
+        assert_eq!(order.len(), 9);
+    }
+
+    #[test]
+    fn critical_path_of_chain_is_total() {
+        let mut b = GraphBuilder::new();
+        let xs: Vec<DataId> = (0..5).map(|_| b.data(p(0), 2, 2)).collect();
+        for i in 1..5 {
+            b.task(TaskKind::Synthetic, vec![xs[i - 1]], xs[i], 7, None);
+        }
+        let g = b.build();
+        assert_eq!(g.critical_path_flops(), 28);
+        assert_eq!(g.total_flops(), 28);
+    }
+
+    #[test]
+    fn independent_tasks_have_no_edges() {
+        let mut b = GraphBuilder::new();
+        for i in 0..4 {
+            let x = b.data(p(i % 2), 2, 2);
+            b.task(TaskKind::Synthetic, vec![], x, 1, None);
+        }
+        let g = b.build();
+        assert!(g.tasks.iter().all(|t| t.deps.is_empty()));
+        assert_eq!(g.critical_path_flops(), 1);
+    }
+}

@@ -1,0 +1,15 @@
+//! The distributed task-runtime core (the DuctTeip substrate): typed ids,
+//! the task/data model, STF dependency inference, and the per-process
+//! coordinator state machine.
+
+pub mod data;
+pub mod graph;
+pub mod ids;
+pub mod process;
+pub mod task;
+
+pub use data::{DataMeta, DataStore, Payload};
+pub use graph::{GraphBuilder, TaskGraph};
+pub use ids::{DataId, ProcessId, TaskId};
+pub use process::{Effect, ProcessParams, ProcessState};
+pub use task::{TaskKind, TaskNode};

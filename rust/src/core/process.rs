@@ -1,0 +1,897 @@
+//! The per-process coordinator state machine — "one coordinator, two
+//! clocks" (DESIGN.md §7.1).
+//!
+//! `ProcessState` contains everything a DuctTeip-style process does:
+//! dependency bookkeeping, the ready queue, data storage, the DLB pairing
+//! engine, export strategy invocation, and termination detection.  It is a
+//! *pure* state machine: inputs are `start`/`on_message`/`on_exec_complete`/
+//! `on_tick` with an explicit `now`; outputs are `Effect`s.  The DES
+//! (`sim::engine`) and the threaded runtime (`runtime::threaded`) interpret
+//! the effects; neither contains any scheduling or DLB logic of its own.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::{Config, Strategy};
+use crate::dlb::pairing::{PairAction, Pairing, PairingConfig};
+use crate::dlb::strategy::{select_exports, PartnerInfo};
+use crate::dlb::{CostModel, PerfRecorder};
+use crate::metrics::counters::DlbCounters;
+use crate::metrics::trace::WorkloadTrace;
+use crate::net::message::{Envelope, MigratedTask, Msg, Role};
+use crate::sched::queue::{ReadyQueue, ReadyTask};
+use crate::util::rng::Rng;
+
+use super::data::{DataStore, Payload};
+use super::graph::TaskGraph;
+use super::ids::{DataId, ProcessId, TaskId};
+
+/// Instructions to the surrounding engine.
+#[derive(Debug)]
+pub enum Effect {
+    /// Transmit a message.
+    Send(Envelope),
+    /// Begin executing `task` on a free core; the engine must call
+    /// `on_exec_complete` when it finishes (after the modeled or real
+    /// duration).
+    StartExec { task: ReadyTask },
+    /// Request an `on_tick` call at (or shortly after) time `at`.
+    ScheduleTick { at: f64 },
+    /// This process has observed global termination.
+    Halt,
+}
+
+/// Immutable per-run parameters for a process.
+#[derive(Debug, Clone)]
+pub struct ProcessParams {
+    pub dlb_enabled: bool,
+    pub strategy: Strategy,
+    pub wt: usize,
+    /// §3's alternative model: a hysteresis gap above W_T.  Processes in
+    /// the middle zone (wt < w ≤ wt + gap) neither search nor accept —
+    /// fewer requests, less overshoot (an idle process that just received
+    /// work does not immediately flip to busy).
+    pub wt_gap: usize,
+    pub pairing: PairingConfig,
+    pub cores: usize,
+    pub control_doubles: u64,
+    pub cost: CostModel,
+}
+
+impl ProcessParams {
+    pub fn from_config(c: &Config) -> Self {
+        let mut cost = CostModel::new(c.flops_per_sec, c.doubles_per_sec);
+        cost.task_overhead = c.task_overhead;
+        cost.latency = c.net_latency;
+        ProcessParams {
+            dlb_enabled: c.dlb_enabled,
+            strategy: c.strategy,
+            wt: c.wt,
+            wt_gap: c.wt_gap,
+            pairing: PairingConfig {
+                tries: c.tries,
+                delta: c.delta,
+                confirm_timeout: c.confirm_timeout,
+            },
+            cores: c.cores_per_process,
+            control_doubles: c.control_doubles,
+            cost,
+        }
+    }
+}
+
+/// The state of one (virtual or threaded) process.
+pub struct ProcessState {
+    pub me: ProcessId,
+    pub num_processes: usize,
+    pub graph: Arc<TaskGraph>,
+    pub params: ProcessParams,
+    pub queue: ReadyQueue,
+    pub store: DataStore,
+    pub pairing: Pairing,
+    pub perf: PerfRecorder,
+    pub trace: WorkloadTrace,
+    pub halted: bool,
+    /// Pin this process's busy/idle classification regardless of queue
+    /// state — protocol micro-benchmarks only (Fig 3's pairing lab).
+    pub role_override: Option<Role>,
+
+    /// Remaining unsatisfied dependencies per task (only meaningful for
+    /// tasks placed here).
+    pending_deps: Vec<u32>,
+    /// v0 data id → local tasks waiting for its arrival.
+    v0_waiting: HashMap<DataId, Vec<TaskId>>,
+    /// Tasks homed here that have not yet completed (includes exported).
+    owned_remaining: usize,
+    /// Tasks currently executing on local cores.
+    executing: usize,
+    /// Tasks exported and awaiting `ResultReturn`.
+    exported: std::collections::HashSet<TaskId>,
+    /// Info about the peer we accepted (role/load/eta from their request).
+    accepted_peer: Option<(ProcessId, Role, PartnerInfo)>,
+    rng: Rng,
+    /// Rank-0 only: processes that reported completion.
+    owners_done: usize,
+    reported_done: bool,
+    /// Statistic: completion time of the last locally-executed task.
+    pub last_completion: f64,
+}
+
+impl ProcessState {
+    /// `seed` must be identical across processes of a run (streams are
+    /// forked per process id) for reproducibility.
+    pub fn new(
+        me: ProcessId,
+        num_processes: usize,
+        graph: Arc<TaskGraph>,
+        params: ProcessParams,
+        seed: u64,
+    ) -> Self {
+        let mut root = Rng::new(seed);
+        let rng = root.fork(me.0 as u64 + 1);
+        let pairing = Pairing::new(me, params.pairing);
+        let perf = PerfRecorder::new(params.cost);
+        let pending_deps = vec![0u32; graph.num_tasks()];
+        ProcessState {
+            me,
+            num_processes,
+            graph,
+            params,
+            queue: ReadyQueue::new(),
+            store: DataStore::new(),
+            pairing,
+            perf,
+            trace: WorkloadTrace::new(),
+            halted: false,
+            role_override: None,
+            pending_deps,
+            v0_waiting: HashMap::new(),
+            owned_remaining: 0,
+            executing: 0,
+            exported: Default::default(),
+            accepted_peer: None,
+            rng,
+            owners_done: 0,
+            reported_done: false,
+            last_completion: 0.0,
+        }
+    }
+
+    /// Current workload w_i(t) (paper §3: ready tasks in the queue).
+    pub fn workload(&self) -> usize {
+        self.queue.workload()
+    }
+
+    /// Busy/idle classification: busy above W_T + gap, idle at or below
+    /// W_T (gap = 0 reproduces the paper's base model).
+    pub fn role(&self) -> Role {
+        if let Some(r) = self.role_override {
+            return r;
+        }
+        if self.workload() > self.params.wt + self.params.wt_gap {
+            Role::Busy
+        } else {
+            Role::Idle
+        }
+    }
+
+    /// §3's middle zone: with a non-zero gap, processes here sit out the
+    /// pairing protocol entirely.
+    pub fn in_middle_zone(&self) -> bool {
+        if self.role_override.is_some() {
+            return false;
+        }
+        let w = self.workload();
+        w > self.params.wt && w <= self.params.wt + self.params.wt_gap
+    }
+
+    pub fn counters(&self) -> &DlbCounters {
+        &self.pairing.counters
+    }
+
+    pub fn tasks_done(&self) -> bool {
+        self.owned_remaining == 0
+    }
+
+    /// Expected time to drain the current queue (the eta of §3's Smart
+    /// strategy): per-task estimates from the performance recorder.
+    fn queue_eta(&self) -> f64 {
+        self.queue
+            .iter()
+            .map(|rt| {
+                let n = self.graph.task(rt.task);
+                self.perf.exec_estimate(n.kind, n.flops)
+            })
+            .sum()
+    }
+
+    fn send(&self, effects: &mut Vec<Effect>, to: ProcessId, msg: Msg) {
+        let extra = self.sim_payload_doubles(&msg);
+        let wire = msg.wire_doubles(self.params.control_doubles) + extra;
+        effects.push(Effect::Send(Envelope { from: self.me, to, msg, wire_doubles: wire }));
+    }
+
+    /// `Payload::Sim` carries no length; size it from graph metadata so the
+    /// DES network model charges realistic transfer times.
+    fn sim_payload_doubles(&self, msg: &Msg) -> u64 {
+        let one = |data: &DataId, p: &Payload| -> u64 {
+            if matches!(p, Payload::Sim) {
+                self.graph.meta(*data).elems() as u64
+            } else {
+                0
+            }
+        };
+        match msg {
+            Msg::TaskDone { data, payload, .. } | Msg::DataSend { data, payload } => {
+                one(data, payload)
+            }
+            Msg::ResultReturn { task, payload } => {
+                one(&self.graph.task(*task).output, payload)
+            }
+            Msg::TaskExport { tasks, .. } => tasks
+                .iter()
+                .flat_map(|mt| mt.inputs.iter())
+                .map(|(d, p)| one(d, p))
+                .sum(),
+            _ => 0,
+        }
+    }
+
+    fn record_trace(&mut self, now: f64) {
+        let w = self.queue.workload();
+        self.trace.record(now, w);
+    }
+
+    // ------------------------------------------------------------------
+    // lifecycle
+    // ------------------------------------------------------------------
+
+    /// Initialize: seed dependency counters, push v0 data to remote
+    /// consumers, enqueue initially-ready local tasks, stagger the first
+    /// DLB search.
+    pub fn start(&mut self, now: f64) -> Vec<Effect> {
+        let mut effects = Vec::new();
+        let graph = Arc::clone(&self.graph);
+        let mut v0_out: std::collections::BTreeMap<(ProcessId, DataId), ()> = Default::default();
+
+        for t in &graph.tasks {
+            if t.placement == self.me {
+                self.owned_remaining += 1;
+                let missing: Vec<DataId> = t
+                    .v0_args
+                    .iter()
+                    .copied()
+                    .filter(|a| graph.meta(*a).home != self.me)
+                    .collect();
+                self.pending_deps[t.id.idx()] = (t.deps.len() + missing.len()) as u32;
+                for a in missing {
+                    self.v0_waiting.entry(a).or_default().push(t.id);
+                }
+                if self.pending_deps[t.id.idx()] == 0 {
+                    self.queue.push(ReadyTask::home(t.id, self.me));
+                }
+            } else {
+                // ship v0 handles homed here to their remote consumers
+                for &a in &t.v0_args {
+                    if graph.meta(a).home == self.me {
+                        v0_out.insert((t.placement, a), ());
+                    }
+                }
+            }
+        }
+        for (to, data) in v0_out.keys().copied() {
+            let payload = match self.store.get(data) {
+                Some(p) => p.clone(),
+                None => Payload::Sim,
+            };
+            self.send(&mut effects, to, Msg::DataSend { data, payload });
+        }
+        self.record_trace(now);
+
+        // done before starting? (process owns zero tasks)
+        self.maybe_report_done(now, &mut effects);
+        self.maybe_exec(&mut effects);
+
+        if self.params.dlb_enabled {
+            // stagger the first search uniformly over one δ
+            self.pairing.next_search_at = now + self.rng.next_f64() * self.params.pairing.delta;
+            effects.push(Effect::ScheduleTick { at: self.pairing.next_search_at });
+        }
+        effects
+    }
+
+    /// Start executions on free cores.
+    fn maybe_exec(&mut self, effects: &mut Vec<Effect>) {
+        while self.executing < self.params.cores {
+            match self.queue.pop() {
+                Some(rt) => {
+                    self.executing += 1;
+                    effects.push(Effect::StartExec { task: rt });
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// A task finished executing on a local core after `duration` seconds.
+    pub fn on_exec_complete(
+        &mut self,
+        rt: ReadyTask,
+        output: Payload,
+        duration: f64,
+        now: f64,
+    ) -> Vec<Effect> {
+        let mut effects = Vec::new();
+        self.executing -= 1;
+        let node = self.graph.task(rt.task);
+        self.perf.record_exec(node.kind, duration);
+        self.last_completion = now;
+
+        if rt.is_migrated(self.me) {
+            // return the result to the origin; it publishes completion
+            self.send(&mut effects, rt.origin, Msg::ResultReturn { task: rt.task, payload: output });
+        } else {
+            self.store.insert(node.output, output);
+            self.publish_completion(rt.task, now, &mut effects);
+        }
+        self.record_trace(now);
+        self.maybe_exec(&mut effects);
+        self.dlb_poll(now, &mut effects);
+        effects
+    }
+
+    /// Local bookkeeping + dependent notification after task `t` (homed
+    /// here) has a result available locally.
+    fn publish_completion(&mut self, t: TaskId, now: f64, effects: &mut Vec<Effect>) {
+        let graph = Arc::clone(&self.graph);
+        let node = graph.task(t);
+        debug_assert_eq!(node.placement, self.me);
+        self.owned_remaining -= 1;
+
+        // Group dependents by placement; attach the output payload when the
+        // destination actually reads it (RAW), else a pure notification.
+        // Fan-out is small (≤ a handful of processes), so a linear-scan vec
+        // beats a BTreeMap on this hot path (§Perf).
+        let mut remote: Vec<(ProcessId, bool)> = Vec::new();
+        for &d in &node.dependents {
+            let dn = graph.task(d);
+            if dn.placement == self.me {
+                self.satisfy_dep(d, now, effects);
+            } else {
+                let reads = dn.args.contains(&node.output);
+                match remote.iter_mut().find(|(q, _)| *q == dn.placement) {
+                    Some((_, r)) => *r |= reads,
+                    None => remote.push((dn.placement, reads)),
+                }
+            }
+        }
+        for (q, reads) in remote {
+            let payload = if reads {
+                self.store.get(node.output).cloned().unwrap_or(Payload::Sim)
+            } else {
+                Payload::None
+            };
+            self.send(effects, q, Msg::TaskDone { task: t, data: node.output, payload });
+        }
+        self.maybe_report_done(now, effects);
+    }
+
+    fn satisfy_dep(&mut self, task: TaskId, now: f64, effects: &mut Vec<Effect>) {
+        let p = &mut self.pending_deps[task.idx()];
+        debug_assert!(*p > 0, "dependency underflow for {task}");
+        *p -= 1;
+        if *p == 0 {
+            self.queue.push(ReadyTask::home(task, self.me));
+            self.record_trace(now);
+            self.maybe_exec(effects);
+        }
+    }
+
+    fn maybe_report_done(&mut self, now: f64, effects: &mut Vec<Effect>) {
+        if self.owned_remaining == 0 && !self.reported_done {
+            self.reported_done = true;
+            if self.me == ProcessId(0) {
+                self.on_owner_done(now, effects);
+            } else {
+                self.send(effects, ProcessId(0), Msg::OwnerDone { proc: self.me });
+            }
+        }
+    }
+
+    fn on_owner_done(&mut self, _now: f64, effects: &mut Vec<Effect>) {
+        debug_assert_eq!(self.me, ProcessId(0));
+        self.owners_done += 1;
+        if self.owners_done == self.num_processes {
+            for q in 0..self.num_processes {
+                if q != 0 {
+                    self.send(effects, ProcessId(q as u32), Msg::Shutdown);
+                }
+            }
+            self.halted = true;
+            effects.push(Effect::Halt);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // messages
+    // ------------------------------------------------------------------
+
+    pub fn on_message(&mut self, env: Envelope, now: f64) -> Vec<Effect> {
+        let mut effects = Vec::new();
+        if self.halted {
+            return effects;
+        }
+        let from = env.from;
+        match env.msg {
+            Msg::DataSend { data, payload } => {
+                if !matches!(payload, Payload::None) {
+                    self.store.insert(data, payload);
+                }
+                if let Some(waiters) = self.v0_waiting.remove(&data) {
+                    for t in waiters {
+                        self.satisfy_dep(t, now, &mut effects);
+                    }
+                }
+            }
+            Msg::TaskDone { task, data, payload } => {
+                if !matches!(payload, Payload::None) {
+                    self.store.insert(data, payload);
+                }
+                let graph = Arc::clone(&self.graph);
+                for &d in &graph.task(task).dependents {
+                    if graph.task(d).placement == self.me {
+                        self.satisfy_dep(d, now, &mut effects);
+                    }
+                }
+            }
+            Msg::ResultReturn { task, payload } => {
+                debug_assert!(self.exported.remove(&task), "unexpected return of {task}");
+                let out = self.graph.task(task).output;
+                if !matches!(payload, Payload::None) {
+                    self.store.insert(out, payload);
+                }
+                self.last_completion = now;
+                self.publish_completion(task, now, &mut effects);
+            }
+
+            Msg::PairRequest { round, role, load, eta } => {
+                let my_role = self.role();
+                // Middle-zone processes (gap model, §3) sit out entirely:
+                // force a decline by reporting the same role as the asker.
+                let my_role = if self.in_middle_zone() { role } else { my_role };
+                let act = self.pairing.on_request(from, round, role, my_role, now);
+                match act {
+                    PairAction::SendAccept { to, round } => {
+                        self.accepted_peer =
+                            Some((from, role, PartnerInfo { load, eta }));
+                        let my_eta = self.queue_eta();
+                        let w = self.workload();
+                        self.send(
+                            &mut effects,
+                            to,
+                            Msg::PairAccept { round, load: w, eta: my_eta },
+                        );
+                    }
+                    PairAction::SendDecline { to, round } => {
+                        self.send(&mut effects, to, Msg::PairDecline { round });
+                    }
+                    _ => {}
+                }
+            }
+            Msg::PairAccept { round, load, eta } => {
+                match self.pairing.on_accept(from, round, now) {
+                    PairAction::Confirmed { partner, round, then_export } => {
+                        let my_eta = self.queue_eta();
+                        let w = self.workload();
+                        self.send(
+                            &mut effects,
+                            partner,
+                            Msg::PairConfirm { round, load: w, eta: my_eta },
+                        );
+                        if then_export {
+                            self.do_export(partner, round, PartnerInfo { load, eta }, now, &mut effects);
+                        }
+                    }
+                    PairAction::SendRelease { to, round } => {
+                        self.send(&mut effects, to, Msg::PairRelease { round });
+                    }
+                    _ => {}
+                }
+            }
+            Msg::PairDecline { round } => {
+                let _ = self.pairing.on_decline(round, now, &mut self.rng);
+            }
+            Msg::PairConfirm { round, load, eta } => {
+                let requester_is_busy = match self.accepted_peer {
+                    Some((p, r, _)) if p == from => r == Role::Busy,
+                    _ => false,
+                };
+                match self.pairing.on_confirm(from, round, requester_is_busy, now) {
+                    PairAction::BeginTransaction { partner, round, export } => {
+                        if export {
+                            // refresh partner info from the confirm
+                            self.do_export(
+                                partner,
+                                round,
+                                PartnerInfo { load, eta },
+                                now,
+                                &mut effects,
+                            );
+                        }
+                        // else: wait for their TaskExport
+                    }
+                    _ => {}
+                }
+            }
+            Msg::PairRelease { round } => {
+                let _ = self.pairing.on_release(from, round);
+                self.accepted_peer = None;
+            }
+            Msg::TaskExport { round, tasks } => {
+                let n = tasks.len();
+                for mt in tasks {
+                    for (d, p) in mt.inputs {
+                        if !matches!(p, Payload::None) {
+                            self.store.insert(d, p);
+                        }
+                    }
+                    // origin is the task's home (not necessarily `from`:
+                    // tasks may propagate through intermediaries, §7)
+                    self.queue.push(ReadyTask { task: mt.task, origin: mt.origin });
+                }
+                self.pairing.counters.tasks_received += n as u64;
+                self.send(&mut effects, from, Msg::ExportAck { round, accepted: n });
+                self.finish_transaction(now);
+                self.record_trace(now);
+                self.maybe_exec(&mut effects);
+            }
+            Msg::ExportAck { .. } => {
+                self.finish_transaction(now);
+            }
+
+            Msg::OwnerDone { .. } => {
+                self.on_owner_done(now, &mut effects);
+            }
+            Msg::Shutdown => {
+                self.halted = true;
+                effects.push(Effect::Halt);
+            }
+        }
+        if !self.halted {
+            self.dlb_poll(now, &mut effects);
+        }
+        effects
+    }
+
+    fn finish_transaction(&mut self, now: f64) {
+        if matches!(self.pairing.status, crate::dlb::pairing::PairStatus::InTransaction { .. }) {
+            self.pairing.transaction_done(now);
+        }
+        self.accepted_peer = None;
+        // Paper §3: after a round (successful or not) wait δ before the next
+        // search — jittered to avoid lock-step retries.
+        let jitter = 0.5 + self.rng.next_f64();
+        self.pairing.next_search_at = now + self.params.pairing.delta * jitter;
+    }
+
+    /// Run the export strategy and ship the selection.
+    fn do_export(
+        &mut self,
+        partner: ProcessId,
+        round: u64,
+        info: PartnerInfo,
+        now: f64,
+        effects: &mut Vec<Effect>,
+    ) {
+        let graph = Arc::clone(&self.graph);
+        let picked = select_exports(
+            self.params.strategy,
+            self.me,
+            &mut self.queue,
+            &graph,
+            self.params.wt,
+            info,
+            &self.perf,
+        );
+        if picked.is_empty() {
+            self.pairing.counters.empty_transactions += 1;
+        }
+        let mut migrated = Vec::with_capacity(picked.len());
+        for rt in &picked {
+            let node = graph.task(rt.task);
+            if rt.origin == self.me {
+                // our own task leaves: expect a ResultReturn for it
+                self.exported.insert(rt.task);
+            }
+            let inputs: Vec<(DataId, Payload)> = node
+                .args
+                .iter()
+                .map(|&a| (a, self.store.get(a).cloned().unwrap_or(Payload::Sim)))
+                .collect();
+            self.pairing.counters.migration_doubles += node.migration_doubles();
+            migrated.push(MigratedTask { task: rt.task, origin: rt.origin, inputs });
+        }
+        self.pairing.counters.tasks_exported += picked.len() as u64;
+        self.send(effects, partner, Msg::TaskExport { round, tasks: migrated });
+        self.record_trace(now);
+    }
+
+    // ------------------------------------------------------------------
+    // timers / DLB driving
+    // ------------------------------------------------------------------
+
+    pub fn on_tick(&mut self, now: f64) -> Vec<Effect> {
+        let mut effects = Vec::new();
+        if self.halted {
+            return effects;
+        }
+        self.pairing.on_tick(now, &mut self.rng);
+        self.dlb_poll(now, &mut effects);
+        effects
+    }
+
+    /// Attempt to start a pairing round and schedule the next wakeup.
+    fn dlb_poll(&mut self, now: f64, effects: &mut Vec<Effect>) {
+        if !self.params.dlb_enabled || self.halted {
+            return;
+        }
+        let role = self.role();
+        // A busy process only searches if it actually has exportable tasks;
+        // an idle process always searches (it can receive work even when it
+        // owns nothing — that is the point of migration).  Middle-zone
+        // processes (gap model, §3) do not search at all.
+        let searchable = !self.in_middle_zone()
+            && match role {
+                Role::Busy => {
+                    self.role_override.is_some() || self.workload() > self.params.wt
+                }
+                Role::Idle => true,
+            };
+        if searchable {
+            let act = self.pairing.maybe_start_round(now, role, self.num_processes, &mut self.rng);
+            if let PairAction::SendRequests { round, role, targets } = act {
+                let eta = self.queue_eta();
+                let load = self.workload();
+                for t in targets {
+                    self.send(effects, t, Msg::PairRequest { round, role, load, eta });
+                }
+            }
+        }
+        if let Some(at) = self.pairing.next_wakeup() {
+            let at = if at <= now { now + self.params.pairing.delta.max(1e-4) } else { at };
+            effects.push(Effect::ScheduleTick { at });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::task::TaskKind;
+
+    fn params(dlb: bool, wt: usize, gap: usize) -> ProcessParams {
+        let mut cfg = Config::default();
+        cfg.dlb_enabled = dlb;
+        cfg.wt = wt;
+        cfg.wt_gap = gap;
+        ProcessParams::from_config(&cfg)
+    }
+
+    /// n independent tasks homed on p0, 2-process world.
+    fn bag_state(n: usize, dlb: bool, wt: usize, gap: usize) -> ProcessState {
+        let mut b = GraphBuilder::new();
+        for _ in 0..n {
+            let d = b.data(ProcessId(0), 8, 8);
+            b.task(TaskKind::Synthetic, vec![], d, 1000, None);
+        }
+        ProcessState::new(ProcessId(0), 2, b.build(), params(dlb, wt, gap), 1)
+    }
+
+    fn envelope(from: u32, to: u32, msg: Msg) -> Envelope {
+        Envelope { from: ProcessId(from), to: ProcessId(to), msg, wire_doubles: 8 }
+    }
+
+    #[test]
+    fn start_enqueues_ready_tasks_and_starts_cores() {
+        let mut ps = bag_state(5, false, 2, 0);
+        let effects = ps.start(0.0);
+        // 1 core → exactly one StartExec; 4 remain queued
+        let execs = effects.iter().filter(|e| matches!(e, Effect::StartExec { .. })).count();
+        assert_eq!(execs, 1);
+        assert_eq!(ps.workload(), 4);
+    }
+
+    #[test]
+    fn role_thresholds_with_and_without_gap() {
+        let mut ps = bag_state(8, true, 3, 0);
+        let _ = ps.start(0.0);
+        assert_eq!(ps.workload(), 7);
+        assert_eq!(ps.role(), Role::Busy);
+        assert!(!ps.in_middle_zone());
+
+        // same queue with a gap of 10: w = 7 ≤ 3 + 10 → idle-ish middle zone
+        let mut ps = bag_state(8, true, 3, 10);
+        let _ = ps.start(0.0);
+        assert_eq!(ps.role(), Role::Idle);
+        assert!(ps.in_middle_zone());
+    }
+
+    #[test]
+    fn middle_zone_declines_requests() {
+        let mut ps = bag_state(8, true, 3, 10); // w = 7: middle zone
+        let _ = ps.start(0.0);
+        let effects = ps.on_message(
+            envelope(1, 0, Msg::PairRequest { round: 9, role: Role::Idle, load: 0, eta: 0.0 }),
+            0.001,
+        );
+        let declined = effects.iter().any(|e| {
+            matches!(e, Effect::Send(env) if matches!(env.msg, Msg::PairDecline { round: 9 }))
+        });
+        assert!(declined, "middle-zone process must decline: {effects:?}");
+    }
+
+    #[test]
+    fn busy_process_accepts_idle_request_and_exports() {
+        let mut ps = bag_state(10, true, 2, 0); // w = 9 > 2: busy
+        let _ = ps.start(0.0);
+        let effects = ps.on_message(
+            envelope(1, 0, Msg::PairRequest { round: 1, role: Role::Idle, load: 0, eta: 0.0 }),
+            0.001,
+        );
+        assert!(effects.iter().any(|e| {
+            matches!(e, Effect::Send(env) if matches!(env.msg, Msg::PairAccept { .. }))
+        }));
+        // idle requester confirms → busy side ships the excess
+        let effects = ps.on_message(
+            envelope(1, 0, Msg::PairConfirm { round: 1, load: 0, eta: 0.0 }),
+            0.002,
+        );
+        let exported = effects.iter().find_map(|e| match e {
+            Effect::Send(env) => match &env.msg {
+                Msg::TaskExport { tasks, .. } => Some(tasks.len()),
+                _ => None,
+            },
+            _ => None,
+        });
+        assert_eq!(exported, Some(7), "basic: w−W_T = 9−2 tasks leave");
+        assert_eq!(ps.workload(), 2);
+        // idle side acks → transaction closes, counters recorded
+        let _ = ps.on_message(envelope(1, 0, Msg::ExportAck { round: 1, accepted: 7 }), 0.003);
+        assert!(ps.pairing.is_free());
+        assert_eq!(ps.counters().tasks_exported, 7);
+    }
+
+    #[test]
+    fn task_export_receipt_enqueues_migrated_tasks() {
+        // p1's view: receives 2 tasks of p0's
+        let mut b = GraphBuilder::new();
+        let d0 = b.data(ProcessId(0), 8, 8);
+        let t0 = b.task(TaskKind::Synthetic, vec![], d0, 1000, None);
+        let d1 = b.data(ProcessId(0), 8, 8);
+        let t1 = b.task(TaskKind::Synthetic, vec![], d1, 1000, None);
+        let g = b.build();
+        let mut ps = ProcessState::new(ProcessId(1), 2, g, params(true, 2, 0), 1);
+        let _ = ps.start(0.0);
+        // fake an in-transaction state by receiving a request we accept
+        let _ = ps.on_message(
+            envelope(0, 1, Msg::PairRequest { round: 4, role: Role::Busy, load: 9, eta: 1.0 }),
+            0.001,
+        );
+        let effects = ps.on_message(
+            envelope(
+                0,
+                1,
+                Msg::TaskExport {
+                    round: 4,
+                    tasks: vec![
+                        MigratedTask { task: t0, origin: ProcessId(0), inputs: vec![] },
+                        MigratedTask { task: t1, origin: ProcessId(0), inputs: vec![] },
+                    ],
+                },
+            ),
+            0.002,
+        );
+        // both enqueued; one starts executing on the single core
+        assert_eq!(ps.counters().tasks_received, 2);
+        assert!(effects.iter().any(|e| {
+            matches!(e, Effect::Send(env) if matches!(env.msg, Msg::ExportAck { accepted: 2, .. }))
+        }));
+        assert!(effects.iter().any(|e| matches!(e, Effect::StartExec { .. })));
+    }
+
+    #[test]
+    fn migrated_completion_returns_to_origin() {
+        let mut b = GraphBuilder::new();
+        let d0 = b.data(ProcessId(0), 8, 8);
+        let t0 = b.task(TaskKind::Synthetic, vec![], d0, 1000, None);
+        let g = b.build();
+        let mut ps = ProcessState::new(ProcessId(1), 2, g, params(true, 2, 0), 1);
+        let _ = ps.start(0.0);
+        let rt = ReadyTask { task: t0, origin: ProcessId(0) };
+        ps.executing = 1; // as if the engine had started it
+        let effects = ps.on_exec_complete(rt, Payload::Sim, 0.01, 0.5);
+        let returned = effects.iter().any(|e| {
+            matches!(e, Effect::Send(env)
+                if env.to == ProcessId(0) && matches!(env.msg, Msg::ResultReturn { .. }))
+        });
+        assert!(returned, "thief must return the result to the origin");
+    }
+
+    #[test]
+    fn dependency_chain_via_task_done() {
+        // p1 owns a task depending on p0's output
+        let mut b = GraphBuilder::new();
+        let d0 = b.data(ProcessId(0), 8, 8);
+        let t0 = b.task(TaskKind::Synthetic, vec![], d0, 1000, None);
+        let d1 = b.data(ProcessId(1), 8, 8);
+        let _t1 = b.task(TaskKind::Synthetic, vec![d0], d1, 1000, None);
+        let g = b.build();
+        let mut ps = ProcessState::new(ProcessId(1), 2, g, params(false, 2, 0), 1);
+        let effects = ps.start(0.0);
+        assert!(effects.iter().all(|e| !matches!(e, Effect::StartExec { .. })), "not ready yet");
+        let effects = ps.on_message(
+            envelope(0, 1, Msg::TaskDone { task: t0, data: d0, payload: Payload::Sim }),
+            0.1,
+        );
+        assert!(
+            effects.iter().any(|e| matches!(e, Effect::StartExec { .. })),
+            "dependency satisfied → execute"
+        );
+    }
+
+    #[test]
+    fn owner_done_protocol_rank0_broadcasts_shutdown() {
+        // p0 owns nothing → reports done at start; second OwnerDone closes
+        let mut b = GraphBuilder::new();
+        let d = b.data(ProcessId(1), 8, 8);
+        b.task(TaskKind::Synthetic, vec![], d, 1000, None);
+        let g = b.build();
+        let mut ps = ProcessState::new(ProcessId(0), 2, g, params(false, 2, 0), 1);
+        let _ = ps.start(0.0);
+        assert!(!ps.halted);
+        let effects = ps.on_message(envelope(1, 0, Msg::OwnerDone { proc: ProcessId(1) }), 1.0);
+        assert!(ps.halted);
+        assert!(effects.iter().any(|e| {
+            matches!(e, Effect::Send(env) if matches!(env.msg, Msg::Shutdown))
+        }));
+        assert!(effects.iter().any(|e| matches!(e, Effect::Halt)));
+    }
+
+    #[test]
+    fn halted_process_ignores_messages() {
+        let mut ps = bag_state(1, true, 2, 0);
+        let _ = ps.start(0.0);
+        ps.halted = true;
+        let effects = ps.on_message(
+            envelope(1, 0, Msg::PairRequest { round: 1, role: Role::Idle, load: 0, eta: 0.0 }),
+            0.1,
+        );
+        assert!(effects.is_empty());
+    }
+
+    #[test]
+    fn dlb_disabled_never_searches() {
+        let mut ps = bag_state(20, false, 2, 0);
+        let effects = ps.start(0.0);
+        assert!(effects.iter().all(|e| !matches!(e, Effect::ScheduleTick { .. })));
+        let effects = ps.on_tick(1.0);
+        assert!(effects
+            .iter()
+            .all(|e| !matches!(e, Effect::Send(env) if env.msg.is_dlb())));
+    }
+
+    #[test]
+    fn local_completion_publishes_and_reports_done() {
+        let mut ps = bag_state(1, false, 2, 0);
+        let effects = ps.start(0.0);
+        assert_eq!(effects.iter().filter(|e| matches!(e, Effect::StartExec { .. })).count(), 1);
+        let rt = ReadyTask::home(TaskId(0), ProcessId(0));
+        let effects = ps.on_exec_complete(rt, Payload::Sim, 0.001, 0.1);
+        // sole task complete; rank 0 owns everything and p1 owns none…
+        // p1 reports at its own start, so here p0 halts only after that
+        // message. At minimum the task is recorded done locally:
+        assert!(ps.tasks_done());
+        let _ = effects;
+    }
+}

@@ -1,0 +1,190 @@
+//! Task model: kinds, §4 cost attributes, and graph nodes.
+
+use super::ids::{DataId, ProcessId, TaskId};
+
+/// The task types of the block-Cholesky benchmark (paper Fig 2) plus the
+/// §4 GEMV comparison task and a synthetic kind for workload generators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum TaskKind {
+    /// Factorize a diagonal block (F = b³/3).
+    Potrf,
+    /// Triangular solve of a panel block (F = b³).
+    Trsm,
+    /// Symmetric rank-b update of a diagonal block (F = b³ as implemented).
+    Syrk,
+    /// General trailing update (F = 2b³).
+    Gemm,
+    /// Matrix–vector product (F = 2b²) — the low-intensity §4 case.
+    Gemv,
+    /// Synthetic task with explicit cost attributes (workload generators).
+    Synthetic,
+}
+
+impl TaskKind {
+    pub const ALL: [TaskKind; 6] = [
+        TaskKind::Potrf,
+        TaskKind::Trsm,
+        TaskKind::Syrk,
+        TaskKind::Gemm,
+        TaskKind::Gemv,
+        TaskKind::Synthetic,
+    ];
+
+    /// Artifact name in `artifacts/manifest.txt` (None for synthetic tasks,
+    /// which exist only in simulation).
+    pub fn kernel_name(self) -> Option<&'static str> {
+        match self {
+            TaskKind::Potrf => Some("potrf"),
+            TaskKind::Trsm => Some("trsm"),
+            TaskKind::Syrk => Some("syrk"),
+            TaskKind::Gemm => Some("gemm"),
+            TaskKind::Gemv => Some("gemv"),
+            TaskKind::Synthetic => None,
+        }
+    }
+
+    /// Stable small index for per-kind tables.
+    pub fn index(self) -> usize {
+        match self {
+            TaskKind::Potrf => 0,
+            TaskKind::Trsm => 1,
+            TaskKind::Syrk => 2,
+            TaskKind::Gemm => 3,
+            TaskKind::Gemv => 4,
+            TaskKind::Synthetic => 5,
+        }
+    }
+
+    /// LAPACK-convention flop count for a square block of order `b`
+    /// (must agree with `python/compile/model.py::TaskSpec::flops`).
+    pub fn flops_for_block(self, b: u64) -> u64 {
+        match self {
+            TaskKind::Potrf => b * b * b / 3,
+            TaskKind::Trsm => b * b * b,
+            TaskKind::Syrk => b * b * b,
+            TaskKind::Gemm => 2 * b * b * b,
+            TaskKind::Gemv => 2 * b * b,
+            TaskKind::Synthetic => 0,
+        }
+    }
+}
+
+impl std::fmt::Display for TaskKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            TaskKind::Potrf => "potrf",
+            TaskKind::Trsm => "trsm",
+            TaskKind::Syrk => "syrk",
+            TaskKind::Gemm => "gemm",
+            TaskKind::Gemv => "gemv",
+            TaskKind::Synthetic => "synthetic",
+        })
+    }
+}
+
+/// One node of the immutable task graph.
+///
+/// The task reads `args` (kernel arguments, in artifact order — the output
+/// block's *current* value is among them for read-modify-write kinds) and
+/// writes `output`.  `flops`, `in_doubles` and `out_doubles` are the §4
+/// F and D attributes: F flops, D = in + out doubles crossing the network on
+/// migration.
+#[derive(Debug, Clone)]
+pub struct TaskNode {
+    pub id: TaskId,
+    pub kind: TaskKind,
+    /// Owner-computes home process (from the data distribution).
+    pub placement: ProcessId,
+    /// Kernel arguments in execution order.
+    pub args: Vec<DataId>,
+    /// The handle whose value this task produces.
+    pub output: DataId,
+    pub flops: u64,
+    pub in_doubles: u64,
+    pub out_doubles: u64,
+    /// Tasks that must complete before this one (RAW + WAR + WAW).
+    pub deps: Vec<TaskId>,
+    /// Inverse of `deps`.
+    pub dependents: Vec<TaskId>,
+    /// Distinct argument handles read at version 0 (no producing task):
+    /// these come from the initial data distribution and must be pushed by
+    /// their home process before this task can run remotely from it.
+    pub v0_args: Vec<DataId>,
+}
+
+impl TaskNode {
+    /// Total doubles crossing the network if this task runs remotely (paper
+    /// §4's D: ship inputs, return output).
+    pub fn migration_doubles(&self) -> u64 {
+        self.in_doubles + self.out_doubles
+    }
+
+    /// Computational intensity F/D (higher ⇒ cheaper to migrate, §4).
+    pub fn intensity(&self) -> f64 {
+        self.flops as f64 / self.migration_doubles().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_indices_unique_and_dense() {
+        let mut seen = [false; 6];
+        for k in TaskKind::ALL {
+            assert!(!seen[k.index()]);
+            seen[k.index()] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn flops_match_python_model() {
+        // mirror of python/tests/test_model.py::TestTaskSpecs
+        assert_eq!(TaskKind::Gemm.flops_for_block(64), 2 * 64 * 64 * 64);
+        assert_eq!(TaskKind::Potrf.flops_for_block(32), 32 * 32 * 32 / 3);
+        assert_eq!(TaskKind::Gemv.flops_for_block(128), 2 * 128 * 128);
+    }
+
+    #[test]
+    fn kernel_names_only_for_real_kinds() {
+        assert_eq!(TaskKind::Synthetic.kernel_name(), None);
+        for k in TaskKind::ALL {
+            if k != TaskKind::Synthetic {
+                assert!(k.kernel_name().is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn intensity_orders_gemm_above_gemv() {
+        let gemm = TaskNode {
+            id: TaskId(0),
+            kind: TaskKind::Gemm,
+            placement: ProcessId(0),
+            args: vec![],
+            output: DataId(0),
+            flops: TaskKind::Gemm.flops_for_block(64),
+            in_doubles: 3 * 64 * 64,
+            out_doubles: 64 * 64,
+            deps: vec![],
+            dependents: vec![],
+            v0_args: vec![],
+        };
+        let gemv = TaskNode {
+            id: TaskId(1),
+            kind: TaskKind::Gemv,
+            placement: ProcessId(0),
+            args: vec![],
+            output: DataId(1),
+            flops: TaskKind::Gemv.flops_for_block(64),
+            in_doubles: 64 * 64 + 64,
+            out_doubles: 64,
+            deps: vec![],
+            dependents: vec![],
+            v0_args: vec![],
+        };
+        assert!(gemm.intensity() > 10.0 * gemv.intensity());
+    }
+}

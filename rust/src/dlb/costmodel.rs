@@ -1,0 +1,165 @@
+//! The §4 analytic cost model for task migration.
+//!
+//! A node computes S flops/s and moves R doubles/s.  A task with F flops and
+//! D doubles of migration traffic costs `T_L = F/S` locally and
+//! `T_R = F/S + D/R` remotely; the *relative* migration overhead is
+//!
+//! ```text
+//! Q = (S/R) · (D/F)
+//! ```
+//!
+//! Paper's worked examples (S/R = 40): block GEMM with D = 3m², F = 2m³
+//! gives Q = 60/m (negligible for large blocks); GEMV with D = m², F = 2m²
+//! gives Q = 20 — twenty local tasks complete in the time one migration
+//! round-trips.  `wt_guideline` turns Q into the paper's W_T guidance.
+
+use crate::core::task::{TaskKind, TaskNode};
+
+/// Machine-balance parameters (paper §4's S and R).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// S: flops per second per process.
+    pub flops_per_sec: f64,
+    /// R: doubles per second across the interconnect.
+    pub doubles_per_sec: f64,
+    /// Fixed per-task runtime overhead (scheduling, dispatch), seconds.
+    pub task_overhead: f64,
+    /// Per-message latency, seconds.
+    pub latency: f64,
+}
+
+impl CostModel {
+    pub fn new(flops_per_sec: f64, doubles_per_sec: f64) -> Self {
+        CostModel { flops_per_sec, doubles_per_sec, task_overhead: 0.0, latency: 0.0 }
+    }
+
+    /// The machine balance S/R (≈ 40 on the paper's Rackham nodes).
+    pub fn s_over_r(&self) -> f64 {
+        self.flops_per_sec / self.doubles_per_sec
+    }
+
+    /// T_L = F/S (eq. 2), plus runtime overhead.
+    pub fn local_time(&self, flops: u64) -> f64 {
+        flops as f64 / self.flops_per_sec + self.task_overhead
+    }
+
+    /// T_R = F/S + D/R (eq. 3), plus overheads and two message latencies
+    /// (ship + return).
+    pub fn remote_time(&self, flops: u64, doubles: u64) -> f64 {
+        self.local_time(flops) + self.transfer_time(doubles) + 2.0 * self.latency
+    }
+
+    /// Pure wire time for `doubles`.
+    pub fn transfer_time(&self, doubles: u64) -> f64 {
+        doubles as f64 / self.doubles_per_sec
+    }
+
+    /// Q = (S/R)(D/F) (eq. 4) for explicit F, D.
+    pub fn q(&self, flops: u64, doubles: u64) -> f64 {
+        if flops == 0 {
+            return f64::INFINITY;
+        }
+        self.s_over_r() * doubles as f64 / flops as f64
+    }
+
+    /// Q for a graph node, using its migration D = in + out doubles.
+    pub fn q_of(&self, t: &TaskNode) -> f64 {
+        self.q(t.flops, t.migration_doubles())
+    }
+
+    /// Q for a task kind at block size `b`, with D counted like the paper
+    /// (§4: inputs + outputs that must cross the network).
+    pub fn q_kind(&self, kind: TaskKind, b: u64) -> f64 {
+        let f = kind.flops_for_block(b);
+        let d = match kind {
+            // paper counts D = 3m² for gemm (2 in + 1 out of the update);
+            // we ship 3 inputs and return 1 output = 4m². Keep our real
+            // traffic so predictions match the implementation.
+            TaskKind::Gemm => 4 * b * b,
+            TaskKind::Syrk => 3 * b * b,
+            TaskKind::Trsm => 3 * b * b,
+            TaskKind::Potrf => 2 * b * b,
+            TaskKind::Gemv => b * b + 2 * b,
+            TaskKind::Synthetic => 0,
+        };
+        self.q(f, d)
+    }
+
+    /// The paper's W_T guidance: exporting pays off only when at least ⌈Q⌉
+    /// tasks remain locally per exported task, so the busy threshold should
+    /// be at least this for the dominant task kind.
+    pub fn wt_guideline(&self, kind: TaskKind, b: u64) -> usize {
+        self.q_kind(kind, b).ceil().max(1.0) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_model() -> CostModel {
+        // Any S with S/R = 40 reproduces the §4 numbers.
+        CostModel::new(8.8e9, 2.2e8)
+    }
+
+    #[test]
+    fn s_over_r_is_40() {
+        assert!((paper_model().s_over_r() - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn local_remote_times() {
+        let m = paper_model();
+        let f = 1_000_000u64;
+        let d = 10_000u64;
+        let tl = m.local_time(f);
+        let tr = m.remote_time(f, d);
+        assert!(tr > tl);
+        assert!((tr - tl - d as f64 / m.doubles_per_sec).abs() < 1e-12);
+    }
+
+    #[test]
+    fn q_gemm_paper_variant() {
+        // paper counts D = 3m² → Q = 60/m with S/R = 40
+        let m = paper_model();
+        for &b in &[10u64, 100, 1000] {
+            let q = m.q(2 * b * b * b, 3 * b * b);
+            assert!((q - 60.0 / b as f64).abs() < 1e-9, "b={b}: {q}");
+        }
+    }
+
+    #[test]
+    fn q_gemv_is_about_20() {
+        // paper: F = 2m², D = m² → Q = 20
+        let m = paper_model();
+        let q = m.q(2 * 1000 * 1000, 1000 * 1000);
+        assert!((q - 20.0).abs() < 1e-9);
+        // implementation variant (ship A and x, return y): still ≈ 20
+        let qi = m.q_kind(TaskKind::Gemv, 1000);
+        assert!((qi - 20.0).abs() < 0.1, "{qi}");
+    }
+
+    #[test]
+    fn q_of_implementation_gemm_shrinks_with_block() {
+        let m = paper_model();
+        let q64 = m.q_kind(TaskKind::Gemm, 64);
+        let q512 = m.q_kind(TaskKind::Gemm, 512);
+        assert!(q64 > q512);
+        assert!(q512 < 0.5, "large blocks migrate almost free: {q512}");
+    }
+
+    #[test]
+    fn wt_guideline_matches_paper_reading() {
+        let m = paper_model();
+        // gemv: ~20 tasks must remain per export
+        let wt = m.wt_guideline(TaskKind::Gemv, 512);
+        assert!((19..=21).contains(&wt), "{wt}");
+        // big gemm: threshold can be minimal
+        assert_eq!(m.wt_guideline(TaskKind::Gemm, 2048), 1);
+    }
+
+    #[test]
+    fn zero_flops_q_infinite() {
+        assert!(paper_model().q(0, 10).is_infinite());
+    }
+}

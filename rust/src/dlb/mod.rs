@@ -1,0 +1,18 @@
+//! The paper's contribution: distributed dynamic load balancing.
+//!
+//! - `pairing` — the randomized idle–busy partner search (§3, Fig 1/3);
+//! - `strategy` — the Basic / Equalizing / Smart export policies (§3);
+//! - `costmodel` — the analytic migration cost model (§4);
+//! - `perfmodel` — the runtime performance recorder feeding Smart (§3);
+//! - `threshold` — W_T calibration helpers (§6).
+
+pub mod costmodel;
+pub mod pairing;
+pub mod perfmodel;
+pub mod strategy;
+pub mod threshold;
+
+pub use costmodel::CostModel;
+pub use pairing::{PairAction, Pairing, PairingConfig, PairStatus};
+pub use perfmodel::PerfRecorder;
+pub use strategy::{select_exports, PartnerInfo};

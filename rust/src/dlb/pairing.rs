@@ -1,0 +1,476 @@
+//! The randomized idle–busy pairing protocol (§3).
+//!
+//! Every process periodically tries to become one half of an idle–busy
+//! pair: it draws `tries` (paper: 5) distinct peers uniformly at random and
+//! sends each a `PairRequest`.  Receivers with the opposite role that are
+//! not already engaged answer `PairAccept` and soft-lock awaiting a
+//! `PairConfirm`; everyone else declines.  The requester confirms the first
+//! accept and releases any later ones.  A fully-declined round backs off for
+//! δ (jittered ±50% — without jitter two lone processes that request
+//! simultaneously and decline each other would retry in lock-step forever).
+//!
+//! Once confirmed, the pair is locked ("will not accept or send any further
+//! requests until their work exchange transaction has completed"): the busy
+//! side sends `TaskExport`, the idle side answers `ExportAck`, both unlock.
+//!
+//! This module is a pure state machine: inputs are protocol events plus the
+//! current time; outputs are `PairAction`s the process state machine turns
+//! into messages.  That keeps it unit-testable without any transport and
+//! shared verbatim between the DES and the threaded runtime.
+
+use crate::core::ids::ProcessId;
+use crate::metrics::counters::DlbCounters;
+use crate::net::message::Role;
+use crate::util::rng::Rng;
+
+/// Tunables (paper §3/§6: tries = 5, δ = 10 ms).
+#[derive(Debug, Clone, Copy)]
+pub struct PairingConfig {
+    pub tries: usize,
+    pub delta: f64,
+    pub confirm_timeout: f64,
+}
+
+impl Default for PairingConfig {
+    fn default() -> Self {
+        PairingConfig { tries: 5, delta: 0.010, confirm_timeout: 0.050 }
+    }
+}
+
+/// Protocol phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PairStatus {
+    /// Not engaged; may start a round or accept a request.
+    Free,
+    /// Sent a round of requests; counting replies.
+    Searching { round: u64, role: Role, outstanding: usize, deadline: f64 },
+    /// Accepted a request; soft-locked until Confirm/Release/timeout.
+    PendingConfirm { partner: ProcessId, round: u64, deadline: f64 },
+    /// Confirmed pair; `exporting` = we are the busy side.
+    InTransaction { partner: ProcessId, round: u64, exporting: bool, deadline: f64 },
+}
+
+/// What the caller must do after feeding an event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PairAction {
+    None,
+    /// Send `PairRequest` to each target.
+    SendRequests { round: u64, role: Role, targets: Vec<ProcessId> },
+    SendAccept { to: ProcessId, round: u64 },
+    SendDecline { to: ProcessId, round: u64 },
+    /// We confirmed `partner`; if `then_export`, we are the busy side and
+    /// must follow with a `TaskExport`.
+    Confirmed { partner: ProcessId, round: u64, then_export: bool },
+    SendRelease { to: ProcessId, round: u64 },
+    /// Our partner confirmed us; if `export`, we are the busy side and must
+    /// send the `TaskExport` now.
+    BeginTransaction { partner: ProcessId, round: u64, export: bool },
+}
+
+/// The per-process pairing engine.
+#[derive(Debug)]
+pub struct Pairing {
+    pub cfg: PairingConfig,
+    pub status: PairStatus,
+    pub next_search_at: f64,
+    next_round: u64,
+    me: ProcessId,
+    pub counters: DlbCounters,
+}
+
+impl Pairing {
+    pub fn new(me: ProcessId, cfg: PairingConfig) -> Self {
+        Pairing {
+            cfg,
+            status: PairStatus::Free,
+            next_search_at: 0.0,
+            next_round: 1,
+            me,
+            counters: DlbCounters::default(),
+        }
+    }
+
+    pub fn is_free(&self) -> bool {
+        matches!(self.status, PairStatus::Free)
+    }
+
+    /// Earliest time `on_tick` needs to run again (search start or a
+    /// deadline), if any.
+    pub fn next_wakeup(&self) -> Option<f64> {
+        match self.status {
+            PairStatus::Free => Some(self.next_search_at),
+            PairStatus::Searching { deadline, .. }
+            | PairStatus::PendingConfirm { deadline, .. }
+            | PairStatus::InTransaction { deadline, .. } => Some(deadline),
+        }
+    }
+
+    /// Try to start a search round: requires Free, the backoff expired, and
+    /// ≥ 1 peer.  `role` is the caller's current load classification.
+    pub fn maybe_start_round(
+        &mut self,
+        now: f64,
+        role: Role,
+        num_processes: usize,
+        rng: &mut Rng,
+    ) -> PairAction {
+        if !self.is_free() || now < self.next_search_at || num_processes < 2 {
+            return PairAction::None;
+        }
+        let round = self.next_round;
+        self.next_round += 1;
+        let targets: Vec<ProcessId> = rng
+            .sample_distinct(num_processes, self.cfg.tries, Some(self.me.idx()))
+            .into_iter()
+            .map(|i| ProcessId(i as u32))
+            .collect();
+        if targets.is_empty() {
+            return PairAction::None;
+        }
+        self.counters.rounds += 1;
+        self.counters.requests_sent += targets.len() as u64;
+        self.status = PairStatus::Searching {
+            round,
+            role,
+            outstanding: targets.len(),
+            deadline: now + self.cfg.confirm_timeout,
+        };
+        PairAction::SendRequests { round, role, targets }
+    }
+
+    /// Incoming `PairRequest`.  `my_role` is our classification *now*.
+    pub fn on_request(
+        &mut self,
+        from: ProcessId,
+        round: u64,
+        their_role: Role,
+        my_role: Role,
+        now: f64,
+    ) -> PairAction {
+        self.counters.requests_received += 1;
+        if self.is_free() && my_role == their_role.opposite() {
+            self.counters.accepts_sent += 1;
+            self.status = PairStatus::PendingConfirm {
+                partner: from,
+                round,
+                deadline: now + self.cfg.confirm_timeout,
+            };
+            PairAction::SendAccept { to: from, round }
+        } else {
+            self.counters.declines_sent += 1;
+            PairAction::SendDecline { to: from, round }
+        }
+    }
+
+    /// Incoming `PairAccept` (a peer answered our request).
+    pub fn on_accept(&mut self, from: ProcessId, round: u64, now: f64) -> PairAction {
+        match self.status {
+            PairStatus::Searching { round: r, role, .. } if r == round => {
+                let exporting = role == Role::Busy;
+                self.counters.transactions += 1;
+                self.status = PairStatus::InTransaction {
+                    partner: from,
+                    round,
+                    exporting,
+                    deadline: now + self.cfg.confirm_timeout,
+                };
+                PairAction::Confirmed { partner: from, round, then_export: exporting }
+            }
+            // late accept (already paired / round over): release the peer
+            _ => PairAction::SendRelease { to: from, round },
+        }
+    }
+
+    /// Incoming `PairDecline`.
+    pub fn on_decline(&mut self, round: u64, now: f64, rng: &mut Rng) -> PairAction {
+        if let PairStatus::Searching { round: r, ref mut outstanding, .. } = self.status {
+            if r == round {
+                *outstanding -= 1;
+                if *outstanding == 0 {
+                    self.round_failed(now, rng);
+                }
+            }
+        }
+        PairAction::None
+    }
+
+    /// Incoming `PairConfirm` (we accepted, requester committed).
+    /// `their_role_busy`: the role from the original request — if the
+    /// *requester* is busy, they export; otherwise we do.
+    pub fn on_confirm(
+        &mut self,
+        from: ProcessId,
+        round: u64,
+        requester_is_busy: bool,
+        now: f64,
+    ) -> PairAction {
+        match self.status {
+            PairStatus::PendingConfirm { partner, round: r, .. }
+                if partner == from && r == round =>
+            {
+                let export = !requester_is_busy; // requester idle ⇒ we are busy
+                self.counters.transactions += 1;
+                self.status = PairStatus::InTransaction {
+                    partner: from,
+                    round,
+                    exporting: export,
+                    deadline: now + self.cfg.confirm_timeout,
+                };
+                PairAction::BeginTransaction { partner: from, round, export }
+            }
+            _ => PairAction::None, // stale confirm; ignore
+        }
+    }
+
+    /// Incoming `PairRelease`.
+    pub fn on_release(&mut self, from: ProcessId, round: u64) -> PairAction {
+        if let PairStatus::PendingConfirm { partner, round: r, .. } = self.status {
+            if partner == from && r == round {
+                self.status = PairStatus::Free;
+            }
+        }
+        PairAction::None
+    }
+
+    /// The transaction completed (export sent + acked, or import acked).
+    pub fn transaction_done(&mut self, now: f64) {
+        debug_assert!(matches!(self.status, PairStatus::InTransaction { .. }));
+        self.status = PairStatus::Free;
+        // Re-arm the search: after a successful exchange a process may look
+        // again immediately (the δ wait only applies to failed rounds).
+        self.next_search_at = self.next_search_at.max(now);
+    }
+
+    /// Deadline sweep; call from timer ticks.
+    pub fn on_tick(&mut self, now: f64, rng: &mut Rng) {
+        match self.status {
+            PairStatus::Searching { deadline, .. } if now >= deadline => {
+                // Unanswered round (slow peers): treat as failed.
+                self.round_failed(now, rng);
+            }
+            PairStatus::PendingConfirm { deadline, .. } if now >= deadline => {
+                self.counters.confirm_timeouts += 1;
+                self.status = PairStatus::Free;
+            }
+            PairStatus::InTransaction { deadline, .. } if now >= deadline => {
+                // Partner vanished mid-transaction; unlock.
+                self.counters.confirm_timeouts += 1;
+                self.status = PairStatus::Free;
+            }
+            _ => {}
+        }
+    }
+
+    fn round_failed(&mut self, now: f64, rng: &mut Rng) {
+        self.counters.failed_rounds += 1;
+        self.status = PairStatus::Free;
+        // δ jittered in [0.5δ, 1.5δ]: prevents lock-step retry livelock
+        // between two processes that keep declining each other.
+        let jitter = 0.5 + rng.next_f64();
+        self.next_search_at = now + self.cfg.delta * jitter;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(me: u32) -> (Pairing, Rng) {
+        (
+            Pairing::new(ProcessId(me), PairingConfig::default()),
+            Rng::new(42 + me as u64),
+        )
+    }
+
+    #[test]
+    fn round_sends_five_distinct_requests() {
+        let (mut p, mut rng) = mk(0);
+        match p.maybe_start_round(0.0, Role::Idle, 10, &mut rng) {
+            PairAction::SendRequests { targets, role, .. } => {
+                assert_eq!(targets.len(), 5);
+                assert_eq!(role, Role::Idle);
+                let mut t = targets.clone();
+                t.sort();
+                t.dedup();
+                assert_eq!(t.len(), 5, "distinct");
+                assert!(!targets.contains(&ProcessId(0)), "never self");
+            }
+            other => panic!("expected SendRequests, got {other:?}"),
+        }
+        assert!(!p.is_free());
+    }
+
+    #[test]
+    fn small_population_caps_tries() {
+        let (mut p, mut rng) = mk(0);
+        match p.maybe_start_round(0.0, Role::Idle, 3, &mut rng) {
+            PairAction::SendRequests { targets, .. } => assert_eq!(targets.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn no_round_while_engaged_or_backing_off() {
+        let (mut p, mut rng) = mk(0);
+        let _ = p.maybe_start_round(0.0, Role::Idle, 10, &mut rng);
+        assert_eq!(p.maybe_start_round(0.0, Role::Idle, 10, &mut rng), PairAction::None);
+
+        let (mut p2, mut rng2) = mk(1);
+        p2.next_search_at = 5.0;
+        assert_eq!(p2.maybe_start_round(1.0, Role::Idle, 10, &mut rng2), PairAction::None);
+        assert!(matches!(
+            p2.maybe_start_round(5.0, Role::Idle, 10, &mut rng2),
+            PairAction::SendRequests { .. }
+        ));
+    }
+
+    #[test]
+    fn opposite_role_accepts_same_role_declines() {
+        let (mut p, _) = mk(1);
+        let a = p.on_request(ProcessId(0), 7, Role::Busy, Role::Idle, 0.0);
+        assert_eq!(a, PairAction::SendAccept { to: ProcessId(0), round: 7 });
+        assert!(matches!(p.status, PairStatus::PendingConfirm { .. }));
+
+        let (mut p2, _) = mk(2);
+        let d = p2.on_request(ProcessId(0), 8, Role::Idle, Role::Idle, 0.0);
+        assert_eq!(d, PairAction::SendDecline { to: ProcessId(0), round: 8 });
+        assert!(p2.is_free());
+    }
+
+    #[test]
+    fn engaged_process_declines_everything() {
+        let (mut p, _) = mk(1);
+        let _ = p.on_request(ProcessId(0), 1, Role::Busy, Role::Idle, 0.0);
+        let a = p.on_request(ProcessId(3), 2, Role::Busy, Role::Idle, 0.0);
+        assert_eq!(a, PairAction::SendDecline { to: ProcessId(3), round: 2 });
+    }
+
+    #[test]
+    fn full_idle_requester_flow() {
+        // idle p0 requests; busy p1 accepts; p0 confirms; p1 exports; ack.
+        let (mut idle, mut rng) = mk(0);
+        let round = match idle.maybe_start_round(0.0, Role::Idle, 4, &mut rng) {
+            PairAction::SendRequests { round, .. } => round,
+            other => panic!("{other:?}"),
+        };
+        let (mut busy, _) = mk(1);
+        assert!(matches!(
+            busy.on_request(ProcessId(0), round, Role::Idle, Role::Busy, 0.0),
+            PairAction::SendAccept { .. }
+        ));
+        match idle.on_accept(ProcessId(1), round, 0.001) {
+            PairAction::Confirmed { partner, then_export, .. } => {
+                assert_eq!(partner, ProcessId(1));
+                assert!(!then_export, "idle side does not export");
+            }
+            other => panic!("{other:?}"),
+        }
+        match busy.on_confirm(ProcessId(0), round, false, 0.002) {
+            PairAction::BeginTransaction { export, .. } => assert!(export),
+            other => panic!("{other:?}"),
+        }
+        busy.transaction_done(0.003);
+        idle.transaction_done(0.003);
+        assert!(busy.is_free() && idle.is_free());
+        assert_eq!(busy.counters.transactions, 1);
+        assert_eq!(idle.counters.transactions, 1);
+    }
+
+    #[test]
+    fn busy_requester_exports() {
+        let (mut busy, mut rng) = mk(0);
+        let round = match busy.maybe_start_round(0.0, Role::Busy, 4, &mut rng) {
+            PairAction::SendRequests { round, .. } => round,
+            other => panic!("{other:?}"),
+        };
+        match busy.on_accept(ProcessId(2), round, 0.001) {
+            PairAction::Confirmed { then_export, .. } => assert!(then_export),
+            other => panic!("{other:?}"),
+        }
+        let (mut idle, _) = mk(2);
+        let _ = idle.on_request(ProcessId(0), round, Role::Busy, Role::Idle, 0.0005);
+        match idle.on_confirm(ProcessId(0), round, true, 0.002) {
+            PairAction::BeginTransaction { export, .. } => assert!(!export),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn second_accept_released() {
+        let (mut p, mut rng) = mk(0);
+        let round = match p.maybe_start_round(0.0, Role::Idle, 8, &mut rng) {
+            PairAction::SendRequests { round, .. } => round,
+            other => panic!("{other:?}"),
+        };
+        let _ = p.on_accept(ProcessId(1), round, 0.001);
+        let a = p.on_accept(ProcessId(2), round, 0.002);
+        assert_eq!(a, PairAction::SendRelease { to: ProcessId(2), round });
+    }
+
+    #[test]
+    fn release_unlocks_pending() {
+        let (mut p, _) = mk(3);
+        let _ = p.on_request(ProcessId(0), 9, Role::Busy, Role::Idle, 0.0);
+        let _ = p.on_release(ProcessId(0), 9);
+        assert!(p.is_free());
+    }
+
+    #[test]
+    fn all_declines_back_off_with_jitter() {
+        let (mut p, mut rng) = mk(0);
+        let round = match p.maybe_start_round(0.0, Role::Idle, 4, &mut rng) {
+            PairAction::SendRequests { round, targets, .. } => {
+                assert_eq!(targets.len(), 3);
+                round
+            }
+            other => panic!("{other:?}"),
+        };
+        for _ in 0..3 {
+            let _ = p.on_decline(round, 0.001, &mut rng);
+        }
+        assert!(p.is_free());
+        assert_eq!(p.counters.failed_rounds, 1);
+        let wait = p.next_search_at - 0.001;
+        assert!(
+            wait >= 0.5 * p.cfg.delta && wait <= 1.5 * p.cfg.delta,
+            "jittered δ: {wait}"
+        );
+    }
+
+    #[test]
+    fn stale_decline_ignored() {
+        let (mut p, mut rng) = mk(0);
+        let _ = p.maybe_start_round(0.0, Role::Idle, 4, &mut rng);
+        let _ = p.on_decline(999, 0.001, &mut rng); // wrong round
+        assert!(!p.is_free());
+    }
+
+    #[test]
+    fn pending_confirm_times_out() {
+        let (mut p, mut rng) = mk(1);
+        let _ = p.on_request(ProcessId(0), 1, Role::Busy, Role::Idle, 0.0);
+        p.on_tick(0.01, &mut rng); // before deadline
+        assert!(!p.is_free());
+        p.on_tick(1.0, &mut rng); // past deadline
+        assert!(p.is_free());
+        assert_eq!(p.counters.confirm_timeouts, 1);
+    }
+
+    #[test]
+    fn stale_confirm_ignored() {
+        let (mut p, _) = mk(1);
+        let a = p.on_confirm(ProcessId(0), 5, false, 0.0);
+        assert_eq!(a, PairAction::None);
+        assert!(p.is_free());
+    }
+
+    #[test]
+    fn next_wakeup_tracks_state() {
+        let (mut p, mut rng) = mk(0);
+        p.next_search_at = 3.0;
+        assert_eq!(p.next_wakeup(), Some(3.0));
+        let _ = p.maybe_start_round(3.0, Role::Idle, 4, &mut rng);
+        let w = p.next_wakeup().expect("deadline");
+        assert!(w > 3.0);
+    }
+}

@@ -1,0 +1,197 @@
+//! Runtime performance recorder — the measurement layer behind the Smart
+//! strategy (§3): "each process records the average time for running tasks
+//! of each type as well as times for communicating tasks of each type and
+//! data of a certain size".
+//!
+//! Falls back to the analytic `CostModel` for kinds never yet observed, so
+//! Smart behaves sensibly from the first transaction.
+
+use crate::core::task::{TaskKind, TaskNode};
+use crate::util::stats::Running;
+
+use super::costmodel::CostModel;
+
+/// Exponentially-weighted per-kind execution-time estimates plus a linear
+/// communication model fitted from observed (doubles, seconds) pairs.
+#[derive(Debug, Clone)]
+pub struct PerfRecorder {
+    exec: [Running; 6],
+    /// Observed transfer samples: Σxy, Σx, Σy, Σx², n — least-squares line
+    /// through (doubles, seconds) for the communication-time model.
+    comm_sxy: f64,
+    comm_sx: f64,
+    comm_sy: f64,
+    comm_sxx: f64,
+    comm_n: f64,
+    fallback: CostModel,
+}
+
+impl PerfRecorder {
+    pub fn new(fallback: CostModel) -> Self {
+        PerfRecorder {
+            exec: Default::default(),
+            comm_sxy: 0.0,
+            comm_sx: 0.0,
+            comm_sy: 0.0,
+            comm_sxx: 0.0,
+            comm_n: 0.0,
+            fallback,
+        }
+    }
+
+    /// Record a completed execution of `kind` that took `secs`.
+    pub fn record_exec(&mut self, kind: TaskKind, secs: f64) {
+        self.exec[kind.index()].push(secs);
+    }
+
+    /// Record an observed transfer of `doubles` taking `secs`.
+    pub fn record_comm(&mut self, doubles: u64, secs: f64) {
+        let x = doubles as f64;
+        self.comm_sxy += x * secs;
+        self.comm_sx += x;
+        self.comm_sy += secs;
+        self.comm_sxx += x * x;
+        self.comm_n += 1.0;
+    }
+
+    /// Expected execution time of one task of `kind` with `flops`.
+    pub fn exec_estimate(&self, kind: TaskKind, flops: u64) -> f64 {
+        let r = &self.exec[kind.index()];
+        if r.count() >= 3 {
+            r.mean()
+        } else {
+            self.fallback.local_time(flops)
+        }
+    }
+
+    /// Expected wire time for `doubles` (fitted latency + bandwidth line, or
+    /// the analytic model until ≥ 3 samples exist).
+    pub fn comm_estimate(&self, doubles: u64) -> f64 {
+        if self.comm_n >= 3.0 {
+            let denom = self.comm_n * self.comm_sxx - self.comm_sx * self.comm_sx;
+            if denom.abs() > 1e-30 {
+                let slope = (self.comm_n * self.comm_sxy - self.comm_sx * self.comm_sy) / denom;
+                let intercept = (self.comm_sy - slope * self.comm_sx) / self.comm_n;
+                let est = intercept + slope * doubles as f64;
+                if est.is_finite() && est >= 0.0 {
+                    return est;
+                }
+            }
+        }
+        self.fallback.latency + self.fallback.transfer_time(doubles)
+    }
+
+    /// Expected time for `node` to run remotely and return: ship inputs,
+    /// wait out the remote queue (`remote_eta`), execute, return output.
+    pub fn remote_completion(&self, node: &TaskNode, remote_eta: f64) -> f64 {
+        self.comm_estimate(node.in_doubles)
+            + remote_eta
+            + self.exec_estimate(node.kind, node.flops)
+            + self.comm_estimate(node.out_doubles)
+    }
+
+    /// Expected time for `node` to complete locally if it sits behind
+    /// `queue_ahead` tasks of average cost (paper: local queuing + exec).
+    pub fn local_completion(&self, node: &TaskNode, queue_ahead: usize, avg_queue_task: f64) -> f64 {
+        queue_ahead as f64 * avg_queue_task + self.exec_estimate(node.kind, node.flops)
+    }
+
+    /// Average execution time across every kind observed (weighted by count);
+    /// analytic gemm-at-64 estimate if nothing is recorded yet.
+    pub fn avg_any_exec(&self) -> f64 {
+        let mut total = 0.0;
+        let mut n = 0u64;
+        for r in &self.exec {
+            if r.count() > 0 {
+                total += r.mean() * r.count() as f64;
+                n += r.count();
+            }
+        }
+        if n > 0 {
+            total / n as f64
+        } else {
+            self.fallback.local_time(TaskKind::Gemm.flops_for_block(64))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ids::{DataId, ProcessId, TaskId};
+
+    fn model() -> CostModel {
+        let mut m = CostModel::new(1e9, 1e8);
+        m.latency = 1e-6;
+        m
+    }
+
+    fn node(kind: TaskKind, flops: u64, ind: u64, outd: u64) -> TaskNode {
+        TaskNode {
+            id: TaskId(0),
+            kind,
+            placement: ProcessId(0),
+            args: vec![],
+            output: DataId(0),
+            flops,
+            in_doubles: ind,
+            out_doubles: outd,
+            deps: vec![],
+            dependents: vec![],
+            v0_args: vec![],
+        }
+    }
+
+    #[test]
+    fn falls_back_to_analytic_until_warm() {
+        let p = PerfRecorder::new(model());
+        let est = p.exec_estimate(TaskKind::Gemm, 1_000_000);
+        assert!((est - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exec_estimate_converges_to_observations() {
+        let mut p = PerfRecorder::new(model());
+        for _ in 0..10 {
+            p.record_exec(TaskKind::Gemm, 0.5);
+        }
+        assert!((p.exec_estimate(TaskKind::Gemm, 1) - 0.5).abs() < 1e-12);
+        // other kinds unaffected
+        assert!((p.exec_estimate(TaskKind::Trsm, 1_000_000) - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_fit_recovers_line() {
+        let mut p = PerfRecorder::new(model());
+        // ground truth: 2 µs + doubles/1e8
+        for &d in &[1_000u64, 10_000, 100_000, 500_000] {
+            p.record_comm(d, 2e-6 + d as f64 / 1e8);
+        }
+        let est = p.comm_estimate(50_000);
+        let truth = 2e-6 + 50_000.0 / 1e8;
+        assert!((est - truth).abs() < truth * 0.05, "est {est} vs {truth}");
+    }
+
+    #[test]
+    fn remote_vs_local_completion_tradeoff() {
+        let p = PerfRecorder::new(model());
+        let big = node(TaskKind::Gemm, 2 * 512 * 512 * 512, 3 * 512 * 512, 512 * 512);
+        // deep local queue → remote wins even with transfer
+        let local = p.local_completion(&big, 20, p.exec_estimate(TaskKind::Gemm, big.flops));
+        let remote = p.remote_completion(&big, 0.0);
+        assert!(remote < local);
+        // empty local queue → local wins
+        let local0 = p.local_completion(&big, 0, 0.0);
+        assert!(remote > local0);
+    }
+
+    #[test]
+    fn avg_any_exec_weights_counts() {
+        let mut p = PerfRecorder::new(model());
+        p.record_exec(TaskKind::Gemm, 1.0);
+        p.record_exec(TaskKind::Gemm, 1.0);
+        p.record_exec(TaskKind::Gemm, 1.0);
+        p.record_exec(TaskKind::Potrf, 4.0);
+        assert!((p.avg_any_exec() - 1.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,298 @@
+//! The three export strategies of §3.
+//!
+//! When a busy–idle pair has formed, the busy side decides *which* ready
+//! tasks to export:
+//!
+//! 1. **Basic** — no extra information: send the excess above W_T.
+//! 2. **Equalizing** — the idle side's load `w_j` rides on the request; send
+//!    `w_i − (w_i + w_j)/2` tasks.
+//! 3. **Smart** — the idle side's queue ETA rides on the request; export
+//!    only tasks whose predicted remote completion (ship + remote queue +
+//!    exec + return) beats their predicted local completion (local queue +
+//!    exec).
+
+use crate::config::Strategy;
+use crate::core::graph::TaskGraph;
+use crate::core::ids::ProcessId;
+use crate::sched::queue::{ReadyQueue, ReadyTask};
+
+use super::perfmodel::PerfRecorder;
+
+/// What the busy side knows about its idle partner when exporting.
+#[derive(Debug, Clone, Copy)]
+pub struct PartnerInfo {
+    pub load: usize,
+    /// Expected time for the partner to drain its current queue, seconds.
+    pub eta: f64,
+}
+
+/// Select tasks to export from `queue` (removing them).
+///
+/// Shared constraints, all strategies:
+/// - migrated tasks MAY be re-exported (their `origin` rides along so the
+///   result still returns home) — this is what lets load "propagate to
+///   anywhere in the system" (§7), unlike diffusion;
+/// - the remaining local queue never drops below W_T (the busy process must
+///   not make itself idle — §3's overshoot discussion);
+/// - at most `w − W_T` tasks leave regardless of strategy arithmetic.
+pub fn select_exports(
+    strategy: Strategy,
+    me: ProcessId,
+    queue: &mut ReadyQueue,
+    graph: &TaskGraph,
+    wt: usize,
+    partner: PartnerInfo,
+    perf: &PerfRecorder,
+) -> Vec<ReadyTask> {
+    let _ = me;
+    let w = queue.workload();
+    if w <= wt {
+        return Vec::new();
+    }
+    let excess = w - wt;
+    let count = match strategy {
+        // 1. Basic: everything above the threshold.
+        Strategy::Basic => excess,
+        // 2. Equalizing: meet in the middle; never below W_T.
+        Strategy::Equalizing => {
+            let target = (w + partner.load) / 2;
+            w.saturating_sub(target.max(wt)).min(excess)
+        }
+        Strategy::Smart => excess, // upper bound; the predicate decides
+    };
+    if count == 0 {
+        return Vec::new();
+    }
+
+    match strategy {
+        Strategy::Basic | Strategy::Equalizing => queue.drain_back(count, |_| true),
+        Strategy::Smart => {
+            // Predict per task. Tasks near the queue back have the largest
+            // local queuing delay, so iterate back-to-front; `ahead` is the
+            // number of tasks that would run before this one locally.
+            // The average queue task cost comes from the queue itself via
+            // the recorder's estimates (not a fixed fallback).
+            let avg = {
+                let (mut sum, mut n) = (0.0, 0usize);
+                for rt in queue.iter() {
+                    let node = graph.task(rt.task);
+                    sum += perf.exec_estimate(node.kind, node.flops);
+                    n += 1;
+                }
+                if n > 0 { sum / n as f64 } else { perf.avg_any_exec() }
+            };
+            // cumulative remote queue: each exported task extends the
+            // partner's expected queue by its own exec estimate.
+            let mut remote_eta = partner.eta;
+            let mut ahead = queue.workload();
+            queue.drain_back(count, |t| {
+                ahead = ahead.saturating_sub(1);
+                let node = graph.task(t.task);
+                let local = perf.local_completion(node, ahead, avg);
+                let remote = perf.remote_completion(node, remote_eta);
+                if remote < local {
+                    remote_eta += perf.exec_estimate(node.kind, node.flops);
+                    true
+                } else {
+                    false
+                }
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::ids::TaskId;
+    use crate::core::task::TaskKind;
+    use crate::dlb::costmodel::CostModel;
+
+    fn setup(n_tasks: usize, kind: TaskKind, block: usize) -> (std::sync::Arc<TaskGraph>, ReadyQueue) {
+        let mut b = GraphBuilder::new();
+        let mut q = ReadyQueue::new();
+        for i in 0..n_tasks {
+            let c = b.data(ProcessId(0), block, block);
+            let x = b.data(ProcessId(0), block, block);
+            let y = b.data(ProcessId(0), block, block);
+            let t = b.task(
+                kind,
+                vec![c, x, y],
+                c,
+                kind.flops_for_block(block as u64),
+                None,
+            );
+            q.push(ReadyTask { task: t, origin: ProcessId(0) });
+            let _ = i;
+        }
+        (b.build(), q)
+    }
+
+    fn perf() -> PerfRecorder {
+        let mut m = CostModel::new(8.8e9, 2.2e8);
+        m.latency = 2e-6;
+        PerfRecorder::new(m)
+    }
+
+    #[test]
+    fn basic_exports_excess_above_wt() {
+        let (g, mut q) = setup(12, TaskKind::Gemm, 64);
+        let got = select_exports(
+            Strategy::Basic,
+            ProcessId(0),
+            &mut q,
+            &g,
+            5,
+            PartnerInfo { load: 0, eta: 0.0 },
+            &perf(),
+        );
+        assert_eq!(got.len(), 7);
+        assert_eq!(q.workload(), 5); // exactly W_T remain
+    }
+
+    #[test]
+    fn basic_noop_when_at_threshold() {
+        let (g, mut q) = setup(5, TaskKind::Gemm, 64);
+        let got = select_exports(
+            Strategy::Basic,
+            ProcessId(0),
+            &mut q,
+            &g,
+            5,
+            PartnerInfo { load: 0, eta: 0.0 },
+            &perf(),
+        );
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn equalizing_meets_in_middle() {
+        let (g, mut q) = setup(12, TaskKind::Gemm, 64);
+        // w=12, partner 2 → target 7, send 5
+        let got = select_exports(
+            Strategy::Equalizing,
+            ProcessId(0),
+            &mut q,
+            &g,
+            2,
+            PartnerInfo { load: 2, eta: 0.0 },
+            &perf(),
+        );
+        assert_eq!(got.len(), 5);
+        assert_eq!(q.workload(), 7);
+    }
+
+    #[test]
+    fn equalizing_never_dips_below_wt() {
+        let (g, mut q) = setup(8, TaskKind::Gemm, 64);
+        // w=8, partner 0 → naive target 4 < wt 6 → send only down to wt
+        let got = select_exports(
+            Strategy::Equalizing,
+            ProcessId(0),
+            &mut q,
+            &g,
+            6,
+            PartnerInfo { load: 0, eta: 0.0 },
+            &perf(),
+        );
+        assert_eq!(got.len(), 2);
+        assert_eq!(q.workload(), 6);
+    }
+
+    #[test]
+    fn smart_exports_high_intensity_tasks() {
+        // big gemm blocks: migration is nearly free, deep queue → export
+        let (g, mut q) = setup(12, TaskKind::Gemm, 512);
+        let got = select_exports(
+            Strategy::Smart,
+            ProcessId(0),
+            &mut q,
+            &g,
+            2,
+            PartnerInfo { load: 0, eta: 0.0 },
+            &perf(),
+        );
+        assert!(!got.is_empty(), "high-intensity tasks should migrate");
+    }
+
+    /// GEMV tasks with the real argument shapes (matrix + vector).
+    fn setup_gemv(n_tasks: usize, block: usize) -> (std::sync::Arc<TaskGraph>, ReadyQueue) {
+        let mut b = GraphBuilder::new();
+        let mut q = ReadyQueue::new();
+        for _ in 0..n_tasks {
+            let a = b.data(ProcessId(0), block, block);
+            let x = b.data(ProcessId(0), block, 1);
+            let y = b.data(ProcessId(0), block, 1);
+            let t = b.task(
+                TaskKind::Gemv,
+                vec![a, x],
+                y,
+                TaskKind::Gemv.flops_for_block(block as u64),
+                None,
+            );
+            q.push(ReadyTask { task: t, origin: ProcessId(0) });
+        }
+        (b.build(), q)
+    }
+
+    #[test]
+    fn smart_holds_low_intensity_tasks() {
+        // gemv: Q ≈ 20 — with a shallow queue nothing should migrate
+        let (g, mut q) = setup_gemv(7, 256);
+        let got = select_exports(
+            Strategy::Smart,
+            ProcessId(0),
+            &mut q,
+            &g,
+            2,
+            PartnerInfo { load: 0, eta: 0.0 },
+            &perf(),
+        );
+        assert!(got.is_empty(), "gemv with shallow queue must stay local, got {got:?}");
+    }
+
+    #[test]
+    fn smart_exports_low_intensity_when_queue_very_deep() {
+        // same gemv tasks but queue much deeper than Q≈20 → exporting pays
+        let (g, mut q) = setup_gemv(60, 256);
+        let got = select_exports(
+            Strategy::Smart,
+            ProcessId(0),
+            &mut q,
+            &g,
+            2,
+            PartnerInfo { load: 0, eta: 0.0 },
+            &perf(),
+        );
+        assert!(!got.is_empty(), "deep gemv queue should export");
+        assert!(q.workload() >= 2);
+    }
+
+    #[test]
+    fn migrated_tasks_reexport_preserving_origin() {
+        // §7: load must be able to propagate through intermediaries, so
+        // stolen tasks are re-exportable — with their origin intact.
+        let mut b = GraphBuilder::new();
+        let c = b.data(ProcessId(0), 64, 64);
+        let t = b.task(TaskKind::Gemm, vec![c], c, 1000, None);
+        let g2 = b.build();
+        let mut q = ReadyQueue::new();
+        for _ in 0..8 {
+            q.push(ReadyTask { task: t, origin: ProcessId(9) }); // all stolen
+        }
+        let got = select_exports(
+            Strategy::Basic,
+            ProcessId(0),
+            &mut q,
+            &g2,
+            2,
+            PartnerInfo { load: 0, eta: 0.0 },
+            &perf(),
+        );
+        assert_eq!(got.len(), 6);
+        assert!(got.iter().all(|rt| rt.origin == ProcessId(9)), "origin preserved");
+        assert_eq!(q.workload(), 2);
+        let _ = TaskId(0);
+    }
+}

@@ -1,0 +1,96 @@
+//! W_T calibration (§6).
+//!
+//! The paper calibrates offline: run once without DLB, record the maximum
+//! workload over all processes and times, and set `W_T = max w_i(t) / 2`.
+//! It also sketches a production alternative — a locally-adapted threshold —
+//! which `AdaptiveThreshold` implements: an exponential moving average of
+//! the local workload, clamped by the §4 cost-model guideline.
+
+use crate::core::task::TaskKind;
+use crate::metrics::trace::RunTraces;
+
+use super::costmodel::CostModel;
+
+/// The paper's offline rule: W_T = ⌈max_{i,t} w_i(t) / 2⌉ (at least 1).
+pub fn calibrate_from_traces(traces: &RunTraces) -> usize {
+    (traces.max_workload() / 2).max(1)
+}
+
+/// Locally-adapting threshold (the production variant suggested in §6):
+/// tracks an EWMA of the observed workload and sets W_T to half its current
+/// estimate, never below the §4 guideline floor for the dominant task kind.
+#[derive(Debug, Clone)]
+pub struct AdaptiveThreshold {
+    ewma: f64,
+    alpha: f64,
+    floor: usize,
+}
+
+impl AdaptiveThreshold {
+    /// `alpha` ∈ (0, 1]: smoothing factor; `kind`/`block` set the §4 floor.
+    pub fn new(initial_wt: usize, alpha: f64, model: &CostModel, kind: TaskKind, block: u64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        // For compute-bound kinds the guideline is ~1 and the floor is moot;
+        // for gemv-like kinds it is ~Q ≈ 20 (§4's "20 tasks per export").
+        let floor = if kind == TaskKind::Synthetic { 1 } else { model.wt_guideline(kind, block) };
+        AdaptiveThreshold { ewma: 2.0 * initial_wt as f64, alpha, floor: floor.max(1) }
+    }
+
+    /// Observe the local workload; returns the updated threshold.
+    pub fn observe(&mut self, w: usize) -> usize {
+        self.ewma = (1.0 - self.alpha) * self.ewma + self.alpha * w as f64;
+        self.current()
+    }
+
+    pub fn current(&self) -> usize {
+        ((self.ewma / 2.0).round() as usize).max(self.floor)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ids::ProcessId;
+
+    #[test]
+    fn offline_rule_matches_paper() {
+        let mut traces = RunTraces::new(3);
+        traces.record(ProcessId(0), 0.0, 4);
+        traces.record(ProcessId(1), 1.0, 10); // max
+        traces.record(ProcessId(2), 2.0, 7);
+        assert_eq!(calibrate_from_traces(&traces), 5); // 10/2, the §6 value
+    }
+
+    #[test]
+    fn offline_rule_floors_at_one() {
+        let traces = RunTraces::new(2);
+        assert_eq!(calibrate_from_traces(&traces), 1);
+    }
+
+    #[test]
+    fn adaptive_tracks_load() {
+        let m = CostModel::new(8.8e9, 2.2e8);
+        let mut t = AdaptiveThreshold::new(5, 0.5, &m, TaskKind::Gemm, 512);
+        // workload settles around 30 → threshold toward 15
+        for _ in 0..50 {
+            t.observe(30);
+        }
+        assert!((14..=16).contains(&t.current()), "{}", t.current());
+        // workload collapses → threshold follows down to the floor
+        for _ in 0..50 {
+            t.observe(0);
+        }
+        assert_eq!(t.current(), 1);
+    }
+
+    #[test]
+    fn adaptive_respects_gemv_floor() {
+        let m = CostModel::new(8.8e9, 2.2e8);
+        let mut t = AdaptiveThreshold::new(2, 0.5, &m, TaskKind::Gemv, 512);
+        for _ in 0..50 {
+            t.observe(0);
+        }
+        // §4: don't export gemv until ~20 tasks remain per export
+        assert!(t.current() >= 19, "{}", t.current());
+    }
+}

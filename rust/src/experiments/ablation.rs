@@ -1,0 +1,181 @@
+//! Ablations over the paper's design choices (DESIGN.md §5 "beyond the
+//! paper's tables"):
+//!
+//! - **strategy** — Basic vs Equalizing vs Smart on the Fig 4-left case
+//!   (the paper suggests Equalizing where Basic overshoots, §6);
+//! - **δ sweep** — sensitivity of the makespan to the back-off period;
+//! - **gap model** — §3's suggested middle-zone hysteresis vs the base
+//!   single-threshold model.
+
+use crate::cholesky::driver::run_sim;
+use crate::config::{Config, Grid, Strategy};
+
+/// One ablation row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub label: String,
+    pub makespan: f64,
+    pub improvement_vs_off: f64,
+    pub migrations: u64,
+    pub requests: u64,
+    /// Max queue overshoot: max w_i(t) with DLB on (overshoot shows up as a
+    /// receiving process spiking above the donor's original load).
+    pub max_w: usize,
+}
+
+#[derive(Debug)]
+pub struct AblationResult {
+    pub baseline_makespan: f64,
+    pub strategies: Vec<Row>,
+    pub deltas: Vec<Row>,
+    pub gaps: Vec<Row>,
+}
+
+fn base_cfg(seed: u64) -> Config {
+    let mut c = Config::default();
+    c.processes = 10;
+    c.grid = Some(Grid::new(2, 5));
+    c.nb = 12;
+    c.block = 1667; // N = 20 004 ≈ the paper's 20 000
+    c.wt = 5;
+    c.delta = 0.010;
+    c.seed = seed;
+    c.validate().expect("ablation config");
+    c
+}
+
+fn run_row(label: String, cfg: &Config, baseline: f64) -> anyhow::Result<Row> {
+    let r = run_sim(cfg)?;
+    Ok(Row {
+        label,
+        makespan: r.makespan,
+        improvement_vs_off: (baseline - r.makespan) / baseline,
+        migrations: r.counters.tasks_exported,
+        requests: r.counters.requests_sent,
+        max_w: r.traces.max_workload(),
+    })
+}
+
+/// Run the full ablation suite.
+pub fn run(seed: u64) -> anyhow::Result<AblationResult> {
+    let mut off = base_cfg(seed);
+    off.dlb_enabled = false;
+    let baseline = run_sim(&off)?.makespan;
+
+    let mut strategies = Vec::new();
+    for s in [Strategy::Basic, Strategy::Equalizing, Strategy::Smart] {
+        let mut c = base_cfg(seed);
+        c.dlb_enabled = true;
+        c.strategy = s;
+        strategies.push(run_row(format!("strategy={s}"), &c, baseline)?);
+    }
+
+    let mut deltas = Vec::new();
+    for d in [0.001, 0.005, 0.010, 0.050, 0.200] {
+        let mut c = base_cfg(seed);
+        c.dlb_enabled = true;
+        c.delta = d;
+        deltas.push(run_row(format!("delta={}ms", d * 1e3), &c, baseline)?);
+    }
+
+    let mut gaps = Vec::new();
+    for g in [0usize, 2, 5, 10] {
+        let mut c = base_cfg(seed);
+        c.dlb_enabled = true;
+        c.wt_gap = g;
+        gaps.push(run_row(format!("gap={g}"), &c, baseline)?);
+    }
+
+    Ok(AblationResult { baseline_makespan: baseline, strategies, deltas, gaps })
+}
+
+impl AblationResult {
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "Ablations on Fig 4-left (baseline DLB-off makespan {:.3}s)\n\
+             {:<18} {:>10} {:>9} {:>7} {:>9} {:>6}\n",
+            self.baseline_makespan, "variant", "makespan", "improv", "migr", "requests", "max_w"
+        );
+        for group in [&self.strategies, &self.deltas, &self.gaps] {
+            for r in group {
+                out.push_str(&format!(
+                    "{:<18} {:>9.3}s {:>8.2}% {:>7} {:>9} {:>6}\n",
+                    r.label,
+                    r.makespan,
+                    r.improvement_vs_off * 100.0,
+                    r.migrations,
+                    r.requests,
+                    r.max_w
+                ));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn csv_rows(&self) -> Vec<Vec<f64>> {
+        let all = self.strategies.iter().chain(&self.deltas).chain(&self.gaps);
+        all.enumerate()
+            .map(|(i, r)| {
+                vec![
+                    i as f64,
+                    r.makespan,
+                    r.improvement_vs_off,
+                    r.migrations as f64,
+                    r.requests as f64,
+                    r.max_w as f64,
+                ]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(seed: u64, gap: usize, strategy: Strategy) -> Config {
+        let mut c = base_cfg(seed);
+        c.block = 128; // fast test scale
+        c.dlb_enabled = true;
+        c.wt_gap = gap;
+        c.strategy = strategy;
+        c
+    }
+
+    #[test]
+    fn gap_reduces_migrations() {
+        // the middle zone shrinks the busy set: fewer processes qualify to
+        // export, so migrations fall (§3's overshoot-damping mechanism).
+        let off = {
+            let mut c = base_cfg(3);
+            c.block = 128;
+            c.dlb_enabled = false;
+            c
+        };
+        let baseline = run_sim(&off).expect("off").makespan;
+        let r0 = run_row("gap0".into(), &small(3, 0, Strategy::Basic), baseline).expect("gap0");
+        let r5 = run_row("gap5".into(), &small(3, 5, Strategy::Basic), baseline).expect("gap5");
+        assert!(
+            r5.migrations <= r0.migrations,
+            "gap must not increase migrations: {} vs {}",
+            r5.migrations,
+            r0.migrations
+        );
+    }
+
+    #[test]
+    fn all_strategies_complete_small_scale() {
+        let off = {
+            let mut c = base_cfg(1);
+            c.block = 128;
+            c.dlb_enabled = false;
+            c
+        };
+        let baseline = run_sim(&off).expect("off").makespan;
+        for s in [Strategy::Basic, Strategy::Equalizing, Strategy::Smart] {
+            let r = run_row(format!("{s}"), &small(1, 0, s), baseline).expect("run");
+            assert!(r.makespan > 0.0);
+        }
+    }
+}

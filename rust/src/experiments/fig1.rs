@@ -1,0 +1,115 @@
+//! Figure 1: probability of finding ≥ 1 of K busy processes among P with n
+//! uniform no-replacement tries — exact hypergeometric (eq. 1) validated by
+//! Monte Carlo over the *implementation's* partner draw.
+
+use crate::prob::hypergeom::Hypergeometric;
+use crate::util::plot::{self, Series};
+use crate::util::rng::Rng;
+
+/// One curve: fixed (P, K), success probability vs tries n = 1..=n_max.
+#[derive(Debug, Clone)]
+pub struct Curve {
+    pub population: u64,
+    pub busy: u64,
+    /// (n, exact, monte-carlo) triples.
+    pub points: Vec<(u64, f64, f64)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig1Result {
+    pub curves: Vec<Curve>,
+    /// The paper's asymptote check: success at K = P/2, n = 5 vs 1 − 2⁻⁵.
+    pub k_half_n5: f64,
+    pub asymptote_n5: f64,
+}
+
+/// Reproduce both panels (P = 10 and P = 100, K/P ∈ {0.1, 0.3, 0.5, 0.7,
+/// 0.9}); `mc_reps` = Monte-Carlo repetitions per point (0 disables).
+pub fn run(n_max: u64, mc_reps: usize, seed: u64) -> Fig1Result {
+    let mut rng = Rng::new(seed);
+    let mut curves = Vec::new();
+    for &p in &[10u64, 100u64] {
+        for frac in [0.1, 0.3, 0.5, 0.7, 0.9] {
+            let k = ((p as f64) * frac).round() as u64;
+            let mut points = Vec::new();
+            for n in 1..=n_max.min(p) {
+                let h = Hypergeometric::new(p, k, n);
+                let exact = h.success_probability();
+                let mc = if mc_reps > 0 {
+                    h.monte_carlo_success(mc_reps, &mut rng)
+                } else {
+                    f64::NAN
+                };
+                points.push((n, exact, mc));
+            }
+            curves.push(Curve { population: p, busy: k, points });
+        }
+    }
+    let k_half_n5 = Hypergeometric::new(100, 50, 5).success_probability();
+    Fig1Result { curves, k_half_n5, asymptote_n5: Hypergeometric::asymptotic_success(0.5, 5) }
+}
+
+impl Fig1Result {
+    /// ASCII rendering of one panel (`population` = 10 or 100).
+    pub fn render_panel(&self, population: u64) -> String {
+        let series: Vec<Series> = self
+            .curves
+            .iter()
+            .filter(|c| c.population == population)
+            .map(|c| {
+                Series::new(
+                    format!("K={}", c.busy),
+                    c.points.iter().map(|&(n, e, _)| (n as f64, e)).collect(),
+                )
+            })
+            .collect();
+        plot::plot(
+            &format!("Fig 1: success probability, P = {population}"),
+            &series,
+            60,
+            16,
+        )
+    }
+
+    /// CSV rows: population, busy, tries, exact, monte_carlo.
+    pub fn csv_rows(&self) -> Vec<Vec<f64>> {
+        let mut rows = Vec::new();
+        for c in &self.curves {
+            for &(n, e, mc) in &c.points {
+                rows.push(vec![c.population as f64, c.busy as f64, n as f64, e, mc]);
+            }
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_paper_shape() {
+        let r = run(10, 2000, 1);
+        // paper: n = 5 at K = P/2 gives > 96%
+        assert!(r.k_half_n5 > 0.96);
+        assert!((r.asymptote_n5 - 0.96875).abs() < 1e-12);
+        // monotone in n for every curve; MC close to exact
+        for c in &r.curves {
+            let mut prev = 0.0;
+            for &(_, exact, mc) in &c.points {
+                assert!(exact >= prev - 1e-12);
+                prev = exact;
+                assert!((mc - exact).abs() < 0.05, "MC {mc} vs exact {exact}");
+            }
+        }
+        assert_eq!(r.curves.len(), 10);
+    }
+
+    #[test]
+    fn renders_both_panels() {
+        let r = run(8, 0, 1);
+        assert!(r.render_panel(10).contains("P = 10"));
+        assert!(r.render_panel(100).contains("K=50"));
+        assert_eq!(r.csv_rows().len(), 5 * 8 + 5 * 8);
+    }
+}

@@ -1,0 +1,180 @@
+//! Figure 3: average (and max) time for finding a busy–idle process pair,
+//! measured on the live protocol in the DES.
+//!
+//! Setup mirrors the paper's measurement: K of P processes hold deep queues
+//! of long tasks (busy, w > W_T), the rest are idle; every process runs the
+//! full randomized pairing protocol with 5 tries per round and δ back-off.
+//! A trial's pairing time is the virtual time of the first confirmed
+//! transaction; each (P, busy-fraction) cell aggregates many seeded trials.
+
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::core::graph::GraphBuilder;
+use crate::core::ids::ProcessId;
+use crate::core::task::TaskKind;
+use crate::sim::engine::SimEngine;
+use crate::util::plot::{self, Series};
+use crate::util::stats::Summary;
+
+/// One measured cell.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub processes: usize,
+    pub busy_fraction: f64,
+    pub mean: f64,
+    pub max: f64,
+    pub summary: Summary,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig3Result {
+    pub delta: f64,
+    pub cells: Vec<Cell>,
+}
+
+/// Run one pairing trial; returns the virtual time until a *designated*
+/// process completes its first pairing.
+///
+/// Two design points, both matching the paper's measurement:
+///
+/// - Roles are **pinned** (`role_override`): the micro-benchmark measures
+///   the protocol, not queue dynamics — without pinning, the first export
+///   equalizes the queues and the busy/idle mix dissolves mid-measurement.
+/// - We watch one designated idle process ("the waiting process" of the
+///   paper's δ discussion).  Measuring "first pair anywhere" would shrink
+///   with P by extreme-value statistics — not the per-process expectation
+///   the paper plots.
+pub fn pairing_time(p: usize, busy: usize, delta: f64, seed: u64) -> f64 {
+    assert!(busy >= 1 && busy < p, "need at least one busy and one idle");
+    let mut cfg = Config::default();
+    cfg.processes = p;
+    cfg.grid = None;
+    cfg.dlb_enabled = true;
+    cfg.wt = 2;
+    cfg.delta = delta;
+    cfg.seed = seed;
+    cfg.validate().expect("valid fig3 config");
+
+    // one never-finishing task per process keeps the run alive; roles come
+    // from the override, not the queues
+    let mut gb = GraphBuilder::new();
+    for i in 0..p {
+        let d = gb.data(ProcessId(i as u32), 64, 64);
+        gb.task(TaskKind::Synthetic, vec![], d, u64::MAX / 1024, None);
+    }
+    let graph = gb.build();
+    let mut eng = SimEngine::from_config(&cfg, Arc::clone(&graph));
+    for (i, ps) in eng.processes.iter_mut().enumerate() {
+        ps.role_override = Some(if i < busy { crate::net::Role::Busy } else { crate::net::Role::Idle });
+    }
+    let target = p - 1; // a (pinned) idle process
+    eng.stop_when = Some(Box::new(move |procs| {
+        procs[target].counters().transactions > 0
+    }));
+    eng.max_time = 3600.0;
+    let r = eng.run().expect("fig3 trial");
+    r.end_time
+}
+
+/// Full figure: sweep P and busy fraction, `trials` seeds per cell.
+pub fn run(p_values: &[usize], fractions: &[f64], delta: f64, trials: usize, seed: u64) -> Fig3Result {
+    let mut cells = Vec::new();
+    for &p in p_values {
+        for &f in fractions {
+            let busy = ((p as f64 * f).round() as usize).clamp(1, p - 1);
+            let times: Vec<f64> = (0..trials)
+                .map(|t| pairing_time(p, busy, delta, seed ^ ((t as u64) << 20) ^ (p as u64)))
+                .collect();
+            let s = Summary::of(&times);
+            cells.push(Cell {
+                processes: p,
+                busy_fraction: f,
+                mean: s.mean,
+                max: s.max,
+                summary: s,
+            });
+        }
+    }
+    Fig3Result { delta, cells }
+}
+
+impl Fig3Result {
+    /// ASCII: mean pairing time vs P, one series per busy fraction.
+    pub fn render(&self) -> String {
+        let mut fractions: Vec<f64> = self.cells.iter().map(|c| c.busy_fraction).collect();
+        fractions.sort_by(|a, b| a.partial_cmp(b).expect("no NaN"));
+        fractions.dedup();
+        let series: Vec<Series> = fractions
+            .iter()
+            .map(|&f| {
+                Series::new(
+                    format!("busy {:.0}%", f * 100.0),
+                    self.cells
+                        .iter()
+                        .filter(|c| c.busy_fraction == f)
+                        .map(|c| (c.processes as f64, c.mean * 1e3))
+                        .collect(),
+                )
+            })
+            .collect();
+        plot::plot(
+            &format!("Fig 3: mean time to find a pair [ms], δ = {} ms", self.delta * 1e3),
+            &series,
+            60,
+            14,
+        )
+    }
+
+    /// CSV rows: processes, busy_fraction, mean, max, p95.
+    pub fn csv_rows(&self) -> Vec<Vec<f64>> {
+        self.cells
+            .iter()
+            .map(|c| {
+                vec![c.processes as f64, c.busy_fraction, c.mean, c.max, c.summary.p95]
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_trial_is_fast_and_positive() {
+        let t = pairing_time(10, 5, 0.010, 42);
+        assert!(t > 0.0);
+        // with 50% busy, success probability per round > 96% ⇒ expected time
+        // well under a handful of δ (staggered start adds ≤ 1 δ)
+        assert!(t < 0.2, "pairing took {t}s");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = pairing_time(12, 6, 0.01, 7);
+        let b = pairing_time(12, 6, 0.01, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn harder_mix_is_not_faster_on_average() {
+        // K = P/2 is the paper's hardest case; K near P should pair faster
+        // for an idle searcher (easy to find a busy peer).
+        let r = run(&[16], &[0.5, 0.9], 0.01, 12, 3);
+        assert_eq!(r.cells.len(), 2);
+        for c in &r.cells {
+            assert!(c.mean > 0.0 && c.max >= c.mean);
+        }
+    }
+
+    #[test]
+    fn grows_slowly_with_p() {
+        // paper: "the average time grows slowly with the number of
+        // processes" — check it does not explode (×10) from P=8 to P=64.
+        let r = run(&[8, 64], &[0.5], 0.01, 10, 9);
+        let t8 = r.cells[0].mean;
+        let t64 = r.cells[1].mean;
+        assert!(t64 < t8 * 10.0, "t8={t8} t64={t64}");
+    }
+}

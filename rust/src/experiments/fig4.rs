@@ -1,0 +1,158 @@
+//! Figure 4: Cholesky workload traces + makespans, DLB off vs on, for the
+//! paper's two configurations:
+//!
+//! - left:  N = 20 000, 12×12 blocks (b = 1667), P = 10 on a 2×5 grid
+//! - right: N = 30 000, 12×12 blocks (b = 2500), P = 15 on a 3×5 grid
+//!
+//! Protocol follows §6 exactly: run once without DLB, calibrate
+//! W_T = max w_i(t)/2, then run with DLB (Basic strategy, δ = 10 ms).
+//! The paper reports a 5–6% execution-time reduction.
+
+use crate::cholesky::driver::{run_sim, CholeskyReport};
+use crate::config::{Config, Grid, Strategy};
+use crate::dlb::threshold::calibrate_from_traces;
+use crate::util::plot::{self, Series};
+
+/// One paper configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CaseSpec {
+    pub name: &'static str,
+    pub matrix_n: usize,
+    pub nb: usize,
+    pub processes: usize,
+    pub grid: (usize, usize),
+}
+
+/// The two Fig 4 cases.
+pub const CASES: [CaseSpec; 2] = [
+    CaseSpec { name: "N=20000 P=10 2x5", matrix_n: 20_000, nb: 12, processes: 10, grid: (2, 5) },
+    CaseSpec { name: "N=30000 P=15 3x5", matrix_n: 30_000, nb: 12, processes: 15, grid: (3, 5) },
+];
+
+#[derive(Debug)]
+pub struct CaseResult {
+    pub spec: CaseSpec,
+    pub calibrated_wt: usize,
+    pub off: CholeskyReport,
+    pub on: CholeskyReport,
+}
+
+impl CaseResult {
+    /// Relative improvement of DLB (positive = faster with DLB).
+    pub fn improvement(&self) -> f64 {
+        (self.off.makespan - self.on.makespan) / self.off.makespan
+    }
+}
+
+/// Build the Config for a case (sim mode, paper cost model S/R = 40).
+pub fn case_config(spec: &CaseSpec, dlb: bool, wt: usize, seed: u64) -> Config {
+    let mut c = Config::default();
+    c.processes = spec.processes;
+    c.grid = Some(Grid::new(spec.grid.0, spec.grid.1));
+    c.nb = spec.nb;
+    c.block = spec.matrix_n / spec.nb;
+    c.dlb_enabled = dlb;
+    c.strategy = Strategy::Basic;
+    c.wt = wt;
+    c.delta = 0.010;
+    c.seed = seed;
+    c.validate().expect("fig4 config");
+    c
+}
+
+/// Run one case end-to-end with §6 calibration.
+pub fn run_case(spec: &CaseSpec, seed: u64) -> anyhow::Result<CaseResult> {
+    let off = run_sim(&case_config(spec, false, 5, seed))?;
+    let wt = calibrate_from_traces(&off.traces);
+    let on = run_sim(&case_config(spec, true, wt, seed))?;
+    Ok(CaseResult { spec: *spec, calibrated_wt: wt, off, on })
+}
+
+/// Run both paper cases.
+pub fn run(seed: u64) -> anyhow::Result<Vec<CaseResult>> {
+    CASES.iter().map(|s| run_case(s, seed)).collect()
+}
+
+impl CaseResult {
+    /// ASCII workload traces (a subset of processes for readability),
+    /// off vs on in two panels — the Fig 4 quick-look.
+    pub fn render(&self, max_procs: usize) -> String {
+        let mut out = String::new();
+        for (label, rep) in [("DLB off", &self.off), ("DLB on", &self.on)] {
+            let t_end = rep.traces.makespan;
+            let series: Vec<Series> = rep
+                .traces
+                .per_process
+                .iter()
+                .take(max_procs)
+                .enumerate()
+                .map(|(i, tr)| Series::new(format!("p{i}"), tr.resample(t_end, 80)))
+                .collect();
+            out.push_str(&plot::plot(
+                &format!(
+                    "Fig 4 [{}] {label}: w_i(t), makespan = {:.3}s",
+                    self.spec.name, rep.makespan
+                ),
+                &series,
+                70,
+                12,
+            ));
+        }
+        out.push_str(&format!(
+            "improvement: {:+.2}% (W_T = {}, {} migrations)\n",
+            self.improvement() * 100.0,
+            self.calibrated_wt,
+            self.on.counters.tasks_exported,
+        ));
+        out
+    }
+
+    /// CSV rows: process, time, workload, dlb(0/1).
+    pub fn csv_rows(&self) -> Vec<Vec<f64>> {
+        let mut rows = Vec::new();
+        for (dlb, rep) in [(0.0, &self.off), (1.0, &self.on)] {
+            for (p, tr) in rep.traces.per_process.iter().enumerate() {
+                for &(t, w) in tr.samples() {
+                    rows.push(vec![p as f64, t, w as f64, dlb]);
+                }
+            }
+        }
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scaled-down variant for fast tests (same structure, nb=12).
+    fn small_case() -> CaseSpec {
+        CaseSpec { name: "test N=1200 P=10 2x5", matrix_n: 1200, nb: 12, processes: 10, grid: (2, 5) }
+    }
+
+    #[test]
+    fn calibration_and_both_runs_complete() {
+        let r = run_case(&small_case(), 1).expect("case");
+        assert!(r.calibrated_wt >= 1);
+        assert!(r.off.makespan > 0.0 && r.on.makespan > 0.0);
+        assert!(r.on.counters.rounds > 0, "DLB must have searched");
+    }
+
+    #[test]
+    fn dlb_does_not_catastrophically_regress() {
+        let r = run_case(&small_case(), 3).expect("case");
+        assert!(
+            r.improvement() > -0.15,
+            "DLB may jitter but not collapse: {:+.2}%",
+            r.improvement() * 100.0
+        );
+    }
+
+    #[test]
+    fn render_mentions_improvement() {
+        let r = run_case(&small_case(), 1).expect("case");
+        let s = r.render(4);
+        assert!(s.contains("improvement"));
+        assert!(!r.csv_rows().is_empty());
+    }
+}

@@ -1,0 +1,20 @@
+//! Paper-figure regeneration drivers.
+//!
+//! One module per figure/analysis of the paper's evaluation; each returns a
+//! plain-data result (for benches and tests) and can render an ASCII
+//! quick-look plus CSV (for EXPERIMENTS.md).  See DESIGN.md §5 for the
+//! experiment index.
+
+pub mod ablation;
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod sec4;
+
+/// Where experiment CSVs land (created on demand).
+pub fn out_dir(sub: &str) -> std::path::PathBuf {
+    let p = std::path::Path::new("results").join(sub);
+    let _ = std::fs::create_dir_all(&p);
+    p
+}

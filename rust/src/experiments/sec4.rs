@@ -1,0 +1,213 @@
+//! §4 analysis: the migration cost ratio Q = (S/R)(D/F) — analytic table
+//! plus a measured crossover in the simulator.
+//!
+//! Paper's worked numbers (S/R = 40): block GEMM → Q = 60/m (negligible for
+//! large m); GEMV → Q = 20 ("20 tasks can be executed locally in the same
+//! time as one task is migrated").  The measured half validates the
+//! *consequence*: DLB pays off for an imbalanced bag of GEMM-intensity
+//! tasks but not for GEMV chains, unless queues are far deeper than Q.
+
+use std::sync::Arc;
+
+use crate::apps::{bag, gemv_chain};
+use crate::config::Config;
+use crate::core::task::TaskKind;
+use crate::dlb::costmodel::CostModel;
+use crate::sim::engine::SimEngine;
+
+/// Analytic Q table row.
+#[derive(Debug, Clone)]
+pub struct QRow {
+    pub kind: TaskKind,
+    pub block: u64,
+    pub q: f64,
+    pub wt_guideline: usize,
+}
+
+/// The analytic table for the paper's machine balance.
+pub fn q_table(model: &CostModel, blocks: &[u64]) -> Vec<QRow> {
+    let mut rows = Vec::new();
+    for &kind in &[TaskKind::Gemm, TaskKind::Syrk, TaskKind::Trsm, TaskKind::Potrf, TaskKind::Gemv]
+    {
+        for &b in blocks {
+            rows.push(QRow {
+                kind,
+                block: b,
+                q: model.q_kind(kind, b),
+                wt_guideline: model.wt_guideline(kind, b),
+            });
+        }
+    }
+    rows
+}
+
+/// A measured DLB on/off comparison.
+#[derive(Debug, Clone)]
+pub struct MeasuredCase {
+    pub name: String,
+    pub makespan_off: f64,
+    pub makespan_on: f64,
+    pub migrations: u64,
+}
+
+impl MeasuredCase {
+    pub fn improvement(&self) -> f64 {
+        (self.makespan_off - self.makespan_on) / self.makespan_off
+    }
+}
+
+fn base_cfg(p: usize, wt: usize, seed: u64, dlb: bool) -> Config {
+    let mut c = Config::default();
+    c.processes = p;
+    c.grid = None;
+    c.dlb_enabled = dlb;
+    c.wt = wt;
+    c.delta = 0.002;
+    c.seed = seed;
+    c.validate().expect("sec4 config");
+    c
+}
+
+/// High-intensity case: imbalanced bag of GEMM-sized synthetic tasks.
+pub fn measure_bag(p: usize, block: usize, tasks: usize, seed: u64) -> anyhow::Result<MeasuredCase> {
+    let params = bag::BagParams {
+        tasks,
+        mean_flops: TaskKind::Gemm.flops_for_block(block as u64),
+        skew: 3.0,
+        size_spread: 0.3,
+        block,
+    };
+    let mut result = [0.0f64; 2];
+    let mut migrations = 0;
+    for (i, dlb) in [false, true].iter().enumerate() {
+        let cfg = base_cfg(p, 3, seed, *dlb);
+        let g = bag::build(p, params, seed);
+        let r = SimEngine::from_config(&cfg, Arc::clone(&g)).run().map_err(anyhow::Error::new)?;
+        result[i] = r.makespan;
+        if *dlb {
+            migrations = r.counters.tasks_exported;
+        }
+    }
+    Ok(MeasuredCase {
+        name: format!("gemm-bag b={block}"),
+        makespan_off: result[0],
+        makespan_on: result[1],
+        migrations,
+    })
+}
+
+/// Low-intensity case: GEMV chains on half the processes.
+pub fn measure_gemv(p: usize, block: usize, seed: u64) -> anyhow::Result<MeasuredCase> {
+    let loaded = (p / 2).max(1);
+    let mut result = [0.0f64; 2];
+    let mut migrations = 0;
+    for (i, dlb) in [false, true].iter().enumerate() {
+        let cfg = base_cfg(p, 3, seed, *dlb);
+        let g = gemv_chain::build(p, loaded, 6, 40, block);
+        let r = SimEngine::from_config(&cfg, Arc::clone(&g)).run().map_err(anyhow::Error::new)?;
+        result[i] = r.makespan;
+        if *dlb {
+            migrations = r.counters.tasks_exported;
+        }
+    }
+    Ok(MeasuredCase {
+        name: format!("gemv-chains b={block}"),
+        makespan_off: result[0],
+        makespan_on: result[1],
+        migrations,
+    })
+}
+
+#[derive(Debug)]
+pub struct Sec4Result {
+    pub table: Vec<QRow>,
+    pub cases: Vec<MeasuredCase>,
+}
+
+pub fn run(seed: u64) -> anyhow::Result<Sec4Result> {
+    let model = CostModel::new(8.8e9, 2.2e8); // the paper's S/R = 40
+    let table = q_table(&model, &[32, 64, 128, 512, 1667, 2500]);
+    let cases = vec![
+        measure_bag(8, 512, 192, seed)?,
+        measure_gemv(8, 512, seed)?,
+    ];
+    Ok(Sec4Result { table, cases })
+}
+
+impl Sec4Result {
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "§4 cost model (S/R = 40): Q = (S/R)(D/F) and the W_T guideline\n\
+             kind     block      Q        W_T floor\n",
+        );
+        for r in &self.table {
+            out.push_str(&format!(
+                "{:<8} {:>6} {:>10.4} {:>8}\n",
+                r.kind.to_string(),
+                r.block,
+                r.q,
+                r.wt_guideline
+            ));
+        }
+        out.push_str("\nmeasured DLB benefit (sim):\n");
+        for c in &self.cases {
+            out.push_str(&format!(
+                "{:<22} off {:>8.4}s  on {:>8.4}s  improvement {:+.2}%  ({} migrations)\n",
+                c.name,
+                c.makespan_off,
+                c.makespan_on,
+                c.improvement() * 100.0,
+                c.migrations
+            ));
+        }
+        out
+    }
+
+    pub fn csv_rows(&self) -> Vec<Vec<f64>> {
+        self.table
+            .iter()
+            .map(|r| vec![r.kind.index() as f64, r.block as f64, r.q, r.wt_guideline as f64])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q_table_matches_paper_examples() {
+        let model = CostModel::new(8.8e9, 2.2e8);
+        let t = q_table(&model, &[1000]);
+        let gemv = t.iter().find(|r| r.kind == TaskKind::Gemv).expect("gemv row");
+        assert!((gemv.q - 20.0).abs() < 0.2, "gemv Q = {}", gemv.q);
+        let gemm = t.iter().find(|r| r.kind == TaskKind::Gemm).expect("gemm row");
+        assert!(gemm.q < 0.1, "gemm at m=1000 nearly free: {}", gemm.q);
+    }
+
+    #[test]
+    fn bag_benefits_gemv_does_not() {
+        let bag = measure_bag(6, 256, 96, 5).expect("bag");
+        assert!(
+            bag.improvement() > 0.15,
+            "gemm-intensity bag should clearly benefit: {:+.2}%",
+            bag.improvement() * 100.0
+        );
+        let gemv = measure_gemv(6, 256, 5).expect("gemv");
+        // §4: Q≈20 ⇒ shallow gemv queues gain little or lose; allow noise
+        assert!(
+            gemv.improvement() < bag.improvement(),
+            "gemv ({:+.2}%) must benefit less than gemm bag ({:+.2}%)",
+            gemv.improvement() * 100.0,
+            bag.improvement() * 100.0
+        );
+    }
+
+    #[test]
+    fn render_contains_table() {
+        let r = run(2).expect("sec4");
+        let s = r.render();
+        assert!(s.contains("gemv"));
+        assert!(s.contains("measured DLB benefit"));
+    }
+}

@@ -1,0 +1,37 @@
+//! # ductr — distributed dynamic load balancing for task-parallel programs
+//!
+//! A reproduction of Zafari & Larsson, *Distributed dynamic load balancing
+//! for task parallel programming* (Uppsala University, 2018), built as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)**: a DuctTeip-style distributed task runtime — STF
+//!   dependency inference ([`core::graph`]), per-process ready queues, an
+//!   owner-computes placement from block-cyclic data distribution, plus the
+//!   paper's contribution: randomized idle–busy pairing ([`dlb::pairing`])
+//!   with Basic/Equalizing/Smart task-export strategies ([`dlb::strategy`]).
+//! - **L2/L1 (build time)**: the block-Cholesky task kernels, written as JAX
+//!   + Pallas and AOT-lowered to HLO text (`python/compile/`), loaded and
+//!   executed on the request path through PJRT ([`runtime`]).
+//!
+//! Two execution modes share the identical coordinator state machine
+//! ([`core::process::ProcessState`]): a deterministic discrete-event
+//! simulator ([`sim`]) for paper-scale experiments and a threaded real mode
+//! ([`runtime::threaded`]) that computes actual numerics via PJRT.
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
+//! paper-vs-measured record of every figure.
+
+pub mod apps;
+pub mod cholesky;
+pub mod cli;
+pub mod config;
+pub mod core;
+pub mod dlb;
+pub mod experiments;
+pub mod metrics;
+pub mod net;
+pub mod prob;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;

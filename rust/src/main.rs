@@ -1,0 +1,50 @@
+//! `ductr` — CLI launcher for the DLB task-runtime reproduction.
+//!
+//! Subcommands:
+//! - `run`             one workload run (sim or real mode), full knobs
+//! - `experiment`      regenerate a paper figure: fig1|fig3|fig4|fig5|sec4
+//! - `calibrate-wt`    the §6 offline W_T calibration (run without DLB)
+//! - `artifacts-check` load + compile + smoke-run every AOT kernel
+//!
+//! `ductr help` prints the full usage.
+
+use std::process::ExitCode;
+
+mod commands;
+
+fn main() -> ExitCode {
+    env_logger_lite();
+    match commands::dispatch() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Minimal RUST_LOG-style gate for the `log` macros (no env_logger offline).
+fn env_logger_lite() {
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::max_level()
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: L = L;
+    let level = match std::env::var("RUST_LOG").as_deref() {
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("info") => log::LevelFilter::Info,
+        Ok("warn") => log::LevelFilter::Warn,
+        _ => log::LevelFilter::Error,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}

@@ -1,0 +1,98 @@
+//! DLB event counters — the quantitative audit trail of the protocol:
+//! how many rounds, how many hits/declines, how much data migrated.
+
+/// Per-process DLB counters; `merge` aggregates a run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DlbCounters {
+    /// Pair-search rounds started (each = up to `tries` requests).
+    pub rounds: u64,
+    /// Rounds where every try was declined.
+    pub failed_rounds: u64,
+    pub requests_sent: u64,
+    pub requests_received: u64,
+    pub accepts_sent: u64,
+    pub declines_sent: u64,
+    /// Confirmed transactions this process participated in.
+    pub transactions: u64,
+    /// Transactions where the busy side had nothing (beneficial) to export.
+    pub empty_transactions: u64,
+    pub tasks_exported: u64,
+    pub tasks_received: u64,
+    /// Doubles shipped as migrated inputs + returned outputs.
+    pub migration_doubles: u64,
+    /// Accepter soft-lock timeouts (confirm never arrived).
+    pub confirm_timeouts: u64,
+}
+
+impl DlbCounters {
+    pub fn merge(&mut self, o: &DlbCounters) {
+        self.rounds += o.rounds;
+        self.failed_rounds += o.failed_rounds;
+        self.requests_sent += o.requests_sent;
+        self.requests_received += o.requests_received;
+        self.accepts_sent += o.accepts_sent;
+        self.declines_sent += o.declines_sent;
+        self.transactions += o.transactions;
+        self.empty_transactions += o.empty_transactions;
+        self.tasks_exported += o.tasks_exported;
+        self.tasks_received += o.tasks_received;
+        self.migration_doubles += o.migration_doubles;
+        self.confirm_timeouts += o.confirm_timeouts;
+    }
+
+    /// Fraction of rounds that found a partner — compare against the
+    /// hypergeometric prediction of eq. (1).
+    pub fn round_success_rate(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        (self.rounds - self.failed_rounds) as f64 / self.rounds as f64
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "rounds={} (failed {}), req {}/{} s/r, accepts {}, declines {}, tx={} (empty {}), tasks {}→/{}←, {} doubles, timeouts {}",
+            self.rounds,
+            self.failed_rounds,
+            self.requests_sent,
+            self.requests_received,
+            self.accepts_sent,
+            self.declines_sent,
+            self.transactions,
+            self.empty_transactions,
+            self.tasks_exported,
+            self.tasks_received,
+            self.migration_doubles,
+            self.confirm_timeouts,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums_everything() {
+        let mut a = DlbCounters { rounds: 2, tasks_exported: 3, ..Default::default() };
+        let b = DlbCounters { rounds: 5, failed_rounds: 1, tasks_received: 7, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.rounds, 7);
+        assert_eq!(a.failed_rounds, 1);
+        assert_eq!(a.tasks_exported, 3);
+        assert_eq!(a.tasks_received, 7);
+    }
+
+    #[test]
+    fn success_rate() {
+        let c = DlbCounters { rounds: 10, failed_rounds: 3, ..Default::default() };
+        assert!((c.round_success_rate() - 0.7).abs() < 1e-12);
+        assert_eq!(DlbCounters::default().round_success_rate(), 0.0);
+    }
+
+    #[test]
+    fn summary_is_stable() {
+        let c = DlbCounters { rounds: 1, ..Default::default() };
+        assert!(c.summary_line().contains("rounds=1"));
+    }
+}

@@ -1,0 +1,64 @@
+//! Tiny CSV writers for experiment outputs (plots are reproduced from
+//! these; the ASCII renderings are quick-looks only).
+
+use std::io::{self, Write};
+use std::path::Path;
+
+use super::trace::RunTraces;
+
+/// Write per-process workload traces as long-format CSV:
+/// `process,time,workload`.
+pub fn write_traces(path: impl AsRef<Path>, traces: &RunTraces) -> io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "process,time,workload")?;
+    for (p, tr) in traces.per_process.iter().enumerate() {
+        for &(t, w) in tr.samples() {
+            writeln!(f, "{p},{t},{w}")?;
+        }
+    }
+    Ok(())
+}
+
+/// Write arbitrary named columns: header + rows.
+pub fn write_rows(
+    path: impl AsRef<Path>,
+    header: &[&str],
+    rows: &[Vec<f64>],
+) -> io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ids::ProcessId;
+
+    #[test]
+    fn traces_csv_format() {
+        let mut tr = RunTraces::new(2);
+        tr.record(ProcessId(0), 0.0, 1);
+        tr.record(ProcessId(1), 0.5, 2);
+        let p = std::env::temp_dir().join("ductr_trace_test.csv");
+        write_traces(&p, &tr).expect("write");
+        let body = std::fs::read_to_string(&p).expect("read");
+        assert!(body.starts_with("process,time,workload\n"));
+        assert!(body.contains("0,0,1"));
+        assert!(body.contains("1,0.5,2"));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn rows_csv_format() {
+        let p = std::env::temp_dir().join("ductr_rows_test.csv");
+        write_rows(&p, &["a", "b"], &[vec![1.0, 2.0], vec![3.0, 4.5]]).expect("write");
+        let body = std::fs::read_to_string(&p).expect("read");
+        assert_eq!(body, "a,b\n1,2\n3,4.5\n");
+        let _ = std::fs::remove_file(p);
+    }
+}

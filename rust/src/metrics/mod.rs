@@ -1,0 +1,9 @@
+//! Observability: per-process workload traces (the w_i(t) of Figs 4–5),
+//! DLB event counters, and CSV writers.
+
+pub mod counters;
+pub mod csv;
+pub mod trace;
+
+pub use counters::DlbCounters;
+pub use trace::WorkloadTrace;

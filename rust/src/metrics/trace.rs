@@ -1,0 +1,177 @@
+//! Workload trace: the w_i(t) time series the paper plots in Figs 4–5.
+//!
+//! `w_i(t)` is the number of ready tasks in process i's queue (paper §3) —
+//! recorded on every change, compressed to one sample per distinct time.
+
+use crate::core::ids::ProcessId;
+
+/// One process's workload history.
+#[derive(Debug, Clone, Default)]
+pub struct WorkloadTrace {
+    /// (time, ready-queue length) samples, time-ordered.
+    samples: Vec<(f64, usize)>,
+    max_w: usize,
+}
+
+impl WorkloadTrace {
+    pub fn new() -> Self {
+        WorkloadTrace { samples: Vec::new(), max_w: 0 }
+    }
+
+    /// Record the workload at `t`; coalesces same-timestamp updates.
+    pub fn record(&mut self, t: f64, w: usize) {
+        self.max_w = self.max_w.max(w);
+        if let Some(last) = self.samples.last_mut() {
+            debug_assert!(t >= last.0, "time must be monotone");
+            if (t - last.0).abs() < 1e-12 {
+                last.1 = w;
+                return;
+            }
+            if last.1 == w {
+                return; // no change, no sample
+            }
+        }
+        self.samples.push((t, w));
+    }
+
+    pub fn samples(&self) -> &[(f64, usize)] {
+        &self.samples
+    }
+
+    /// Max workload over the whole run — the paper's `max_t w_i(t)`, used to
+    /// calibrate W_T = max/2 (§6).
+    pub fn max_workload(&self) -> usize {
+        self.max_w
+    }
+
+    /// The workload at an arbitrary time (step function semantics).
+    pub fn at(&self, t: f64) -> usize {
+        match self.samples.binary_search_by(|s| s.0.partial_cmp(&t).expect("no NaN")) {
+            Ok(i) => self.samples[i].1,
+            Err(0) => 0,
+            Err(i) => self.samples[i - 1].1,
+        }
+    }
+
+    /// Time-weighted average workload over [t0, t1].
+    pub fn time_average(&self, t0: f64, t1: f64) -> f64 {
+        if t1 <= t0 || self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut acc = 0.0;
+        let mut prev_t = t0;
+        let mut prev_w = self.at(t0) as f64;
+        for &(t, w) in &self.samples {
+            if t <= t0 {
+                continue;
+            }
+            let tt = t.min(t1);
+            acc += prev_w * (tt - prev_t);
+            prev_t = tt;
+            prev_w = w as f64;
+            if t >= t1 {
+                break;
+            }
+        }
+        acc += prev_w * (t1 - prev_t).max(0.0);
+        acc / (t1 - t0)
+    }
+
+    /// Resample to `n` equidistant points over [0, t_end] for plotting.
+    pub fn resample(&self, t_end: f64, n: usize) -> Vec<(f64, f64)> {
+        (0..n)
+            .map(|i| {
+                let t = t_end * i as f64 / (n - 1).max(1) as f64;
+                (t, self.at(t) as f64)
+            })
+            .collect()
+    }
+}
+
+/// Traces for every process in a run.
+#[derive(Debug, Clone, Default)]
+pub struct RunTraces {
+    pub per_process: Vec<WorkloadTrace>,
+    pub makespan: f64,
+}
+
+impl RunTraces {
+    pub fn new(p: usize) -> Self {
+        RunTraces { per_process: vec![WorkloadTrace::new(); p], makespan: 0.0 }
+    }
+
+    pub fn record(&mut self, p: ProcessId, t: f64, w: usize) {
+        self.per_process[p.idx()].record(t, w);
+        self.makespan = self.makespan.max(t);
+    }
+
+    /// Global max workload — W_T calibration input (§6: W_T = max/2).
+    pub fn max_workload(&self) -> usize {
+        self.per_process.iter().map(|t| t.max_workload()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_maxes() {
+        let mut tr = WorkloadTrace::new();
+        tr.record(0.0, 0);
+        tr.record(1.0, 3);
+        tr.record(2.0, 7);
+        tr.record(3.0, 2);
+        assert_eq!(tr.max_workload(), 7);
+        assert_eq!(tr.at(0.5), 0);
+        assert_eq!(tr.at(1.0), 3);
+        assert_eq!(tr.at(2.5), 7);
+        assert_eq!(tr.at(99.0), 2);
+    }
+
+    #[test]
+    fn no_change_no_sample() {
+        let mut tr = WorkloadTrace::new();
+        tr.record(0.0, 1);
+        tr.record(1.0, 1);
+        tr.record(2.0, 2);
+        assert_eq!(tr.samples().len(), 2);
+    }
+
+    #[test]
+    fn same_time_coalesces() {
+        let mut tr = WorkloadTrace::new();
+        tr.record(1.0, 1);
+        tr.record(1.0, 5);
+        assert_eq!(tr.samples(), &[(1.0, 5)]);
+    }
+
+    #[test]
+    fn time_average_step() {
+        let mut tr = WorkloadTrace::new();
+        tr.record(0.0, 2);
+        tr.record(1.0, 4);
+        // [0,1): 2, [1,2): 4 → avg 3 over [0,2]
+        assert!((tr.time_average(0.0, 2.0) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resample_endpoints() {
+        let mut tr = WorkloadTrace::new();
+        tr.record(0.0, 1);
+        tr.record(10.0, 9);
+        let r = tr.resample(10.0, 5);
+        assert_eq!(r.len(), 5);
+        assert_eq!(r[0], (0.0, 1.0));
+        assert_eq!(r[4].1, 9.0);
+    }
+
+    #[test]
+    fn run_traces_global_max() {
+        let mut rt = RunTraces::new(2);
+        rt.record(ProcessId(0), 1.0, 4);
+        rt.record(ProcessId(1), 2.0, 9);
+        assert_eq!(rt.max_workload(), 9);
+        assert_eq!(rt.makespan, 2.0);
+    }
+}

@@ -1,0 +1,225 @@
+//! The wire protocol between processes.
+//!
+//! Two planes share one mailbox:
+//!
+//! - **data plane**: `TaskDone` fan-out of completed outputs to dependent
+//!   processes, and `ResultReturn` of migrated-task outputs to their origin;
+//! - **DLB control plane**: the randomized pairing handshake
+//!   (`PairRequest` → `PairAccept`/`PairDecline` → `PairConfirm`/`PairRelease`
+//!   → `TaskExport` → `ExportAck`) and termination
+//!   (`OwnerDone` → `Shutdown`).
+
+use crate::core::data::Payload;
+use crate::core::ids::{DataId, ProcessId, TaskId};
+
+/// Which side of the load divide a process is on (w > W_T ⇒ busy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Busy,
+    Idle,
+}
+
+impl Role {
+    pub fn opposite(self) -> Role {
+        match self {
+            Role::Busy => Role::Idle,
+            Role::Idle => Role::Busy,
+        }
+    }
+}
+
+/// A task shipped to a thief: the task id, the process the result must be
+/// returned to (the task's home — preserved across re-exports so load can
+/// propagate through intermediaries, §7), and every input value it needs.
+#[derive(Debug, Clone)]
+pub struct MigratedTask {
+    pub task: TaskId,
+    pub origin: ProcessId,
+    /// Input blocks in kernel-argument order.
+    pub inputs: Vec<(DataId, Payload)>,
+}
+
+/// All inter-process messages.
+#[derive(Debug, Clone)]
+pub enum Msg {
+    /// Task `task` finished; its output (handle `data`) is attached when a
+    /// dependent on the receiving process reads it (`Payload::None` for pure
+    /// ordering edges — WAR/WAW).
+    TaskDone {
+        task: TaskId,
+        data: DataId,
+        payload: Payload,
+    },
+
+    /// A thief returns the output of a migrated task to its origin.
+    ResultReturn {
+        task: TaskId,
+        payload: Payload,
+    },
+
+    /// Initial-distribution push: version-0 data needed by a remote
+    /// consumer that has no producing task (sent once at startup).
+    DataSend {
+        data: DataId,
+        payload: Payload,
+    },
+
+    // ---- pairing handshake -------------------------------------------
+    /// "I am `role` with load `load`; pair with me?"  `eta` is the idle
+    /// side's expected time to drain its queue (used by the Smart strategy);
+    /// busy requesters send their own eta for symmetry.
+    PairRequest {
+        round: u64,
+        role: Role,
+        load: usize,
+        eta: f64,
+    },
+    /// Positive answer; responder is now soft-locked awaiting Confirm.
+    PairAccept {
+        round: u64,
+        load: usize,
+        eta: f64,
+    },
+    /// Negative answer (wrong role, already locked, or shutting down).
+    PairDecline {
+        round: u64,
+    },
+    /// Requester commits to this partner.
+    PairConfirm {
+        round: u64,
+        load: usize,
+        eta: f64,
+    },
+    /// Requester already paired elsewhere; release the soft lock.
+    PairRelease {
+        round: u64,
+    },
+
+    /// The busy side's export: zero or more ready tasks with their inputs.
+    TaskExport {
+        round: u64,
+        tasks: Vec<MigratedTask>,
+    },
+    /// The idle side acknowledges; transaction complete, both unlock.
+    ExportAck {
+        round: u64,
+        accepted: usize,
+    },
+
+    // ---- termination --------------------------------------------------
+    /// All tasks homed at `proc` have completed (sent to rank 0).
+    OwnerDone {
+        proc: ProcessId,
+    },
+    /// Rank 0 broadcast: stop event loops.
+    Shutdown,
+}
+
+impl Msg {
+    /// Payload size in doubles for the network model: control messages cost
+    /// `control_doubles`; data-bearing messages add their block sizes.
+    pub fn wire_doubles(&self, control_doubles: u64) -> u64 {
+        match self {
+            Msg::TaskDone { payload, .. }
+            | Msg::ResultReturn { payload, .. }
+            | Msg::DataSend { payload, .. } => control_doubles + payload_doubles(payload),
+            Msg::TaskExport { tasks, .. } => {
+                control_doubles
+                    + tasks
+                        .iter()
+                        .map(|t| {
+                            control_doubles
+                                + t.inputs.iter().map(|(_, p)| payload_doubles(p)).sum::<u64>()
+                        })
+                        .sum::<u64>()
+            }
+            _ => control_doubles,
+        }
+    }
+
+    /// True for messages belonging to the DLB control plane (metrics).
+    pub fn is_dlb(&self) -> bool {
+        matches!(
+            self,
+            Msg::PairRequest { .. }
+                | Msg::PairAccept { .. }
+                | Msg::PairDecline { .. }
+                | Msg::PairConfirm { .. }
+                | Msg::PairRelease { .. }
+                | Msg::TaskExport { .. }
+                | Msg::ExportAck { .. }
+        )
+    }
+}
+
+fn payload_doubles(p: &Payload) -> u64 {
+    match p {
+        Payload::None => 0,
+        // Sim payloads are sized by the graph metadata at the send site; the
+        // engine passes explicit sizes for them (see sim::network).
+        Payload::Sim => 0,
+        Payload::Real(v) => v.len() as u64,
+    }
+}
+
+/// An addressed message in flight.
+#[derive(Debug, Clone)]
+pub struct Envelope {
+    pub from: ProcessId,
+    pub to: ProcessId,
+    pub msg: Msg,
+    /// Size in doubles for the network model (includes Sim payload sizes
+    /// which are not recoverable from the Msg itself).
+    pub wire_doubles: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn role_opposite() {
+        assert_eq!(Role::Busy.opposite(), Role::Idle);
+        assert_eq!(Role::Idle.opposite(), Role::Busy);
+    }
+
+    #[test]
+    fn wire_size_control_vs_data() {
+        let ctrl = Msg::PairDecline { round: 1 };
+        assert_eq!(ctrl.wire_doubles(8), 8);
+        let data = Msg::TaskDone {
+            task: TaskId(0),
+            data: DataId(0),
+            payload: Payload::Real(vec![0.0; 100]),
+        };
+        assert_eq!(data.wire_doubles(8), 108);
+    }
+
+    #[test]
+    fn export_counts_all_inputs() {
+        let m = Msg::TaskExport {
+            round: 0,
+            tasks: vec![
+                MigratedTask {
+                    task: TaskId(1),
+                    origin: ProcessId(0),
+                    inputs: vec![
+                        (DataId(0), Payload::Real(vec![0.0; 10])),
+                        (DataId(1), Payload::Real(vec![0.0; 20])),
+                    ],
+                },
+                MigratedTask { task: TaskId(2), origin: ProcessId(0), inputs: vec![] },
+            ],
+        };
+        assert_eq!(m.wire_doubles(4), 4 + (4 + 30) + 4);
+    }
+
+    #[test]
+    fn dlb_classification() {
+        assert!(Msg::PairRequest { round: 0, role: Role::Idle, load: 0, eta: 0.0 }.is_dlb());
+        assert!(!Msg::Shutdown.is_dlb());
+        assert!(
+            !Msg::TaskDone { task: TaskId(0), data: DataId(0), payload: Payload::None }.is_dlb()
+        );
+    }
+}

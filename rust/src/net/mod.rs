@@ -1,0 +1,9 @@
+//! Inter-process messaging: the wire protocol (`message`) and the
+//! threaded-mode transport (`transport`).  The DES mode delivers the same
+//! `Envelope`s through `sim::network` instead.
+
+pub mod message;
+pub mod transport;
+
+pub use message::{Envelope, MigratedTask, Msg, Role};
+pub use transport::{mesh, Mailbox, Router, Shaper};

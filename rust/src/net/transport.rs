@@ -1,0 +1,193 @@
+//! Message transport for the threaded real mode: a full mpsc mailbox mesh
+//! with an optional latency/bandwidth shaper.
+//!
+//! The DES does not use this (it delivers envelopes through its event heap —
+//! `sim::network`); the `Router`/`Mailbox` pair is the real-mode equivalent
+//! with wallclock semantics.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::time::{Duration, Instant};
+
+use crate::core::ids::ProcessId;
+
+use super::message::Envelope;
+
+/// Sender side: can address any process.
+#[derive(Clone)]
+pub struct Router {
+    senders: Vec<Sender<Envelope>>,
+    shaper: Option<Shaper>,
+}
+
+/// Receiver side: one per process.
+pub struct Mailbox {
+    pub me: ProcessId,
+    rx: Receiver<Envelope>,
+}
+
+/// Build a fully-connected mesh for `p` processes.
+pub fn mesh(p: usize, shaper: Option<Shaper>) -> (Router, Vec<Mailbox>) {
+    let mut senders = Vec::with_capacity(p);
+    let mut mailboxes = Vec::with_capacity(p);
+    for i in 0..p {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        mailboxes.push(Mailbox { me: ProcessId(i as u32), rx });
+    }
+    (Router { senders, shaper }, mailboxes)
+}
+
+impl Router {
+    /// Send an envelope to its destination; applies the shaper's serial
+    /// delay at the *sender* (models NIC injection time).
+    ///
+    /// Sending to a process that has already halted (mailbox dropped) is
+    /// not an error: during shutdown, in-flight DLB traffic may race the
+    /// `Shutdown` broadcast, and the halted peer would have discarded the
+    /// message anyway.
+    pub fn send(&self, env: Envelope) -> Result<(), String> {
+        if let Some(sh) = &self.shaper {
+            sh.delay(env.wire_doubles);
+        }
+        let to = env.to.idx();
+        if to >= self.senders.len() {
+            return Err(format!("no such process: {}", env.to));
+        }
+        let _ = self.senders[to].send(env); // closed mailbox == halted peer
+        Ok(())
+    }
+
+    pub fn num_processes(&self) -> usize {
+        self.senders.len()
+    }
+}
+
+impl Mailbox {
+    /// Non-blocking poll.
+    pub fn try_recv(&self) -> Option<Envelope> {
+        match self.rx.try_recv() {
+            Ok(e) => Some(e),
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// Blocking receive with timeout.
+    pub fn recv_timeout(&self, d: Duration) -> Option<Envelope> {
+        self.rx.recv_timeout(d).ok()
+    }
+}
+
+/// Optional outbound delay to emulate a slower interconnect on a laptop:
+/// `latency + doubles/bandwidth` of busy-wait (sleep is too coarse under
+/// 1 ms on Linux for the sizes involved).
+#[derive(Debug, Clone, Copy)]
+pub struct Shaper {
+    pub latency: Duration,
+    /// Doubles per second; `f64::INFINITY` disables the size term.
+    pub doubles_per_sec: f64,
+}
+
+impl Shaper {
+    pub fn delay(&self, doubles: u64) {
+        let size_s = if self.doubles_per_sec.is_finite() && self.doubles_per_sec > 0.0 {
+            doubles as f64 / self.doubles_per_sec
+        } else {
+            0.0
+        };
+        let total = self.latency + Duration::from_secs_f64(size_s);
+        if total.is_zero() {
+            return;
+        }
+        if total < Duration::from_micros(200) {
+            let t0 = Instant::now();
+            while t0.elapsed() < total {
+                std::hint::spin_loop();
+            }
+        } else {
+            std::thread::sleep(total);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::message::Msg;
+
+    fn env(from: u32, to: u32) -> Envelope {
+        Envelope {
+            from: ProcessId(from),
+            to: ProcessId(to),
+            msg: Msg::OwnerDone { proc: ProcessId(from) },
+            wire_doubles: 8,
+        }
+    }
+
+    #[test]
+    fn mesh_delivers_to_addressee_only() {
+        let (router, boxes) = mesh(3, None);
+        router.send(env(0, 2)).expect("send");
+        assert!(boxes[0].try_recv().is_none());
+        assert!(boxes[1].try_recv().is_none());
+        let got = boxes[2].try_recv().expect("delivered");
+        assert_eq!(got.from, ProcessId(0));
+    }
+
+    #[test]
+    fn unknown_destination_errors() {
+        let (router, _boxes) = mesh(2, None);
+        assert!(router.send(env(0, 7)).is_err());
+    }
+
+    #[test]
+    fn fifo_per_sender() {
+        let (router, boxes) = mesh(2, None);
+        for i in 0..10 {
+            let mut e = env(0, 1);
+            e.msg = Msg::OwnerDone { proc: ProcessId(i) };
+            router.send(e).expect("send");
+        }
+        for i in 0..10 {
+            match boxes[1].try_recv().expect("msg").msg {
+                Msg::OwnerDone { proc } => assert_eq!(proc, ProcessId(i)),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn recv_timeout_expires() {
+        let (_router, boxes) = mesh(1, None);
+        let t0 = Instant::now();
+        assert!(boxes[0].recv_timeout(Duration::from_millis(10)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(9));
+    }
+
+    #[test]
+    fn cross_thread_delivery() {
+        let (router, mut boxes) = mesh(2, None);
+        let mb1 = boxes.remove(1);
+        let r2 = router.clone();
+        let h = std::thread::spawn(move || {
+            mb1.recv_timeout(Duration::from_secs(1)).expect("delivered").from
+        });
+        r2.send(env(0, 1)).expect("send");
+        assert_eq!(h.join().expect("join"), ProcessId(0));
+    }
+
+    #[test]
+    fn shaper_adds_measurable_delay() {
+        let sh = Shaper { latency: Duration::from_millis(2), doubles_per_sec: f64::INFINITY };
+        let t0 = Instant::now();
+        sh.delay(100);
+        assert!(t0.elapsed() >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn shaper_bandwidth_term() {
+        let sh = Shaper { latency: Duration::ZERO, doubles_per_sec: 1e6 };
+        let t0 = Instant::now();
+        sh.delay(5000); // 5 ms at 1e6 doubles/s
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+}

@@ -1,0 +1,217 @@
+//! Exact hypergeometric distribution in log space — paper eq. (1).
+//!
+//! The probability of finding `k` busy processes in `n` uniform
+//! no-replacement tries when `K` of `P` processes are busy:
+//!
+//! ```text
+//! P(k) = C(P−K, n−k) · C(K, k) / C(P, n)
+//! ```
+//!
+//! Fig 1 plots the success probability `1 − P(0)` for P = 10 and P = 100; the
+//! paper's asymptotic observation is that for K = P/2 and P → ∞ this tends to
+//! `1 − 2⁻ⁿ` (> 96% for n = 5 tries, which fixes the protocol's tries-per-
+//! round constant).
+//!
+//! Evaluation is in log space via a Lanczos `ln_gamma`, so P of 10⁶⁺ is fine.
+
+/// Lanczos approximation of ln Γ(x) for x > 0 (|err| ≲ 1e-13).
+pub fn ln_gamma(x: f64) -> f64 {
+    assert!(x > 0.0, "ln_gamma domain: x > 0, got {x}");
+    // g = 7, n = 9 Lanczos coefficients.
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection: Γ(x)Γ(1−x) = π / sin(πx)
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = C[0];
+    let t = x + G + 0.5;
+    for (i, &c) in C.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// ln C(n, k); `-inf` when the coefficient is zero (k > n).
+pub fn ln_choose(n: u64, k: u64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    if k == 0 || k == n {
+        return 0.0;
+    }
+    ln_gamma(n as f64 + 1.0) - ln_gamma(k as f64 + 1.0) - ln_gamma((n - k) as f64 + 1.0)
+}
+
+/// Hypergeometric(P, K, n): number of busy processes found in `n` distinct
+/// uniform tries from a population of `P` containing `K` busy.
+#[derive(Debug, Clone, Copy)]
+pub struct Hypergeometric {
+    /// Population size (total processes that can be tried).
+    pub population: u64,
+    /// Number of "successes" in the population (busy processes).
+    pub busy: u64,
+    /// Number of tries (draws without replacement).
+    pub tries: u64,
+}
+
+impl Hypergeometric {
+    pub fn new(population: u64, busy: u64, tries: u64) -> Self {
+        assert!(busy <= population, "K={busy} > P={population}");
+        assert!(tries <= population, "n={tries} > P={population}");
+        Hypergeometric { population, busy, tries }
+    }
+
+    /// P(X = k) — paper eq. (1).
+    pub fn pmf(&self, k: u64) -> f64 {
+        let (p, kk, n) = (self.population, self.busy, self.tries);
+        if k > kk || k > n || n - k > p - kk {
+            return 0.0;
+        }
+        (ln_choose(p - kk, n - k) + ln_choose(kk, k) - ln_choose(p, n)).exp()
+    }
+
+    /// P(X ≥ 1) = 1 − P(0): probability that a round of `tries` finds at
+    /// least one busy partner.
+    pub fn success_probability(&self) -> f64 {
+        1.0 - self.pmf(0)
+    }
+
+    /// Mean of the distribution: n·K/P.
+    pub fn mean(&self) -> f64 {
+        self.tries as f64 * self.busy as f64 / self.population as f64
+    }
+
+    /// Expected number of rounds until a success (geometric in the round
+    /// success probability) — the model behind the paper's δ discussion.
+    pub fn expected_rounds(&self) -> f64 {
+        let p = self.success_probability();
+        if p <= 0.0 { f64::INFINITY } else { 1.0 / p }
+    }
+
+    /// Limit of the success probability as P → ∞ with K/P = `frac`:
+    /// 1 − (1−frac)ⁿ. The paper quotes the frac = 1/2 case: 1 − 2⁻ⁿ.
+    pub fn asymptotic_success(frac: f64, tries: u64) -> f64 {
+        1.0 - (1.0 - frac).powi(tries as i32)
+    }
+
+    /// Monte-Carlo estimate of the success probability using the same
+    /// `sample_distinct` draw as the live pairing protocol; used by tests
+    /// and the Fig 1 bench to validate eq. (1) against the implementation.
+    pub fn monte_carlo_success(&self, reps: usize, rng: &mut crate::util::rng::Rng) -> f64 {
+        let p = self.population as usize;
+        let kk = self.busy as usize;
+        let n = self.tries as usize;
+        let mut hits = 0usize;
+        for _ in 0..reps {
+            // busy set = a random k-subset; try n distinct indices
+            let busy = rng.sample_distinct(p, kk, None);
+            let mask: std::collections::HashSet<usize> = busy.into_iter().collect();
+            let tries = rng.sample_distinct(p, n, None);
+            if tries.iter().any(|t| mask.contains(t)) {
+                hits += 1;
+            }
+        }
+        hits as f64 / reps as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Γ(1) = Γ(2) = 1, Γ(5) = 24, Γ(0.5) = √π
+        assert!(ln_gamma(1.0).abs() < 1e-12);
+        assert!(ln_gamma(2.0).abs() < 1e-12);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-10);
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn ln_choose_small_exact() {
+        assert!((ln_choose(10, 3).exp() - 120.0).abs() < 1e-9);
+        assert!((ln_choose(52, 5).exp() - 2_598_960.0).abs() < 1e-3);
+        assert_eq!(ln_choose(5, 6), f64::NEG_INFINITY);
+        assert_eq!(ln_choose(7, 0), 0.0);
+    }
+
+    #[test]
+    fn pmf_sums_to_one() {
+        for &(p, k, n) in &[(10, 5, 5), (100, 30, 5), (17, 3, 7), (50, 50, 10)] {
+            let h = Hypergeometric::new(p, k, n);
+            let total: f64 = (0..=n).map(|x| h.pmf(x)).sum();
+            assert!((total - 1.0).abs() < 1e-10, "P={p} K={k} n={n}: sum={total}");
+        }
+    }
+
+    #[test]
+    fn pmf_mean_matches() {
+        let h = Hypergeometric::new(60, 21, 8);
+        let mean: f64 = (0..=8).map(|k| k as f64 * h.pmf(k)).sum();
+        assert!((mean - h.mean()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn success_probability_monotone_in_tries() {
+        let mut prev = 0.0;
+        for n in 1..=9 {
+            let s = Hypergeometric::new(10, 3, n).success_probability();
+            assert!(s >= prev);
+            prev = s;
+        }
+    }
+
+    #[test]
+    fn paper_claim_k_half_n5() {
+        // paper: for K=P/2, P→∞, success → 1 − 2⁻ⁿ; for n=5 > 96%.
+        // Already at P=100 the value is within 1% of the limit.
+        let s = Hypergeometric::new(100, 50, 5).success_probability();
+        assert!(s > 0.96, "success at P=100, K=50, n=5: {s}");
+        let asym = Hypergeometric::asymptotic_success(0.5, 5);
+        assert!((asym - (1.0 - 1.0 / 32.0)).abs() < 1e-12);
+        assert!((s - asym).abs() < 0.02);
+    }
+
+    #[test]
+    fn certain_success_when_tries_exceed_idle() {
+        // n > P−K ⇒ impossible to pick only idle ⇒ success = 1
+        let h = Hypergeometric::new(10, 8, 3);
+        assert!((h.success_probability() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_busy_means_no_success() {
+        let h = Hypergeometric::new(20, 0, 5);
+        assert_eq!(h.success_probability(), 0.0);
+        assert_eq!(h.expected_rounds(), f64::INFINITY);
+    }
+
+    #[test]
+    fn monte_carlo_agrees_with_exact() {
+        let mut rng = Rng::new(99);
+        for &(p, k, n) in &[(10u64, 5u64, 5u64), (100, 30, 5), (30, 15, 5)] {
+            let h = Hypergeometric::new(p, k, n);
+            let mc = h.monte_carlo_success(4000, &mut rng);
+            let exact = h.success_probability();
+            assert!(
+                (mc - exact).abs() < 0.03,
+                "P={p} K={k} n={n}: mc={mc} exact={exact}"
+            );
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Probability machinery for the randomized partner search (paper eq. (1),
+//! Fig 1).
+
+pub mod hypergeom;
+
+pub use hypergeom::{ln_choose, ln_gamma, Hypergeometric};

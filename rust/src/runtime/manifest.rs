@@ -1,0 +1,221 @@
+//! Parser for `artifacts/manifest.txt`, the contract between the AOT
+//! compile path (`python -m compile.aot`) and the Rust runtime.
+//!
+//! Line format (see python/compile/aot.py):
+//!
+//! ```text
+//! version 1
+//! kernel <name> <block> <file> <arity> <dtype> <shape>... <flops> <doubles>
+//! ```
+//!
+//! with shapes `AxB` or `A`.  `#` starts a comment.
+
+use std::path::{Path, PathBuf};
+
+use crate::core::task::TaskKind;
+
+#[derive(Debug, thiserror::Error)]
+#[error("manifest error: {0}")]
+pub struct ManifestError(pub String);
+
+/// One AOT-compiled kernel artifact.
+#[derive(Debug, Clone)]
+pub struct KernelEntry {
+    pub name: String,
+    pub block: usize,
+    pub path: PathBuf,
+    pub arity: usize,
+    pub dtype: String,
+    /// Argument shapes in execution order.
+    pub shapes: Vec<Vec<usize>>,
+    pub flops: u64,
+    pub doubles: u64,
+}
+
+/// The parsed artifact index.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<KernelEntry>,
+}
+
+fn parse_shape(tok: &str) -> Result<Vec<usize>, ManifestError> {
+    tok.split('x')
+        .map(|d| d.parse::<usize>().map_err(|_| ManifestError(format!("bad shape: {tok}"))))
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            ManifestError(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest, ManifestError> {
+        let mut entries = Vec::new();
+        let mut saw_version = false;
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("version") => {
+                    let v = parts.next().unwrap_or("");
+                    if v != "1" {
+                        return Err(ManifestError(format!("unsupported manifest version {v}")));
+                    }
+                    saw_version = true;
+                }
+                Some("kernel") => {
+                    let toks: Vec<&str> = parts.collect();
+                    if toks.len() < 7 {
+                        return Err(ManifestError(format!("line {}: too few fields", i + 1)));
+                    }
+                    let name = toks[0].to_string();
+                    let block: usize = toks[1]
+                        .parse()
+                        .map_err(|_| ManifestError(format!("line {}: bad block", i + 1)))?;
+                    let file = toks[2];
+                    let arity: usize = toks[3]
+                        .parse()
+                        .map_err(|_| ManifestError(format!("line {}: bad arity", i + 1)))?;
+                    let dtype = toks[4].to_string();
+                    let nshapes = toks.len() - 5 - 2;
+                    if nshapes != arity {
+                        return Err(ManifestError(format!(
+                            "line {}: {nshapes} shapes but arity {arity}",
+                            i + 1
+                        )));
+                    }
+                    let shapes = toks[5..5 + nshapes]
+                        .iter()
+                        .map(|s| parse_shape(s))
+                        .collect::<Result<Vec<_>, _>>()?;
+                    let flops: u64 = toks[5 + nshapes]
+                        .parse()
+                        .map_err(|_| ManifestError(format!("line {}: bad flops", i + 1)))?;
+                    let doubles: u64 = toks[6 + nshapes]
+                        .parse()
+                        .map_err(|_| ManifestError(format!("line {}: bad doubles", i + 1)))?;
+                    entries.push(KernelEntry {
+                        name,
+                        block,
+                        path: dir.join(file),
+                        arity,
+                        dtype,
+                        shapes,
+                        flops,
+                        doubles,
+                    });
+                }
+                Some(other) => {
+                    return Err(ManifestError(format!("line {}: unknown record {other}", i + 1)))
+                }
+                None => {}
+            }
+        }
+        if !saw_version {
+            return Err(ManifestError("missing version line".to_string()));
+        }
+        if entries.is_empty() {
+            return Err(ManifestError("no kernel entries".to_string()));
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    /// Look up the artifact for a task kind at a block size.
+    pub fn find(&self, kind: TaskKind, block: usize) -> Option<&KernelEntry> {
+        let name = kind.kernel_name()?;
+        self.entries.iter().find(|e| e.name == name && e.block == block)
+    }
+
+    /// All block sizes available for a kind, ascending.
+    pub fn blocks_for(&self, kind: TaskKind) -> Vec<usize> {
+        let Some(name) = kind.kernel_name() else { return Vec::new() };
+        let mut v: Vec<usize> =
+            self.entries.iter().filter(|e| e.name == name).map(|e| e.block).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Verify every referenced HLO file exists.
+    pub fn check_files(&self) -> Result<(), ManifestError> {
+        for e in &self.entries {
+            if !e.path.exists() {
+                return Err(ManifestError(format!("missing artifact file {}", e.path.display())));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+version 1
+kernel potrf 32 potrf_b32.hlo.txt 1 f32 32x32 10922 2048
+kernel gemm 32 gemm_b32.hlo.txt 3 f32 32x32 32x32 32x32 65536 4096
+kernel gemv 32 gemv_b32.hlo.txt 2 f32 32x32 32 2048 1088
+";
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).expect("parse");
+        assert_eq!(m.entries.len(), 3);
+        let g = m.find(TaskKind::Gemm, 32).expect("gemm");
+        assert_eq!(g.arity, 3);
+        assert_eq!(g.shapes, vec![vec![32, 32]; 3]);
+        assert_eq!(g.flops, 65536);
+        let v = m.find(TaskKind::Gemv, 32).expect("gemv");
+        assert_eq!(v.shapes[1], vec![32]);
+        assert!(m.find(TaskKind::Trsm, 32).is_none());
+        assert!(m.find(TaskKind::Gemm, 64).is_none());
+    }
+
+    #[test]
+    fn blocks_for_sorted() {
+        let doubled = format!(
+            "{SAMPLE}kernel gemm 64 gemm_b64.hlo.txt 3 f32 64x64 64x64 64x64 524288 16384\n"
+        );
+        let m = Manifest::parse(&doubled, PathBuf::from("/tmp/a")).expect("parse");
+        assert_eq!(m.blocks_for(TaskKind::Gemm), vec![32, 64]);
+        assert_eq!(m.blocks_for(TaskKind::Synthetic), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("version 2\n", PathBuf::new()).is_err());
+        assert!(Manifest::parse("kernel x\n", PathBuf::new()).is_err());
+        assert!(Manifest::parse("version 1\n", PathBuf::new()).is_err(), "no entries");
+        // arity/shape mismatch
+        let bad = "version 1\nkernel gemm 32 f.hlo 3 f32 32x32 65536 4096\n";
+        assert!(Manifest::parse(bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        // integration: the repo's own artifacts (skip silently if not built)
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).expect("load");
+            m.check_files().expect("files exist");
+            for kind in [TaskKind::Potrf, TaskKind::Trsm, TaskKind::Syrk, TaskKind::Gemm] {
+                assert!(!m.blocks_for(kind).is_empty(), "missing artifacts for {kind}");
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Request-path runtime: the artifact manifest, the PJRT kernel library,
+//! and the threaded real-mode driver.
+
+pub mod manifest;
+pub mod pjrt;
+pub mod threaded;
+
+pub use manifest::{KernelEntry, Manifest, ManifestError};
+pub use pjrt::KernelLibrary;
+pub use threaded::{run_threaded, InitialData, RealRunResult};

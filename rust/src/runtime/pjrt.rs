@@ -1,0 +1,246 @@
+//! PJRT kernel execution: load HLO-text artifacts, compile once, execute on
+//! the task hot path.
+//!
+//! One `KernelLibrary` per OS thread: `xla::PjRtClient` is internally
+//! reference-counted (`Rc`) and not `Send`, so each process thread builds
+//! its own client and compiles lazily the kinds it actually executes (the
+//! HLO modules are tiny; compile is milliseconds).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::core::task::TaskKind;
+
+use super::manifest::Manifest;
+
+/// A compiled-kernel cache bound to one PJRT CPU client (one thread).
+pub struct KernelLibrary {
+    client: xla::PjRtClient,
+    manifest: Arc<Manifest>,
+    block: usize,
+    compiled: HashMap<TaskKind, xla::PjRtLoadedExecutable>,
+    /// Executions performed (for perf accounting).
+    pub executions: u64,
+}
+
+impl KernelLibrary {
+    /// Create a library serving kernels at `block` size.
+    pub fn new(manifest: Arc<Manifest>, block: usize) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(KernelLibrary { client, manifest, block, compiled: HashMap::new(), executions: 0 })
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    fn ensure_compiled(&mut self, kind: TaskKind) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(&kind) {
+            let entry = self
+                .manifest
+                .find(kind, self.block)
+                .ok_or_else(|| anyhow!("no artifact for {kind} at block {}", self.block))?;
+            let path = entry
+                .path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?
+                .to_string();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {kind}: {e:?}"))?;
+            self.compiled.insert(kind, exe);
+        }
+        Ok(self.compiled.get(&kind).expect("just inserted"))
+    }
+
+    /// Execute `kind` on `args` (row-major f32 buffers matching the
+    /// manifest shapes).  Returns the output buffer.
+    pub fn execute(&mut self, kind: TaskKind, args: &[&[f32]]) -> Result<Vec<f32>> {
+        let entry = self
+            .manifest
+            .find(kind, self.block)
+            .ok_or_else(|| anyhow!("no artifact for {kind} at block {}", self.block))?
+            .clone();
+        if args.len() != entry.arity {
+            bail!("{kind}: expected {} args, got {}", entry.arity, args.len());
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (&buf, shape)) in args.iter().zip(&entry.shapes).enumerate() {
+            let elems: usize = shape.iter().product();
+            if buf.len() != elems {
+                bail!("{kind} arg {i}: expected {elems} elems (shape {shape:?}), got {}", buf.len());
+            }
+            let lit = xla::Literal::vec1(buf);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = if dims.len() > 1 {
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape arg {i}: {e:?}"))?
+            } else {
+                lit
+            };
+            literals.push(lit);
+        }
+        let exe = self.ensure_compiled(kind)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {kind}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // AOT lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let v = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        self.executions += 1;
+        Ok(v)
+    }
+
+    /// Compile-and-smoke-test every kernel the manifest lists at this block
+    /// size (the `ductr artifacts-check` command).
+    pub fn smoke_all(&mut self) -> Result<Vec<(TaskKind, f64)>> {
+        use std::time::Instant;
+        let b = self.block;
+        let mut report = Vec::new();
+        for kind in [TaskKind::Potrf, TaskKind::Trsm, TaskKind::Syrk, TaskKind::Gemm, TaskKind::Gemv]
+        {
+            if self.manifest.find(kind, b).is_none() {
+                continue;
+            }
+            // SPD block for potrf/trsm stability: A = I·(b) + small noise
+            let spd: Vec<f32> = (0..b * b)
+                .map(|i| {
+                    let (r, c) = (i / b, i % b);
+                    if r == c { b as f32 } else { 0.1 / (1.0 + (r as f32 - c as f32).abs()) }
+                })
+                .collect();
+            let gen: Vec<f32> = (0..b * b).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+            let vecx: Vec<f32> = (0..b).map(|i| (i % 5) as f32 - 2.0).collect();
+            let t0 = Instant::now();
+            let out = match kind {
+                TaskKind::Potrf => self.execute(kind, &[&spd])?,
+                TaskKind::Trsm => self.execute(kind, &[&spd, &gen])?,
+                TaskKind::Syrk => self.execute(kind, &[&gen, &gen])?,
+                TaskKind::Gemm => self.execute(kind, &[&gen, &gen, &gen])?,
+                TaskKind::Gemv => self.execute(kind, &[&gen, &vecx])?,
+                TaskKind::Synthetic => unreachable!(),
+            };
+            let dt = t0.elapsed().as_secs_f64();
+            if out.iter().any(|x| !x.is_finite()) {
+                bail!("{kind}: non-finite output");
+            }
+            report.push((kind, dt));
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests require built artifacts; they self-skip when
+    //! `artifacts/manifest.txt` is absent so `cargo test` works pre-build.
+    use super::*;
+
+    fn lib(block: usize) -> Option<KernelLibrary> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let m = Arc::new(Manifest::load(dir).expect("manifest"));
+        Some(KernelLibrary::new(m, block).expect("client"))
+    }
+
+    fn spd(b: usize) -> Vec<f32> {
+        // diagonally dominant SPD
+        (0..b * b)
+            .map(|i| {
+                let (r, c) = (i / b, i % b);
+                if r == c { (b + 1) as f32 } else { 1.0 / (1.0 + (r as f32 - c as f32).abs()) }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn potrf_reconstructs() {
+        let Some(mut lib) = lib(32) else { return };
+        let b = 32;
+        let a = spd(b);
+        let l = lib.execute(TaskKind::Potrf, &[&a]).expect("potrf");
+        // L·Lᵀ ≈ A
+        let mut err: f32 = 0.0;
+        for i in 0..b {
+            for j in 0..b {
+                let mut s = 0.0f32;
+                for k in 0..=j.min(i) {
+                    s += l[i * b + k] * l[j * b + k];
+                }
+                err = err.max((s - a[i * b + j]).abs());
+            }
+        }
+        assert!(err < 1e-3, "reconstruction err {err}");
+    }
+
+    #[test]
+    fn gemm_matches_reference() {
+        let Some(mut lib) = lib(32) else { return };
+        let b = 32;
+        let c: Vec<f32> = (0..b * b).map(|i| (i % 7) as f32).collect();
+        let x: Vec<f32> = (0..b * b).map(|i| ((i % 5) as f32 - 2.0) / 2.0).collect();
+        let y: Vec<f32> = (0..b * b).map(|i| ((i % 3) as f32 - 1.0) / 3.0).collect();
+        let out = lib.execute(TaskKind::Gemm, &[&c, &x, &y]).expect("gemm");
+        // reference: c - x @ yᵀ
+        for i in 0..b {
+            for j in 0..b {
+                let mut s = 0.0f32;
+                for k in 0..b {
+                    s += x[i * b + k] * y[j * b + k];
+                }
+                let expect = c[i * b + j] - s;
+                let got = out[i * b + j];
+                assert!((got - expect).abs() < 1e-3, "({i},{j}): {got} vs {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_matches_reference() {
+        let Some(mut lib) = lib(32) else { return };
+        let b = 32;
+        let a: Vec<f32> = (0..b * b).map(|i| ((i % 11) as f32 - 5.0) / 5.0).collect();
+        let x: Vec<f32> = (0..b).map(|i| (i % 4) as f32 - 1.5).collect();
+        let out = lib.execute(TaskKind::Gemv, &[&a, &x]).expect("gemv");
+        for i in 0..b {
+            let mut s = 0.0f32;
+            for k in 0..b {
+                s += a[i * b + k] * x[k];
+            }
+            assert!((out[i] - s).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let Some(mut lib) = lib(32) else { return };
+        let a = spd(32);
+        assert!(lib.execute(TaskKind::Gemm, &[&a]).is_err());
+    }
+
+    #[test]
+    fn wrong_size_rejected() {
+        let Some(mut lib) = lib(32) else { return };
+        let small = vec![0.0f32; 4];
+        assert!(lib.execute(TaskKind::Potrf, &[&small]).is_err());
+    }
+
+    #[test]
+    fn smoke_all_runs() {
+        let Some(mut lib) = lib(32) else { return };
+        let report = lib.smoke_all().expect("smoke");
+        assert_eq!(report.len(), 5);
+        assert!(report.iter().all(|(_, dt)| *dt >= 0.0));
+    }
+}

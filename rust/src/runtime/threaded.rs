@@ -1,0 +1,420 @@
+//! Threaded real mode: one coordinator thread + `cores_per_process` worker
+//! threads per process, mpsc mailboxes, wallclock time, and actual kernel
+//! execution through PJRT.
+//!
+//! Architecture matches the paper's hybrid MPI-thread model (and DuctTeip's
+//! dedicated management thread): the coordinator thread owns the
+//! `ProcessState` and *never blocks on computation* — it services the
+//! mailbox, the DLB timers, and dispatches ready tasks to worker threads.
+//! If task execution blocked the coordinator, a busy process would be
+//! unreachable for a full task duration and the pairing protocol would
+//! starve precisely when load balancing is needed (we measured exactly
+//! that with an earlier inline-execution design: 100% failed rounds).
+//!
+//! The coordinator contains no scheduling/DLB logic of its own — it is an
+//! interpreter over the same `ProcessState` the DES drives.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::Config;
+use crate::core::data::{DataStore, Payload};
+use crate::core::graph::TaskGraph;
+use crate::core::ids::{DataId, ProcessId, TaskId};
+use crate::core::process::{Effect, ProcessParams, ProcessState};
+use crate::core::task::TaskKind;
+use crate::metrics::counters::DlbCounters;
+use crate::metrics::trace::RunTraces;
+use crate::net::transport::{mesh, Mailbox, Router, Shaper};
+use crate::sched::queue::ReadyTask;
+
+use super::manifest::Manifest;
+use super::pjrt::KernelLibrary;
+
+/// Result of a threaded run.
+#[derive(Debug)]
+pub struct RealRunResult {
+    /// Wallclock seconds from start to last task completion.
+    pub makespan: f64,
+    pub traces: RunTraces,
+    pub counters: DlbCounters,
+    pub per_process_counters: Vec<DlbCounters>,
+    /// Final data stores (for numeric verification).
+    pub stores: Vec<DataStore>,
+    pub kernel_executions: u64,
+}
+
+/// Per-process initial data (handle → value), indexed by process.
+pub type InitialData = Vec<Vec<(DataId, Payload)>>;
+
+/// A task dispatched to a worker: everything needed without touching the
+/// coordinator's state.
+struct ExecReq {
+    rt: ReadyTask,
+    kind: TaskKind,
+    flops: u64,
+    /// Owned copies of the kernel inputs (real mode).
+    args: Vec<Vec<f32>>,
+}
+
+struct ExecDone {
+    rt: ReadyTask,
+    output: Payload,
+    duration: f64,
+    was_kernel: bool,
+}
+
+/// Run `graph` under `cfg` on real threads.  `use_pjrt` selects kernel
+/// execution (requires artifacts); synthetic-only graphs may pass `false`.
+pub fn run_threaded(
+    cfg: &Config,
+    graph: Arc<TaskGraph>,
+    initial: InitialData,
+    use_pjrt: bool,
+) -> Result<RealRunResult> {
+    let p = cfg.processes;
+    if initial.len() != p {
+        return Err(anyhow!("initial data for {} processes, config has {p}", initial.len()));
+    }
+    let manifest: Option<Arc<Manifest>> = if use_pjrt {
+        Some(Arc::new(Manifest::load(&cfg.artifacts_dir).map_err(|e| anyhow!("{e}"))?))
+    } else {
+        None
+    };
+
+    let shaper = if cfg.net_latency > 0.0 {
+        Some(Shaper {
+            latency: Duration::from_secs_f64(cfg.net_latency),
+            doubles_per_sec: f64::INFINITY,
+        })
+    } else {
+        None
+    };
+    let (router, mailboxes) = mesh(p, shaper);
+    let params = ProcessParams::from_config(cfg);
+    let epoch = Instant::now();
+
+    let mut handles = Vec::with_capacity(p);
+    for (i, mailbox) in mailboxes.into_iter().enumerate() {
+        let graph = Arc::clone(&graph);
+        let router = router.clone();
+        let params = params.clone();
+        let manifest = manifest.clone();
+        let block = cfg.block;
+        let seed = cfg.seed;
+        let data = initial[i].clone();
+        let flops_per_sec = cfg.flops_per_sec;
+        handles.push(std::thread::spawn(move || -> Result<ProcessWrap> {
+            let me = ProcessId(i as u32);
+            let cores = params.cores.max(1);
+            let mut ps = ProcessState::new(me, p, graph, params, seed);
+            for (d, v) in data {
+                ps.store.insert(d, v);
+            }
+            // spawn workers
+            let (done_tx, done_rx) = channel::<ExecDone>();
+            let mut req_txs: Vec<Sender<ExecReq>> = Vec::with_capacity(cores);
+            let mut workers = Vec::with_capacity(cores);
+            for w in 0..cores {
+                let (req_tx, req_rx) = channel::<ExecReq>();
+                req_txs.push(req_tx);
+                let done_tx = done_tx.clone();
+                let manifest = manifest.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("ductr-p{i}-w{w}"))
+                        .spawn(move || worker_loop(req_rx, done_tx, manifest, block, flops_per_sec))
+                        .expect("spawn worker"),
+                );
+            }
+            drop(done_tx);
+
+            let r = coordinator_loop(&mut ps, mailbox, router, epoch, req_txs, done_rx);
+            let mut kernel_execs = 0;
+            for w in workers {
+                kernel_execs += w.join().map_err(|e| anyhow!("worker panicked: {e:?}"))?;
+            }
+            r?;
+            Ok(ProcessWrap {
+                trace: ps.trace.clone(),
+                counters: *ps.counters(),
+                store: std::mem::take(&mut ps.store),
+                last_completion: ps.last_completion,
+                kernel_executions: kernel_execs,
+            })
+        }));
+    }
+
+    let mut traces = RunTraces::new(p);
+    let mut counters = DlbCounters::default();
+    let mut per = Vec::with_capacity(p);
+    let mut stores = Vec::with_capacity(p);
+    let mut makespan: f64 = 0.0;
+    let mut kexecs = 0u64;
+    for (i, h) in handles.into_iter().enumerate() {
+        let w = h
+            .join()
+            .map_err(|e| anyhow!("process {i} panicked: {e:?}"))?
+            .with_context(|| format!("process {i} failed"))?;
+        makespan = makespan.max(w.last_completion);
+        counters.merge(&w.counters);
+        per.push(w.counters);
+        traces.per_process[i] = w.trace;
+        stores.push(w.store);
+        kexecs += w.kernel_executions;
+    }
+    traces.makespan = makespan;
+    Ok(RealRunResult {
+        makespan,
+        traces,
+        counters,
+        per_process_counters: per,
+        stores,
+        kernel_executions: kexecs,
+    })
+}
+
+struct ProcessWrap {
+    trace: crate::metrics::trace::WorkloadTrace,
+    counters: DlbCounters,
+    store: DataStore,
+    last_completion: f64,
+    kernel_executions: u64,
+}
+
+/// Worker: execute tasks as they arrive; returns its kernel-execution count.
+fn worker_loop(
+    req_rx: Receiver<ExecReq>,
+    done_tx: Sender<ExecDone>,
+    manifest: Option<Arc<Manifest>>,
+    block: usize,
+    flops_per_sec: f64,
+) -> u64 {
+    // PJRT client per worker thread (Rc-internal, not Send)
+    let mut lib: Option<KernelLibrary> =
+        manifest.and_then(|m| KernelLibrary::new(m, block).ok());
+    let mut kernel_execs = 0u64;
+    while let Ok(req) = req_rx.recv() {
+        let t0 = Instant::now();
+        let (output, was_kernel) = match req.kind {
+            TaskKind::Synthetic => {
+                let dur = req.flops as f64 / flops_per_sec;
+                while t0.elapsed().as_secs_f64() < dur {
+                    std::hint::spin_loop();
+                }
+                (Payload::Sim, false)
+            }
+            kind => {
+                let lib = lib.as_mut().expect("kernel task but PJRT disabled");
+                let bufs: Vec<&[f32]> = req.args.iter().map(|v| v.as_slice()).collect();
+                match lib.execute(kind, &bufs) {
+                    Ok(out) => {
+                        kernel_execs += 1;
+                        (Payload::Real(out), true)
+                    }
+                    Err(e) => panic!("kernel {kind} failed: {e:#}"),
+                }
+            }
+        };
+        let duration = t0.elapsed().as_secs_f64();
+        if done_tx
+            .send(ExecDone { rt: req.rt, output, duration, was_kernel })
+            .is_err()
+        {
+            break; // coordinator gone (halted)
+        }
+    }
+    kernel_execs
+}
+
+/// The coordinator event loop: mailbox + completions + timers; dispatches
+/// executions to workers round-robin and never blocks on compute.
+fn coordinator_loop(
+    ps: &mut ProcessState,
+    mailbox: Mailbox,
+    router: Router,
+    epoch: Instant,
+    req_txs: Vec<Sender<ExecReq>>,
+    done_rx: Receiver<ExecDone>,
+) -> Result<()> {
+    let now = || epoch.elapsed().as_secs_f64();
+    let mut pending: VecDeque<Effect> = VecDeque::new();
+    pending.extend(ps.start(now()));
+    let mut next_tick = f64::INFINITY;
+    let mut next_worker = 0usize;
+    let mut halted = false;
+
+    loop {
+        // inbound messages
+        while let Some(env) = mailbox.try_recv() {
+            pending.extend(ps.on_message(env, now()));
+        }
+        // completed executions
+        while let Ok(done) = done_rx.try_recv() {
+            let _ = done.was_kernel;
+            pending.extend(ps.on_exec_complete(done.rt, done.output, done.duration, now()));
+        }
+        // timers
+        if now() >= next_tick {
+            next_tick = f64::INFINITY;
+            pending.extend(ps.on_tick(now()));
+        }
+        // apply effects
+        let mut acted = false;
+        while let Some(e) = pending.pop_front() {
+            acted = true;
+            match e {
+                Effect::Send(env) => router.send(env).map_err(|e| anyhow!("router: {e}"))?,
+                Effect::StartExec { task } => {
+                    dispatch_exec(ps, task, &req_txs, &mut next_worker)?;
+                }
+                Effect::ScheduleTick { at } => next_tick = next_tick.min(at),
+                Effect::Halt => halted = true,
+            }
+        }
+        if halted {
+            // workers stop when their request channels drop
+            return Ok(());
+        }
+        if !acted {
+            // idle: park until the next timer or message
+            let wait = if next_tick.is_finite() {
+                (next_tick - now()).clamp(0.0, 0.001)
+            } else {
+                0.001
+            };
+            if wait > 0.0 {
+                if let Some(env) = mailbox.recv_timeout(Duration::from_secs_f64(wait)) {
+                    pending.extend(ps.on_message(env, now()));
+                }
+            }
+        }
+    }
+}
+
+/// Clone the task's inputs out of the store and ship it to a worker.
+fn dispatch_exec(
+    ps: &ProcessState,
+    rt: ReadyTask,
+    req_txs: &[Sender<ExecReq>],
+    next_worker: &mut usize,
+) -> Result<()> {
+    let node = ps.graph.task(rt.task);
+    let args: Vec<Vec<f32>> = if node.kind == TaskKind::Synthetic {
+        Vec::new()
+    } else {
+        let mut v = Vec::with_capacity(node.args.len());
+        for &a in &node.args {
+            let p = ps
+                .store
+                .get(a)
+                .ok_or_else(|| anyhow!("missing input {a} for {}", TaskId::idx(rt.task)))?;
+            match p.real() {
+                Some(buf) => v.push(buf.to_vec()),
+                None => return Err(anyhow!("non-real payload for {a} in real mode")),
+            }
+        }
+        v
+    };
+    let req = ExecReq { rt, kind: node.kind, flops: node.flops, args };
+    let w = *next_worker % req_txs.len();
+    *next_worker = next_worker.wrapping_add(1);
+    req_txs[w].send(req).map_err(|_| anyhow!("worker channel closed"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+
+    /// Synthetic imbalanced bag over threads — no PJRT needed.
+    fn bag(n: usize, p: usize, dlb: bool) -> (Config, Arc<TaskGraph>, InitialData) {
+        let mut cfg = Config::default();
+        cfg.processes = p;
+        cfg.dlb_enabled = dlb;
+        cfg.wt = 2;
+        cfg.delta = 0.001;
+        cfg.flops_per_sec = 1e9; // 4 ms per 4e6-flop task
+        cfg.net_latency = 0.0;
+        cfg.validate().expect("valid");
+        let mut b = GraphBuilder::new();
+        for _ in 0..n {
+            let d = b.data(ProcessId(0), 16, 16);
+            b.task(TaskKind::Synthetic, vec![], d, 4_000_000, None);
+        }
+        (cfg, b.build(), vec![vec![]; p])
+    }
+
+    #[test]
+    fn threaded_bag_completes() {
+        let (cfg, g, init) = bag(12, 3, false);
+        let r = run_threaded(&cfg, g, init, false).expect("run");
+        assert!(r.makespan > 0.0);
+        assert_eq!(r.counters.tasks_exported, 0);
+    }
+
+    #[test]
+    fn threaded_dlb_migrates_and_speeds_up() {
+        let (cfg0, g0, i0) = bag(32, 4, false);
+        let off = run_threaded(&cfg0, g0, i0, false).expect("off");
+        let (cfg1, g1, i1) = bag(32, 4, true);
+        let on = run_threaded(&cfg1, g1, i1, false).expect("on");
+        assert!(on.counters.tasks_exported > 0, "must migrate");
+        assert!(
+            on.makespan < off.makespan * 0.7,
+            "DLB should help: on={} off={}",
+            on.makespan,
+            off.makespan
+        );
+    }
+
+    #[test]
+    fn dependency_chain_is_ordered_across_threads() {
+        // chain alternating between two processes — forces TaskDone routing
+        let mut cfg = Config::default();
+        cfg.processes = 2;
+        cfg.dlb_enabled = false;
+        cfg.flops_per_sec = 1e9;
+        cfg.net_latency = 0.0;
+        cfg.validate().expect("valid");
+        let mut b = GraphBuilder::new();
+        let mut prev: Option<DataId> = None;
+        for i in 0..10 {
+            let d = b.data(ProcessId(i % 2), 8, 8);
+            let args = prev.map(|x| vec![x]).unwrap_or_default();
+            b.task(TaskKind::Synthetic, args, d, 500_000, None);
+            prev = Some(d);
+        }
+        let g = b.build();
+        let r = run_threaded(&cfg, g, vec![vec![], vec![]], false).expect("run");
+        assert!(r.makespan > 0.0);
+    }
+
+    #[test]
+    fn multicore_process_runs_parallel() {
+        // one process, 4 cores, 8 independent 10ms tasks → ~2 batches
+        let mut cfg = Config::default();
+        cfg.processes = 1;
+        cfg.cores_per_process = 4;
+        cfg.dlb_enabled = false;
+        cfg.flops_per_sec = 1e9;
+        cfg.validate().expect("valid");
+        let mut b = GraphBuilder::new();
+        for _ in 0..8 {
+            let d = b.data(ProcessId(0), 8, 8);
+            b.task(TaskKind::Synthetic, vec![], d, 10_000_000, None);
+        }
+        let g = b.build();
+        let r = run_threaded(&cfg, g, vec![vec![]], false).expect("run");
+        assert!(
+            r.makespan < 0.060,
+            "4 cores × 2 waves of 10ms ≈ 20ms, got {}",
+            r.makespan
+        );
+    }
+}

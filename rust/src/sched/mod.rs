@@ -1,0 +1,6 @@
+//! Scheduling primitives: the ready queue whose length is the paper's
+//! workload measure w_i(t).
+
+pub mod queue;
+
+pub use queue::{ReadyQueue, ReadyTask};

@@ -1,0 +1,151 @@
+//! The per-process ready-task queue — the quantity the whole paper is about:
+//! its length is the workload w_i(t).
+
+use std::collections::VecDeque;
+
+use crate::core::ids::{ProcessId, TaskId};
+
+/// A runnable task instance: the graph node plus where it came from.
+/// `origin == executor` for home tasks; for migrated tasks `origin` is the
+/// process the result must be returned to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReadyTask {
+    pub task: TaskId,
+    pub origin: ProcessId,
+}
+
+impl ReadyTask {
+    pub fn home(task: TaskId, me: ProcessId) -> Self {
+        ReadyTask { task, origin: me }
+    }
+
+    pub fn is_migrated(&self, me: ProcessId) -> bool {
+        self.origin != me
+    }
+}
+
+/// FIFO ready queue.  FIFO matches DuctTeip's default; the export strategies
+/// take from the *back* so the oldest (most likely on the critical path)
+/// tasks run locally first.
+#[derive(Debug, Default)]
+pub struct ReadyQueue {
+    q: VecDeque<ReadyTask>,
+}
+
+impl ReadyQueue {
+    pub fn new() -> Self {
+        ReadyQueue { q: VecDeque::new() }
+    }
+
+    /// Current workload w_i(t).
+    pub fn workload(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn push(&mut self, t: ReadyTask) {
+        self.q.push_back(t);
+    }
+
+    /// Next task to execute (FIFO head).
+    pub fn pop(&mut self) -> Option<ReadyTask> {
+        self.q.pop_front()
+    }
+
+    /// Remove up to `k` tasks from the *back* that satisfy `pred`, in
+    /// back-to-front order — the export-selection primitive shared by all
+    /// three strategies.  Migrated tasks never satisfy the caller's
+    /// predicate (no re-stealing churn).
+    pub fn drain_back<F: FnMut(&ReadyTask) -> bool>(
+        &mut self,
+        k: usize,
+        mut pred: F,
+    ) -> Vec<ReadyTask> {
+        let mut out = Vec::new();
+        let mut kept: Vec<ReadyTask> = Vec::new();
+        while out.len() < k {
+            match self.q.pop_back() {
+                None => break,
+                Some(t) => {
+                    if pred(&t) {
+                        out.push(t);
+                    } else {
+                        kept.push(t);
+                    }
+                }
+            }
+        }
+        // restore non-selected tasks in original order
+        for t in kept.into_iter().rev() {
+            self.q.push_back(t);
+        }
+        out
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ReadyTask> {
+        self.q.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt(i: u32) -> ReadyTask {
+        ReadyTask { task: TaskId(i), origin: ProcessId(0) }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut q = ReadyQueue::new();
+        q.push(rt(1));
+        q.push(rt(2));
+        q.push(rt(3));
+        assert_eq!(q.workload(), 3);
+        assert_eq!(q.pop().expect("pop").task, TaskId(1));
+        assert_eq!(q.pop().expect("pop").task, TaskId(2));
+    }
+
+    #[test]
+    fn drain_back_takes_newest_first() {
+        let mut q = ReadyQueue::new();
+        for i in 0..5 {
+            q.push(rt(i));
+        }
+        let got = q.drain_back(2, |_| true);
+        assert_eq!(got.iter().map(|t| t.task.0).collect::<Vec<_>>(), vec![4, 3]);
+        assert_eq!(q.workload(), 3);
+        assert_eq!(q.pop().expect("pop").task, TaskId(0)); // order preserved
+    }
+
+    #[test]
+    fn drain_back_respects_predicate_and_restores_order() {
+        let mut q = ReadyQueue::new();
+        for i in 0..6 {
+            q.push(rt(i));
+        }
+        // only even ids exportable
+        let got = q.drain_back(2, |t| t.task.0 % 2 == 0);
+        assert_eq!(got.iter().map(|t| t.task.0).collect::<Vec<_>>(), vec![4, 2]);
+        let rest: Vec<u32> = std::iter::from_fn(|| q.pop()).map(|t| t.task.0).collect();
+        assert_eq!(rest, vec![0, 1, 3, 5]);
+    }
+
+    #[test]
+    fn drain_back_k_zero_is_noop() {
+        let mut q = ReadyQueue::new();
+        q.push(rt(0));
+        assert!(q.drain_back(0, |_| true).is_empty());
+        assert_eq!(q.workload(), 1);
+    }
+
+    #[test]
+    fn migrated_flag() {
+        let me = ProcessId(1);
+        assert!(ReadyTask { task: TaskId(0), origin: ProcessId(2) }.is_migrated(me));
+        assert!(!ReadyTask::home(TaskId(0), me).is_migrated(me));
+    }
+}

@@ -1,0 +1,395 @@
+//! The discrete-event simulator: virtual clock + event heap driving the
+//! same `ProcessState` machines the threaded runtime uses.
+//!
+//! Determinism: events are ordered by (time, sequence number); all
+//! randomness flows from the run seed through per-process RNG streams plus
+//! one engine stream for execution-time jitter.  Two runs with the same
+//! seed are bit-identical — which is how Fig 5's "lucky vs unlucky" pair of
+//! runs is reproduced honestly (two *named* seeds).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::core::data::Payload;
+use crate::core::graph::TaskGraph;
+use crate::core::ids::ProcessId;
+use crate::core::process::{Effect, ProcessParams, ProcessState};
+use crate::metrics::counters::DlbCounters;
+use crate::metrics::trace::RunTraces;
+use crate::net::message::Envelope;
+use crate::sched::queue::ReadyTask;
+use crate::util::rng::Rng;
+
+use super::network::NetworkModel;
+
+#[derive(Debug)]
+enum EventKind {
+    Deliver(Box<Envelope>),
+    ExecDone { proc: ProcessId, rt: ReadyTask, duration: f64 },
+    Tick { proc: ProcessId },
+}
+
+struct Event {
+    t: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reverse for earliest-first, seq breaks
+        // ties deterministically in insertion order.
+        other
+            .t
+            .partial_cmp(&self.t)
+            .expect("no NaN times")
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Outcome of a simulated run.
+#[derive(Debug)]
+pub struct SimResult {
+    /// Time of the last task completion anywhere.
+    pub makespan: f64,
+    /// Virtual time at which the simulation fully drained (termination
+    /// protocol included).
+    pub end_time: f64,
+    pub traces: RunTraces,
+    pub counters: DlbCounters,
+    pub per_process_counters: Vec<DlbCounters>,
+    pub events_processed: u64,
+    /// Aggregate compute utilization: Σ flops / (P · S · makespan).
+    pub utilization: f64,
+}
+
+/// Errors a simulation can hit (budget guards — a correct run never does).
+#[derive(Debug, thiserror::Error)]
+pub enum SimError {
+    #[error("event budget exceeded ({0} events) — livelock?")]
+    EventBudget(u64),
+    #[error("virtual-time budget exceeded (t = {0})")]
+    TimeBudget(f64),
+    #[error("deadlock: {live} processes not halted but no events pending")]
+    Deadlock { live: usize },
+}
+
+/// The simulator.
+pub struct SimEngine {
+    pub processes: Vec<ProcessState>,
+    network: NetworkModel,
+    heap: BinaryHeap<Event>,
+    now: f64,
+    seq: u64,
+    jitter: f64,
+    rng: Rng,
+    /// Per-process time of the next scheduled tick (dedup guard).
+    tick_at: Vec<f64>,
+    pub max_events: u64,
+    pub max_time: f64,
+    /// Optional early-stop predicate (e.g. Fig 3 time-to-first-pair).
+    pub stop_when: Option<Box<dyn Fn(&[ProcessState]) -> bool>>,
+}
+
+impl SimEngine {
+    /// Build from a config and a task graph (uses the config's cost model,
+    /// network, DLB and seed settings).
+    pub fn from_config(cfg: &Config, graph: Arc<TaskGraph>) -> Self {
+        let params = ProcessParams::from_config(cfg);
+        let p = cfg.processes;
+        let processes: Vec<ProcessState> = (0..p)
+            .map(|i| {
+                ProcessState::new(ProcessId(i as u32), p, Arc::clone(&graph), params.clone(), cfg.seed)
+            })
+            .collect();
+        SimEngine {
+            processes,
+            network: NetworkModel::new(cfg.net_latency, cfg.doubles_per_sec),
+            heap: BinaryHeap::new(),
+            now: 0.0,
+            seq: 0,
+            jitter: cfg.exec_jitter,
+            rng: Rng::new(cfg.seed ^ 0xE46E_17E5_u64),
+            tick_at: vec![f64::NEG_INFINITY; p],
+            max_events: 500_000_000,
+            max_time: f64::INFINITY,
+            stop_when: None,
+        }
+    }
+
+    fn push(&mut self, t: f64, kind: EventKind) {
+        debug_assert!(t >= self.now, "event in the past: {t} < {}", self.now);
+        self.seq += 1;
+        self.heap.push(Event { t, seq: self.seq, kind });
+    }
+
+    fn apply_effects(&mut self, proc: ProcessId, effects: Vec<Effect>) {
+        for e in effects {
+            match e {
+                Effect::Send(env) => {
+                    let at = self.now + self.network.delivery_delay(env.wire_doubles);
+                    self.push(at, EventKind::Deliver(Box::new(env)));
+                }
+                Effect::StartExec { task } => {
+                    let node = self.processes[proc.idx()].graph.task(task.task);
+                    let base = self.processes[proc.idx()].params.cost.local_time(node.flops);
+                    let factor = if self.jitter > 0.0 {
+                        1.0 + self.jitter * (2.0 * self.rng.next_f64() - 1.0)
+                    } else {
+                        1.0
+                    };
+                    let duration = (base * factor).max(1e-12);
+                    self.push(self.now + duration, EventKind::ExecDone { proc, rt: task, duration });
+                }
+                Effect::ScheduleTick { at } => {
+                    let at = at.max(self.now);
+                    // Dedup: skip if an earlier-or-equal future tick exists.
+                    if self.tick_at[proc.idx()] > self.now
+                        && self.tick_at[proc.idx()] <= at + 1e-12
+                    {
+                        continue;
+                    }
+                    self.tick_at[proc.idx()] = at;
+                    self.push(at, EventKind::Tick { proc });
+                }
+                Effect::Halt => {}
+            }
+        }
+    }
+
+    fn all_halted(&self) -> bool {
+        self.processes.iter().all(|p| p.halted)
+    }
+
+    /// Run to completion; returns the aggregated result.
+    pub fn run(&mut self) -> Result<SimResult, SimError> {
+        // boot every process at t = 0
+        for i in 0..self.processes.len() {
+            let effects = self.processes[i].start(0.0);
+            self.apply_effects(ProcessId(i as u32), effects);
+        }
+
+        let mut events: u64 = 0;
+        while let Some(ev) = self.heap.pop() {
+            if self.all_halted() {
+                break;
+            }
+            self.now = ev.t;
+            if self.now > self.max_time {
+                return Err(SimError::TimeBudget(self.now));
+            }
+            events += 1;
+            if events > self.max_events {
+                return Err(SimError::EventBudget(events));
+            }
+            match ev.kind {
+                EventKind::Deliver(env) => {
+                    let to = env.to;
+                    let effects = self.processes[to.idx()].on_message(*env, self.now);
+                    self.apply_effects(to, effects);
+                }
+                EventKind::ExecDone { proc, rt, duration } => {
+                    let effects = self.processes[proc.idx()].on_exec_complete(
+                        rt,
+                        Payload::Sim,
+                        duration,
+                        self.now,
+                    );
+                    self.apply_effects(proc, effects);
+                }
+                EventKind::Tick { proc } => {
+                    let effects = self.processes[proc.idx()].on_tick(self.now);
+                    self.apply_effects(proc, effects);
+                }
+            }
+            if let Some(stop) = &self.stop_when {
+                if stop(&self.processes) {
+                    break;
+                }
+            }
+        }
+
+        if !self.all_halted() && self.heap.is_empty() && self.stop_when.is_none() {
+            let live = self.processes.iter().filter(|p| !p.halted).count();
+            if live > 0 {
+                return Err(SimError::Deadlock { live });
+            }
+        }
+
+        Ok(self.collect(events))
+    }
+
+    fn collect(&self, events: u64) -> SimResult {
+        let p = self.processes.len();
+        let mut traces = RunTraces::new(p);
+        let mut counters = DlbCounters::default();
+        let mut per = Vec::with_capacity(p);
+        let mut makespan: f64 = 0.0;
+        for ps in &self.processes {
+            makespan = makespan.max(ps.last_completion);
+            counters.merge(ps.counters());
+            per.push(*ps.counters());
+        }
+        for (i, ps) in self.processes.iter().enumerate() {
+            traces.per_process[i] = ps.trace.clone();
+        }
+        traces.makespan = makespan;
+        let total_flops: u64 = self.processes[0].graph.total_flops();
+        let s = self.processes[0].params.cost.flops_per_sec;
+        let utilization = if makespan > 0.0 {
+            total_flops as f64 / (p as f64 * s * makespan)
+        } else {
+            0.0
+        };
+        SimResult {
+            makespan,
+            end_time: self.now,
+            traces,
+            counters,
+            per_process_counters: per,
+            events_processed: events,
+            utilization,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::task::TaskKind;
+
+    /// A chain of n synthetic tasks all on p0 — pure sequential baseline.
+    fn chain_cfg(n: usize, p: usize, dlb: bool) -> (Config, Arc<TaskGraph>) {
+        let mut cfg = Config::default();
+        cfg.processes = p;
+        cfg.grid = None;
+        cfg.dlb_enabled = dlb;
+        cfg.wt = 2;
+        cfg.validate().expect("valid");
+        let mut b = GraphBuilder::new();
+        let mut prev = None;
+        for _ in 0..n {
+            let d = b.data(ProcessId(0), 64, 64);
+            let args = match prev {
+                Some(pd) => vec![pd],
+                None => vec![],
+            };
+            let t = b.task(TaskKind::Synthetic, args, d, 1_000_000, None);
+            let _ = t;
+            prev = Some(d);
+        }
+        (cfg, b.build())
+    }
+
+    #[test]
+    fn sequential_chain_runs_to_completion() {
+        let (cfg, g) = chain_cfg(20, 1, false);
+        let mut eng = SimEngine::from_config(&cfg, g);
+        let r = eng.run().expect("run");
+        // 20 tasks × (1e6 flops / 8.8e9 + 5µs overhead)
+        let expect = 20.0 * (1_000_000.0 / 8.8e9 + 5.0e-6);
+        assert!((r.makespan - expect).abs() < expect * 0.01, "{} vs {expect}", r.makespan);
+        assert_eq!(r.counters.transactions, 0);
+    }
+
+    #[test]
+    fn multi_process_chain_terminates_with_dlb_on() {
+        // chain is inherently sequential: DLB must not break correctness,
+        // idle processes will search but find nothing persistent to steal.
+        let (cfg, g) = chain_cfg(10, 4, true);
+        let mut eng = SimEngine::from_config(&cfg, g);
+        let r = eng.run().expect("run");
+        assert!(r.makespan > 0.0);
+    }
+
+    /// Independent tasks all initially at p0: DLB should spread them and cut
+    /// the makespan versus DLB-off.
+    fn bag_cfg(n: usize, p: usize, dlb: bool, seed: u64) -> (Config, Arc<TaskGraph>) {
+        let mut cfg = Config::default();
+        cfg.processes = p;
+        cfg.dlb_enabled = dlb;
+        cfg.wt = 3;
+        cfg.delta = 0.0005;
+        cfg.seed = seed;
+        cfg.validate().expect("valid");
+        let mut b = GraphBuilder::new();
+        for _ in 0..n {
+            let d = b.data(ProcessId(0), 256, 256);
+            // 50 ms tasks: long enough that migration (≪ 1 ms) is negligible
+            b.task(TaskKind::Synthetic, vec![], d, 440_000_000, None);
+        }
+        (cfg, b.build())
+    }
+
+    #[test]
+    fn dlb_balances_imbalanced_bag() {
+        let (cfg_off, g_off) = bag_cfg(32, 4, false, 7);
+        let off = SimEngine::from_config(&cfg_off, g_off).run().expect("off");
+        let (cfg_on, g_on) = bag_cfg(32, 4, true, 7);
+        let on = SimEngine::from_config(&cfg_on, g_on).run().expect("on");
+        assert!(on.counters.tasks_exported > 0, "work must migrate");
+        assert!(
+            on.makespan < 0.55 * off.makespan,
+            "DLB should roughly 4x a pure-p0 bag: on={} off={}",
+            on.makespan,
+            off.makespan
+        );
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let (cfg, g) = bag_cfg(16, 4, true, 11);
+        let a = SimEngine::from_config(&cfg, Arc::clone(&g)).run().expect("a");
+        let b = SimEngine::from_config(&cfg, g).run().expect("b");
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.events_processed, b.events_processed);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (cfg_a, g_a) = bag_cfg(16, 4, true, 1);
+        let (cfg_b, g_b) = bag_cfg(16, 4, true, 2);
+        let a = SimEngine::from_config(&cfg_a, g_a).run().expect("a");
+        let b = SimEngine::from_config(&cfg_b, g_b).run().expect("b");
+        // almost surely different event orders
+        assert!(a.events_processed != b.events_processed || a.makespan != b.makespan);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let (cfg, g) = bag_cfg(32, 4, true, 3);
+        let r = SimEngine::from_config(&cfg, g).run().expect("run");
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0 + 1e-9, "{}", r.utilization);
+    }
+
+    #[test]
+    fn traces_are_recorded() {
+        let (cfg, g) = bag_cfg(16, 4, true, 5);
+        let r = SimEngine::from_config(&cfg, g).run().expect("run");
+        assert!(r.traces.per_process[0].max_workload() > 0);
+        assert!(r.traces.makespan > 0.0);
+    }
+
+    #[test]
+    fn event_budget_guard() {
+        let (cfg, g) = bag_cfg(16, 4, true, 5);
+        let mut eng = SimEngine::from_config(&cfg, g);
+        eng.max_events = 10;
+        assert!(matches!(eng.run(), Err(SimError::EventBudget(_))));
+    }
+}

@@ -1,0 +1,8 @@
+//! Discrete-event simulation mode: virtual clock + modeled network driving
+//! the identical coordinator state machines as the threaded runtime.
+
+pub mod engine;
+pub mod network;
+
+pub use engine::{SimEngine, SimError, SimResult};
+pub use network::NetworkModel;

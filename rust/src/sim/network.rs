@@ -1,0 +1,50 @@
+//! The simulated interconnect: per-message delivery time
+//! `latency + doubles / bandwidth`.
+//!
+//! Contention is not modeled (links are infinitely parallel); the paper's
+//! protocol keeps control traffic tiny (≤ 5 requests per δ per process) and
+//! data traffic is charged at the same R that the §4 analysis uses, so the
+//! quantities the experiments compare are preserved.
+
+/// Latency/bandwidth model (R in doubles per second, as in §4).
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkModel {
+    pub latency: f64,
+    pub doubles_per_sec: f64,
+}
+
+impl NetworkModel {
+    pub fn new(latency: f64, doubles_per_sec: f64) -> Self {
+        assert!(latency >= 0.0 && doubles_per_sec > 0.0);
+        NetworkModel { latency, doubles_per_sec }
+    }
+
+    /// Wall time between send and delivery for a message of `doubles`.
+    pub fn delivery_delay(&self, doubles: u64) -> f64 {
+        self.latency + doubles as f64 / self.doubles_per_sec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delay_is_latency_plus_transfer() {
+        let n = NetworkModel::new(1e-6, 2.2e8);
+        let d = n.delivery_delay(2_200_000);
+        assert!((d - (1e-6 + 0.01)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_size_is_pure_latency() {
+        let n = NetworkModel::new(5e-6, 1e8);
+        assert_eq!(n.delivery_delay(0), 5e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_bandwidth_rejected() {
+        let _ = NetworkModel::new(0.0, 0.0);
+    }
+}

@@ -1,0 +1,225 @@
+//! Criterion-style micro/macro benchmark harness (criterion is unavailable
+//! offline; this provides the subset we need with robust statistics).
+//!
+//! Every `rust/benches/*.rs` target is a `harness = false` binary built on
+//! this module.  Protocol per benchmark:
+//!
+//! 1. warm up for `warmup` iterations (or until `min_warmup_time`),
+//! 2. collect `samples` timed samples of `iters_per_sample` iterations,
+//! 3. report mean ± 95% CI, median, p05/p95 from `util::stats::Summary`.
+//!
+//! `Runner` collects rows and prints an aligned table, plus optional CSV next
+//! to the binary for EXPERIMENTS.md.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+pub use std::hint::black_box as bb;
+
+/// Configuration for one benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: u64,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    pub min_warmup_time: Duration,
+    pub max_total_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup_iters: 3,
+            samples: 20,
+            iters_per_sample: 1,
+            min_warmup_time: Duration::from_millis(20),
+            max_total_time: Duration::from_secs(60),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Fast profile for heavy end-to-end benches (few samples).
+    pub fn macro_bench() -> Self {
+        BenchConfig { warmup_iters: 1, samples: 5, ..Default::default() }
+    }
+
+    /// High-resolution profile for nanosecond-scale hot-path benches.
+    pub fn micro_bench() -> Self {
+        BenchConfig {
+            warmup_iters: 1000,
+            samples: 30,
+            iters_per_sample: 10_000,
+            ..Default::default()
+        }
+    }
+}
+
+/// Result of one benchmark: per-sample seconds-per-iteration.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    /// Optional user metric (e.g. makespan seconds, tasks migrated).
+    pub extra: Vec<(String, f64)>,
+}
+
+impl BenchResult {
+    pub fn secs_per_iter(&self) -> f64 {
+        self.summary.mean
+    }
+}
+
+/// Time `f` under `cfg`, returning per-iteration seconds samples.
+pub fn run_with<F: FnMut() -> R, R>(cfg: &BenchConfig, name: &str, mut f: F) -> BenchResult {
+    // Warmup: at least warmup_iters and at least min_warmup_time.
+    let wstart = Instant::now();
+    let mut w = 0;
+    while w < cfg.warmup_iters || wstart.elapsed() < cfg.min_warmup_time {
+        black_box(f());
+        w += 1;
+        if wstart.elapsed() > cfg.max_total_time / 4 {
+            break;
+        }
+    }
+    let mut samples = Vec::with_capacity(cfg.samples);
+    let total_start = Instant::now();
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for _ in 0..cfg.iters_per_sample {
+            black_box(f());
+        }
+        samples.push(t0.elapsed().as_secs_f64() / cfg.iters_per_sample as f64);
+        if total_start.elapsed() > cfg.max_total_time {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), summary: Summary::of(&samples), extra: Vec::new() }
+}
+
+/// Format seconds adaptively (ns/µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return format!("{s}");
+    }
+    let a = s.abs();
+    if a >= 1.0 {
+        format!("{s:.3} s")
+    } else if a >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Collects results and prints a criterion-like report table.
+pub struct Runner {
+    pub title: String,
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Runner {
+    pub fn new(title: impl Into<String>, cfg: BenchConfig) -> Self {
+        let title = title.into();
+        println!("\n=== bench: {title} ===");
+        Runner { title, cfg, results: Vec::new() }
+    }
+
+    /// Run and record one benchmark.
+    pub fn bench<F: FnMut() -> R, R>(&mut self, name: &str, f: F) -> &BenchResult {
+        let r = run_with(&self.cfg, name, f);
+        println!(
+            "{:<44} {:>12} ± {:>10}  (median {:>12}, n={})",
+            r.name,
+            fmt_secs(r.summary.mean),
+            fmt_secs(r.summary.ci95()),
+            fmt_secs(r.summary.median),
+            r.summary.n
+        );
+        self.results.push(r);
+        self.results.last().expect("just pushed")
+    }
+
+    /// Record an externally-measured scalar row (for figure regeneration
+    /// benches where the "measurement" is e.g. a simulated makespan).
+    pub fn record(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{name:<44} {value:>12.6} {unit}");
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&[value]),
+            extra: vec![(unit.to_string(), value)],
+        });
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write `name,mean,ci95,median,min,max` CSV.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "name,mean,ci95,median,min,max")?;
+        for r in &self.results {
+            writeln!(
+                f,
+                "{},{},{},{},{},{}",
+                r.name, r.summary.mean, r.summary.ci95(), r.summary.median, r.summary.min,
+                r.summary.max
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep_scale() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            samples: 5,
+            iters_per_sample: 1,
+            min_warmup_time: Duration::from_millis(1),
+            max_total_time: Duration::from_secs(5),
+        };
+        let r = run_with(&cfg, "sleep1ms", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.summary.mean >= 0.001, "mean {}", r.summary.mean);
+        assert!(r.summary.mean < 0.05);
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" µs"));
+        assert!(fmt_secs(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn runner_collects_and_writes_csv() {
+        let mut r = Runner::new("t", BenchConfig {
+            warmup_iters: 0,
+            samples: 3,
+            iters_per_sample: 10,
+            min_warmup_time: Duration::ZERO,
+            max_total_time: Duration::from_secs(1),
+        });
+        r.bench("noop", || 1 + 1);
+        r.record("makespan", 1.25, "s");
+        assert_eq!(r.results().len(), 2);
+        let p = std::env::temp_dir().join("ductr_bench_test.csv");
+        r.write_csv(p.to_str().expect("utf8 path")).expect("csv write");
+        let body = std::fs::read_to_string(&p).expect("csv read");
+        assert!(body.starts_with("name,mean"));
+        assert_eq!(body.lines().count(), 3);
+        let _ = std::fs::remove_file(p);
+    }
+}

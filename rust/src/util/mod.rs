@@ -1,0 +1,9 @@
+//! Foundation utilities built in-repo (the offline crate set has no `rand`,
+//! `criterion`, or `proptest`): PRNG, statistics, ASCII plotting, a bench
+//! harness, and a property-testing mini-framework.
+
+pub mod bench;
+pub mod plot;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,157 @@
+//! Terminal ASCII plots for quick-look experiment output.
+//!
+//! The figures of the paper are line/area plots of per-process workload over
+//! time (Fig 4/5) and probability/latency curves (Fig 1/3).  `metrics::csv`
+//! writes machine-readable data for real plotting; this module renders the
+//! same series as ASCII so every experiment is inspectable straight from the
+//! terminal (and in EXPERIMENTS.md).
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>, points: Vec<(f64, f64)>) -> Self {
+        Series { name: name.into(), points }
+    }
+}
+
+const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&', '=', '~'];
+
+/// Render multiple series into a `width`×`height` character grid with axes.
+pub fn render(series: &[Series], width: usize, height: usize) -> String {
+    assert!(width >= 16 && height >= 4, "plot too small");
+    let pts: Vec<&(f64, f64)> = series.iter().flat_map(|s| &s.points).collect();
+    if pts.is_empty() {
+        return String::from("(empty plot)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &&(x, y) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-300 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-300 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let g = GLYPHS[si % GLYPHS.len()];
+        // draw connected segments so sparse series stay readable
+        for w in s.points.windows(2) {
+            let (x0, y0) = w[0];
+            let (x1, y1) = w[1];
+            let steps = (width * 2).max(2);
+            for t in 0..=steps {
+                let f = t as f64 / steps as f64;
+                let x = x0 + (x1 - x0) * f;
+                let y = y0 + (y1 - y0) * f;
+                let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+                let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+                grid[height - 1 - cy][cx] = g;
+            }
+        }
+        if s.points.len() == 1 {
+            let (x, y) = s.points[0];
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = g;
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let yv = ymax - (ymax - ymin) * i as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yv:>10.3} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!(
+        "{:>10}  {:<w$.3}{:>10.3}\n",
+        "",
+        xmin,
+        xmax,
+        w = width.saturating_sub(10)
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", GLYPHS[si % GLYPHS.len()], s.name));
+    }
+    out
+}
+
+/// Convenience: render with a title banner.
+pub fn plot(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    format!("== {title} ==\n{}", render(series, width, height))
+}
+
+/// Horizontal bar chart for categorical summaries (e.g. makespan per config).
+pub fn bars(rows: &[(String, f64)], width: usize) -> String {
+    if rows.is_empty() {
+        return String::from("(no data)\n");
+    }
+    let maxv = rows.iter().map(|r| r.1).fold(f64::NEG_INFINITY, f64::max).max(1e-300);
+    let label_w = rows.iter().map(|r| r.0.len()).max().unwrap_or(4).min(28);
+    let mut out = String::new();
+    for (name, v) in rows {
+        let n = ((v / maxv) * width as f64).round().max(0.0) as usize;
+        out.push_str(&format!(
+            "{:<label_w$} |{} {v:.4}\n",
+            &name[..name.len().min(label_w)],
+            "#".repeat(n),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_glyphs_and_axes() {
+        let s = vec![
+            Series::new("a", vec![(0.0, 0.0), (1.0, 1.0)]),
+            Series::new("b", vec![(0.0, 1.0), (1.0, 0.0)]),
+        ];
+        let out = render(&s, 40, 10);
+        assert!(out.contains('*'));
+        assert!(out.contains('o'));
+        assert!(out.contains('|'));
+        assert!(out.contains("a\n"));
+    }
+
+    #[test]
+    fn empty_plot_ok() {
+        assert_eq!(render(&[], 40, 10), "(empty plot)\n");
+    }
+
+    #[test]
+    fn single_point_series() {
+        let s = vec![Series::new("pt", vec![(0.5, 0.5)])];
+        let out = render(&s, 20, 5);
+        assert!(out.contains('*'));
+    }
+
+    #[test]
+    fn constant_series_no_panic() {
+        let s = vec![Series::new("c", vec![(0.0, 2.0), (1.0, 2.0), (2.0, 2.0)])];
+        let _ = render(&s, 30, 6);
+    }
+
+    #[test]
+    fn bars_scale() {
+        let rows = vec![("x".to_string(), 1.0), ("yy".to_string(), 2.0)];
+        let out = bars(&rows, 10);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[1].matches('#').count() > lines[0].matches('#').count());
+    }
+}

@@ -1,0 +1,192 @@
+//! Minimal property-based testing framework (proptest is unavailable
+//! offline).
+//!
+//! Deterministic by construction: each case derives from a case index and a
+//! base seed, so a failure report ("case #k, seed s") is immediately
+//! reproducible.  On failure the runner performs *input-size shrinking* for
+//! the common generator shapes (vectors shrink by halving, integers shrink
+//! toward the range minimum) by re-running the property on derived smaller
+//! inputs.
+//!
+//! Usage:
+//! ```no_run
+//! use ductr::util::propcheck::{forall, Gen};
+//! forall(200, 0xDEC0DE, |g| g.vec_usize(0..64, 0..100), |v| {
+//!     let mut s = v.clone();
+//!     s.sort_unstable();
+//!     s.len() == v.len()
+//! });
+//! ```
+
+use std::fmt::Debug;
+use std::ops::Range;
+
+use crate::util::rng::Rng;
+
+/// Generator context handed to the generating closure.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint in `[0, 1]`; grows over the case sequence so early cases are
+    /// small (fast failure on trivial inputs) and later cases are large.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(r.start < r.end, "empty range");
+        // bias the width by the size hint
+        let span = (r.end - r.start).max(1);
+        let scaled = ((span as f64 * self.size).ceil() as usize).clamp(1, span);
+        r.start + self.rng.gen_range(scaled as u64) as usize
+    }
+
+    pub fn u64_in(&mut self, r: Range<u64>) -> u64 {
+        assert!(r.start < r.end);
+        r.start + self.rng.gen_range(r.end - r.start)
+    }
+
+    pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
+        self.rng.range_f64(r.start, r.end)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn vec_usize(&mut self, len: Range<usize>, vals: Range<usize>) -> Vec<usize> {
+        let n = self.usize_in(len.start.max(0)..len.end.max(1));
+        (0..n).map(|_| self.rng.range_usize(vals.start, vals.end)).collect()
+    }
+
+    pub fn vec_f64(&mut self, len: Range<usize>, vals: Range<f64>) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.rng.range_f64(vals.start, vals.end)).collect()
+    }
+}
+
+/// Outcome of a property over one input.
+pub trait PropResult {
+    fn passed(&self) -> bool;
+    fn message(&self) -> String;
+}
+
+impl PropResult for bool {
+    fn passed(&self) -> bool {
+        *self
+    }
+    fn message(&self) -> String {
+        if *self { "ok".into() } else { "property returned false".into() }
+    }
+}
+
+impl PropResult for Result<(), String> {
+    fn passed(&self) -> bool {
+        self.is_ok()
+    }
+    fn message(&self) -> String {
+        match self {
+            Ok(()) => "ok".into(),
+            Err(e) => e.clone(),
+        }
+    }
+}
+
+/// Run `prop` over `cases` inputs produced by `gen`. Panics with a
+/// reproducible report on the first failure.
+pub fn forall<T, G, P, R>(cases: usize, seed: u64, mut gen: G, mut prop: P)
+where
+    T: Debug + Clone,
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> R,
+    R: PropResult,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen {
+            rng: Rng::new(case_seed),
+            size: ((case + 1) as f64 / cases as f64).min(1.0),
+        };
+        let input = gen(&mut g);
+        let r = prop(&input);
+        if !r.passed() {
+            // one-level shrink attempt: re-generate with smaller sizes
+            let mut smallest: Option<T> = None;
+            for shrink_step in 1..=8 {
+                let mut gs = Gen {
+                    rng: Rng::new(case_seed),
+                    size: g.size / (1 << shrink_step) as f64,
+                };
+                let cand = gen(&mut gs);
+                if !prop(&cand).passed() {
+                    smallest = Some(cand);
+                }
+            }
+            panic!(
+                "property failed at case #{case} (seed {case_seed:#x}): {}\n  input: {:?}\n  shrunk: {:?}",
+                r.message(),
+                input,
+                smallest,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            50,
+            1,
+            |g| g.vec_usize(0..32, 0..100),
+            |v| {
+                count += 1;
+                let mut s = v.clone();
+                s.sort_unstable();
+                s.len() == v.len()
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_report() {
+        // u64_in is not size-scaled, so some case almost surely lands ≥ 5
+        forall(100, 2, |g| g.u64_in(0..100), |&x| x < 5);
+    }
+
+    #[test]
+    fn result_prop_messages() {
+        forall(
+            10,
+            3,
+            |g| g.u64_in(0..10),
+            |&x| -> Result<(), String> {
+                if x < 10 { Ok(()) } else { Err(format!("{x} out of range")) }
+            },
+        );
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut maxlen = 0;
+        forall(
+            100,
+            4,
+            |g| g.vec_usize(0..256, 0..2),
+            |v| {
+                maxlen = maxlen.max(v.len());
+                true
+            },
+        );
+        assert!(maxlen > 64, "late cases should be large, got max {maxlen}");
+    }
+}

@@ -1,0 +1,214 @@
+//! Small statistics toolkit: running moments, summaries, percentiles.
+//!
+//! Used by the bench harness (`util::bench`), the DLB performance recorder
+//! (`dlb::perfmodel`) and the experiment drivers.
+
+/// Welford online mean/variance accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    /// Sample variance (n−1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Merge another accumulator (parallel Welford).
+    pub fn merge(&mut self, o: &Running) {
+        if o.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = o.clone();
+            return;
+        }
+        let n = self.n + o.n;
+        let d = o.mean - self.mean;
+        let mean = self.mean + d * o.n as f64 / n as f64;
+        let m2 = self.m2 + o.m2 + d * d * self.n as f64 * o.n as f64 / n as f64;
+        self.n = n;
+        self.mean = mean;
+        self.m2 = m2;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+    }
+}
+
+/// Full five-number-plus summary of a sample.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p05: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of(empty)");
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+        let mut run = Running::new();
+        for &x in xs {
+            run.push(x);
+        }
+        Summary {
+            n: xs.len(),
+            mean: run.mean(),
+            std: run.std(),
+            min: s[0],
+            p05: percentile_sorted(&s, 0.05),
+            median: percentile_sorted(&s, 0.50),
+            p95: percentile_sorted(&s, 0.95),
+            max: s[s.len() - 1],
+        }
+    }
+
+    /// Half-width of the 95% normal-approximation CI of the mean.
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { 1.96 * self.std / (self.n as f64).sqrt() }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice, `q` in `[0, 1]`.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Arithmetic mean of a slice (NaN on empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { f64::NAN } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, -1.0, 0.5];
+        let mut r = Running::new();
+        for &x in &xs {
+            r.push(x);
+        }
+        let m = xs.iter().sum::<f64>() / xs.len() as f64;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((r.mean() - m).abs() < 1e-12);
+        assert!((r.var() - v).abs() < 1e-12);
+        assert_eq!(r.min(), -1.0);
+        assert_eq!(r.max(), 5.0);
+        assert_eq!(r.count(), 7);
+    }
+
+    #[test]
+    fn running_merge_equals_single_pass() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = Running::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = Running::new();
+        let mut b = Running::new();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-10);
+        assert!((a.var() - whole.var()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut a = Running::new();
+        a.push(1.0);
+        a.push(2.0);
+        let before = (a.mean(), a.var());
+        a.merge(&Running::new());
+        assert_eq!(before, (a.mean(), a.var()));
+        let mut e = Running::new();
+        e.merge(&a);
+        assert_eq!((e.mean(), e.var()), before);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_sorted(&s, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&s, 1.0), 4.0);
+        assert!((percentile_sorted(&s, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_basics() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 50.5).abs() < 1e-12);
+        assert!((s.median - 50.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!(s.p05 < s.median && s.median < s.p95);
+        assert!(s.ci95() > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn summary_empty_panics() {
+        let _ = Summary::of(&[]);
+    }
+}

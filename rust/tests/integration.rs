@@ -1,0 +1,187 @@
+//! End-to-end integration tests: the full stack from config to verified
+//! numerics, in both execution modes.
+//!
+//! Real-mode tests need built artifacts (`make artifacts`); they self-skip
+//! with a notice when `artifacts/manifest.txt` is absent.
+
+use ductr::cholesky;
+use ductr::config::{Config, Grid, Strategy};
+use ductr::dlb::threshold::calibrate_from_traces;
+use ductr::experiments::{fig1, fig3, fig4, fig5, sec4};
+
+fn artifacts_present() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.txt").exists()
+}
+
+fn sim_cfg() -> Config {
+    let mut c = Config::default();
+    c.processes = 10;
+    c.grid = Some(Grid::new(2, 5));
+    c.nb = 12;
+    c.block = 256;
+    c.wt = 5;
+    c.delta = 0.005;
+    c.validate().expect("valid");
+    c
+}
+
+// -------------------------------------------------------------------------
+// simulated mode
+// -------------------------------------------------------------------------
+
+#[test]
+fn sim_cholesky_completes_all_tasks() {
+    let mut cfg = sim_cfg();
+    cfg.dlb_enabled = false;
+    let r = cholesky::run_sim(&cfg).expect("sim");
+    assert_eq!(r.tasks, 12 + 2 * 66 + 220);
+    assert!(r.makespan > 0.0);
+    // every process's queue drained (trace ends at 0)
+    for tr in &r.traces.per_process {
+        let last = tr.samples().last().expect("sampled");
+        assert_eq!(last.1, 0, "queue must drain");
+    }
+}
+
+#[test]
+fn sim_cholesky_dlb_strategies_all_terminate() {
+    for strategy in [Strategy::Basic, Strategy::Equalizing, Strategy::Smart] {
+        let mut cfg = sim_cfg();
+        cfg.dlb_enabled = true;
+        cfg.strategy = strategy;
+        let r = cholesky::run_sim(&cfg)
+            .unwrap_or_else(|e| panic!("strategy {strategy} failed: {e}"));
+        assert!(r.makespan > 0.0, "{strategy}");
+    }
+}
+
+#[test]
+fn sim_paper_protocol_fig4_left_shape() {
+    // Fig 4 left at paper scale in the DES: N=20000, 12×12 blocks, 2×5 grid.
+    // Shape target: DLB does not hurt, and migrations happen.
+    let spec = &fig4::CASES[0];
+    let r = fig4::run_case(spec, 1).expect("fig4 case");
+    assert!(r.calibrated_wt >= 1);
+    assert!(r.on.counters.tasks_exported > 0, "expected migrations");
+    assert!(
+        r.improvement() > -0.05,
+        "DLB must not substantially hurt: {:+.2}%",
+        r.improvement() * 100.0
+    );
+}
+
+#[test]
+fn sim_export_import_bookkeeping_consistent() {
+    let mut cfg = sim_cfg();
+    cfg.dlb_enabled = true;
+    let r = cholesky::run_sim(&cfg).expect("sim");
+    assert_eq!(
+        r.counters.tasks_exported, r.counters.tasks_received,
+        "global export/import accounting must balance"
+    );
+}
+
+#[test]
+fn wt_calibration_rule() {
+    let mut cfg = sim_cfg();
+    cfg.dlb_enabled = false;
+    let r = cholesky::run_sim(&cfg).expect("sim");
+    let wt = calibrate_from_traces(&r.traces);
+    assert_eq!(wt, (r.traces.max_workload() / 2).max(1));
+}
+
+// -------------------------------------------------------------------------
+// real (threaded + PJRT) mode
+// -------------------------------------------------------------------------
+
+#[test]
+fn real_cholesky_verifies_numerically() {
+    if !artifacts_present() {
+        eprintln!("skipping real-mode test: run `make artifacts` first");
+        return;
+    }
+    let mut cfg = Config::default();
+    cfg.processes = 4;
+    cfg.grid = Some(Grid::new(2, 2));
+    cfg.nb = 6;
+    cfg.block = 32;
+    cfg.dlb_enabled = false;
+    cfg.net_latency = 0.0;
+    cfg.validate().expect("valid");
+    let r = cholesky::run_real(&cfg).expect("real run");
+    let res = r.residual.expect("residual computed");
+    assert!(res < 1e-4, "L·Lᵀ ≈ A must hold, residual = {res:.3e}");
+}
+
+#[test]
+fn real_cholesky_with_dlb_still_correct() {
+    if !artifacts_present() {
+        eprintln!("skipping real-mode test: run `make artifacts` first");
+        return;
+    }
+    let mut cfg = Config::default();
+    cfg.processes = 5;
+    cfg.grid = Some(Grid::new(1, 5)); // deliberately imbalanced column grid
+    cfg.nb = 8;
+    cfg.block = 32;
+    cfg.dlb_enabled = true;
+    cfg.strategy = Strategy::Basic;
+    cfg.wt = 2;
+    cfg.delta = 0.002;
+    cfg.net_latency = 0.0;
+    cfg.validate().expect("valid");
+    let r = cholesky::run_real(&cfg).expect("real run");
+    let res = r.residual.expect("residual computed");
+    assert!(res < 1e-4, "DLB must not corrupt numerics: residual = {res:.3e}");
+    // the imbalanced grid should trigger at least some pairing activity
+    assert!(r.counters.rounds > 0, "expected DLB searches");
+}
+
+#[test]
+fn real_matches_sim_task_structure() {
+    if !artifacts_present() {
+        eprintln!("skipping real-mode test: run `make artifacts` first");
+        return;
+    }
+    let mut cfg = Config::default();
+    cfg.processes = 4;
+    cfg.grid = Some(Grid::new(2, 2));
+    cfg.nb = 5;
+    cfg.block = 32;
+    cfg.dlb_enabled = false;
+    cfg.validate().expect("valid");
+    let real = cholesky::run_real(&cfg).expect("real");
+    let sim = cholesky::run_sim(&cfg).expect("sim");
+    assert_eq!(real.tasks, sim.tasks);
+}
+
+// -------------------------------------------------------------------------
+// experiment drivers (scaled)
+// -------------------------------------------------------------------------
+
+#[test]
+fn experiment_fig1_smoke() {
+    let r = fig1::run(6, 500, 3);
+    assert_eq!(r.curves.len(), 10);
+    assert!(r.k_half_n5 > 0.96);
+}
+
+#[test]
+fn experiment_fig3_smoke() {
+    let r = fig3::run(&[8, 16], &[0.5], 0.01, 4, 3);
+    assert_eq!(r.cells.len(), 2);
+    assert!(r.cells.iter().all(|c| c.mean > 0.0));
+}
+
+#[test]
+fn experiment_fig5_scaled_smoke() {
+    let r = fig5::run(2200, &[1, 2, 3]).expect("fig5");
+    assert_eq!(r.outcomes.len(), 3);
+}
+
+#[test]
+fn experiment_sec4_smoke() {
+    let r = sec4::run(4).expect("sec4");
+    assert!(!r.table.is_empty());
+    assert_eq!(r.cases.len(), 2);
+}

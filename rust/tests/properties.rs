@@ -1,0 +1,189 @@
+//! Property-based tests over the coordinator: random workloads and DLB
+//! settings must preserve the runtime's global invariants.
+//!
+//! Built on `ductr::util::propcheck` (the in-repo proptest substitute) —
+//! every case is reproducible from the reported seed.
+
+use std::sync::Arc;
+
+use ductr::apps::{bag, rand_dag};
+use ductr::config::{Config, Strategy};
+use ductr::core::graph::TaskGraph;
+use ductr::sim::engine::SimEngine;
+use ductr::util::propcheck::{forall, Gen};
+
+/// Random (workload, config) scenario.
+#[derive(Debug, Clone)]
+struct Scenario {
+    processes: usize,
+    dlb: bool,
+    strategy: Strategy,
+    wt: usize,
+    delta: f64,
+    seed: u64,
+    kind: u8, // 0 = bag, 1 = layered dag
+    tasks: usize,
+}
+
+fn gen_scenario(g: &mut Gen) -> Scenario {
+    Scenario {
+        processes: g.usize_in(2..9).max(2),
+        dlb: g.bool(),
+        strategy: *[Strategy::Basic, Strategy::Equalizing, Strategy::Smart]
+            .iter()
+            .nth(g.usize_in(0..3).min(2))
+            .expect("index"),
+        wt: g.usize_in(1..8).max(1),
+        delta: g.f64_in(0.0002..0.01),
+        seed: g.u64_in(1..1_000_000),
+        kind: if g.bool() { 0 } else { 1 },
+        tasks: g.usize_in(4..120).max(4),
+    }
+}
+
+fn build_graph(s: &Scenario) -> Arc<TaskGraph> {
+    match s.kind {
+        0 => bag::build(
+            s.processes,
+            bag::BagParams {
+                tasks: s.tasks,
+                mean_flops: 5_000_000,
+                skew: 2.5,
+                size_spread: 0.6,
+                block: 64,
+            },
+            s.seed,
+        ),
+        _ => rand_dag::build(
+            s.processes,
+            rand_dag::DagParams {
+                layers: (s.tasks / 8).clamp(2, 12),
+                width: 8,
+                max_deps: 3,
+                mean_flops: 5_000_000,
+                block: 64,
+            },
+            s.seed,
+        ),
+    }
+}
+
+fn config_of(s: &Scenario) -> Config {
+    let mut c = Config::default();
+    c.processes = s.processes;
+    c.grid = None;
+    c.dlb_enabled = s.dlb;
+    c.strategy = s.strategy;
+    c.wt = s.wt;
+    c.delta = s.delta;
+    c.seed = s.seed;
+    c.validate().expect("generated config valid");
+    c
+}
+
+#[test]
+fn prop_every_run_terminates_and_drains() {
+    forall(60, 0xD0C5, gen_scenario, |s| -> Result<(), String> {
+        let g = build_graph(s);
+        let n_tasks = g.num_tasks();
+        let cfg = config_of(s);
+        let mut eng = SimEngine::from_config(&cfg, g);
+        eng.max_time = 3600.0;
+        let r = eng.run().map_err(|e| format!("{s:?}: {e}"))?;
+        if n_tasks > 0 && r.makespan <= 0.0 {
+            return Err(format!("{s:?}: zero makespan with {n_tasks} tasks"));
+        }
+        for (i, tr) in r.traces.per_process.iter().enumerate() {
+            if let Some(&(_, w)) = tr.samples().last() {
+                if w != 0 {
+                    return Err(format!("{s:?}: p{i} queue not drained (w={w})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_export_import_balance() {
+    forall(40, 0xBA1A, gen_scenario, |s| -> Result<(), String> {
+        let g = build_graph(s);
+        let cfg = config_of(s);
+        let r = SimEngine::from_config(&cfg, g).run().map_err(|e| format!("{e}"))?;
+        if r.counters.tasks_exported != r.counters.tasks_received {
+            return Err(format!(
+                "{s:?}: exported {} != received {}",
+                r.counters.tasks_exported, r.counters.tasks_received
+            ));
+        }
+        if !s.dlb && r.counters.tasks_exported != 0 {
+            return Err(format!("{s:?}: migrations with DLB off"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_deterministic_replay() {
+    forall(20, 0xDE7E, gen_scenario, |s| -> Result<(), String> {
+        let cfg = config_of(s);
+        let a = SimEngine::from_config(&cfg, build_graph(s))
+            .run()
+            .map_err(|e| format!("{e}"))?;
+        let b = SimEngine::from_config(&cfg, build_graph(s))
+            .run()
+            .map_err(|e| format!("{e}"))?;
+        if a.makespan != b.makespan || a.events_processed != b.events_processed {
+            return Err(format!(
+                "{s:?}: nondeterministic ({} vs {} events)",
+                a.events_processed, b.events_processed
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dlb_never_catastrophic() {
+    // DLB may add overhead but must never blow the makespan up by 2× on
+    // these workloads (it is allowed to be mildly worse — the paper's Fig 5
+    // left shows a no-benefit run).
+    forall(25, 0xCA7A, gen_scenario, |s| -> Result<(), String> {
+        let mut on = s.clone();
+        on.dlb = true;
+        let mut off = s.clone();
+        off.dlb = false;
+        let r_on = SimEngine::from_config(&config_of(&on), build_graph(&on))
+            .run()
+            .map_err(|e| format!("{e}"))?;
+        let r_off = SimEngine::from_config(&config_of(&off), build_graph(&off))
+            .run()
+            .map_err(|e| format!("{e}"))?;
+        if r_on.makespan > r_off.makespan * 2.0 + 0.05 {
+            return Err(format!(
+                "{s:?}: DLB catastrophic: on={} off={}",
+                r_on.makespan, r_off.makespan
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_workload_trace_monotone_time() {
+    forall(25, 0x7EA7, gen_scenario, |s| -> Result<(), String> {
+        let r = SimEngine::from_config(&config_of(s), build_graph(s))
+            .run()
+            .map_err(|e| format!("{e}"))?;
+        for (i, tr) in r.traces.per_process.iter().enumerate() {
+            let mut prev = f64::NEG_INFINITY;
+            for &(t, _) in tr.samples() {
+                if t < prev {
+                    return Err(format!("{s:?}: p{i} trace time went backwards"));
+                }
+                prev = t;
+            }
+        }
+        Ok(())
+    });
+}
