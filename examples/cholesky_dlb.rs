@@ -6,7 +6,7 @@
 
 use ductr::experiments::fig4;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ductr::util::error::Result<()> {
     let spec = &fig4::CASES[0]; // N=20000, P=10, 2×5
     println!("running {} (DES, S/R = 40, δ = 10 ms) ...", spec.name);
 

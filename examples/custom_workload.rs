@@ -15,7 +15,7 @@ use ductr::core::task::TaskKind;
 use ductr::sim::engine::SimEngine;
 use ductr::util::plot::{self, Series};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ductr::util::error::Result<()> {
     let p = 6;
 
     // --- build the graph: 48 map tasks on p0, tree-reduce across ranks ---
@@ -62,7 +62,7 @@ fn main() -> anyhow::Result<()> {
         cfg.validate()?;
         let r = SimEngine::from_config(&cfg, Arc::clone(&graph))
             .run()
-            .map_err(anyhow::Error::new)?;
+            .map_err(ductr::util::error::Error::new)?;
         println!(
             "dlb={dlb:<5}  makespan {:.4}s  utilization {:>5.1}%  {}",
             r.makespan,

@@ -9,7 +9,7 @@
 use ductr::cholesky;
 use ductr::config::{Config, Grid, Strategy};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ductr::util::error::Result<()> {
     // 6×6 blocks of 32×32 = a 192×192 SPD matrix, 2×2 process grid.
     let mut cfg = Config::default();
     cfg.processes = 4;

@@ -1,0 +1,77 @@
+//! Balancer-policy benchmark: makespan and migration volume for
+//! pairing vs stealing vs diffusion, swept over topology and process
+//! count on the Cholesky and random-DAG workloads (DES mode).
+//!
+//! Figure-regeneration style (like `fig4_cholesky_dlb`): each cell runs
+//! once under a fixed seed — the DES is deterministic, so repetition would
+//! measure nothing but itself — and records makespan plus migration count.
+//!
+//! Run: `cargo bench --bench policy_compare`
+
+use std::sync::Arc;
+
+use ductr::apps::rand_dag;
+use ductr::cholesky;
+use ductr::config::{Config, Grid, PolicyKind, TopologyKind};
+use ductr::sim::engine::SimEngine;
+use ductr::util::bench::{BenchConfig, Runner};
+
+fn cell_cfg(p: usize, grid: (usize, usize), policy: PolicyKind, topo: TopologyKind) -> Config {
+    let mut c = Config::default();
+    c.processes = p;
+    c.grid = Some(Grid::new(grid.0, grid.1));
+    c.nb = 10;
+    c.block = 128;
+    c.dlb_enabled = true;
+    c.policy = policy;
+    c.topology = topo;
+    c.wt = 3;
+    c.delta = 0.002;
+    c.seed = 7;
+    c.validate().expect("bench config");
+    c
+}
+
+fn main() {
+    let mut r = Runner::new("policy × topology × P", BenchConfig::macro_bench());
+
+    for &(p, grid) in &[(8usize, (2usize, 4usize)), (16, (4, 4))] {
+        for topo in [TopologyKind::Flat, TopologyKind::Torus] {
+            for policy in PolicyKind::ALL {
+                let cfg = cell_cfg(p, grid, policy, topo);
+                let chol = cholesky::run_sim(&cfg).expect("cholesky sim");
+                r.record(
+                    &format!("cholesky P={p} {topo} {policy} makespan"),
+                    chol.makespan,
+                    "s",
+                );
+                r.record(
+                    &format!("cholesky P={p} {topo} {policy} migrated"),
+                    chol.counters.tasks_exported as f64,
+                    "tasks",
+                );
+                assert!(chol.makespan > 0.0);
+
+                let g = rand_dag::build(p, rand_dag::DagParams::default(), 7);
+                let dag = SimEngine::from_config(&cfg, Arc::clone(&g))
+                    .run()
+                    .expect("rand_dag sim");
+                r.record(
+                    &format!("rand_dag P={p} {topo} {policy} makespan"),
+                    dag.makespan,
+                    "s",
+                );
+                r.record(
+                    &format!("rand_dag P={p} {topo} {policy} migrated"),
+                    dag.counters.tasks_exported as f64,
+                    "tasks",
+                );
+                assert!(dag.makespan > 0.0);
+            }
+        }
+    }
+
+    let dir = ductr::experiments::out_dir("compare");
+    r.write_csv(dir.join("policy_compare_bench.csv").to_str().expect("utf8")).expect("csv");
+    println!("policy_compare: OK (csv in {})", dir.display());
+}

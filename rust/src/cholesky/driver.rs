@@ -3,7 +3,8 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 
 use crate::config::Config;
 use crate::core::data::Payload;

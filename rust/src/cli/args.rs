@@ -7,9 +7,16 @@
 
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
-#[error("argument error: {0}")]
+#[derive(Debug)]
 pub struct ArgError(pub String);
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "argument error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]

@@ -1,14 +1,15 @@
 //! Subcommand dispatch for the `ductr` binary.
 
-use anyhow::{anyhow, bail, Context, Result};
+use ductr::util::error::{Context, Error, Result};
+use ductr::{anyhow, bail};
 
 use ductr::apps::{bag, gemv_chain, rand_dag};
 use ductr::cholesky;
 use ductr::cli::Args;
-use ductr::config::{Config, Grid, Mode, Strategy, Workload};
+use ductr::config::{Config, Grid, Mode, PolicyKind, Strategy, TopologyKind, Workload};
 use ductr::core::task::TaskKind;
 use ductr::dlb::threshold::calibrate_from_traces;
-use ductr::experiments::{ablation, fig1, fig3, fig4, fig5, sec4};
+use ductr::experiments::{ablation, compare, fig1, fig3, fig4, fig5, sec4};
 use ductr::metrics::csv;
 use ductr::runtime::{KernelLibrary, Manifest};
 use ductr::sim::engine::SimEngine;
@@ -23,7 +24,8 @@ USAGE:
 
 SUBCOMMANDS:
     run               run one workload (see flags below)
-    experiment <id>   regenerate a paper figure: fig1 | fig3 | fig4 | fig5 | sec4 | ablation | all
+    compare           balancer shoot-out: policy × topology × workload table
+    experiment <id>   regenerate a paper figure: fig1 | fig3 | fig4 | fig5 | sec4 | ablation | compare | all
     calibrate-wt      §6 calibration: run without DLB, print W_T = max w/2
     artifacts-check   compile + smoke-run every AOT kernel artifact
     help              this text
@@ -37,9 +39,11 @@ RUN FLAGS (defaults in parentheses):
     --nb N              blocks per matrix dimension (12)
     --block N           block size; real mode needs a matching artifact (64)
     --dlb on|off        dynamic load balancing (on)
+    --policy P          balancer: pairing|stealing|diffusion (pairing)
+    --topology T        interconnect: flat|ring|torus|cluster (flat)
     --strategy S        basic|equalizing|smart (basic)
     --wt N              busy threshold W_T (5)
-    --delta SECONDS     search back-off δ (0.010)
+    --delta SECONDS     search back-off / exchange period δ (0.010)
     --seed N            run seed (1)
     --trace FILE.csv    write per-process workload traces
     --set sec.key=val   raw config override (repeatable)
@@ -54,6 +58,7 @@ pub fn dispatch() -> Result<()> {
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
     match sub.as_str() {
         "run" => cmd_run(&mut args),
+        "compare" => cmd_compare(&mut args),
         "experiment" => cmd_experiment(&mut args),
         "calibrate-wt" => cmd_calibrate(&mut args),
         "artifacts-check" => cmd_artifacts_check(&mut args),
@@ -93,6 +98,12 @@ fn config_from_args(args: &mut Args) -> Result<Config> {
     if let Some(d) = args.get_str("dlb") {
         cfg.dlb_enabled = matches!(d.as_str(), "on" | "true" | "1");
     }
+    if let Some(p) = args.get_str("policy") {
+        cfg.policy = PolicyKind::parse(&p)?;
+    }
+    if let Some(t) = args.get_str("topology") {
+        cfg.topology = TopologyKind::parse(&t)?;
+    }
     if let Some(s) = args.get_str("strategy") {
         cfg.strategy = Strategy::parse(&s)?;
     }
@@ -117,12 +128,14 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     args.finish().map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
 
     println!(
-        "ductr run: workload={} mode={} P={} grid={} dlb={} strategy={} W_T={} δ={}s seed={}",
+        "ductr run: workload={} mode={} P={} grid={} dlb={} policy={} topology={} strategy={} W_T={} δ={}s seed={}",
         cfg.workload,
         cfg.mode,
         cfg.processes,
         cfg.effective_grid(),
         cfg.dlb_enabled,
+        cfg.policy,
+        cfg.topology,
         cfg.strategy,
         cfg.wt,
         cfg.delta,
@@ -173,7 +186,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
                 }
                 Workload::Cholesky => unreachable!(),
             };
-            let r = SimEngine::from_config(&cfg, graph).run().map_err(anyhow::Error::new)?;
+            let r = SimEngine::from_config(&cfg, graph).run().map_err(Error::new)?;
             println!("utilization={:.1}%", r.utilization * 100.0);
             (r.makespan, r.traces, r.counters)
         }
@@ -209,12 +222,32 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// The balancer shoot-out (also reachable as `experiment compare`).
+fn cmd_compare(args: &mut Args) -> Result<()> {
+    let quick = args.get_bool("quick")?;
+    let seed = args.get_u64("seed")?.unwrap_or(1);
+    let out = args.get_str("out");
+    args.finish().map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+    let r = compare::run(seed, quick)?;
+    print!("{}", r.render());
+    let dir = out
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| ductr::experiments::out_dir("compare"));
+    std::fs::create_dir_all(&dir).ok();
+    let path = dir.join("compare.csv");
+    r.write_csv(&path)?;
+    println!("table → {}", path.display());
+    Ok(())
+}
+
 fn cmd_experiment(args: &mut Args) -> Result<()> {
     let id = args
         .positional
         .first()
         .cloned()
-        .ok_or_else(|| anyhow!("experiment needs an id: fig1|fig3|fig4|fig5|sec4|ablation|all"))?;
+        .ok_or_else(|| {
+            anyhow!("experiment needs an id: fig1|fig3|fig4|fig5|sec4|ablation|compare|all")
+        })?;
     let quick = args.get_bool("quick")?;
     let out = args.get_str("out");
     let seed = args.get_u64("seed")?.unwrap_or(1);
@@ -295,13 +328,18 @@ fn cmd_experiment(args: &mut Args) -> Result<()> {
                     &r.csv_rows(),
                 )?;
             }
+            "compare" => {
+                let r = compare::run(seed, quick)?;
+                print!("{}", r.render());
+                r.write_csv(dir.join("compare.csv"))?;
+            }
             other => bail!("unknown experiment `{other}`"),
         }
         Ok(())
     };
 
     if id == "all" {
-        for e in ["fig1", "fig3", "fig4", "fig5", "sec4", "ablation"] {
+        for e in ["fig1", "fig3", "fig4", "fig5", "sec4", "ablation", "compare"] {
             println!("\n================ {e} ================");
             run_one(e)?;
         }

@@ -111,6 +111,88 @@ impl fmt::Display for Strategy {
     }
 }
 
+/// Which distributed balancer drives migration (the policy subsystem —
+/// `dlb::policy`).  The paper's protocol is `RandomPairing`; the other two
+/// are the strongest competitors from the literature, runnable in the same
+/// simulator and threaded runtime for head-to-head comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// The paper's randomized idle–busy pairing (§3).
+    RandomPairing,
+    /// Receiver-initiated work stealing: idle processes steal from random
+    /// victims with bounded retries (John et al. 2022).
+    WorkStealing,
+    /// First-order neighborhood diffusion over the network topology
+    /// (Demirel & Sbalzarini 2013).
+    Diffusion,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "pairing" | "random_pairing" => Ok(PolicyKind::RandomPairing),
+            "stealing" | "work_stealing" => Ok(PolicyKind::WorkStealing),
+            "diffusion" => Ok(PolicyKind::Diffusion),
+            other => Err(ConfigError::new(format!(
+                "unknown policy: {other} (pairing|stealing|diffusion)"
+            ))),
+        }
+    }
+
+    pub const ALL: [PolicyKind; 3] =
+        [PolicyKind::RandomPairing, PolicyKind::WorkStealing, PolicyKind::Diffusion];
+}
+
+impl fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            PolicyKind::RandomPairing => "pairing",
+            PolicyKind::WorkStealing => "stealing",
+            PolicyKind::Diffusion => "diffusion",
+        })
+    }
+}
+
+/// Interconnect shape selector; realized into `net::Topology` by
+/// [`Config::build_topology`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Uniform single-hop (the paper's implicit model).
+    Flat,
+    /// Bidirectional ring over all processes.
+    Ring,
+    /// 2D torus shaped by the effective process grid.
+    Torus,
+    /// Two-level cluster: `network.cluster_nodes` groups with a per-hop
+    /// inter-node penalty.
+    Cluster,
+}
+
+impl TopologyKind {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "flat" => Ok(TopologyKind::Flat),
+            "ring" => Ok(TopologyKind::Ring),
+            "torus" => Ok(TopologyKind::Torus),
+            "cluster" => Ok(TopologyKind::Cluster),
+            other => Err(ConfigError::new(format!(
+                "unknown topology: {other} (flat|ring|torus|cluster)"
+            ))),
+        }
+    }
+}
+
+impl fmt::Display for TopologyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            TopologyKind::Flat => "flat",
+            TopologyKind::Ring => "ring",
+            TopologyKind::Torus => "torus",
+            TopologyKind::Cluster => "cluster",
+        })
+    }
+}
+
 /// Process grid (pr × pc) for the block-cyclic distribution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Grid {
@@ -163,11 +245,18 @@ impl fmt::Display for Grid {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("config error: {msg}")]
+#[derive(Debug)]
 pub struct ConfigError {
     pub msg: String,
 }
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl ConfigError {
     pub fn new(msg: impl Into<String>) -> Self {
@@ -205,7 +294,11 @@ pub struct Config {
 
     // [dlb]
     pub dlb_enabled: bool,
+    /// Which balancer runs (pairing | stealing | diffusion).
+    pub policy: PolicyKind,
     pub strategy: Strategy,
+    /// Work stealing: steal half the victim's excess (true) or one task.
+    pub steal_half: bool,
     pub wt: usize,
     /// Hysteresis gap (paper §3's suggested alternative): processes with
     /// W_T < w ≤ W_T + gap are in a middle zone — neither busy nor idle —
@@ -224,6 +317,13 @@ pub struct Config {
     // [network]
     pub net_latency: f64,
     pub control_doubles: u64,
+    /// Interconnect shape (flat reproduces the paper's uniform network).
+    pub topology: TopologyKind,
+    /// Cluster topology: number of nodes (0 = derive from the squarest
+    /// factorization of `processes`).
+    pub cluster_nodes: usize,
+    /// Cluster topology: hops charged for an inter-node message.
+    pub inter_node_hops: u64,
 
     // [artifacts]
     pub artifacts_dir: String,
@@ -249,7 +349,9 @@ impl Default for Config {
             bag_tasks: 256,
             bag_skew: 2.0,
             dlb_enabled: true,
+            policy: PolicyKind::RandomPairing,
             strategy: Strategy::Basic,
+            steal_half: true,
             wt: 5,
             wt_gap: 0,
             delta: 0.010,
@@ -261,6 +363,9 @@ impl Default for Config {
             task_overhead: 5.0e-6,
             net_latency: 2.0e-6,
             control_doubles: 8,
+            topology: TopologyKind::Flat,
+            cluster_nodes: 0,
+            inter_node_hops: 4,
             artifacts_dir: "artifacts".to_string(),
             trace_enabled: true,
             trace_out: String::new(),
@@ -341,6 +446,8 @@ impl Config {
         let mut mode_s = self.mode.to_string();
         let mut workload_s = self.workload.to_string();
         let mut strategy_s = self.strategy.to_string();
+        let mut policy_s = self.policy.to_string();
+        let mut topology_s = self.topology.to_string();
         let mut grid_s = String::new();
 
         get_string(t, "run", "mode", &mut mode_s)?;
@@ -359,7 +466,9 @@ impl Config {
         get_f64(t, "bag", "skew", &mut self.bag_skew)?;
 
         get_bool(t, "dlb", "enabled", &mut self.dlb_enabled)?;
+        get_string(t, "dlb", "policy", &mut policy_s)?;
         get_string(t, "dlb", "strategy", &mut strategy_s)?;
+        get_bool(t, "dlb", "steal_half", &mut self.steal_half)?;
         get_usize(t, "dlb", "wt", &mut self.wt)?;
         get_usize(t, "dlb", "gap", &mut self.wt_gap)?;
         get_f64(t, "dlb", "delta", &mut self.delta)?;
@@ -373,6 +482,9 @@ impl Config {
 
         get_f64(t, "network", "latency", &mut self.net_latency)?;
         get_u64(t, "network", "control_doubles", &mut self.control_doubles)?;
+        get_string(t, "network", "topology", &mut topology_s)?;
+        get_usize(t, "network", "cluster_nodes", &mut self.cluster_nodes)?;
+        get_u64(t, "network", "inter_hops", &mut self.inter_node_hops)?;
 
         get_string(t, "artifacts", "dir", &mut self.artifacts_dir)?;
         get_bool(t, "trace", "enabled", &mut self.trace_enabled)?;
@@ -381,6 +493,8 @@ impl Config {
         self.mode = Mode::parse(&mode_s)?;
         self.workload = Workload::parse(&workload_s)?;
         self.strategy = Strategy::parse(&strategy_s)?;
+        self.policy = PolicyKind::parse(&policy_s)?;
+        self.topology = TopologyKind::parse(&topology_s)?;
         if !grid_s.is_empty() {
             self.grid = Some(Grid::parse(&grid_s)?);
         }
@@ -417,6 +531,38 @@ impl Config {
         self.nb * self.block
     }
 
+    /// Realize the configured interconnect shape over `processes` ranks.
+    ///
+    /// - `torus` uses the effective process grid as its dimensions;
+    /// - `cluster` groups ranks into `cluster_nodes` nodes (squarest
+    ///   factorization rows when 0/auto) with `inter_node_hops` per
+    ///   inter-node message.
+    pub fn build_topology(&self) -> crate::net::topology::Topology {
+        use crate::net::topology::Topology;
+        let p = self.processes;
+        match self.topology {
+            TopologyKind::Flat => Topology::Flat,
+            TopologyKind::Ring => Topology::Ring { len: p.max(1) },
+            TopologyKind::Torus => {
+                let g = self.effective_grid();
+                Topology::Torus { rows: g.rows, cols: g.cols }
+            }
+            TopologyKind::Cluster => {
+                let nodes = if self.cluster_nodes > 0 {
+                    self.cluster_nodes
+                } else {
+                    Grid::squarest(p).rows
+                };
+                let nodes = nodes.clamp(1, p.max(1));
+                Topology::Cluster {
+                    nodes,
+                    per_node: (p / nodes).max(1),
+                    inter_hops: self.inter_node_hops.max(1) as u32,
+                }
+            }
+        }
+    }
+
     pub fn validate(&self) -> Result<(), ConfigError> {
         if self.processes == 0 {
             return Err(ConfigError::new("run.processes must be ≥ 1"));
@@ -451,6 +597,18 @@ impl Config {
         }
         if self.net_latency < 0.0 {
             return Err(ConfigError::new("network.latency must be ≥ 0"));
+        }
+        if self.topology == TopologyKind::Cluster
+            && self.cluster_nodes > 0
+            && self.processes % self.cluster_nodes != 0
+        {
+            return Err(ConfigError::new(format!(
+                "network.cluster_nodes = {} does not divide run.processes = {}",
+                self.cluster_nodes, self.processes
+            )));
+        }
+        if self.inter_node_hops == 0 {
+            return Err(ConfigError::new("network.inter_hops must be ≥ 1"));
         }
         Ok(())
     }
@@ -555,5 +713,60 @@ mod tests {
     fn matrix_n_derived() {
         let c = Config::default();
         assert_eq!(c.matrix_n(), 12 * 64);
+    }
+
+    #[test]
+    fn policy_and_topology_parse_and_default() {
+        let c = Config::default();
+        assert_eq!(c.policy, PolicyKind::RandomPairing);
+        assert_eq!(c.topology, TopologyKind::Flat);
+        let doc = r#"
+            [dlb]
+            policy = "stealing"
+            steal_half = false
+            [network]
+            topology = "torus"
+        "#;
+        let c = Config::from_str_toml(doc).expect("parse");
+        assert_eq!(c.policy, PolicyKind::WorkStealing);
+        assert!(!c.steal_half);
+        assert_eq!(c.topology, TopologyKind::Torus);
+        assert!(PolicyKind::parse("nope").is_err());
+        assert!(TopologyKind::parse("mesh").is_err());
+    }
+
+    #[test]
+    fn build_topology_shapes() {
+        use crate::net::topology::Topology;
+        let mut c = Config::default();
+        c.processes = 12;
+        c.grid = Some(Grid::new(3, 4));
+        c.topology = TopologyKind::Torus;
+        assert_eq!(c.build_topology(), Topology::Torus { rows: 3, cols: 4 });
+        c.topology = TopologyKind::Ring;
+        assert_eq!(c.build_topology(), Topology::Ring { len: 12 });
+        c.topology = TopologyKind::Cluster;
+        c.cluster_nodes = 3;
+        assert_eq!(
+            c.build_topology(),
+            Topology::Cluster { nodes: 3, per_node: 4, inter_hops: 4 }
+        );
+        // auto node count: squarest(12) = 3x4 → 3 nodes
+        c.cluster_nodes = 0;
+        assert_eq!(
+            c.build_topology(),
+            Topology::Cluster { nodes: 3, per_node: 4, inter_hops: 4 }
+        );
+    }
+
+    #[test]
+    fn cluster_nodes_must_divide_processes() {
+        let mut c = Config::default();
+        c.processes = 10;
+        c.topology = TopologyKind::Cluster;
+        c.cluster_nodes = 3;
+        assert!(c.validate().is_err());
+        c.cluster_nodes = 5;
+        c.validate().expect("5 divides 10");
     }
 }

@@ -2,23 +2,31 @@
 //! clocks" (DESIGN.md §7.1).
 //!
 //! `ProcessState` contains everything a DuctTeip-style process does:
-//! dependency bookkeeping, the ready queue, data storage, the DLB pairing
-//! engine, export strategy invocation, and termination detection.  It is a
-//! *pure* state machine: inputs are `start`/`on_message`/`on_exec_complete`/
+//! dependency bookkeeping, the ready queue, data storage, balancer-policy
+//! driving, export mechanics, and termination detection.  It is a *pure*
+//! state machine: inputs are `start`/`on_message`/`on_exec_complete`/
 //! `on_tick` with an explicit `now`; outputs are `Effect`s.  The DES
 //! (`sim::engine`) and the threaded runtime (`runtime::threaded`) interpret
 //! the effects; neither contains any scheduling or DLB logic of its own.
+//!
+//! The *which/when/how much* of load balancing lives behind the
+//! [`BalancerPolicy`] trait (`dlb::policy`): this file only interprets
+//! [`PolicyAction`]s — sending the messages a policy asks for and running
+//! the export mechanics (input gathering, counters, `TaskExport` framing)
+//! that every policy shares.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::config::{Config, Strategy};
-use crate::dlb::pairing::{PairAction, Pairing, PairingConfig};
+use crate::config::{Config, PolicyKind, Strategy};
+use crate::dlb::pairing::PairingConfig;
+use crate::dlb::policy::{self, BalancerPolicy, PolicyAction, PolicyObs};
 use crate::dlb::strategy::{select_exports, PartnerInfo};
 use crate::dlb::{CostModel, PerfRecorder};
 use crate::metrics::counters::DlbCounters;
 use crate::metrics::trace::WorkloadTrace;
 use crate::net::message::{Envelope, MigratedTask, Msg, Role};
+use crate::net::topology::Topology;
 use crate::sched::queue::{ReadyQueue, ReadyTask};
 use crate::util::rng::Rng;
 
@@ -45,6 +53,12 @@ pub enum Effect {
 #[derive(Debug, Clone)]
 pub struct ProcessParams {
     pub dlb_enabled: bool,
+    /// Which balancer drives migration (pairing | stealing | diffusion).
+    pub policy: PolicyKind,
+    /// Work stealing: steal half the excess vs a single task.
+    pub steal_half: bool,
+    /// Interconnect shape — source of the diffusion neighbor sets.
+    pub topology: Topology,
     pub strategy: Strategy,
     pub wt: usize,
     /// §3's alternative model: a hysteresis gap above W_T.  Processes in
@@ -65,6 +79,9 @@ impl ProcessParams {
         cost.latency = c.net_latency;
         ProcessParams {
             dlb_enabled: c.dlb_enabled,
+            policy: c.policy,
+            steal_half: c.steal_half,
+            topology: c.build_topology(),
             strategy: c.strategy,
             wt: c.wt,
             wt_gap: c.wt_gap,
@@ -88,7 +105,8 @@ pub struct ProcessState {
     pub params: ProcessParams,
     pub queue: ReadyQueue,
     pub store: DataStore,
-    pub pairing: Pairing,
+    /// The pluggable balancer driving this process's migration decisions.
+    pub policy: Box<dyn BalancerPolicy>,
     pub perf: PerfRecorder,
     pub trace: WorkloadTrace,
     pub halted: bool,
@@ -107,8 +125,8 @@ pub struct ProcessState {
     executing: usize,
     /// Tasks exported and awaiting `ResultReturn`.
     exported: std::collections::HashSet<TaskId>,
-    /// Info about the peer we accepted (role/load/eta from their request).
-    accepted_peer: Option<(ProcessId, Role, PartnerInfo)>,
+    /// Topology neighbor set (diffusion's exchange partners).
+    neighbors: Vec<ProcessId>,
     rng: Rng,
     /// Rank-0 only: processes that reported completion.
     owners_done: usize,
@@ -129,7 +147,8 @@ impl ProcessState {
     ) -> Self {
         let mut root = Rng::new(seed);
         let rng = root.fork(me.0 as u64 + 1);
-        let pairing = Pairing::new(me, params.pairing);
+        let balancer = policy::build(params.policy, me, params.pairing, params.steal_half);
+        let neighbors = params.topology.neighbors(me, num_processes);
         let perf = PerfRecorder::new(params.cost);
         let pending_deps = vec![0u32; graph.num_tasks()];
         ProcessState {
@@ -139,7 +158,7 @@ impl ProcessState {
             params,
             queue: ReadyQueue::new(),
             store: DataStore::new(),
-            pairing,
+            policy: balancer,
             perf,
             trace: WorkloadTrace::new(),
             halted: false,
@@ -149,7 +168,7 @@ impl ProcessState {
             owned_remaining: 0,
             executing: 0,
             exported: Default::default(),
-            accepted_peer: None,
+            neighbors,
             rng,
             owners_done: 0,
             reported_done: false,
@@ -186,23 +205,11 @@ impl ProcessState {
     }
 
     pub fn counters(&self) -> &DlbCounters {
-        &self.pairing.counters
+        self.policy.counters()
     }
 
     pub fn tasks_done(&self) -> bool {
         self.owned_remaining == 0
-    }
-
-    /// Expected time to drain the current queue (the eta of §3's Smart
-    /// strategy): per-task estimates from the performance recorder.
-    fn queue_eta(&self) -> f64 {
-        self.queue
-            .iter()
-            .map(|rt| {
-                let n = self.graph.task(rt.task);
-                self.perf.exec_estimate(n.kind, n.flops)
-            })
-            .sum()
     }
 
     fn send(&self, effects: &mut Vec<Effect>, to: ProcessId, msg: Msg) {
@@ -293,9 +300,9 @@ impl ProcessState {
         self.maybe_exec(&mut effects);
 
         if self.params.dlb_enabled {
-            // stagger the first search uniformly over one δ
-            self.pairing.next_search_at = now + self.rng.next_f64() * self.params.pairing.delta;
-            effects.push(Effect::ScheduleTick { at: self.pairing.next_search_at });
+            // stagger the first balancer activity uniformly over one δ
+            self.policy.init(now, &mut self.rng);
+            self.dlb_poll(now, &mut effects);
         }
         effects
     }
@@ -454,79 +461,6 @@ impl ProcessState {
                 self.publish_completion(task, now, &mut effects);
             }
 
-            Msg::PairRequest { round, role, load, eta } => {
-                let my_role = self.role();
-                // Middle-zone processes (gap model, §3) sit out entirely:
-                // force a decline by reporting the same role as the asker.
-                let my_role = if self.in_middle_zone() { role } else { my_role };
-                let act = self.pairing.on_request(from, round, role, my_role, now);
-                match act {
-                    PairAction::SendAccept { to, round } => {
-                        self.accepted_peer =
-                            Some((from, role, PartnerInfo { load, eta }));
-                        let my_eta = self.queue_eta();
-                        let w = self.workload();
-                        self.send(
-                            &mut effects,
-                            to,
-                            Msg::PairAccept { round, load: w, eta: my_eta },
-                        );
-                    }
-                    PairAction::SendDecline { to, round } => {
-                        self.send(&mut effects, to, Msg::PairDecline { round });
-                    }
-                    _ => {}
-                }
-            }
-            Msg::PairAccept { round, load, eta } => {
-                match self.pairing.on_accept(from, round, now) {
-                    PairAction::Confirmed { partner, round, then_export } => {
-                        let my_eta = self.queue_eta();
-                        let w = self.workload();
-                        self.send(
-                            &mut effects,
-                            partner,
-                            Msg::PairConfirm { round, load: w, eta: my_eta },
-                        );
-                        if then_export {
-                            self.do_export(partner, round, PartnerInfo { load, eta }, now, &mut effects);
-                        }
-                    }
-                    PairAction::SendRelease { to, round } => {
-                        self.send(&mut effects, to, Msg::PairRelease { round });
-                    }
-                    _ => {}
-                }
-            }
-            Msg::PairDecline { round } => {
-                let _ = self.pairing.on_decline(round, now, &mut self.rng);
-            }
-            Msg::PairConfirm { round, load, eta } => {
-                let requester_is_busy = match self.accepted_peer {
-                    Some((p, r, _)) if p == from => r == Role::Busy,
-                    _ => false,
-                };
-                match self.pairing.on_confirm(from, round, requester_is_busy, now) {
-                    PairAction::BeginTransaction { partner, round, export } => {
-                        if export {
-                            // refresh partner info from the confirm
-                            self.do_export(
-                                partner,
-                                round,
-                                PartnerInfo { load, eta },
-                                now,
-                                &mut effects,
-                            );
-                        }
-                        // else: wait for their TaskExport
-                    }
-                    _ => {}
-                }
-            }
-            Msg::PairRelease { round } => {
-                let _ = self.pairing.on_release(from, round);
-                self.accepted_peer = None;
-            }
             Msg::TaskExport { round, tasks } => {
                 let n = tasks.len();
                 for mt in tasks {
@@ -539,14 +473,15 @@ impl ProcessState {
                     // tasks may propagate through intermediaries, §7)
                     self.queue.push(ReadyTask { task: mt.task, origin: mt.origin });
                 }
-                self.pairing.counters.tasks_received += n as u64;
+                self.policy.counters_mut().tasks_received += n as u64;
                 self.send(&mut effects, from, Msg::ExportAck { round, accepted: n });
-                self.finish_transaction(now);
+                self.drive_policy(
+                    PolicyEvent::Transfer { from, round, received: n },
+                    now,
+                    &mut effects,
+                );
                 self.record_trace(now);
                 self.maybe_exec(&mut effects);
-            }
-            Msg::ExportAck { .. } => {
-                self.finish_transaction(now);
             }
 
             Msg::OwnerDone { .. } => {
@@ -556,6 +491,14 @@ impl ProcessState {
                 self.halted = true;
                 effects.push(Effect::Halt);
             }
+
+            // Every remaining DLB control-plane message belongs to the
+            // balancer policy (pairing handshake, steal requests, load
+            // reports, export acks).
+            other => {
+                debug_assert!(other.is_dlb(), "unhandled non-DLB message {other:?}");
+                self.drive_policy(PolicyEvent::Message { from, msg: &other }, now, &mut effects);
+            }
         }
         if !self.halted {
             self.dlb_poll(now, &mut effects);
@@ -563,19 +506,65 @@ impl ProcessState {
         effects
     }
 
-    fn finish_transaction(&mut self, now: f64) {
-        if matches!(self.pairing.status, crate::dlb::pairing::PairStatus::InTransaction { .. }) {
-            self.pairing.transaction_done(now);
+    /// Build the policy's observation once, dispatch one event to it, and
+    /// interpret the resulting actions.  The single construction site for
+    /// the `PolicyObs` split borrow.
+    fn drive_policy(&mut self, ev: PolicyEvent<'_>, now: f64, effects: &mut Vec<Effect>) {
+        let workload = self.queue.workload();
+        let role = self.role();
+        let middle_zone = self.in_middle_zone();
+        let pinned = self.role_override.is_some();
+        let mut actions: Vec<PolicyAction> = Vec::new();
+        {
+            let mut obs = PolicyObs {
+                me: self.me,
+                num_processes: self.num_processes,
+                workload,
+                role,
+                middle_zone,
+                pinned,
+                wt: self.params.wt,
+                neighbors: &self.neighbors,
+                queue: &self.queue,
+                graph: &self.graph,
+                perf: &self.perf,
+                rng: &mut self.rng,
+            };
+            match ev {
+                PolicyEvent::Poll => self.policy.poll(&mut obs, now, &mut actions),
+                PolicyEvent::Message { from, msg } => {
+                    self.policy.on_message(&mut obs, from, msg, now, &mut actions);
+                }
+                PolicyEvent::Transfer { from, round, received } => {
+                    self.policy.on_transfer(&mut obs, from, round, received, now, &mut actions);
+                }
+            }
         }
-        self.accepted_peer = None;
-        // Paper §3: after a round (successful or not) wait δ before the next
-        // search — jittered to avoid lock-step retries.
-        let jitter = 0.5 + self.rng.next_f64();
-        self.pairing.next_search_at = now + self.params.pairing.delta * jitter;
+        self.apply_policy_actions(actions, now, effects);
     }
 
-    /// Run the export strategy and ship the selection.
-    fn do_export(
+    /// Interpret what the policy asked for.
+    fn apply_policy_actions(
+        &mut self,
+        actions: Vec<PolicyAction>,
+        now: f64,
+        effects: &mut Vec<Effect>,
+    ) {
+        for a in actions {
+            match a {
+                PolicyAction::Send { to, msg } => self.send(effects, to, msg),
+                PolicyAction::ExportSelected { to, round, partner } => {
+                    self.export_selected(to, round, partner, now, effects);
+                }
+                PolicyAction::ExportCount { to, round, count } => {
+                    self.export_count(to, round, count, now, effects);
+                }
+            }
+        }
+    }
+
+    /// Run the configured export strategy and ship the selection.
+    fn export_selected(
         &mut self,
         partner: ProcessId,
         round: u64,
@@ -593,8 +582,38 @@ impl ProcessState {
             info,
             &self.perf,
         );
+        self.ship_tasks(partner, round, picked, now, effects);
+    }
+
+    /// Ship exactly `count` tasks from the queue back, capped so the local
+    /// queue never drops below W_T (the shared invariant of §3).  Ships an
+    /// empty `TaskExport` when nothing can leave — protocol completion for
+    /// policies whose peer is blocked on a reply (work stealing).
+    fn export_count(
+        &mut self,
+        partner: ProcessId,
+        round: u64,
+        count: usize,
+        now: f64,
+        effects: &mut Vec<Effect>,
+    ) {
+        let cap = self.queue.workload().saturating_sub(self.params.wt);
+        let picked = self.queue.drain_back(count.min(cap), |_| true);
+        self.ship_tasks(partner, round, picked, now, effects);
+    }
+
+    /// Common export mechanics: gather inputs, count, frame, send.
+    fn ship_tasks(
+        &mut self,
+        partner: ProcessId,
+        round: u64,
+        picked: Vec<ReadyTask>,
+        now: f64,
+        effects: &mut Vec<Effect>,
+    ) {
+        let graph = Arc::clone(&self.graph);
         if picked.is_empty() {
-            self.pairing.counters.empty_transactions += 1;
+            self.policy.counters_mut().empty_transactions += 1;
         }
         let mut migrated = Vec::with_capacity(picked.len());
         for rt in &picked {
@@ -608,10 +627,10 @@ impl ProcessState {
                 .iter()
                 .map(|&a| (a, self.store.get(a).cloned().unwrap_or(Payload::Sim)))
                 .collect();
-            self.pairing.counters.migration_doubles += node.migration_doubles();
+            self.policy.counters_mut().migration_doubles += node.migration_doubles();
             migrated.push(MigratedTask { task: rt.task, origin: rt.origin, inputs });
         }
-        self.pairing.counters.tasks_exported += picked.len() as u64;
+        self.policy.counters_mut().tasks_exported += picked.len() as u64;
         self.send(effects, partner, Msg::TaskExport { round, tasks: migrated });
         self.record_trace(now);
     }
@@ -625,43 +644,32 @@ impl ProcessState {
         if self.halted {
             return effects;
         }
-        self.pairing.on_tick(now, &mut self.rng);
+        self.policy.on_tick(now, &mut self.rng);
         self.dlb_poll(now, &mut effects);
         effects
     }
 
-    /// Attempt to start a pairing round and schedule the next wakeup.
+    /// Give the policy a chance to act and schedule the next wakeup.
     fn dlb_poll(&mut self, now: f64, effects: &mut Vec<Effect>) {
         if !self.params.dlb_enabled || self.halted {
             return;
         }
-        let role = self.role();
-        // A busy process only searches if it actually has exportable tasks;
-        // an idle process always searches (it can receive work even when it
-        // owns nothing — that is the point of migration).  Middle-zone
-        // processes (gap model, §3) do not search at all.
-        let searchable = !self.in_middle_zone()
-            && match role {
-                Role::Busy => {
-                    self.role_override.is_some() || self.workload() > self.params.wt
-                }
-                Role::Idle => true,
-            };
-        if searchable {
-            let act = self.pairing.maybe_start_round(now, role, self.num_processes, &mut self.rng);
-            if let PairAction::SendRequests { round, role, targets } = act {
-                let eta = self.queue_eta();
-                let load = self.workload();
-                for t in targets {
-                    self.send(effects, t, Msg::PairRequest { round, role, load, eta });
-                }
-            }
-        }
-        if let Some(at) = self.pairing.next_wakeup() {
+        self.drive_policy(PolicyEvent::Poll, now, effects);
+        if let Some(at) = self.policy.next_wakeup() {
             let at = if at <= now { now + self.params.pairing.delta.max(1e-4) } else { at };
             effects.push(Effect::ScheduleTick { at });
         }
     }
+}
+
+/// One occasion to consult the balancer policy.
+enum PolicyEvent<'m> {
+    /// Timer tick / state change: chance to start a search or exchange.
+    Poll,
+    /// A DLB control-plane message arrived.
+    Message { from: ProcessId, msg: &'m Msg },
+    /// A `TaskExport` landed: `received` tasks already enqueued + acked.
+    Transfer { from: ProcessId, round: u64, received: usize },
 }
 
 #[cfg(test)]
@@ -758,7 +766,7 @@ mod tests {
         assert_eq!(ps.workload(), 2);
         // idle side acks → transaction closes, counters recorded
         let _ = ps.on_message(envelope(1, 0, Msg::ExportAck { round: 1, accepted: 7 }), 0.003);
-        assert!(ps.pairing.is_free());
+        assert!(!ps.policy.engaged());
         assert_eq!(ps.counters().tasks_exported, 7);
     }
 
@@ -879,6 +887,108 @@ mod tests {
         assert!(effects
             .iter()
             .all(|e| !matches!(e, Effect::Send(env) if env.msg.is_dlb())));
+    }
+
+    /// Same bag as `bag_state`, but under a chosen policy.
+    fn bag_state_policy(n: usize, wt: usize, policy: PolicyKind) -> ProcessState {
+        let mut cfg = Config::default();
+        cfg.dlb_enabled = true;
+        cfg.wt = wt;
+        cfg.policy = policy;
+        let params = ProcessParams::from_config(&cfg);
+        let mut b = GraphBuilder::new();
+        for _ in 0..n {
+            let d = b.data(ProcessId(0), 8, 8);
+            b.task(TaskKind::Synthetic, vec![], d, 1000, None);
+        }
+        ProcessState::new(ProcessId(0), 4, b.build(), params, 1)
+    }
+
+    #[test]
+    fn steal_request_on_busy_process_exports_half_excess() {
+        let mut ps = bag_state_policy(11, 2, PolicyKind::WorkStealing);
+        let _ = ps.start(0.0);
+        assert_eq!(ps.workload(), 10); // one executing
+        // idle thief p1 asks: excess = 8 → steal-half = 4
+        let effects = ps.on_message(
+            envelope(1, 0, Msg::StealRequest { round: 5, load: 0, eta: 0.0 }),
+            0.001,
+        );
+        let exported = effects.iter().find_map(|e| match e {
+            Effect::Send(env) => match &env.msg {
+                Msg::TaskExport { round, tasks } => Some((*round, tasks.len())),
+                _ => None,
+            },
+            _ => None,
+        });
+        assert_eq!(exported, Some((5, 4)), "steal-half of the excess: {effects:?}");
+        assert_eq!(ps.workload(), 6);
+        assert_eq!(ps.counters().tasks_exported, 4);
+    }
+
+    #[test]
+    fn steal_request_on_idle_process_gets_empty_export() {
+        let mut ps = bag_state_policy(2, 2, PolicyKind::WorkStealing);
+        let _ = ps.start(0.0);
+        assert_eq!(ps.workload(), 1); // idle
+        let effects = ps.on_message(
+            envelope(1, 0, Msg::StealRequest { round: 3, load: 0, eta: 0.0 }),
+            0.001,
+        );
+        let exported = effects.iter().find_map(|e| match e {
+            Effect::Send(env) => match &env.msg {
+                Msg::TaskExport { tasks, .. } => Some(tasks.len()),
+                _ => None,
+            },
+            _ => None,
+        });
+        assert_eq!(exported, Some(0), "denied steal still replies: {effects:?}");
+        assert_eq!(ps.workload(), 1, "nothing actually left");
+    }
+
+    #[test]
+    fn diffusion_reports_load_and_flows_to_lighter_neighbor() {
+        let mut ps = bag_state_policy(13, 2, PolicyKind::Diffusion);
+        let _ = ps.start(0.0);
+        assert_eq!(ps.workload(), 12);
+        // first exchange (report-only: no neighbor loads known yet) — the
+        // staggered start is < δ = 10 ms, so a 1 s tick certainly fires it
+        let effects = ps.on_tick(1.0);
+        let reports = effects
+            .iter()
+            .filter(|e| {
+                matches!(e, Effect::Send(env) if matches!(env.msg, Msg::LoadReport { load: 12 }))
+            })
+            .count();
+        assert_eq!(reports, 3, "one report per flat-topology neighbor: {effects:?}");
+        assert_eq!(ps.workload(), 12, "no flow without neighbor data");
+        // p1 reports empty right after (jitter keeps the next exchange
+        // ≥ 0.75δ away, so this cannot race it) …
+        let _ = ps.on_message(envelope(1, 0, Msg::LoadReport { load: 0 }), 1.001);
+        // … and the next period flows α·(12−0) = ⌊12/4⌋ = 3 tasks to p1
+        let effects = ps.on_tick(2.0);
+        let flowed = effects.iter().find_map(|e| match e {
+            Effect::Send(env) => match &env.msg {
+                Msg::TaskExport { tasks, .. } if env.to == ProcessId(1) => Some(tasks.len()),
+                _ => None,
+            },
+            _ => None,
+        });
+        assert_eq!(flowed, Some(3), "flow down the gradient: {effects:?}");
+        assert_eq!(ps.workload(), 9);
+        assert_eq!(ps.counters().tasks_exported, 3);
+    }
+
+    #[test]
+    fn all_policies_schedule_wakeups_from_start() {
+        for policy in PolicyKind::ALL {
+            let mut ps = bag_state_policy(6, 2, policy);
+            let effects = ps.start(0.0);
+            assert!(
+                effects.iter().any(|e| matches!(e, Effect::ScheduleTick { .. })),
+                "{policy} must arm its timer"
+            );
+        }
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! The paper's contribution: distributed dynamic load balancing.
 //!
+//! - `policy` — the pluggable balancer subsystem: the paper's random
+//!   pairing plus work stealing and topology diffusion, behind one trait;
 //! - `pairing` — the randomized idle–busy partner search (§3, Fig 1/3);
 //! - `strategy` — the Basic / Equalizing / Smart export policies (§3);
 //! - `costmodel` — the analytic migration cost model (§4);
@@ -9,10 +11,12 @@
 pub mod costmodel;
 pub mod pairing;
 pub mod perfmodel;
+pub mod policy;
 pub mod strategy;
 pub mod threshold;
 
 pub use costmodel::CostModel;
 pub use pairing::{PairAction, Pairing, PairingConfig, PairStatus};
 pub use perfmodel::PerfRecorder;
+pub use policy::{BalancerPolicy, Diffusion, PolicyAction, PolicyObs, RandomPairing, WorkStealing};
 pub use strategy::{select_exports, PartnerInfo};

@@ -1,0 +1,258 @@
+//! Neighborhood diffusion as a [`BalancerPolicy`].
+//!
+//! First-order diffusive load balancing (cf. "Balancing indivisible
+//! real-valued loads in arbitrary networks", Demirel & Sbalzarini 2013):
+//! every δ each process broadcasts its workload to its **topology
+//! neighbors** and pushes `⌊α·(w_i − w_j)⌋` tasks toward each neighbor `j`
+//! it believes is lighter, with the standard stable diffusion coefficient
+//! `α = 1/(deg + 1)`.
+//!
+//! Contrast with the other two policies: no handshake, no randomness in
+//! partner choice, and strictly local information — load crosses the
+//! machine only by flowing hop-by-hop through the topology, which is
+//! exactly the propagation weakness (§7 of the paper) that random pairing
+//! and stealing do not have.  On a flat topology the neighbor set is
+//! everyone and diffusion degenerates to global averaging.
+
+use std::collections::HashMap;
+
+use crate::core::ids::ProcessId;
+use crate::dlb::pairing::PairingConfig;
+use crate::metrics::counters::DlbCounters;
+use crate::net::message::Msg;
+use crate::util::rng::Rng;
+
+use super::{BalancerPolicy, PolicyAction, PolicyObs};
+
+pub struct Diffusion {
+    cfg: PairingConfig,
+    next_exchange_at: f64,
+    /// Latest load each neighbor reported (absent until first report).
+    neighbor_loads: HashMap<ProcessId, usize>,
+    next_round: u64,
+    pub counters: DlbCounters,
+}
+
+impl Diffusion {
+    pub fn new(me: ProcessId, cfg: PairingConfig) -> Self {
+        let _ = me; // per-process identity lives in the neighbor set
+        Diffusion {
+            cfg,
+            next_exchange_at: 0.0,
+            neighbor_loads: HashMap::new(),
+            next_round: 1,
+            counters: DlbCounters::default(),
+        }
+    }
+}
+
+impl BalancerPolicy for Diffusion {
+    fn name(&self) -> &'static str {
+        "diffusion"
+    }
+
+    fn init(&mut self, now: f64, rng: &mut Rng) {
+        // stagger exchanges uniformly over one period
+        self.next_exchange_at = now + rng.next_f64() * self.cfg.delta;
+    }
+
+    fn poll(&mut self, obs: &mut PolicyObs<'_>, now: f64, out: &mut Vec<PolicyAction>) {
+        if now < self.next_exchange_at || obs.middle_zone || obs.neighbors.is_empty() {
+            return;
+        }
+        // Slight jitter keeps neighbors from exchanging in global lock-step.
+        self.next_exchange_at = now + self.cfg.delta * (0.75 + 0.5 * obs.rng.next_f64());
+        self.counters.rounds += 1;
+
+        // 1. Tell every neighbor our load (their gradient input).
+        for &q in obs.neighbors {
+            self.counters.requests_sent += 1;
+            out.push(PolicyAction::Send { to: q, msg: Msg::LoadReport { load: obs.workload } });
+        }
+
+        // 2. Push flow down the gradient: α(w_i − w_j) toward each lighter
+        //    neighbor, bounded by our remaining excess above W_T.
+        let alpha = 1.0 / (obs.neighbors.len() as f64 + 1.0);
+        let mut budget = obs.workload.saturating_sub(obs.wt);
+        if budget == 0 {
+            return;
+        }
+        for &q in obs.neighbors {
+            let Some(&wj) = self.neighbor_loads.get(&q) else { continue };
+            if wj >= obs.workload {
+                continue;
+            }
+            let gap = obs.workload - wj;
+            // ⌊α·Δ⌋ with a minimum quantum of one task for any gradient
+            // ≥ 2: indivisible loads stall under pure fractional flow when
+            // α·Δ < 1 (high-degree flat topologies), cf. the integer
+            // schemes of Demirel & Sbalzarini.
+            let mut flow = (alpha * gap as f64).floor() as usize;
+            if flow == 0 && gap >= 2 {
+                flow = 1;
+            }
+            let flow = flow.min(budget);
+            if flow == 0 {
+                continue;
+            }
+            budget -= flow;
+            let round = self.next_round;
+            self.next_round += 1;
+            self.counters.transactions += 1;
+            // assume the tasks land: avoids re-sending to the same
+            // neighbor next period before its report catches up
+            self.neighbor_loads.insert(q, wj + flow);
+            out.push(PolicyAction::ExportCount { to: q, round, count: flow });
+            if budget == 0 {
+                break;
+            }
+        }
+    }
+
+    fn on_message(
+        &mut self,
+        _obs: &mut PolicyObs<'_>,
+        from: ProcessId,
+        msg: &Msg,
+        _now: f64,
+        _out: &mut Vec<PolicyAction>,
+    ) {
+        match *msg {
+            Msg::LoadReport { load } => {
+                self.counters.requests_received += 1;
+                self.neighbor_loads.insert(from, load);
+            }
+            // Transfers are fire-and-forget: the ack needs no bookkeeping.
+            Msg::ExportAck { .. } => {}
+            _ => {}
+        }
+    }
+
+    fn on_transfer(
+        &mut self,
+        _obs: &mut PolicyObs<'_>,
+        _from: ProcessId,
+        _round: u64,
+        received: usize,
+        _now: f64,
+        _out: &mut Vec<PolicyAction>,
+    ) {
+        // Count the transfer on the receiving side too, matching the
+        // both-participants convention of pairing and stealing — keeps the
+        // aggregated `transactions` column comparable across policies.
+        if received > 0 {
+            self.counters.transactions += 1;
+        }
+    }
+
+    fn on_tick(&mut self, _now: f64, _rng: &mut Rng) {}
+
+    fn next_wakeup(&self) -> Option<f64> {
+        Some(self.next_exchange_at)
+    }
+
+    fn engaged(&self) -> bool {
+        false
+    }
+
+    fn counters(&self) -> &DlbCounters {
+        &self.counters
+    }
+
+    fn counters_mut(&mut self) -> &mut DlbCounters {
+        &mut self.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::ObsBox;
+    use super::*;
+
+    fn difp(me: u32) -> Diffusion {
+        Diffusion::new(ProcessId(me), PairingConfig::default())
+    }
+
+    #[test]
+    fn first_exchange_reports_load_to_all_neighbors() {
+        let mut p = difp(0);
+        let mut ob = ObsBox::new(0, 5, 10, 2);
+        ob.neighbors = vec![ProcessId(1), ProcessId(4)]; // ring-ish
+        let mut out = Vec::new();
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        let reports = out
+            .iter()
+            .filter(|a| matches!(a, PolicyAction::Send { msg: Msg::LoadReport { load: 10 }, .. }))
+            .count();
+        assert_eq!(reports, 2);
+        // no exports yet: neighbor loads unknown
+        assert!(!out.iter().any(|a| matches!(a, PolicyAction::ExportCount { .. })));
+    }
+
+    #[test]
+    fn flows_down_the_gradient_after_reports() {
+        let mut p = difp(0);
+        let mut ob = ObsBox::new(0, 5, 12, 2);
+        ob.neighbors = vec![ProcessId(1), ProcessId(4)];
+        let mut out = Vec::new();
+        p.on_message(&mut ob.obs(), ProcessId(1), &Msg::LoadReport { load: 0 }, 0.0, &mut out);
+        p.on_message(&mut ob.obs(), ProcessId(4), &Msg::LoadReport { load: 12 }, 0.0, &mut out);
+        assert!(out.is_empty());
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        // α = 1/3; flow to p1 = ⌊12/3⌋ = 4; p4 is level — nothing
+        let exports: Vec<_> = out
+            .iter()
+            .filter_map(|a| match a {
+                PolicyAction::ExportCount { to, count, .. } => Some((*to, *count)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(exports, vec![(ProcessId(1), 4)]);
+    }
+
+    #[test]
+    fn respects_wt_budget() {
+        let mut p = difp(0);
+        let mut ob = ObsBox::new(0, 3, 6, 5); // only 1 above W_T
+        ob.neighbors = vec![ProcessId(1), ProcessId(2)];
+        let mut out = Vec::new();
+        p.on_message(&mut ob.obs(), ProcessId(1), &Msg::LoadReport { load: 0 }, 0.0, &mut out);
+        p.on_message(&mut ob.obs(), ProcessId(2), &Msg::LoadReport { load: 0 }, 0.0, &mut out);
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        let total: usize = out
+            .iter()
+            .filter_map(|a| match a {
+                PolicyAction::ExportCount { count, .. } => Some(*count),
+                _ => None,
+            })
+            .sum();
+        assert!(total <= 1, "must not dip below W_T: {out:?}");
+    }
+
+    #[test]
+    fn period_reschedules_with_jitter() {
+        let mut p = difp(0);
+        let mut ob = ObsBox::new(0, 3, 0, 2);
+        ob.neighbors = vec![ProcessId(1)];
+        let mut out = Vec::new();
+        p.poll(&mut ob.obs(), 1.0, &mut out);
+        let next = p.next_wakeup().expect("always periodic");
+        assert!(next > 1.0 && next <= 1.0 + 1.25 * p.cfg.delta + 1e-12, "{next}");
+        // nothing happens before the period elapses
+        out.clear();
+        p.poll(&mut ob.obs(), (1.0 + next) / 2.0, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn balanced_neighborhood_stays_quiet() {
+        let mut p = difp(0);
+        let mut ob = ObsBox::new(0, 3, 5, 2);
+        ob.neighbors = vec![ProcessId(1), ProcessId(2)];
+        let mut out = Vec::new();
+        p.on_message(&mut ob.obs(), ProcessId(1), &Msg::LoadReport { load: 5 }, 0.0, &mut out);
+        p.on_message(&mut ob.obs(), ProcessId(2), &Msg::LoadReport { load: 6 }, 0.0, &mut out);
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        assert!(!out.iter().any(|a| matches!(a, PolicyAction::ExportCount { .. })));
+    }
+}

@@ -1,0 +1,241 @@
+//! The pluggable balancer-policy subsystem.
+//!
+//! A [`BalancerPolicy`] abstracts "what does a process do about load each
+//! time something happens": when to search, whom to talk to, and how much
+//! work to move.  Three implementations compete inside the same
+//! deterministic simulator and threaded runtime:
+//!
+//! - [`RandomPairing`] — the paper's randomized idle–busy pairing (§3),
+//!   refactored out of `core::process` / `dlb::pairing` unchanged in
+//!   behavior;
+//! - [`WorkStealing`] — receiver-initiated stealing from uniformly random
+//!   victims with bounded retries (John et al. 2022);
+//! - [`Diffusion`] — periodic first-order load averaging restricted to
+//!   topology neighbors (Demirel & Sbalzarini 2013).
+//!
+//! The split of responsibilities keeps every policy a pure, unit-testable
+//! state machine, exactly like `dlb::pairing` always was:
+//!
+//! - the **policy** decides *when/whom/how much* and returns
+//!   [`PolicyAction`]s;
+//! - the **process state machine** (`core::process`) owns the queue, the
+//!   data store, and the export mechanics (gathering task inputs, counting
+//!   migrated doubles, acking transfers), and interprets the actions;
+//! - the **engines** (`sim::engine`, `runtime::threaded`) stay policy-blind:
+//!   they deliver messages and timer ticks.
+//!
+//! Task transfers are policy-neutral on the wire: every policy moves work
+//! with `Msg::TaskExport` / `Msg::ExportAck`, so migrated-task accounting,
+//! re-export of stolen tasks, and result return-to-origin work identically
+//! under all three.
+
+pub mod diffusion;
+pub mod random_pairing;
+pub mod work_stealing;
+
+pub use diffusion::Diffusion;
+pub use random_pairing::RandomPairing;
+pub use work_stealing::WorkStealing;
+
+use crate::config::PolicyKind;
+use crate::core::graph::TaskGraph;
+use crate::core::ids::ProcessId;
+use crate::dlb::pairing::PairingConfig;
+use crate::dlb::perfmodel::PerfRecorder;
+use crate::dlb::strategy::PartnerInfo;
+use crate::metrics::counters::DlbCounters;
+use crate::net::message::{Msg, Role};
+use crate::sched::queue::ReadyQueue;
+use crate::util::rng::Rng;
+
+/// What a policy sees each time it is consulted — a read-only view of the
+/// process plus its private RNG stream.  Cheap scalars are precomputed;
+/// the O(queue) eta is computed on demand via [`PolicyObs::queue_eta`]
+/// only when a policy actually reports it.
+pub struct PolicyObs<'a> {
+    pub me: ProcessId,
+    pub num_processes: usize,
+    /// Current workload w_i(t) (ready-queue length).
+    pub workload: usize,
+    /// Busy/idle classification (role-override resolved).
+    pub role: Role,
+    /// Gap-model middle zone (§3): the process sits out balancing entirely.
+    pub middle_zone: bool,
+    /// Role is pinned by an experiment (`role_override`) — protocol
+    /// micro-benchmarks drive searches regardless of queue state.
+    pub pinned: bool,
+    /// The busy threshold W_T.
+    pub wt: usize,
+    /// Topology neighbor set (diffusion's exchange partners).
+    pub neighbors: &'a [ProcessId],
+    /// The ready queue + lookups backing [`Self::queue_eta`].
+    pub queue: &'a ReadyQueue,
+    pub graph: &'a TaskGraph,
+    pub perf: &'a PerfRecorder,
+    pub rng: &'a mut Rng,
+}
+
+impl PolicyObs<'_> {
+    /// Expected time to drain the current queue (the eta of §3's Smart
+    /// strategy): per-task estimates from the performance recorder.  An
+    /// O(queue) scan — call only when the value is actually sent.
+    pub fn queue_eta(&self) -> f64 {
+        self.queue
+            .iter()
+            .map(|rt| {
+                let n = self.graph.task(rt.task);
+                self.perf.exec_estimate(n.kind, n.flops)
+            })
+            .sum()
+    }
+}
+
+/// Instructions a policy hands back to the process state machine.
+#[derive(Debug)]
+pub enum PolicyAction {
+    /// Transmit a control message.
+    Send { to: ProcessId, msg: Msg },
+    /// Run the configured export strategy (Basic/Equalizing/Smart) against
+    /// `partner` and ship the selection as `TaskExport { round }`.
+    ExportSelected { to: ProcessId, round: u64, partner: PartnerInfo },
+    /// Ship exactly `count` ready tasks from the queue back (capped so the
+    /// local queue never drops below W_T) as `TaskExport { round }`.
+    /// `count == 0` ships an empty export — protocol completion for a
+    /// denied steal.
+    ExportCount { to: ProcessId, round: u64, count: usize },
+}
+
+/// A distributed load-balancing policy: a pure state machine fed
+/// observations, messages and time; emitting actions.
+pub trait BalancerPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Called once at process start (stagger initial activity).
+    fn init(&mut self, now: f64, rng: &mut Rng);
+
+    /// Consulted after every state change and timer tick: start searches,
+    /// run periodic exchanges.
+    fn poll(&mut self, obs: &mut PolicyObs<'_>, now: f64, out: &mut Vec<PolicyAction>);
+
+    /// A DLB control-plane message arrived (handshake, steal request, load
+    /// report, export ack).  `TaskExport` is routed to [`Self::on_transfer`]
+    /// instead.
+    fn on_message(
+        &mut self,
+        obs: &mut PolicyObs<'_>,
+        from: ProcessId,
+        msg: &Msg,
+        now: f64,
+        out: &mut Vec<PolicyAction>,
+    );
+
+    /// A `TaskExport` from `from` was received: its `received` tasks are
+    /// already enqueued and acked.  Zero tasks is a denied steal / empty
+    /// transaction — the cue to retry or back off.
+    fn on_transfer(
+        &mut self,
+        obs: &mut PolicyObs<'_>,
+        from: ProcessId,
+        round: u64,
+        received: usize,
+        now: f64,
+        out: &mut Vec<PolicyAction>,
+    );
+
+    /// Deadline sweep, driven by timer ticks.
+    fn on_tick(&mut self, now: f64, rng: &mut Rng);
+
+    /// Earliest time `poll`/`on_tick` must run again, if any.
+    fn next_wakeup(&self) -> Option<f64>;
+
+    /// Mid-handshake or mid-transfer (diagnostics and tests).
+    fn engaged(&self) -> bool;
+
+    fn counters(&self) -> &DlbCounters;
+    fn counters_mut(&mut self) -> &mut DlbCounters;
+}
+
+/// Instantiate the configured policy for one process.
+pub fn build(
+    kind: PolicyKind,
+    me: ProcessId,
+    pairing: PairingConfig,
+    steal_half: bool,
+) -> Box<dyn BalancerPolicy> {
+    match kind {
+        PolicyKind::RandomPairing => Box::new(RandomPairing::new(me, pairing)),
+        PolicyKind::WorkStealing => Box::new(WorkStealing::new(me, pairing, steal_half)),
+        PolicyKind::Diffusion => Box::new(Diffusion::new(me, pairing)),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::task::TaskKind;
+    use crate::dlb::costmodel::CostModel;
+    use crate::sched::queue::ReadyTask;
+
+    /// A standalone observation for policy unit tests (no ProcessState):
+    /// owns a synthetic queue/graph of `workload` tasks.
+    pub struct ObsBox {
+        pub me: ProcessId,
+        pub num_processes: usize,
+        pub workload: usize,
+        pub role: Role,
+        pub middle_zone: bool,
+        pub pinned: bool,
+        pub wt: usize,
+        pub neighbors: Vec<ProcessId>,
+        pub rng: Rng,
+        queue: ReadyQueue,
+        graph: Arc<TaskGraph>,
+        perf: PerfRecorder,
+    }
+
+    impl ObsBox {
+        pub fn new(me: u32, p: usize, workload: usize, wt: usize) -> Self {
+            let mut gb = GraphBuilder::new();
+            let mut queue = ReadyQueue::new();
+            for _ in 0..workload {
+                let d = gb.data(ProcessId(me), 8, 8);
+                let t = gb.task(TaskKind::Synthetic, vec![], d, 1000, None);
+                queue.push(ReadyTask::home(t, ProcessId(me)));
+            }
+            ObsBox {
+                me: ProcessId(me),
+                num_processes: p,
+                workload,
+                role: if workload > wt { Role::Busy } else { Role::Idle },
+                middle_zone: false,
+                pinned: false,
+                wt,
+                neighbors: (0..p as u32).filter(|&i| i != me).map(ProcessId).collect(),
+                rng: Rng::new(42 + me as u64),
+                queue,
+                graph: gb.build(),
+                perf: PerfRecorder::new(CostModel::new(8.8e9, 2.2e8)),
+            }
+        }
+
+        pub fn obs(&mut self) -> PolicyObs<'_> {
+            PolicyObs {
+                me: self.me,
+                num_processes: self.num_processes,
+                workload: self.workload,
+                role: self.role,
+                middle_zone: self.middle_zone,
+                pinned: self.pinned,
+                wt: self.wt,
+                neighbors: &self.neighbors,
+                queue: &self.queue,
+                graph: &self.graph,
+                perf: &self.perf,
+                rng: &mut self.rng,
+            }
+        }
+    }
+}

@@ -1,0 +1,298 @@
+//! The paper's randomized idle–busy pairing (§3) as a [`BalancerPolicy`].
+//!
+//! This is a behavior-preserving refactor: the handshake state machine
+//! stays in [`crate::dlb::pairing::Pairing`] untouched; this wrapper is the
+//! glue that used to live inline in `core::process::ProcessState` —
+//! turning `PairAction`s into messages, remembering the accepted peer's
+//! role/load for the confirm, and re-arming the δ back-off after a
+//! transaction.
+
+use crate::core::ids::ProcessId;
+use crate::dlb::pairing::{PairAction, PairStatus, Pairing, PairingConfig};
+use crate::dlb::strategy::PartnerInfo;
+use crate::metrics::counters::DlbCounters;
+use crate::net::message::{Msg, Role};
+use crate::util::rng::Rng;
+
+use super::{BalancerPolicy, PolicyAction, PolicyObs};
+
+pub struct RandomPairing {
+    pairing: Pairing,
+    /// Info about the peer we accepted (role/load/eta from their request).
+    accepted_peer: Option<(ProcessId, Role, PartnerInfo)>,
+}
+
+impl RandomPairing {
+    pub fn new(me: ProcessId, cfg: PairingConfig) -> Self {
+        RandomPairing { pairing: Pairing::new(me, cfg), accepted_peer: None }
+    }
+
+    /// Paper §3: after a round (successful or not) wait δ before the next
+    /// search — jittered to avoid lock-step retries.
+    fn finish_transaction(&mut self, now: f64, rng: &mut Rng) {
+        if matches!(self.pairing.status, PairStatus::InTransaction { .. }) {
+            self.pairing.transaction_done(now);
+        }
+        self.accepted_peer = None;
+        let jitter = 0.5 + rng.next_f64();
+        self.pairing.next_search_at = now + self.pairing.cfg.delta * jitter;
+    }
+}
+
+impl BalancerPolicy for RandomPairing {
+    fn name(&self) -> &'static str {
+        "pairing"
+    }
+
+    fn init(&mut self, now: f64, rng: &mut Rng) {
+        // stagger the first search uniformly over one δ
+        self.pairing.next_search_at = now + rng.next_f64() * self.pairing.cfg.delta;
+    }
+
+    fn poll(&mut self, obs: &mut PolicyObs<'_>, now: f64, out: &mut Vec<PolicyAction>) {
+        // A busy process only searches if it actually has exportable tasks;
+        // an idle process always searches (it can receive work even when it
+        // owns nothing — that is the point of migration).  Middle-zone
+        // processes (gap model, §3) do not search at all.
+        let searchable = !obs.middle_zone
+            && match obs.role {
+                Role::Busy => obs.pinned || obs.workload > obs.wt,
+                Role::Idle => true,
+            };
+        if !searchable {
+            return;
+        }
+        let act = self.pairing.maybe_start_round(now, obs.role, obs.num_processes, obs.rng);
+        if let PairAction::SendRequests { round, role, targets } = act {
+            let load = obs.workload;
+            let eta = obs.queue_eta();
+            for t in targets {
+                out.push(PolicyAction::Send {
+                    to: t,
+                    msg: Msg::PairRequest { round, role, load, eta },
+                });
+            }
+        }
+    }
+
+    fn on_message(
+        &mut self,
+        obs: &mut PolicyObs<'_>,
+        from: ProcessId,
+        msg: &Msg,
+        now: f64,
+        out: &mut Vec<PolicyAction>,
+    ) {
+        match *msg {
+            Msg::PairRequest { round, role, load, eta } => {
+                // Middle-zone processes (gap model, §3) sit out entirely:
+                // force a decline by reporting the same role as the asker.
+                let my_role = if obs.middle_zone { role } else { obs.role };
+                match self.pairing.on_request(from, round, role, my_role, now) {
+                    PairAction::SendAccept { to, round } => {
+                        self.accepted_peer = Some((from, role, PartnerInfo { load, eta }));
+                        out.push(PolicyAction::Send {
+                            to,
+                            msg: Msg::PairAccept {
+                                round,
+                                load: obs.workload,
+                                eta: obs.queue_eta(),
+                            },
+                        });
+                    }
+                    PairAction::SendDecline { to, round } => {
+                        out.push(PolicyAction::Send { to, msg: Msg::PairDecline { round } });
+                    }
+                    _ => {}
+                }
+            }
+            Msg::PairAccept { round, load, eta } => {
+                match self.pairing.on_accept(from, round, now) {
+                    PairAction::Confirmed { partner, round, then_export } => {
+                        out.push(PolicyAction::Send {
+                            to: partner,
+                            msg: Msg::PairConfirm {
+                                round,
+                                load: obs.workload,
+                                eta: obs.queue_eta(),
+                            },
+                        });
+                        if then_export {
+                            out.push(PolicyAction::ExportSelected {
+                                to: partner,
+                                round,
+                                partner: PartnerInfo { load, eta },
+                            });
+                        }
+                    }
+                    PairAction::SendRelease { to, round } => {
+                        out.push(PolicyAction::Send { to, msg: Msg::PairRelease { round } });
+                    }
+                    _ => {}
+                }
+            }
+            Msg::PairDecline { round } => {
+                let _ = self.pairing.on_decline(round, now, obs.rng);
+            }
+            Msg::PairConfirm { round, load, eta } => {
+                let requester_is_busy = match self.accepted_peer {
+                    Some((p, r, _)) if p == from => r == Role::Busy,
+                    _ => false,
+                };
+                if let PairAction::BeginTransaction { partner, round, export } =
+                    self.pairing.on_confirm(from, round, requester_is_busy, now)
+                {
+                    if export {
+                        // refresh partner info from the confirm
+                        out.push(PolicyAction::ExportSelected {
+                            to: partner,
+                            round,
+                            partner: PartnerInfo { load, eta },
+                        });
+                    }
+                    // else: wait for their TaskExport
+                }
+            }
+            Msg::PairRelease { round } => {
+                let _ = self.pairing.on_release(from, round);
+                self.accepted_peer = None;
+            }
+            // Our export was acked: unlock and re-arm the back-off.
+            Msg::ExportAck { .. } => {
+                self.finish_transaction(now, obs.rng);
+            }
+            _ => {}
+        }
+    }
+
+    fn on_transfer(
+        &mut self,
+        obs: &mut PolicyObs<'_>,
+        _from: ProcessId,
+        _round: u64,
+        _received: usize,
+        now: f64,
+        _out: &mut Vec<PolicyAction>,
+    ) {
+        // tasks arrived: the transaction is complete on our side
+        self.finish_transaction(now, obs.rng);
+    }
+
+    fn on_tick(&mut self, now: f64, rng: &mut Rng) {
+        self.pairing.on_tick(now, rng);
+    }
+
+    fn next_wakeup(&self) -> Option<f64> {
+        self.pairing.next_wakeup()
+    }
+
+    fn engaged(&self) -> bool {
+        !self.pairing.is_free()
+    }
+
+    fn counters(&self) -> &DlbCounters {
+        &self.pairing.counters
+    }
+
+    fn counters_mut(&mut self) -> &mut DlbCounters {
+        &mut self.pairing.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::ObsBox;
+    use super::*;
+
+    #[test]
+    fn idle_search_emits_requests_with_load() {
+        let mut p = RandomPairing::new(ProcessId(0), PairingConfig::default());
+        let mut ob = ObsBox::new(0, 10, 0, 2); // idle
+        let mut out = Vec::new();
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        let reqs: Vec<_> = out
+            .iter()
+            .filter(|a| {
+                matches!(a, PolicyAction::Send { msg: Msg::PairRequest { role: Role::Idle, .. }, .. })
+            })
+            .collect();
+        assert_eq!(reqs.len(), 5, "five tries: {out:?}");
+        assert!(p.engaged());
+    }
+
+    #[test]
+    fn busy_below_threshold_does_not_search() {
+        let mut p = RandomPairing::new(ProcessId(0), PairingConfig::default());
+        let mut ob = ObsBox::new(0, 10, 1, 2);
+        ob.role = Role::Busy; // inconsistent role/pinned — not searchable
+        let mut out = Vec::new();
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        assert!(out.is_empty());
+        ob.pinned = true; // fig3-style pin → searches regardless of queue
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        assert!(!out.is_empty());
+    }
+
+    #[test]
+    fn request_accept_confirm_export_flow() {
+        // busy p1 receives an idle request, accepts, then exports on confirm
+        let mut p = RandomPairing::new(ProcessId(1), PairingConfig::default());
+        let mut ob = ObsBox::new(1, 4, 9, 2); // busy
+        let mut out = Vec::new();
+        p.on_message(
+            &mut ob.obs(),
+            ProcessId(0),
+            &Msg::PairRequest { round: 7, role: Role::Idle, load: 0, eta: 0.0 },
+            0.001,
+            &mut out,
+        );
+        assert!(matches!(
+            out.as_slice(),
+            [PolicyAction::Send { msg: Msg::PairAccept { round: 7, load: 9, .. }, .. }]
+        ));
+        out.clear();
+        p.on_message(
+            &mut ob.obs(),
+            ProcessId(0),
+            &Msg::PairConfirm { round: 7, load: 0, eta: 0.0 },
+            0.002,
+            &mut out,
+        );
+        assert!(
+            matches!(
+                out.as_slice(),
+                [PolicyAction::ExportSelected { round: 7, partner, .. }] if partner.load == 0
+            ),
+            "confirm from idle requester → we export: {out:?}"
+        );
+        // ack closes the transaction
+        out.clear();
+        p.on_message(
+            &mut ob.obs(),
+            ProcessId(0),
+            &Msg::ExportAck { round: 7, accepted: 3 },
+            0.003,
+            &mut out,
+        );
+        assert!(!p.engaged());
+    }
+
+    #[test]
+    fn middle_zone_declines() {
+        let mut p = RandomPairing::new(ProcessId(1), PairingConfig::default());
+        let mut ob = ObsBox::new(1, 4, 9, 2);
+        ob.middle_zone = true;
+        let mut out = Vec::new();
+        p.on_message(
+            &mut ob.obs(),
+            ProcessId(0),
+            &Msg::PairRequest { round: 3, role: Role::Idle, load: 0, eta: 0.0 },
+            0.001,
+            &mut out,
+        );
+        assert!(matches!(
+            out.as_slice(),
+            [PolicyAction::Send { msg: Msg::PairDecline { round: 3 }, .. }]
+        ));
+    }
+}

@@ -1,0 +1,358 @@
+//! Receiver-initiated work stealing as a [`BalancerPolicy`].
+//!
+//! The classic distributed-runtime competitor to the paper's pairing
+//! protocol (cf. "Distributed Work Stealing in a Task-Based Dataflow
+//! Runtime", John et al. 2022): an **idle** process picks a victim
+//! uniformly at random and asks for work; the victim answers immediately
+//! with a (possibly empty) `TaskExport` — no multi-message handshake, no
+//! soft-locks.  A non-empty reply refills the thief; an empty reply is a
+//! failed attempt.  Failed attempts retry immediately against fresh random
+//! victims up to `tries` times, then back off for a jittered δ (the same
+//! livelock-avoidance jitter as pairing).
+//!
+//! Steal amount: half the victim's excess above W_T (`steal-half`, the
+//! standard choice) or a single task (`steal-one`, `dlb.steal_half =
+//! false`).  The victim never dips below W_T — the shared invariant all
+//! policies inherit from the export mechanics in `core::process`.
+
+use crate::core::ids::ProcessId;
+use crate::dlb::pairing::PairingConfig;
+use crate::metrics::counters::DlbCounters;
+use crate::net::message::{Msg, Role};
+use crate::util::rng::Rng;
+
+use super::{BalancerPolicy, PolicyAction, PolicyObs};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum StealState {
+    /// No request in flight.
+    Free,
+    /// Waiting for a victim's reply.
+    Outstanding { round: u64, deadline: f64 },
+}
+
+pub struct WorkStealing {
+    cfg: PairingConfig,
+    steal_half: bool,
+    me: ProcessId,
+    state: StealState,
+    /// Earliest time the next steal attempt may start.
+    next_attempt_at: f64,
+    /// Immediate retries left before backing off for δ.
+    retries_left: usize,
+    next_round: u64,
+    pub counters: DlbCounters,
+}
+
+impl WorkStealing {
+    pub fn new(me: ProcessId, cfg: PairingConfig, steal_half: bool) -> Self {
+        let retries = cfg.tries.max(1);
+        WorkStealing {
+            cfg,
+            steal_half,
+            me,
+            state: StealState::Free,
+            next_attempt_at: 0.0,
+            retries_left: retries,
+            next_round: 1,
+            counters: DlbCounters::default(),
+        }
+    }
+
+    /// An attempt came back empty (or timed out): retry now or back off.
+    fn attempt_failed(&mut self, now: f64, rng: &mut Rng) {
+        self.state = StealState::Free;
+        self.counters.failed_rounds += 1;
+        if self.retries_left > 0 {
+            self.retries_left -= 1;
+            self.next_attempt_at = now;
+        } else {
+            self.retries_left = self.cfg.tries.max(1);
+            let jitter = 0.5 + rng.next_f64();
+            self.next_attempt_at = now + self.cfg.delta * jitter;
+        }
+    }
+
+    /// How much a busy victim with workload `w` hands over.
+    fn steal_amount(&self, w: usize, wt: usize) -> usize {
+        let excess = w.saturating_sub(wt);
+        if excess == 0 {
+            0
+        } else if self.steal_half {
+            (excess + 1) / 2
+        } else {
+            1
+        }
+    }
+}
+
+impl BalancerPolicy for WorkStealing {
+    fn name(&self) -> &'static str {
+        "stealing"
+    }
+
+    fn init(&mut self, now: f64, rng: &mut Rng) {
+        // stagger first attempts uniformly over one δ
+        self.next_attempt_at = now + rng.next_f64() * self.cfg.delta;
+    }
+
+    fn poll(&mut self, obs: &mut PolicyObs<'_>, now: f64, out: &mut Vec<PolicyAction>) {
+        if obs.middle_zone
+            || obs.role != Role::Idle
+            || self.state != StealState::Free
+            || now < self.next_attempt_at
+            || obs.num_processes < 2
+        {
+            return;
+        }
+        let victim = obs
+            .rng
+            .sample_distinct(obs.num_processes, 1, Some(self.me.idx()))
+            .into_iter()
+            .map(|i| ProcessId(i as u32))
+            .next();
+        let Some(victim) = victim else { return };
+        let round = self.next_round;
+        self.next_round += 1;
+        self.counters.rounds += 1;
+        self.counters.requests_sent += 1;
+        self.state = StealState::Outstanding { round, deadline: now + self.cfg.confirm_timeout };
+        out.push(PolicyAction::Send {
+            to: victim,
+            msg: Msg::StealRequest { round, load: obs.workload, eta: obs.queue_eta() },
+        });
+    }
+
+    fn on_message(
+        &mut self,
+        obs: &mut PolicyObs<'_>,
+        from: ProcessId,
+        msg: &Msg,
+        now: f64,
+        out: &mut Vec<PolicyAction>,
+    ) {
+        match *msg {
+            Msg::StealRequest { round, .. } => {
+                self.counters.requests_received += 1;
+                let grant = if obs.middle_zone || obs.role != Role::Busy {
+                    0
+                } else {
+                    self.steal_amount(obs.workload, obs.wt)
+                };
+                if grant > 0 {
+                    self.counters.accepts_sent += 1;
+                    self.counters.transactions += 1;
+                } else {
+                    self.counters.declines_sent += 1;
+                }
+                // Always reply, even empty: the thief is blocked on us.
+                out.push(PolicyAction::ExportCount { to: from, round, count: grant });
+            }
+            // Victim side: transfer acked; stateless, nothing to unlock.
+            Msg::ExportAck { .. } => {}
+            _ => {}
+        }
+    }
+
+    /// Thief side: our steal came back (tasks already enqueued).
+    fn on_transfer(
+        &mut self,
+        obs: &mut PolicyObs<'_>,
+        _from: ProcessId,
+        round: u64,
+        received: usize,
+        now: f64,
+        _out: &mut Vec<PolicyAction>,
+    ) {
+        if let StealState::Outstanding { round: r, .. } = self.state {
+            if r == round {
+                if received == 0 {
+                    self.attempt_failed(now, obs.rng);
+                } else {
+                    self.state = StealState::Free;
+                    self.counters.transactions += 1;
+                    self.retries_left = self.cfg.tries.max(1);
+                    self.next_attempt_at = now;
+                }
+            }
+        }
+    }
+
+    fn on_tick(&mut self, now: f64, rng: &mut Rng) {
+        if let StealState::Outstanding { deadline, .. } = self.state {
+            if now >= deadline {
+                // victim vanished (shutdown race): count and move on
+                self.counters.confirm_timeouts += 1;
+                self.attempt_failed(now, rng);
+            }
+        }
+    }
+
+    fn next_wakeup(&self) -> Option<f64> {
+        match self.state {
+            StealState::Free => Some(self.next_attempt_at),
+            StealState::Outstanding { deadline, .. } => Some(deadline),
+        }
+    }
+
+    fn engaged(&self) -> bool {
+        self.state != StealState::Free
+    }
+
+    fn counters(&self) -> &DlbCounters {
+        &self.counters
+    }
+
+    fn counters_mut(&mut self) -> &mut DlbCounters {
+        &mut self.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::ObsBox;
+    use super::*;
+
+    fn ws(me: u32, half: bool) -> WorkStealing {
+        WorkStealing::new(ProcessId(me), PairingConfig::default(), half)
+    }
+
+    #[test]
+    fn idle_thief_sends_one_request() {
+        let mut p = ws(0, true);
+        let mut ob = ObsBox::new(0, 8, 0, 2); // idle
+        let mut out = Vec::new();
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        assert_eq!(out.len(), 1);
+        match &out[0] {
+            PolicyAction::Send { to, msg: Msg::StealRequest { round, .. } } => {
+                assert_ne!(*to, ProcessId(0), "never self");
+                assert_eq!(*round, 1);
+            }
+            other => panic!("expected StealRequest, got {other:?}"),
+        }
+        assert!(p.engaged());
+        // no second request while outstanding
+        out.clear();
+        p.poll(&mut ob.obs(), 0.001, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn busy_process_never_steals() {
+        let mut p = ws(0, true);
+        let mut ob = ObsBox::new(0, 8, 9, 2); // busy
+        let mut out = Vec::new();
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn victim_grants_half_the_excess() {
+        let mut p = ws(1, true);
+        let mut ob = ObsBox::new(1, 8, 12, 2); // excess 10 → grant 5
+        let mut out = Vec::new();
+        p.on_message(
+            &mut ob.obs(),
+            ProcessId(0),
+            &Msg::StealRequest { round: 9, load: 0, eta: 0.0 },
+            0.001,
+            &mut out,
+        );
+        assert!(matches!(
+            out.as_slice(),
+            [PolicyAction::ExportCount { to: ProcessId(0), round: 9, count: 5 }]
+        ));
+        assert_eq!(p.counters.transactions, 1);
+    }
+
+    #[test]
+    fn steal_one_mode_grants_single_task() {
+        let mut p = ws(1, false);
+        let mut ob = ObsBox::new(1, 8, 12, 2);
+        let mut out = Vec::new();
+        p.on_message(
+            &mut ob.obs(),
+            ProcessId(0),
+            &Msg::StealRequest { round: 1, load: 0, eta: 0.0 },
+            0.001,
+            &mut out,
+        );
+        assert!(matches!(out.as_slice(), [PolicyAction::ExportCount { count: 1, .. }]));
+    }
+
+    #[test]
+    fn idle_victim_replies_empty() {
+        let mut p = ws(1, true);
+        let mut ob = ObsBox::new(1, 8, 1, 2); // idle victim
+        let mut out = Vec::new();
+        p.on_message(
+            &mut ob.obs(),
+            ProcessId(0),
+            &Msg::StealRequest { round: 2, load: 0, eta: 0.0 },
+            0.001,
+            &mut out,
+        );
+        assert!(matches!(out.as_slice(), [PolicyAction::ExportCount { count: 0, .. }]));
+        assert_eq!(p.counters.declines_sent, 1);
+    }
+
+    #[test]
+    fn empty_reply_retries_then_backs_off() {
+        let mut p = ws(0, true);
+        let mut ob = ObsBox::new(0, 8, 0, 2);
+        let tries = p.cfg.tries;
+        let mut failures = 0;
+        // drive attempts until the policy backs off past `now`
+        let now = 0.01;
+        loop {
+            let mut out = Vec::new();
+            p.poll(&mut ob.obs(), now, &mut out);
+            if out.is_empty() {
+                break;
+            }
+            let round = match &out[0] {
+                PolicyAction::Send { msg: Msg::StealRequest { round, .. }, .. } => *round,
+                other => panic!("{other:?}"),
+            };
+            p.on_transfer(&mut ob.obs(), ProcessId(1), round, 0, now, &mut out);
+            failures += 1;
+            assert!(failures < 100, "no backoff");
+        }
+        // tries immediate retries + the initial attempt, then δ back-off
+        assert_eq!(failures, tries + 1);
+        assert!(p.next_attempt_at > now);
+        assert_eq!(p.counters.failed_rounds as usize, failures);
+    }
+
+    #[test]
+    fn timeout_counts_and_frees() {
+        let mut p = ws(0, true);
+        let mut ob = ObsBox::new(0, 8, 0, 2);
+        let mut out = Vec::new();
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        assert!(p.engaged());
+        let mut rng = Rng::new(7);
+        p.on_tick(0.001, &mut rng); // before deadline
+        assert!(p.engaged());
+        p.on_tick(10.0, &mut rng); // past deadline
+        assert!(!p.engaged());
+        assert_eq!(p.counters.confirm_timeouts, 1);
+    }
+
+    #[test]
+    fn successful_steal_resets_retries() {
+        let mut p = ws(0, true);
+        let mut ob = ObsBox::new(0, 8, 0, 2);
+        let mut out = Vec::new();
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        let round = match &out[0] {
+            PolicyAction::Send { msg: Msg::StealRequest { round, .. }, .. } => *round,
+            other => panic!("{other:?}"),
+        };
+        p.on_transfer(&mut ob.obs(), ProcessId(1), round, 3, 0.002, &mut out);
+        assert!(!p.engaged());
+        assert_eq!(p.counters.transactions, 1);
+        assert_eq!(p.retries_left, p.cfg.tries);
+    }
+}

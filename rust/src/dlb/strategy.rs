@@ -270,6 +270,93 @@ mod tests {
     }
 
     #[test]
+    fn wt_zero_basic_empties_the_queue() {
+        // W_T = 0: the busy side may hand over everything it has queued
+        let (g, mut q) = setup(6, TaskKind::Gemm, 64);
+        let got = select_exports(
+            Strategy::Basic,
+            ProcessId(0),
+            &mut q,
+            &g,
+            0,
+            PartnerInfo { load: 0, eta: 0.0 },
+            &perf(),
+        );
+        assert_eq!(got.len(), 6);
+        assert_eq!(q.workload(), 0);
+    }
+
+    #[test]
+    fn wt_zero_empty_queue_exports_nothing() {
+        // w = 0 = W_T: nothing to give, and no underflow panic
+        let (g, mut q) = setup(0, TaskKind::Gemm, 64);
+        let got = select_exports(
+            Strategy::Basic,
+            ProcessId(0),
+            &mut q,
+            &g,
+            0,
+            PartnerInfo { load: 0, eta: 0.0 },
+            &perf(),
+        );
+        assert!(got.is_empty());
+        let (g, mut q) = setup(3, TaskKind::Gemm, 64);
+        let got = select_exports(
+            Strategy::Equalizing,
+            ProcessId(0),
+            &mut q,
+            &g,
+            0,
+            PartnerInfo { load: 3, eta: 0.0 },
+            &perf(),
+        );
+        assert!(got.is_empty(), "equal loads at wt=0 → no transfer: {got:?}");
+        assert_eq!(q.workload(), 3);
+    }
+
+    #[test]
+    fn equalizing_partner_load_at_or_above_own_sends_nothing() {
+        // partner as loaded as us (or more): target ≥ w → zero export,
+        // even though w is above W_T
+        for partner_load in [12usize, 20, 100] {
+            let (g, mut q) = setup(12, TaskKind::Gemm, 64);
+            let got = select_exports(
+                Strategy::Equalizing,
+                ProcessId(0),
+                &mut q,
+                &g,
+                2,
+                PartnerInfo { load: partner_load, eta: 0.0 },
+                &perf(),
+            );
+            assert!(got.is_empty(), "partner load {partner_load} must yield nothing: {got:?}");
+            assert_eq!(q.workload(), 12, "queue untouched");
+        }
+    }
+
+    #[test]
+    fn smart_rejecting_every_candidate_leaves_queue_intact() {
+        // low-intensity gemv with a long remote eta: every per-task
+        // prediction says "stay local" — the predicate must restore the
+        // queue in its original order with nothing exported
+        let (g, mut q) = setup_gemv(7, 256);
+        let before: Vec<_> = q.iter().map(|rt| rt.task).collect();
+        let got = select_exports(
+            Strategy::Smart,
+            ProcessId(0),
+            &mut q,
+            &g,
+            2,
+            PartnerInfo { load: 50, eta: 10.0 },
+            &perf(),
+        );
+        assert!(got.is_empty(), "hostile partner eta must reject all: {got:?}");
+        assert_eq!(q.workload(), 7);
+        let after: Vec<_> = q.iter().map(|rt| rt.task).collect();
+        assert_eq!(before, after, "rejected scan must not reorder the queue");
+    }
+
+    #[test]
     fn migrated_tasks_reexport_preserving_origin() {
         // §7: load must be able to propagate through intermediaries, so
         // stolen tasks are re-exportable — with their origin intact.

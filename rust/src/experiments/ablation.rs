@@ -44,7 +44,7 @@ fn base_cfg(seed: u64) -> Config {
     c
 }
 
-fn run_row(label: String, cfg: &Config, baseline: f64) -> anyhow::Result<Row> {
+fn run_row(label: String, cfg: &Config, baseline: f64) -> crate::util::error::Result<Row> {
     let r = run_sim(cfg)?;
     Ok(Row {
         label,
@@ -57,7 +57,7 @@ fn run_row(label: String, cfg: &Config, baseline: f64) -> anyhow::Result<Row> {
 }
 
 /// Run the full ablation suite.
-pub fn run(seed: u64) -> anyhow::Result<AblationResult> {
+pub fn run(seed: u64) -> crate::util::error::Result<AblationResult> {
     let mut off = base_cfg(seed);
     off.dlb_enabled = false;
     let baseline = run_sim(&off)?.makespan;

@@ -1,0 +1,252 @@
+//! Head-to-head balancer comparison: policy × topology × workload.
+//!
+//! The question the policy subsystem exists to answer: how do the paper's
+//! randomized pairing, classic work stealing, and neighborhood diffusion
+//! compare — on the same workloads, the same cost model, the same
+//! deterministic simulator — as the interconnect gets less flat?
+//!
+//! For every (workload, topology) cell the experiment runs a DLB-off
+//! baseline plus one run per policy, reporting makespan, improvement over
+//! the baseline, migrated-task counts and control-message volume.
+//! Everything is DES mode under one seed: rerunning with the same seed
+//! reproduces the table bit-for-bit.
+
+use std::sync::Arc;
+
+use crate::apps::rand_dag;
+use crate::cholesky;
+use crate::config::{Config, Grid, PolicyKind, TopologyKind};
+use crate::metrics::counters::DlbCounters;
+use crate::sim::engine::SimEngine;
+use crate::util::error::{Context, Result};
+
+/// Workloads under comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompareWorkload {
+    Cholesky,
+    RandDag,
+}
+
+impl CompareWorkload {
+    pub const ALL: [CompareWorkload; 2] = [CompareWorkload::Cholesky, CompareWorkload::RandDag];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            CompareWorkload::Cholesky => "cholesky",
+            CompareWorkload::RandDag => "rand_dag",
+        }
+    }
+}
+
+/// Topologies under comparison (flat = the paper's network, torus and
+/// cluster = the shapes where locality starts to matter).
+pub const TOPOLOGIES: [TopologyKind; 3] =
+    [TopologyKind::Flat, TopologyKind::Torus, TopologyKind::Cluster];
+
+/// One run's outcome.
+#[derive(Debug, Clone)]
+pub struct CompareRow {
+    pub workload: CompareWorkload,
+    pub topology: TopologyKind,
+    /// `None` = the DLB-off baseline.
+    pub policy: Option<PolicyKind>,
+    pub makespan: f64,
+    pub counters: DlbCounters,
+}
+
+impl CompareRow {
+    pub fn policy_label(&self) -> String {
+        match self.policy {
+            None => "off".to_string(),
+            Some(p) => p.to_string(),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct CompareResult {
+    pub rows: Vec<CompareRow>,
+    pub seed: u64,
+    pub processes: usize,
+}
+
+fn base_config(w: CompareWorkload, topo: TopologyKind, seed: u64, quick: bool) -> Config {
+    let mut c = Config::default();
+    c.processes = 10;
+    c.grid = Some(Grid::new(2, 5));
+    c.seed = seed;
+    c.topology = topo;
+    c.wt = 3;
+    c.delta = 0.002;
+    match w {
+        CompareWorkload::Cholesky => {
+            c.nb = if quick { 8 } else { 12 };
+            c.block = if quick { 128 } else { 256 };
+        }
+        CompareWorkload::RandDag => {}
+    }
+    c.validate().expect("compare config");
+    c
+}
+
+fn run_one(w: CompareWorkload, cfg: &Config) -> Result<(f64, DlbCounters)> {
+    match w {
+        CompareWorkload::Cholesky => {
+            let r = cholesky::run_sim(cfg)
+                .with_context(|| format!("cholesky on {}", cfg.topology))?;
+            Ok((r.makespan, r.counters))
+        }
+        CompareWorkload::RandDag => {
+            let mut params = rand_dag::DagParams::default();
+            params.layers = 8;
+            params.width = 24;
+            let g = rand_dag::build(cfg.processes, params, cfg.seed);
+            let r = SimEngine::from_config(cfg, Arc::clone(&g))
+                .run()
+                .map_err(crate::util::error::Error::new)?;
+            Ok((r.makespan, r.counters))
+        }
+    }
+}
+
+/// Run the full sweep: 2 workloads × 3 topologies × (off + 3 policies).
+pub fn run(seed: u64, quick: bool) -> Result<CompareResult> {
+    let mut rows = Vec::new();
+    for w in CompareWorkload::ALL {
+        for topo in TOPOLOGIES {
+            let mut cfg = base_config(w, topo, seed, quick);
+            cfg.dlb_enabled = false;
+            let (makespan, counters) = run_one(w, &cfg)?;
+            rows.push(CompareRow { workload: w, topology: topo, policy: None, makespan, counters });
+            for policy in PolicyKind::ALL {
+                let mut cfg = base_config(w, topo, seed, quick);
+                cfg.dlb_enabled = true;
+                cfg.policy = policy;
+                let (makespan, counters) = run_one(w, &cfg)?;
+                rows.push(CompareRow {
+                    workload: w,
+                    topology: topo,
+                    policy: Some(policy),
+                    makespan,
+                    counters,
+                });
+            }
+        }
+    }
+    Ok(CompareResult { rows, seed, processes: 10 })
+}
+
+impl CompareResult {
+    /// Baseline (DLB-off) makespan for a cell.
+    fn baseline(&self, w: CompareWorkload, topo: TopologyKind) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|r| r.workload == w && r.topology == topo && r.policy.is_none())
+            .map(|r| r.makespan)
+    }
+
+    /// ASCII quick-look table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "balancer comparison — P = {}, seed = {} (DES, deterministic)\n",
+            self.processes, self.seed
+        ));
+        out.push_str(&format!(
+            "{:<10} {:<12} {:<10} {:>12} {:>8} {:>10} {:>10}\n",
+            "workload", "topology", "policy", "makespan_s", "vs_off", "migrated", "ctrl_msgs"
+        ));
+        for r in &self.rows {
+            let vs = match (r.policy, self.baseline(r.workload, r.topology)) {
+                (Some(_), Some(base)) if base > 0.0 => {
+                    format!("{:+.1}%", (base - r.makespan) / base * 100.0)
+                }
+                _ => "—".to_string(),
+            };
+            out.push_str(&format!(
+                "{:<10} {:<12} {:<10} {:>12.6} {:>8} {:>10} {:>10}\n",
+                r.workload.label(),
+                r.topology.to_string(),
+                r.policy_label(),
+                r.makespan,
+                vs,
+                r.counters.tasks_exported,
+                r.counters.requests_sent,
+            ));
+        }
+        out
+    }
+
+    /// CSV with readable labels (policy/topology as strings).
+    pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "workload,topology,policy,makespan,migrated,received,transactions,requests")?;
+        for r in &self.rows {
+            writeln!(
+                f,
+                "{},{},{},{},{},{},{},{}",
+                r.workload.label(),
+                r.topology,
+                r.policy_label(),
+                r.makespan,
+                r.counters.tasks_exported,
+                r.counters.tasks_received,
+                r.counters.transactions,
+                r.counters.requests_sent,
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_compare_covers_the_grid_and_is_deterministic() {
+        let a = run(3, true).expect("run a");
+        // 2 workloads × 3 topologies × (1 baseline + 3 policies)
+        assert_eq!(a.rows.len(), 2 * 3 * 4);
+        for r in &a.rows {
+            assert!(r.makespan > 0.0, "{r:?}");
+            if r.policy.is_none() {
+                assert_eq!(r.counters.tasks_exported, 0, "baseline must not migrate");
+            }
+        }
+        let b = run(3, true).expect("run b");
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.makespan, y.makespan, "seeded rerun must reproduce");
+            assert_eq!(x.counters, y.counters);
+        }
+    }
+
+    #[test]
+    fn every_policy_migrates_on_some_cell() {
+        let r = run(5, true).expect("run");
+        for policy in PolicyKind::ALL {
+            let moved: u64 = r
+                .rows
+                .iter()
+                .filter(|row| row.policy == Some(policy))
+                .map(|row| row.counters.tasks_exported)
+                .sum();
+            assert!(moved > 0, "{policy} never migrated anything");
+        }
+    }
+
+    #[test]
+    fn render_and_csv_smoke() {
+        let r = run(1, true).expect("run");
+        let table = r.render();
+        assert!(table.contains("cholesky"));
+        assert!(table.contains("diffusion"));
+        let p = std::env::temp_dir().join("ductr_compare_test.csv");
+        r.write_csv(&p).expect("csv");
+        let body = std::fs::read_to_string(&p).expect("read");
+        assert!(body.starts_with("workload,topology,policy"));
+        assert_eq!(body.lines().count(), 1 + r.rows.len());
+        let _ = std::fs::remove_file(p);
+    }
+}

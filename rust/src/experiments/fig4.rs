@@ -61,7 +61,7 @@ pub fn case_config(spec: &CaseSpec, dlb: bool, wt: usize, seed: u64) -> Config {
 }
 
 /// Run one case end-to-end with §6 calibration.
-pub fn run_case(spec: &CaseSpec, seed: u64) -> anyhow::Result<CaseResult> {
+pub fn run_case(spec: &CaseSpec, seed: u64) -> crate::util::error::Result<CaseResult> {
     let off = run_sim(&case_config(spec, false, 5, seed))?;
     let wt = calibrate_from_traces(&off.traces);
     let on = run_sim(&case_config(spec, true, wt, seed))?;
@@ -69,7 +69,7 @@ pub fn run_case(spec: &CaseSpec, seed: u64) -> anyhow::Result<CaseResult> {
 }
 
 /// Run both paper cases.
-pub fn run(seed: u64) -> anyhow::Result<Vec<CaseResult>> {
+pub fn run(seed: u64) -> crate::util::error::Result<Vec<CaseResult>> {
     CASES.iter().map(|s| run_case(s, seed)).collect()
 }
 

@@ -107,7 +107,7 @@ impl Fig5Result {
 
 /// Run the sweep: one DLB-off baseline (calibrating W_T per §6), then one
 /// DLB-on run per seed.
-pub fn run(matrix_n: usize, seeds: &[u64]) -> anyhow::Result<Fig5Result> {
+pub fn run(matrix_n: usize, seeds: &[u64]) -> crate::util::error::Result<Fig5Result> {
     let off = run_sim(&fig5_config(false, 5, 1, matrix_n))?;
     let wt = calibrate_from_traces(&off.traces);
     let mut outcomes = Vec::with_capacity(seeds.len());

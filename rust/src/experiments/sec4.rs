@@ -69,7 +69,7 @@ fn base_cfg(p: usize, wt: usize, seed: u64, dlb: bool) -> Config {
 }
 
 /// High-intensity case: imbalanced bag of GEMM-sized synthetic tasks.
-pub fn measure_bag(p: usize, block: usize, tasks: usize, seed: u64) -> anyhow::Result<MeasuredCase> {
+pub fn measure_bag(p: usize, block: usize, tasks: usize, seed: u64) -> crate::util::error::Result<MeasuredCase> {
     let params = bag::BagParams {
         tasks,
         mean_flops: TaskKind::Gemm.flops_for_block(block as u64),
@@ -82,7 +82,7 @@ pub fn measure_bag(p: usize, block: usize, tasks: usize, seed: u64) -> anyhow::R
     for (i, dlb) in [false, true].iter().enumerate() {
         let cfg = base_cfg(p, 3, seed, *dlb);
         let g = bag::build(p, params, seed);
-        let r = SimEngine::from_config(&cfg, Arc::clone(&g)).run().map_err(anyhow::Error::new)?;
+        let r = SimEngine::from_config(&cfg, Arc::clone(&g)).run().map_err(crate::util::error::Error::new)?;
         result[i] = r.makespan;
         if *dlb {
             migrations = r.counters.tasks_exported;
@@ -97,14 +97,14 @@ pub fn measure_bag(p: usize, block: usize, tasks: usize, seed: u64) -> anyhow::R
 }
 
 /// Low-intensity case: GEMV chains on half the processes.
-pub fn measure_gemv(p: usize, block: usize, seed: u64) -> anyhow::Result<MeasuredCase> {
+pub fn measure_gemv(p: usize, block: usize, seed: u64) -> crate::util::error::Result<MeasuredCase> {
     let loaded = (p / 2).max(1);
     let mut result = [0.0f64; 2];
     let mut migrations = 0;
     for (i, dlb) in [false, true].iter().enumerate() {
         let cfg = base_cfg(p, 3, seed, *dlb);
         let g = gemv_chain::build(p, loaded, 6, 40, block);
-        let r = SimEngine::from_config(&cfg, Arc::clone(&g)).run().map_err(anyhow::Error::new)?;
+        let r = SimEngine::from_config(&cfg, Arc::clone(&g)).run().map_err(crate::util::error::Error::new)?;
         result[i] = r.makespan;
         if *dlb {
             migrations = r.counters.tasks_exported;
@@ -124,7 +124,7 @@ pub struct Sec4Result {
     pub cases: Vec<MeasuredCase>,
 }
 
-pub fn run(seed: u64) -> anyhow::Result<Sec4Result> {
+pub fn run(seed: u64) -> crate::util::error::Result<Sec4Result> {
     let model = CostModel::new(8.8e9, 2.2e8); // the paper's S/R = 40
     let table = q_table(&model, &[32, 64, 128, 512, 1667, 2500]);
     let cases = vec![

@@ -21,6 +21,14 @@
 //! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
 //! paper-vs-measured record of every figure.
 
+#![allow(
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::new_without_default,
+    clippy::field_reassign_with_default,
+    clippy::manual_div_ceil
+)]
+
 pub mod apps;
 pub mod cholesky;
 pub mod cli;

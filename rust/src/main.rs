@@ -13,7 +13,6 @@ use std::process::ExitCode;
 mod commands;
 
 fn main() -> ExitCode {
-    env_logger_lite();
     match commands::dispatch() {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
@@ -21,30 +20,4 @@ fn main() -> ExitCode {
             ExitCode::FAILURE
         }
     }
-}
-
-/// Minimal RUST_LOG-style gate for the `log` macros (no env_logger offline).
-fn env_logger_lite() {
-    struct L;
-    impl log::Log for L {
-        fn enabled(&self, m: &log::Metadata) -> bool {
-            m.level() <= log::max_level()
-        }
-        fn log(&self, r: &log::Record) {
-            if self.enabled(r.metadata()) {
-                eprintln!("[{}] {}", r.level(), r.args());
-            }
-        }
-        fn flush(&self) {}
-    }
-    static LOGGER: L = L;
-    let level = match std::env::var("RUST_LOG").as_deref() {
-        Ok("trace") => log::LevelFilter::Trace,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("info") => log::LevelFilter::Info,
-        Ok("warn") => log::LevelFilter::Warn,
-        _ => log::LevelFilter::Error,
-    };
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(level);
 }

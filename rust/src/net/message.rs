@@ -95,6 +95,23 @@ pub enum Msg {
         round: u64,
     },
 
+    // ---- work stealing ------------------------------------------------
+    /// An idle thief asks `to` for work; the victim answers with a
+    /// (possibly empty) `TaskExport` carrying the same `round` — empty
+    /// means "nothing to steal", the thief's cue to retry elsewhere.
+    StealRequest {
+        round: u64,
+        load: usize,
+        eta: f64,
+    },
+
+    // ---- diffusion ----------------------------------------------------
+    /// Periodic load broadcast to topology neighbors (first-order
+    /// diffusion: receivers use it to estimate the local load gradient).
+    LoadReport {
+        load: usize,
+    },
+
     /// The busy side's export: zero or more ready tasks with their inputs.
     TaskExport {
         round: u64,
@@ -146,6 +163,8 @@ impl Msg {
                 | Msg::PairDecline { .. }
                 | Msg::PairConfirm { .. }
                 | Msg::PairRelease { .. }
+                | Msg::StealRequest { .. }
+                | Msg::LoadReport { .. }
                 | Msg::TaskExport { .. }
                 | Msg::ExportAck { .. }
         )

@@ -3,7 +3,9 @@
 //! `Envelope`s through `sim::network` instead.
 
 pub mod message;
+pub mod topology;
 pub mod transport;
 
 pub use message::{Envelope, MigratedTask, Msg, Role};
-pub use transport::{mesh, Mailbox, Router, Shaper};
+pub use topology::Topology;
+pub use transport::{mesh, mesh_on, Mailbox, Router, Shaper};

@@ -1,0 +1,248 @@
+//! Interconnect topology: who is "near" whom, and how many hops a message
+//! crosses.
+//!
+//! Two consumers share one model:
+//!
+//! - the **DES network** (`sim::network`) and the threaded-mode `Shaper`
+//!   charge `hops × latency` per message, so far-apart processes pay more
+//!   for both control traffic and migrated task data;
+//! - the **Diffusion balancer** (`dlb::policy::diffusion`) restricts its
+//!   load exchange to `neighbors(me)`, the defining constraint of
+//!   diffusion-based balancing (Demirel & Sbalzarini 2013) versus the
+//!   paper's anywhere-to-anywhere random pairing.
+//!
+//! All variants carry their own dimensions so `hops`/`neighbors` need no
+//! extra context; `Flat` reproduces the seed's uniform single-hop network
+//! exactly.
+
+use crate::core::ids::ProcessId;
+
+/// A process interconnect shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Fully connected, uniform single-hop (the paper's implicit model).
+    Flat,
+    /// Bidirectional ring of `len` processes.
+    Ring { len: usize },
+    /// 2D torus, row-major `rows × cols`; hops = wraparound Manhattan
+    /// distance.
+    Torus { rows: usize, cols: usize },
+    /// Two-level cluster: `nodes` groups of `per_node` consecutive ranks.
+    /// Intra-node messages are one hop; inter-node messages cost
+    /// `inter_hops` hops (NIC + switch + NIC).
+    Cluster { nodes: usize, per_node: usize, inter_hops: u32 },
+}
+
+impl Topology {
+    /// Hops between two processes (0 for self, ≥ 1 otherwise).
+    pub fn hops(&self, from: ProcessId, to: ProcessId) -> u32 {
+        if from == to {
+            return 0;
+        }
+        match *self {
+            Topology::Flat => 1,
+            Topology::Ring { len } => {
+                let a = from.idx() % len;
+                let b = to.idx() % len;
+                let d = a.abs_diff(b);
+                d.min(len - d) as u32
+            }
+            Topology::Torus { rows, cols } => {
+                let (r1, c1) = (from.idx() / cols, from.idx() % cols);
+                let (r2, c2) = (to.idx() / cols, to.idx() % cols);
+                let dr = r1.abs_diff(r2);
+                let dc = c1.abs_diff(c2);
+                (dr.min(rows - dr) + dc.min(cols - dc)) as u32
+            }
+            Topology::Cluster { per_node, inter_hops, .. } => {
+                if from.idx() / per_node == to.idx() / per_node {
+                    1
+                } else {
+                    inter_hops.max(1)
+                }
+            }
+        }
+    }
+
+    /// The neighbor set diffusion exchanges load with.  Always symmetric
+    /// (j ∈ N(i) ⇔ i ∈ N(j)), never contains `me`, sorted ascending.
+    ///
+    /// - flat: everyone else (diffusion degenerates to global averaging);
+    /// - ring: the two adjacent ranks;
+    /// - torus: the 4-neighborhood;
+    /// - cluster: all same-node ranks plus the same-slot rank in the two
+    ///   adjacent nodes (nodes form a ring), so load can leave a node.
+    pub fn neighbors(&self, me: ProcessId, p: usize) -> Vec<ProcessId> {
+        let m = me.idx();
+        let mut out: Vec<usize> = Vec::new();
+        if p >= 2 {
+            match *self {
+                Topology::Flat => {
+                    out.extend((0..p).filter(|&i| i != m));
+                }
+                Topology::Ring { len } => {
+                    let len = len.min(p).max(1);
+                    if m < len {
+                        out.push((m + 1) % len);
+                        out.push((m + len - 1) % len);
+                    }
+                }
+                Topology::Torus { rows, cols } => {
+                    if m < rows * cols && rows * cols <= p {
+                        let (r, c) = (m / cols, m % cols);
+                        out.push(((r + 1) % rows) * cols + c);
+                        out.push(((r + rows - 1) % rows) * cols + c);
+                        out.push(r * cols + (c + 1) % cols);
+                        out.push(r * cols + (c + cols - 1) % cols);
+                    }
+                }
+                Topology::Cluster { nodes, per_node, .. } => {
+                    if per_node > 0 && m < nodes * per_node && nodes * per_node <= p {
+                        let node = m / per_node;
+                        let slot = m % per_node;
+                        for s in 0..per_node {
+                            if s != slot {
+                                out.push(node * per_node + s);
+                            }
+                        }
+                        if nodes >= 2 {
+                            out.push(((node + 1) % nodes) * per_node + slot);
+                            out.push(((node + nodes - 1) % nodes) * per_node + slot);
+                        }
+                    }
+                }
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out.retain(|&i| i != m && i < p);
+        out.into_iter().map(|i| ProcessId(i as u32)).collect()
+    }
+
+    /// Human-readable tag for tables and CSV.
+    pub fn label(&self) -> String {
+        match *self {
+            Topology::Flat => "flat".to_string(),
+            Topology::Ring { len } => format!("ring{len}"),
+            Topology::Torus { rows, cols } => format!("torus{rows}x{cols}"),
+            Topology::Cluster { nodes, per_node, .. } => format!("cluster{nodes}x{per_node}"),
+        }
+    }
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology::Flat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(i: u32) -> ProcessId {
+        ProcessId(i)
+    }
+
+    #[test]
+    fn flat_is_single_hop_everyone() {
+        let t = Topology::Flat;
+        assert_eq!(t.hops(p(0), p(7)), 1);
+        assert_eq!(t.hops(p(3), p(3)), 0);
+        let n = t.neighbors(p(2), 5);
+        assert_eq!(n, vec![p(0), p(1), p(3), p(4)]);
+    }
+
+    #[test]
+    fn ring_distance_wraps() {
+        let t = Topology::Ring { len: 8 };
+        assert_eq!(t.hops(p(0), p(1)), 1);
+        assert_eq!(t.hops(p(0), p(7)), 1);
+        assert_eq!(t.hops(p(0), p(4)), 4);
+        assert_eq!(t.hops(p(1), p(6)), 3);
+        assert_eq!(t.neighbors(p(0), 8), vec![p(1), p(7)]);
+        assert_eq!(t.neighbors(p(4), 8), vec![p(3), p(5)]);
+    }
+
+    #[test]
+    fn ring_of_two_dedups() {
+        let t = Topology::Ring { len: 2 };
+        assert_eq!(t.neighbors(p(0), 2), vec![p(1)]);
+        assert_eq!(t.hops(p(0), p(1)), 1);
+    }
+
+    #[test]
+    fn torus_manhattan_wraps() {
+        let t = Topology::Torus { rows: 3, cols: 4 };
+        // rank = r*4 + c
+        assert_eq!(t.hops(p(0), p(1)), 1); // (0,0)→(0,1)
+        assert_eq!(t.hops(p(0), p(3)), 1); // (0,0)→(0,3) wraps
+        assert_eq!(t.hops(p(0), p(8)), 1); // (0,0)→(2,0) wraps
+        assert_eq!(t.hops(p(0), p(6)), 3); // (0,0)→(1,2): 1 + 2
+        let n = t.neighbors(p(5), 12); // (1,1)
+        assert_eq!(n, vec![p(1), p(4), p(6), p(9)]);
+    }
+
+    #[test]
+    fn torus_neighbors_symmetric() {
+        let t = Topology::Torus { rows: 3, cols: 3 };
+        for i in 0..9u32 {
+            for j in t.neighbors(p(i), 9) {
+                assert!(
+                    t.neighbors(j, 9).contains(&p(i)),
+                    "asymmetric: {i} lists {j:?} but not vice versa"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_hops_two_level() {
+        let t = Topology::Cluster { nodes: 2, per_node: 4, inter_hops: 4 };
+        assert_eq!(t.hops(p(0), p(3)), 1); // same node
+        assert_eq!(t.hops(p(0), p(4)), 4); // across
+        assert_eq!(t.hops(p(5), p(1)), 4);
+    }
+
+    #[test]
+    fn cluster_neighbors_include_gateway() {
+        let t = Topology::Cluster { nodes: 2, per_node: 3, inter_hops: 4 };
+        // rank 1 (node 0, slot 1): node-mates 0, 2; same slot in node 1 → 4
+        assert_eq!(t.neighbors(p(1), 6), vec![p(0), p(2), p(4)]);
+        // symmetry
+        assert!(t.neighbors(p(4), 6).contains(&p(1)));
+    }
+
+    #[test]
+    fn neighbors_never_self_and_connected() {
+        for t in [
+            Topology::Flat,
+            Topology::Ring { len: 6 },
+            Topology::Torus { rows: 2, cols: 3 },
+            Topology::Cluster { nodes: 3, per_node: 2, inter_hops: 4 },
+        ] {
+            // BFS from 0 must reach everyone (diffusion needs connectivity)
+            let p_n = 6;
+            let mut seen = vec![false; p_n];
+            let mut stack = vec![0usize];
+            seen[0] = true;
+            while let Some(i) = stack.pop() {
+                assert!(!t.neighbors(p(i as u32), p_n).contains(&p(i as u32)));
+                for q in t.neighbors(p(i as u32), p_n) {
+                    if !seen[q.idx()] {
+                        seen[q.idx()] = true;
+                        stack.push(q.idx());
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "{t:?} disconnected");
+        }
+    }
+
+    #[test]
+    fn single_process_has_no_neighbors() {
+        for t in [Topology::Flat, Topology::Ring { len: 1 }] {
+            assert!(t.neighbors(p(0), 1).is_empty());
+        }
+    }
+}

@@ -11,12 +11,14 @@ use std::time::{Duration, Instant};
 use crate::core::ids::ProcessId;
 
 use super::message::Envelope;
+use super::topology::Topology;
 
 /// Sender side: can address any process.
 #[derive(Clone)]
 pub struct Router {
     senders: Vec<Sender<Envelope>>,
     shaper: Option<Shaper>,
+    topology: Topology,
 }
 
 /// Receiver side: one per process.
@@ -25,8 +27,14 @@ pub struct Mailbox {
     rx: Receiver<Envelope>,
 }
 
-/// Build a fully-connected mesh for `p` processes.
+/// Build a fully-connected mesh for `p` processes (flat topology).
 pub fn mesh(p: usize, shaper: Option<Shaper>) -> (Router, Vec<Mailbox>) {
+    mesh_on(p, shaper, Topology::Flat)
+}
+
+/// Build a mesh whose shaper charges `hops(from, to)` of latency per
+/// message — the threaded-mode counterpart of the DES topology model.
+pub fn mesh_on(p: usize, shaper: Option<Shaper>, topology: Topology) -> (Router, Vec<Mailbox>) {
     let mut senders = Vec::with_capacity(p);
     let mut mailboxes = Vec::with_capacity(p);
     for i in 0..p {
@@ -34,24 +42,27 @@ pub fn mesh(p: usize, shaper: Option<Shaper>) -> (Router, Vec<Mailbox>) {
         senders.push(tx);
         mailboxes.push(Mailbox { me: ProcessId(i as u32), rx });
     }
-    (Router { senders, shaper }, mailboxes)
+    (Router { senders, shaper, topology }, mailboxes)
 }
 
 impl Router {
     /// Send an envelope to its destination; applies the shaper's serial
     /// delay at the *sender* (models NIC injection time).
     ///
+    /// The destination is validated **before** the shaper runs: a bad
+    /// address must fail fast, not burn simulated NIC time first.
+    ///
     /// Sending to a process that has already halted (mailbox dropped) is
     /// not an error: during shutdown, in-flight DLB traffic may race the
     /// `Shutdown` broadcast, and the halted peer would have discarded the
     /// message anyway.
     pub fn send(&self, env: Envelope) -> Result<(), String> {
-        if let Some(sh) = &self.shaper {
-            sh.delay(env.wire_doubles);
-        }
         let to = env.to.idx();
         if to >= self.senders.len() {
             return Err(format!("no such process: {}", env.to));
+        }
+        if let Some(sh) = &self.shaper {
+            sh.delay_hops(env.wire_doubles, self.topology.hops(env.from, env.to));
         }
         let _ = self.senders[to].send(env); // closed mailbox == halted peer
         Ok(())
@@ -89,12 +100,18 @@ pub struct Shaper {
 
 impl Shaper {
     pub fn delay(&self, doubles: u64) {
+        self.delay_hops(doubles, 1)
+    }
+
+    /// Busy-wait `hops × latency + size / bandwidth` — the topology-aware
+    /// injection delay (bandwidth is paid once; latency per hop).
+    pub fn delay_hops(&self, doubles: u64, hops: u32) {
         let size_s = if self.doubles_per_sec.is_finite() && self.doubles_per_sec > 0.0 {
             doubles as f64 / self.doubles_per_sec
         } else {
             0.0
         };
-        let total = self.latency + Duration::from_secs_f64(size_s);
+        let total = self.latency * hops.max(1) + Duration::from_secs_f64(size_s);
         if total.is_zero() {
             return;
         }
@@ -137,6 +154,31 @@ mod tests {
     fn unknown_destination_errors() {
         let (router, _boxes) = mesh(2, None);
         assert!(router.send(env(0, 7)).is_err());
+    }
+
+    #[test]
+    fn unknown_destination_fails_before_shaper_delay() {
+        // a 50 ms shaper must NOT run for a bad address: validation first
+        let sh = Shaper { latency: Duration::from_millis(50), doubles_per_sec: f64::INFINITY };
+        let (router, _boxes) = mesh(2, Some(sh));
+        let t0 = Instant::now();
+        assert!(router.send(env(0, 9)).is_err());
+        assert!(
+            t0.elapsed() < Duration::from_millis(40),
+            "bad address burned shaper time: {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn topology_mesh_charges_per_hop_latency() {
+        use crate::net::topology::Topology;
+        let sh = Shaper { latency: Duration::from_millis(2), doubles_per_sec: f64::INFINITY };
+        let (router, boxes) = mesh_on(8, Some(sh), Topology::Ring { len: 8 });
+        let t0 = Instant::now();
+        router.send(env(0, 4)).expect("send"); // 4 hops on the ring
+        assert!(t0.elapsed() >= Duration::from_millis(7), "4 hops × 2 ms expected");
+        assert!(boxes[4].try_recv().is_some());
     }
 
     #[test]

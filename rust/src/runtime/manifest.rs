@@ -14,9 +14,16 @@ use std::path::{Path, PathBuf};
 
 use crate::core::task::TaskKind;
 
-#[derive(Debug, thiserror::Error)]
-#[error("manifest error: {0}")]
+#[derive(Debug)]
 pub struct ManifestError(pub String);
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "manifest error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ManifestError {}
 
 /// One AOT-compiled kernel artifact.
 #[derive(Debug, Clone)]

@@ -1,26 +1,38 @@
-//! PJRT kernel execution: load HLO-text artifacts, compile once, execute on
-//! the task hot path.
+//! Kernel execution for the threaded real mode.
 //!
-//! One `KernelLibrary` per OS thread: `xla::PjRtClient` is internally
-//! reference-counted (`Rc`) and not `Send`, so each process thread builds
-//! its own client and compiles lazily the kinds it actually executes (the
-//! HLO modules are tiny; compile is milliseconds).
+//! The original design loaded AOT-lowered HLO artifacts through a PJRT CPU
+//! client.  PJRT (the `xla` crate plus its native `xla_extension` library)
+//! is not available in the offline build, so `KernelLibrary` executes
+//! vendored pure-Rust reference kernels instead.  Semantics mirror
+//! `python/compile/kernels/ref.py` exactly (the correctness ground truth
+//! the Pallas kernels are themselves validated against):
+//!
+//! - `potrf(a)`      → lower Cholesky factor, zero upper triangle
+//! - `trsm(l, b)`    → X with X·Lᵀ = B (right-side lower-transposed solve)
+//! - `syrk(c, a)`    → C − A·Aᵀ
+//! - `gemm(c, a, b)` → C − A·Bᵀ
+//! - `gemv(a, x)`    → A·x
+//!
+//! The manifest contract is kept: arity and argument shapes are validated
+//! against `artifacts/manifest.txt`, so the AOT pipeline remains the source
+//! of truth for kernel signatures and the numeric verification
+//! (`cholesky::verify::residual`) exercises the same data flow.
 
-use std::collections::HashMap;
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 
 use crate::core::task::TaskKind;
 
 use super::manifest::Manifest;
 
-/// A compiled-kernel cache bound to one PJRT CPU client (one thread).
+/// A kernel executor bound to one block size (one per worker thread, as in
+/// the PJRT design — the reference kernels are stateless, the per-thread
+/// instance keeps the execution counter local).
 pub struct KernelLibrary {
-    client: xla::PjRtClient,
     manifest: Arc<Manifest>,
     block: usize,
-    compiled: HashMap<TaskKind, xla::PjRtLoadedExecutable>,
     /// Executions performed (for perf accounting).
     pub executions: u64,
 }
@@ -28,35 +40,11 @@ pub struct KernelLibrary {
 impl KernelLibrary {
     /// Create a library serving kernels at `block` size.
     pub fn new(manifest: Arc<Manifest>, block: usize) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(KernelLibrary { client, manifest, block, compiled: HashMap::new(), executions: 0 })
+        Ok(KernelLibrary { manifest, block, executions: 0 })
     }
 
     pub fn block(&self) -> usize {
         self.block
-    }
-
-    fn ensure_compiled(&mut self, kind: TaskKind) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.compiled.contains_key(&kind) {
-            let entry = self
-                .manifest
-                .find(kind, self.block)
-                .ok_or_else(|| anyhow!("no artifact for {kind} at block {}", self.block))?;
-            let path = entry
-                .path
-                .to_str()
-                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?
-                .to_string();
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parse {path}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {kind}: {e:?}"))?;
-            self.compiled.insert(kind, exe);
-        }
-        Ok(self.compiled.get(&kind).expect("just inserted"))
     }
 
     /// Execute `kind` on `args` (row-major f32 buffers matching the
@@ -65,42 +53,31 @@ impl KernelLibrary {
         let entry = self
             .manifest
             .find(kind, self.block)
-            .ok_or_else(|| anyhow!("no artifact for {kind} at block {}", self.block))?
-            .clone();
+            .ok_or_else(|| anyhow!("no artifact for {kind} at block {}", self.block))?;
         if args.len() != entry.arity {
             bail!("{kind}: expected {} args, got {}", entry.arity, args.len());
         }
-        let mut literals = Vec::with_capacity(args.len());
         for (i, (&buf, shape)) in args.iter().zip(&entry.shapes).enumerate() {
             let elems: usize = shape.iter().product();
             if buf.len() != elems {
                 bail!("{kind} arg {i}: expected {elems} elems (shape {shape:?}), got {}", buf.len());
             }
-            let lit = xla::Literal::vec1(buf);
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = if dims.len() > 1 {
-                lit.reshape(&dims).map_err(|e| anyhow!("reshape arg {i}: {e:?}"))?
-            } else {
-                lit
-            };
-            literals.push(lit);
         }
-        let exe = self.ensure_compiled(kind)?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {kind}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        // AOT lowers with return_tuple=True → unwrap the 1-tuple.
-        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let v = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        let b = self.block;
+        let out = match kind {
+            TaskKind::Potrf => potrf(args[0], b),
+            TaskKind::Trsm => trsm(args[0], args[1], b),
+            TaskKind::Syrk => gemm_update(args[0], args[1], args[1], b),
+            TaskKind::Gemm => gemm_update(args[0], args[1], args[2], b),
+            TaskKind::Gemv => gemv(args[0], args[1], b),
+            TaskKind::Synthetic => bail!("synthetic tasks have no kernel"),
+        };
         self.executions += 1;
-        Ok(v)
+        Ok(out)
     }
 
-    /// Compile-and-smoke-test every kernel the manifest lists at this block
-    /// size (the `ductr artifacts-check` command).
+    /// Smoke-test every kernel the manifest lists at this block size (the
+    /// `ductr artifacts-check` command).
     pub fn smoke_all(&mut self) -> Result<Vec<(TaskKind, f64)>> {
         use std::time::Instant;
         let b = self.block;
@@ -138,20 +115,91 @@ impl KernelLibrary {
     }
 }
 
+/// Lower Cholesky factor of the SPD block `a` (Cholesky–Banachiewicz),
+/// upper triangle explicitly zero — the `jnp.tril(cholesky(a))` oracle.
+fn potrf(a: &[f32], n: usize) -> Vec<f32> {
+    let mut l = vec![0.0f32; n * n];
+    for j in 0..n {
+        let mut d = a[j * n + j];
+        for k in 0..j {
+            d -= l[j * n + k] * l[j * n + k];
+        }
+        let d = d.max(0.0).sqrt();
+        l[j * n + j] = d;
+        for i in (j + 1)..n {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            l[i * n + j] = if d != 0.0 { s / d } else { 0.0 };
+        }
+    }
+    l
+}
+
+/// Solve X·Lᵀ = B for X: forward substitution over columns,
+/// `x[:, j] = (b[:, j] − X[:, :j] · L[j, :j]ᵀ) / l[j, j]`.
+fn trsm(l: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    let mut x = vec![0.0f32; n * n];
+    for j in 0..n {
+        let d = l[j * n + j];
+        for i in 0..n {
+            let mut s = b[i * n + j];
+            for k in 0..j {
+                s -= x[i * n + k] * l[j * n + k];
+            }
+            x[i * n + j] = if d != 0.0 { s / d } else { 0.0 };
+        }
+    }
+    x
+}
+
+/// C − A·Bᵀ (the gemm oracle; syrk is gemm with B = A).
+fn gemm_update(c: &[f32], a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+    let mut out = c.to_vec();
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0f32;
+            for k in 0..n {
+                s += a[i * n + k] * b[j * n + k];
+            }
+            out[i * n + j] -= s;
+        }
+    }
+    out
+}
+
+/// A·x.
+fn gemv(a: &[f32], x: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = 0.0f32;
+        for k in 0..n {
+            s += a[i * n + k] * x[k];
+        }
+        out[i] = s;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
-    //! These tests require built artifacts; they self-skip when
-    //! `artifacts/manifest.txt` is absent so `cargo test` works pre-build.
     use super::*;
+    use std::path::PathBuf;
 
-    fn lib(block: usize) -> Option<KernelLibrary> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.txt").exists() {
-            eprintln!("skipping: artifacts not built");
-            return None;
-        }
-        let m = Arc::new(Manifest::load(dir).expect("manifest"));
-        Some(KernelLibrary::new(m, block).expect("client"))
+    /// Synthetic manifest covering all five kernels at one block size —
+    /// the reference kernels need no HLO files on disk.
+    fn lib(b: usize) -> KernelLibrary {
+        let text = format!(
+            "version 1\n\
+             kernel potrf {b} potrf.hlo.txt 1 f32 {b}x{b} 1 1\n\
+             kernel trsm {b} trsm.hlo.txt 2 f32 {b}x{b} {b}x{b} 1 1\n\
+             kernel syrk {b} syrk.hlo.txt 2 f32 {b}x{b} {b}x{b} 1 1\n\
+             kernel gemm {b} gemm.hlo.txt 3 f32 {b}x{b} {b}x{b} {b}x{b} 1 1\n\
+             kernel gemv {b} gemv.hlo.txt 2 f32 {b}x{b} {b} 1 1\n"
+        );
+        let m = Arc::new(Manifest::parse(&text, PathBuf::from("/tmp")).expect("manifest"));
+        KernelLibrary::new(m, b).expect("lib")
     }
 
     fn spd(b: usize) -> Vec<f32> {
@@ -166,7 +214,7 @@ mod tests {
 
     #[test]
     fn potrf_reconstructs() {
-        let Some(mut lib) = lib(32) else { return };
+        let mut lib = lib(32);
         let b = 32;
         let a = spd(b);
         let l = lib.execute(TaskKind::Potrf, &[&a]).expect("potrf");
@@ -182,11 +230,38 @@ mod tests {
             }
         }
         assert!(err < 1e-3, "reconstruction err {err}");
+        // strict upper triangle zero
+        for i in 0..b {
+            for j in (i + 1)..b {
+                assert_eq!(l[i * b + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn trsm_solves_right_transposed_system() {
+        let mut lib = lib(16);
+        let b = 16;
+        let l = lib.execute(TaskKind::Potrf, &[&spd(b)]).expect("potrf");
+        let rhs: Vec<f32> = (0..b * b).map(|i| ((i % 13) as f32 - 6.0) / 6.0).collect();
+        let x = lib.execute(TaskKind::Trsm, &[&l, &rhs]).expect("trsm");
+        // X·Lᵀ ≈ B
+        let mut err: f32 = 0.0;
+        for i in 0..b {
+            for j in 0..b {
+                let mut s = 0.0f32;
+                for k in 0..b {
+                    s += x[i * b + k] * l[j * b + k];
+                }
+                err = err.max((s - rhs[i * b + j]).abs());
+            }
+        }
+        assert!(err < 1e-3, "solve err {err}");
     }
 
     #[test]
     fn gemm_matches_reference() {
-        let Some(mut lib) = lib(32) else { return };
+        let mut lib = lib(32);
         let b = 32;
         let c: Vec<f32> = (0..b * b).map(|i| (i % 7) as f32).collect();
         let x: Vec<f32> = (0..b * b).map(|i| ((i % 5) as f32 - 2.0) / 2.0).collect();
@@ -207,8 +282,19 @@ mod tests {
     }
 
     #[test]
+    fn syrk_is_gemm_with_self() {
+        let mut lib = lib(16);
+        let b = 16;
+        let c: Vec<f32> = (0..b * b).map(|i| (i % 9) as f32).collect();
+        let a: Vec<f32> = (0..b * b).map(|i| ((i % 5) as f32 - 2.0) / 4.0).collect();
+        let syrk = lib.execute(TaskKind::Syrk, &[&c, &a]).expect("syrk");
+        let gemm = lib.execute(TaskKind::Gemm, &[&c, &a, &a]).expect("gemm");
+        assert_eq!(syrk, gemm);
+    }
+
+    #[test]
     fn gemv_matches_reference() {
-        let Some(mut lib) = lib(32) else { return };
+        let mut lib = lib(32);
         let b = 32;
         let a: Vec<f32> = (0..b * b).map(|i| ((i % 11) as f32 - 5.0) / 5.0).collect();
         let x: Vec<f32> = (0..b).map(|i| (i % 4) as f32 - 1.5).collect();
@@ -224,23 +310,24 @@ mod tests {
 
     #[test]
     fn wrong_arity_rejected() {
-        let Some(mut lib) = lib(32) else { return };
+        let mut lib = lib(32);
         let a = spd(32);
         assert!(lib.execute(TaskKind::Gemm, &[&a]).is_err());
     }
 
     #[test]
     fn wrong_size_rejected() {
-        let Some(mut lib) = lib(32) else { return };
+        let mut lib = lib(32);
         let small = vec![0.0f32; 4];
         assert!(lib.execute(TaskKind::Potrf, &[&small]).is_err());
     }
 
     #[test]
     fn smoke_all_runs() {
-        let Some(mut lib) = lib(32) else { return };
+        let mut lib = lib(32);
         let report = lib.smoke_all().expect("smoke");
         assert_eq!(report.len(), 5);
         assert!(report.iter().all(|(_, dt)| *dt >= 0.0));
+        assert_eq!(lib.executions, 5);
     }
 }

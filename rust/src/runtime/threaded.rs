@@ -19,7 +19,8 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 
 use crate::config::Config;
 use crate::core::data::{DataStore, Payload};
@@ -29,7 +30,7 @@ use crate::core::process::{Effect, ProcessParams, ProcessState};
 use crate::core::task::TaskKind;
 use crate::metrics::counters::DlbCounters;
 use crate::metrics::trace::RunTraces;
-use crate::net::transport::{mesh, Mailbox, Router, Shaper};
+use crate::net::transport::{mesh_on, Mailbox, Router, Shaper};
 use crate::sched::queue::ReadyTask;
 
 use super::manifest::Manifest;
@@ -94,7 +95,7 @@ pub fn run_threaded(
     } else {
         None
     };
-    let (router, mailboxes) = mesh(p, shaper);
+    let (router, mailboxes) = mesh_on(p, shaper, cfg.build_topology());
     let params = ProcessParams::from_config(cfg);
     let epoch = Instant::now();
 
@@ -371,6 +372,20 @@ mod tests {
             on.makespan,
             off.makespan
         );
+    }
+
+    #[test]
+    fn threaded_stealing_and_diffusion_migrate() {
+        use crate::config::PolicyKind;
+        for policy in [PolicyKind::WorkStealing, PolicyKind::Diffusion] {
+            let (mut cfg, g, init) = bag(24, 3, true);
+            cfg.policy = policy;
+            let r = run_threaded(&cfg, g, init, false)
+                .unwrap_or_else(|e| panic!("{policy} failed: {e}"));
+            assert!(r.makespan > 0.0);
+            assert!(r.counters.tasks_exported > 0, "{policy} must migrate work");
+            assert_eq!(r.counters.tasks_exported, r.counters.tasks_received, "{policy}");
+        }
     }
 
     #[test]

@@ -77,15 +77,28 @@ pub struct SimResult {
 }
 
 /// Errors a simulation can hit (budget guards — a correct run never does).
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SimError {
-    #[error("event budget exceeded ({0} events) — livelock?")]
     EventBudget(u64),
-    #[error("virtual-time budget exceeded (t = {0})")]
     TimeBudget(f64),
-    #[error("deadlock: {live} processes not halted but no events pending")]
     Deadlock { live: usize },
 }
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::EventBudget(n) => {
+                write!(f, "event budget exceeded ({n} events) — livelock?")
+            }
+            SimError::TimeBudget(t) => write!(f, "virtual-time budget exceeded (t = {t})"),
+            SimError::Deadlock { live } => {
+                write!(f, "deadlock: {live} processes not halted but no events pending")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// The simulator.
 pub struct SimEngine {
@@ -117,7 +130,11 @@ impl SimEngine {
             .collect();
         SimEngine {
             processes,
-            network: NetworkModel::new(cfg.net_latency, cfg.doubles_per_sec),
+            network: NetworkModel::with_topology(
+                cfg.net_latency,
+                cfg.doubles_per_sec,
+                cfg.build_topology(),
+            ),
             heap: BinaryHeap::new(),
             now: 0.0,
             seq: 0,
@@ -140,8 +157,8 @@ impl SimEngine {
         for e in effects {
             match e {
                 Effect::Send(env) => {
-                    let at = self.now + self.network.delivery_delay(env.wire_doubles);
-                    self.push(at, EventKind::Deliver(Box::new(env)));
+                    let delay = self.network.delay_between(env.from, env.to, env.wire_doubles);
+                    self.push(self.now + delay, EventKind::Deliver(Box::new(env)));
                 }
                 Effect::StartExec { task } => {
                     let node = self.processes[proc.idx()].graph.task(task.task);

@@ -1,27 +1,51 @@
 //! The simulated interconnect: per-message delivery time
-//! `latency + doubles / bandwidth`.
+//! `hops(from, to) × latency + doubles / bandwidth`.
 //!
 //! Contention is not modeled (links are infinitely parallel); the paper's
 //! protocol keeps control traffic tiny (≤ 5 requests per δ per process) and
 //! data traffic is charged at the same R that the §4 analysis uses, so the
-//! quantities the experiments compare are preserved.
+//! quantities the experiments compare are preserved.  The topology term is
+//! new relative to the paper: a `Flat` topology reproduces its uniform
+//! single-hop network exactly, while ring/torus/cluster shapes make
+//! far-apart pairs pay proportionally more — the regime where
+//! neighbor-restricted balancers (diffusion) become competitive.
 
-/// Latency/bandwidth model (R in doubles per second, as in §4).
+use crate::core::ids::ProcessId;
+use crate::net::topology::Topology;
+
+/// Latency/bandwidth model (R in doubles per second, as in §4), plus the
+/// interconnect shape.
 #[derive(Debug, Clone, Copy)]
 pub struct NetworkModel {
+    /// Per-hop latency, seconds.
     pub latency: f64,
     pub doubles_per_sec: f64,
+    pub topology: Topology,
 }
 
 impl NetworkModel {
+    /// Uniform single-hop network (the paper's model).
     pub fn new(latency: f64, doubles_per_sec: f64) -> Self {
-        assert!(latency >= 0.0 && doubles_per_sec > 0.0);
-        NetworkModel { latency, doubles_per_sec }
+        Self::with_topology(latency, doubles_per_sec, Topology::Flat)
     }
 
-    /// Wall time between send and delivery for a message of `doubles`.
+    pub fn with_topology(latency: f64, doubles_per_sec: f64, topology: Topology) -> Self {
+        assert!(latency >= 0.0 && doubles_per_sec > 0.0);
+        NetworkModel { latency, doubles_per_sec, topology }
+    }
+
+    /// Wall time between send and delivery for a message of `doubles`,
+    /// assuming a single hop (flat-topology shorthand).
     pub fn delivery_delay(&self, doubles: u64) -> f64 {
         self.latency + doubles as f64 / self.doubles_per_sec
+    }
+
+    /// Topology-aware delivery time: latency is paid per hop, bandwidth
+    /// once (store-and-forward of small messages is dominated by the wire
+    /// time of the single largest segment).
+    pub fn delay_between(&self, from: ProcessId, to: ProcessId, doubles: u64) -> f64 {
+        let hops = self.topology.hops(from, to).max(1);
+        hops as f64 * self.latency + doubles as f64 / self.doubles_per_sec
     }
 }
 
@@ -46,5 +70,29 @@ mod tests {
     #[should_panic]
     fn zero_bandwidth_rejected() {
         let _ = NetworkModel::new(0.0, 0.0);
+    }
+
+    #[test]
+    fn flat_between_matches_single_hop() {
+        let n = NetworkModel::new(2e-6, 1e8);
+        assert_eq!(n.delay_between(ProcessId(0), ProcessId(5), 100), n.delivery_delay(100));
+    }
+
+    #[test]
+    fn ring_charges_per_hop() {
+        let n = NetworkModel::with_topology(1e-6, 1e8, Topology::Ring { len: 10 });
+        let near = n.delay_between(ProcessId(0), ProcessId(1), 0);
+        let far = n.delay_between(ProcessId(0), ProcessId(5), 0);
+        assert!((near - 1e-6).abs() < 1e-15);
+        assert!((far - 5e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn cluster_penalizes_inter_node() {
+        let t = Topology::Cluster { nodes: 2, per_node: 5, inter_hops: 4 };
+        let n = NetworkModel::with_topology(1e-6, 1e8, t);
+        let intra = n.delay_between(ProcessId(0), ProcessId(4), 0);
+        let inter = n.delay_between(ProcessId(0), ProcessId(5), 0);
+        assert!(inter > 3.0 * intra);
     }
 }

@@ -1,0 +1,138 @@
+//! Minimal vendored replacement for the `anyhow` crate.
+//!
+//! The build is fully offline (DESIGN.md §0: no external dependencies), so
+//! the tiny subset of `anyhow` this codebase actually uses is provided
+//! here: a string-backed [`Error`], a defaulted [`Result`] alias, the
+//! [`Context`] extension trait, and the [`anyhow!`]/[`bail!`] macros
+//! (exported at the crate root, as macros must be).
+//!
+//! Mirroring `anyhow`'s design, [`Error`] deliberately does **not**
+//! implement `std::error::Error`: that is what makes the blanket
+//! `From<E: std::error::Error>` impl coexist with the reflexive
+//! `From<Error> for Error` from `core`.
+
+use std::fmt;
+
+/// A string-backed error value, `anyhow::Error`-shaped.
+pub struct Error {
+    msg: String,
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build from a preformatted message (what `anyhow!` expands to).
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error { msg: m.into() }
+    }
+
+    /// Build from any displayable error value.
+    pub fn new<E: fmt::Display>(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+
+    /// Prepend a context line, innermost cause last.
+    pub fn context(self, c: impl fmt::Display) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::new(e)
+    }
+}
+
+/// `.context(...)` / `.with_context(|| ...)` on any displayable-error
+/// `Result`, matching the `anyhow::Context` call sites in this crate.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Format an [`Error`] from a message, `anyhow!`-style.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`], `bail!`-style.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().expect_err("must fail");
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), String> = Err("inner".to_string());
+        let e = r.context("outer").expect_err("err");
+        assert_eq!(e.to_string(), "outer: inner");
+        let r: std::result::Result<(), String> = Err("inner".to_string());
+        let e = r.with_context(|| format!("outer {}", 2)).expect_err("err");
+        assert_eq!(e.to_string(), "outer 2: inner");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = crate::anyhow!("bad value {}", 3);
+        assert_eq!(e.to_string(), "bad value 3");
+        fn f() -> Result<()> {
+            crate::bail!("nope {}", "x");
+        }
+        assert_eq!(f().expect_err("err").to_string(), "nope x");
+    }
+
+    #[test]
+    fn error_passes_through_question_mark() {
+        fn inner() -> Result<()> {
+            Err(Error::msg("boom"))
+        }
+        fn outer() -> Result<()> {
+            inner()?;
+            Ok(())
+        }
+        assert_eq!(outer().expect_err("err").to_string(), "boom");
+    }
+}

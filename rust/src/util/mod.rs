@@ -3,6 +3,7 @@
 //! harness, and a property-testing mini-framework.
 
 pub mod bench;
+pub mod error;
 pub mod plot;
 pub mod propcheck;
 pub mod rng;
