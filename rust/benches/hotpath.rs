@@ -84,6 +84,24 @@ fn main() {
         events_per_sec
     );
 
+    // the acceptance workload of the hot-path overhaul: P=256 random DAG
+    // (the exact case `ductr bench` records — one shared definition)
+    let (cfg256, g256, _) = ductr::experiments::bench::rand_dag_case(256, 1);
+    let mut events256 = 0.0;
+    let mut peak256 = 0usize;
+    let res256 = meso.bench("DES rand-dag P=256 (DLB on)", || {
+        let mut eng = SimEngine::from_config(&cfg256, Arc::clone(&g256));
+        let r = eng.run().expect("sim");
+        events256 = r.events_processed as f64;
+        peak256 = r.peak_event_heap;
+        bb(r.makespan)
+    });
+    println!(
+        "DES P=256 throughput: {:.0} events/s ({:.0} events per run, peak heap {peak256})",
+        events256 / res256.secs_per_iter(),
+        events256
+    );
+
     // PJRT kernel hot path (skipped without artifacts)
     let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if art.join("manifest.txt").exists() {

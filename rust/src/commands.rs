@@ -25,6 +25,9 @@ USAGE:
 SUBCOMMANDS:
     run               run one workload (see flags below)
     compare           balancer shoot-out: policy × topology × workload table
+    bench             DES hot-path baseline: cholesky + random-DAG sweep over P,
+                      writes BENCH_pr3.json (--smoke for the quick CI profile,
+                      --out FILE to choose the path)
     experiment <id>   regenerate a paper figure: fig1 | fig3 | fig4 | fig5 | sec4 | ablation | compare | all
     calibrate-wt      §6 calibration: run without DLB, print W_T = max w/2
     artifacts-check   compile + smoke-run every AOT kernel artifact
@@ -59,6 +62,7 @@ pub fn dispatch() -> Result<()> {
     match sub.as_str() {
         "run" => cmd_run(&mut args),
         "compare" => cmd_compare(&mut args),
+        "bench" => cmd_bench(&mut args),
         "experiment" => cmd_experiment(&mut args),
         "calibrate-wt" => cmd_calibrate(&mut args),
         "artifacts-check" => cmd_artifacts_check(&mut args),
@@ -237,6 +241,33 @@ fn cmd_compare(args: &mut Args) -> Result<()> {
     let path = dir.join("compare.csv");
     r.write_csv(&path)?;
     println!("table → {}", path.display());
+    Ok(())
+}
+
+/// The DES hot-path baseline (ISSUE 3's perf trajectory record).
+fn cmd_bench(args: &mut Args) -> Result<()> {
+    let smoke = args.get_bool("smoke")?;
+    let seed = args.get_u64("seed")?.unwrap_or(1);
+    // Full sweeps default to the committed baseline at this checkout's
+    // repo root (compile-time anchor, checked at runtime so a copied
+    // binary on another machine falls back to the current directory
+    // instead of failing or touching an unrelated file).  Smoke runs must
+    // not overwrite the baseline — they default to a temp path.
+    let repo_baseline = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pr3.json");
+    let out = match args.get_str("out") {
+        Some(o) => o,
+        None if smoke => {
+            std::env::temp_dir().join("ductr_bench_smoke.json").display().to_string()
+        }
+        None if std::path::Path::new(repo_baseline).exists() => repo_baseline.to_string(),
+        None => "BENCH_pr3.json".to_string(),
+    };
+    args.finish().map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+    let r = ductr::experiments::bench::run(seed, smoke)?;
+    print!("{}", r.render());
+    r.write_json(std::path::Path::new(&out))
+        .map_err(|e| anyhow!("writing {out}: {e}"))?;
+    println!("baseline → {out}");
     Ok(())
 }
 

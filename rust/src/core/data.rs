@@ -5,8 +5,6 @@
 //! mode payloads are size-only; in real mode they carry `f32` block data fed
 //! to the PJRT kernels.
 
-use std::collections::HashMap;
-
 use super::ids::{DataId, ProcessId};
 
 /// Static metadata for one data handle.
@@ -56,38 +54,59 @@ impl Payload {
 /// Correctness of the single-buffer-per-handle design rests on the graph's
 /// WAR/WAW edges: a new version cannot be produced anywhere before every
 /// consumer of the previous version has completed (see `core::graph`).
+///
+/// `DataId`s are dense indices into the graph's data table, so the store is
+/// a plain `Vec` indexed by id — every `get` on the execution hot path is a
+/// bounds check and a pointer chase instead of a SipHash probe.
 #[derive(Debug, Default)]
 pub struct DataStore {
-    blocks: HashMap<DataId, Payload>,
+    blocks: Vec<Option<Payload>>,
+    live: usize,
 }
 
 impl DataStore {
     pub fn new() -> Self {
-        DataStore { blocks: HashMap::new() }
+        DataStore { blocks: Vec::new(), live: 0 }
+    }
+
+    /// Pre-size for a graph with `num_handles` data handles (avoids the
+    /// grow-on-insert path entirely for in-graph ids).
+    pub fn with_capacity(num_handles: usize) -> Self {
+        DataStore { blocks: vec![None; num_handles], live: 0 }
     }
 
     pub fn insert(&mut self, id: DataId, value: Payload) {
-        self.blocks.insert(id, value);
+        let i = id.idx();
+        if i >= self.blocks.len() {
+            self.blocks.resize(i + 1, None);
+        }
+        if self.blocks[i].replace(value).is_none() {
+            self.live += 1;
+        }
     }
 
     pub fn get(&self, id: DataId) -> Option<&Payload> {
-        self.blocks.get(&id)
+        self.blocks.get(id.idx()).and_then(Option::as_ref)
     }
 
     pub fn contains(&self, id: DataId) -> bool {
-        self.blocks.contains_key(&id)
+        self.get(id).is_some()
     }
 
     pub fn take(&mut self, id: DataId) -> Option<Payload> {
-        self.blocks.remove(&id)
+        let taken = self.blocks.get_mut(id.idx()).and_then(Option::take);
+        if taken.is_some() {
+            self.live -= 1;
+        }
+        taken
     }
 
     pub fn len(&self) -> usize {
-        self.blocks.len()
+        self.live
     }
 
     pub fn is_empty(&self) -> bool {
-        self.blocks.is_empty()
+        self.live == 0
     }
 }
 
@@ -115,6 +134,19 @@ mod tests {
         s.insert(DataId(0), Payload::Real(vec![5.0]));
         assert!(s.get(DataId(0)).expect("present").is_real());
         assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn sparse_ids_and_preallocation() {
+        let mut s = DataStore::with_capacity(4);
+        assert!(s.is_empty());
+        s.insert(DataId(7), Payload::Sim); // beyond capacity: grows
+        assert!(s.contains(DataId(7)));
+        assert!(!s.contains(DataId(3)));
+        assert_eq!(s.len(), 1);
+        assert!(s.take(DataId(3)).is_none());
+        assert_eq!(s.take(DataId(7)), Some(Payload::Sim));
+        assert!(s.is_empty());
     }
 
     #[test]

@@ -25,6 +25,13 @@ use super::task::{TaskKind, TaskNode};
 pub struct TaskGraph {
     pub tasks: Vec<TaskNode>,
     pub data: Vec<DataMeta>,
+    /// Task ids grouped by placement, in submission order — `tasks_of`
+    /// reads this instead of scanning every task.
+    tasks_by_proc: Vec<Vec<TaskId>>,
+    /// Per home process: the `(consumer, handle)` pairs of version-0 data
+    /// it must push at startup (sorted, deduplicated).  Precomputed once so
+    /// process start is O(own tasks), not O(all tasks).
+    v0_exports: Vec<Vec<(ProcessId, DataId)>>,
 }
 
 impl TaskGraph {
@@ -40,9 +47,22 @@ impl TaskGraph {
         self.tasks.len()
     }
 
-    /// Tasks placed on `p` (owner-computes homes).
+    /// Tasks placed on `p` (owner-computes homes) — a precomputed index
+    /// lookup, not a scan over all tasks.
     pub fn tasks_of(&self, p: ProcessId) -> impl Iterator<Item = &TaskNode> {
-        self.tasks.iter().filter(move |t| t.placement == p)
+        self.tasks_by_proc
+            .get(p.idx())
+            .map(Vec::as_slice)
+            .unwrap_or(&[])
+            .iter()
+            .map(|id| &self.tasks[id.idx()])
+    }
+
+    /// The startup pushes of version-0 data homed at `home`: each remote
+    /// consumer process paired with the handle it needs, sorted and
+    /// deduplicated (one `DataSend` per pair).
+    pub fn v0_exports(&self, home: ProcessId) -> &[(ProcessId, DataId)] {
+        self.v0_exports.get(home.idx()).map(Vec::as_slice).unwrap_or(&[])
     }
 
     /// Total flops over all tasks (for utilization/roofline accounting).
@@ -192,7 +212,34 @@ impl GraphBuilder {
         for (t, deps) in self.tasks.iter_mut().zip(dependents) {
             t.dependents = deps;
         }
-        let g = TaskGraph { tasks: self.tasks, data: self.data };
+
+        // Per-process task index (placement buckets).
+        let max_proc = self.tasks.iter().map(|t| t.placement.idx() + 1).max().unwrap_or(0);
+        let mut tasks_by_proc: Vec<Vec<TaskId>> = vec![Vec::new(); max_proc];
+        for t in &self.tasks {
+            tasks_by_proc[t.placement.idx()].push(t.id);
+        }
+
+        // Startup v0 pushes, bucketed by the data's home process.  Sorted
+        // (to, data) with duplicates removed — identical to the BTreeMap
+        // the process start loop used to build, so send order (and thus
+        // DES determinism) is unchanged.
+        let max_home = self.data.iter().map(|d| d.home.idx() + 1).max().unwrap_or(0);
+        let mut v0_exports: Vec<Vec<(ProcessId, DataId)>> = vec![Vec::new(); max_home];
+        for t in &self.tasks {
+            for &a in &t.v0_args {
+                let home = self.data[a.idx()].home;
+                if home != t.placement {
+                    v0_exports[home.idx()].push((t.placement, a));
+                }
+            }
+        }
+        for v in &mut v0_exports {
+            v.sort_unstable();
+            v.dedup();
+        }
+
+        let g = TaskGraph { tasks: self.tasks, data: self.data, tasks_by_proc, v0_exports };
         debug_assert!(g.topo_order().is_ok());
         Arc::new(g)
     }
@@ -305,6 +352,39 @@ mod tests {
         let g = b.build();
         assert_eq!(g.critical_path_flops(), 28);
         assert_eq!(g.total_flops(), 28);
+    }
+
+    #[test]
+    fn tasks_of_matches_placement_scan() {
+        let mut b = GraphBuilder::new();
+        for i in 0..9 {
+            let x = b.data(p(i % 3), 2, 2);
+            b.task(TaskKind::Synthetic, vec![], x, 1, None);
+        }
+        let g = b.build();
+        for q in 0..4u32 {
+            let fast: Vec<TaskId> = g.tasks_of(p(q)).map(|t| t.id).collect();
+            let slow: Vec<TaskId> =
+                g.tasks.iter().filter(|t| t.placement == p(q)).map(|t| t.id).collect();
+            assert_eq!(fast, slow, "process {q}");
+        }
+    }
+
+    #[test]
+    fn v0_exports_cover_remote_consumers_sorted() {
+        let mut b = GraphBuilder::new();
+        let x = b.data(p(0), 2, 2); // v0 handle homed at p0
+        let y = b.data(p(1), 2, 2);
+        let z = b.data(p(2), 2, 2);
+        // two remote consumers of x@v0, one local
+        b.task(TaskKind::Synthetic, vec![x], y, 1, None); // p1 reads x
+        b.task(TaskKind::Synthetic, vec![x], z, 1, None); // p2 reads x
+        let w = b.data(p(0), 2, 2);
+        b.task(TaskKind::Synthetic, vec![x], w, 1, None); // p0 reads x (local)
+        let g = b.build();
+        assert_eq!(g.v0_exports(p(0)), &[(p(1), x), (p(2), x)]);
+        assert!(g.v0_exports(p(1)).is_empty());
+        assert!(g.v0_exports(p(7)).is_empty(), "out-of-range home is empty");
     }
 
     #[test]

@@ -15,7 +15,6 @@
 //! the export mechanics (input gathering, counters, `TaskExport` framing)
 //! that every policy shares.
 
-use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::config::{Config, PolicyKind, Strategy};
@@ -117,14 +116,16 @@ pub struct ProcessState {
     /// Remaining unsatisfied dependencies per task (only meaningful for
     /// tasks placed here).
     pending_deps: Vec<u32>,
-    /// v0 data id → local tasks waiting for its arrival.
-    v0_waiting: HashMap<DataId, Vec<TaskId>>,
+    /// Per data handle: local tasks waiting for its v0 arrival (dense,
+    /// indexed by `DataId` — ids are contiguous graph indices).
+    v0_waiting: Vec<Vec<TaskId>>,
     /// Tasks homed here that have not yet completed (includes exported).
     owned_remaining: usize,
     /// Tasks currently executing on local cores.
     executing: usize,
-    /// Tasks exported and awaiting `ResultReturn`.
-    exported: std::collections::HashSet<TaskId>,
+    /// Tasks exported and awaiting `ResultReturn` (dense, indexed by
+    /// `TaskId`).
+    exported: Vec<bool>,
     /// Topology neighbor set (diffusion's exchange partners).
     neighbors: Vec<ProcessId>,
     rng: Rng,
@@ -151,23 +152,26 @@ impl ProcessState {
         let neighbors = params.topology.neighbors(me, num_processes);
         let perf = PerfRecorder::new(params.cost);
         let pending_deps = vec![0u32; graph.num_tasks()];
+        let v0_waiting = vec![Vec::new(); graph.data.len()];
+        let exported = vec![false; graph.num_tasks()];
+        let store = DataStore::with_capacity(graph.data.len());
         ProcessState {
             me,
             num_processes,
             graph,
             params,
             queue: ReadyQueue::new(),
-            store: DataStore::new(),
+            store,
             policy: balancer,
             perf,
             trace: WorkloadTrace::new(),
             halted: false,
             role_override: None,
             pending_deps,
-            v0_waiting: HashMap::new(),
+            v0_waiting,
             owned_remaining: 0,
             executing: 0,
-            exported: Default::default(),
+            exported,
             neighbors,
             rng,
             owners_done: 0,
@@ -255,56 +259,47 @@ impl ProcessState {
 
     /// Initialize: seed dependency counters, push v0 data to remote
     /// consumers, enqueue initially-ready local tasks, stagger the first
-    /// DLB search.
-    pub fn start(&mut self, now: f64) -> Vec<Effect> {
-        let mut effects = Vec::new();
+    /// DLB search.  Appends to the caller-owned `effects` buffer (as do all
+    /// the step entry points — the engines reuse one scratch `Vec` across
+    /// events instead of allocating a fresh one per step).
+    pub fn start(&mut self, now: f64, effects: &mut Vec<Effect>) {
         let graph = Arc::clone(&self.graph);
-        let mut v0_out: std::collections::BTreeMap<(ProcessId, DataId), ()> = Default::default();
 
-        for t in &graph.tasks {
-            if t.placement == self.me {
-                self.owned_remaining += 1;
-                let missing: Vec<DataId> = t
-                    .v0_args
-                    .iter()
-                    .copied()
-                    .filter(|a| graph.meta(*a).home != self.me)
-                    .collect();
-                self.pending_deps[t.id.idx()] = (t.deps.len() + missing.len()) as u32;
-                for a in missing {
-                    self.v0_waiting.entry(a).or_default().push(t.id);
-                }
-                if self.pending_deps[t.id.idx()] == 0 {
-                    self.queue.push(ReadyTask::home(t.id, self.me));
-                }
-            } else {
-                // ship v0 handles homed here to their remote consumers
-                for &a in &t.v0_args {
-                    if graph.meta(a).home == self.me {
-                        v0_out.insert((t.placement, a), ());
-                    }
+        // O(own tasks): dependency counters + initially-ready queue.
+        for t in graph.tasks_of(self.me) {
+            self.owned_remaining += 1;
+            let mut missing = 0u32;
+            for &a in &t.v0_args {
+                if graph.meta(a).home != self.me {
+                    missing += 1;
+                    self.v0_waiting[a.idx()].push(t.id);
                 }
             }
+            self.pending_deps[t.id.idx()] = t.deps.len() as u32 + missing;
+            if self.pending_deps[t.id.idx()] == 0 {
+                self.queue.push(ReadyTask::home(t.id, self.me));
+            }
         }
-        for (to, data) in v0_out.keys().copied() {
+        // Ship v0 handles homed here to their remote consumers (the
+        // sorted/deduplicated pair list is precomputed on the graph).
+        for &(to, data) in graph.v0_exports(self.me) {
             let payload = match self.store.get(data) {
                 Some(p) => p.clone(),
                 None => Payload::Sim,
             };
-            self.send(&mut effects, to, Msg::DataSend { data, payload });
+            self.send(effects, to, Msg::DataSend { data, payload });
         }
         self.record_trace(now);
 
         // done before starting? (process owns zero tasks)
-        self.maybe_report_done(now, &mut effects);
-        self.maybe_exec(&mut effects);
+        self.maybe_report_done(now, effects);
+        self.maybe_exec(effects);
 
         if self.params.dlb_enabled {
             // stagger the first balancer activity uniformly over one δ
             self.policy.init(now, &mut self.rng);
-            self.dlb_poll(now, &mut effects);
+            self.dlb_poll(now, effects);
         }
-        effects
     }
 
     /// Start executions on free cores.
@@ -327,8 +322,8 @@ impl ProcessState {
         output: Payload,
         duration: f64,
         now: f64,
-    ) -> Vec<Effect> {
-        let mut effects = Vec::new();
+        effects: &mut Vec<Effect>,
+    ) {
         self.executing -= 1;
         let node = self.graph.task(rt.task);
         self.perf.record_exec(node.kind, duration);
@@ -336,15 +331,14 @@ impl ProcessState {
 
         if rt.is_migrated(self.me) {
             // return the result to the origin; it publishes completion
-            self.send(&mut effects, rt.origin, Msg::ResultReturn { task: rt.task, payload: output });
+            self.send(effects, rt.origin, Msg::ResultReturn { task: rt.task, payload: output });
         } else {
             self.store.insert(node.output, output);
-            self.publish_completion(rt.task, now, &mut effects);
+            self.publish_completion(rt.task, now, effects);
         }
         self.record_trace(now);
-        self.maybe_exec(&mut effects);
-        self.dlb_poll(now, &mut effects);
-        effects
+        self.maybe_exec(effects);
+        self.dlb_poll(now, effects);
     }
 
     /// Local bookkeeping + dependent notification after task `t` (homed
@@ -423,10 +417,9 @@ impl ProcessState {
     // messages
     // ------------------------------------------------------------------
 
-    pub fn on_message(&mut self, env: Envelope, now: f64) -> Vec<Effect> {
-        let mut effects = Vec::new();
+    pub fn on_message(&mut self, env: Envelope, now: f64, effects: &mut Vec<Effect>) {
         if self.halted {
-            return effects;
+            return;
         }
         let from = env.from;
         match env.msg {
@@ -434,10 +427,9 @@ impl ProcessState {
                 if !matches!(payload, Payload::None) {
                     self.store.insert(data, payload);
                 }
-                if let Some(waiters) = self.v0_waiting.remove(&data) {
-                    for t in waiters {
-                        self.satisfy_dep(t, now, &mut effects);
-                    }
+                let waiters = std::mem::take(&mut self.v0_waiting[data.idx()]);
+                for t in waiters {
+                    self.satisfy_dep(t, now, effects);
                 }
             }
             Msg::TaskDone { task, data, payload } => {
@@ -447,18 +439,19 @@ impl ProcessState {
                 let graph = Arc::clone(&self.graph);
                 for &d in &graph.task(task).dependents {
                     if graph.task(d).placement == self.me {
-                        self.satisfy_dep(d, now, &mut effects);
+                        self.satisfy_dep(d, now, effects);
                     }
                 }
             }
             Msg::ResultReturn { task, payload } => {
-                debug_assert!(self.exported.remove(&task), "unexpected return of {task}");
+                let was_exported = std::mem::replace(&mut self.exported[task.idx()], false);
+                debug_assert!(was_exported, "unexpected return of {task}");
                 let out = self.graph.task(task).output;
                 if !matches!(payload, Payload::None) {
                     self.store.insert(out, payload);
                 }
                 self.last_completion = now;
-                self.publish_completion(task, now, &mut effects);
+                self.publish_completion(task, now, effects);
             }
 
             Msg::TaskExport { round, tasks } => {
@@ -474,18 +467,14 @@ impl ProcessState {
                     self.queue.push(ReadyTask { task: mt.task, origin: mt.origin });
                 }
                 self.policy.counters_mut().tasks_received += n as u64;
-                self.send(&mut effects, from, Msg::ExportAck { round, accepted: n });
-                self.drive_policy(
-                    PolicyEvent::Transfer { from, round, received: n },
-                    now,
-                    &mut effects,
-                );
+                self.send(effects, from, Msg::ExportAck { round, accepted: n });
+                self.drive_policy(PolicyEvent::Transfer { from, round, received: n }, now, effects);
                 self.record_trace(now);
-                self.maybe_exec(&mut effects);
+                self.maybe_exec(effects);
             }
 
             Msg::OwnerDone { .. } => {
-                self.on_owner_done(now, &mut effects);
+                self.on_owner_done(now, effects);
             }
             Msg::Shutdown => {
                 self.halted = true;
@@ -497,13 +486,12 @@ impl ProcessState {
             // reports, export acks).
             other => {
                 debug_assert!(other.is_dlb(), "unhandled non-DLB message {other:?}");
-                self.drive_policy(PolicyEvent::Message { from, msg: &other }, now, &mut effects);
+                self.drive_policy(PolicyEvent::Message { from, msg: &other }, now, effects);
             }
         }
         if !self.halted {
-            self.dlb_poll(now, &mut effects);
+            self.dlb_poll(now, effects);
         }
-        effects
     }
 
     /// Build the policy's observation once, dispatch one event to it, and
@@ -620,7 +608,7 @@ impl ProcessState {
             let node = graph.task(rt.task);
             if rt.origin == self.me {
                 // our own task leaves: expect a ResultReturn for it
-                self.exported.insert(rt.task);
+                self.exported[rt.task.idx()] = true;
             }
             let inputs: Vec<(DataId, Payload)> = node
                 .args
@@ -639,14 +627,12 @@ impl ProcessState {
     // timers / DLB driving
     // ------------------------------------------------------------------
 
-    pub fn on_tick(&mut self, now: f64) -> Vec<Effect> {
-        let mut effects = Vec::new();
+    pub fn on_tick(&mut self, now: f64, effects: &mut Vec<Effect>) {
         if self.halted {
-            return effects;
+            return;
         }
         self.policy.on_tick(now, &mut self.rng);
-        self.dlb_poll(now, &mut effects);
-        effects
+        self.dlb_poll(now, effects);
     }
 
     /// Give the policy a chance to act and schedule the next wakeup.
@@ -700,10 +686,35 @@ mod tests {
         Envelope { from: ProcessId(from), to: ProcessId(to), msg, wire_doubles: 8 }
     }
 
+    // Scratch-buffer wrappers: tests read effects as a returned Vec.
+    fn run_start(ps: &mut ProcessState) -> Vec<Effect> {
+        let mut fx = Vec::new();
+        ps.start(0.0, &mut fx);
+        fx
+    }
+
+    fn deliver(ps: &mut ProcessState, env: Envelope, now: f64) -> Vec<Effect> {
+        let mut fx = Vec::new();
+        ps.on_message(env, now, &mut fx);
+        fx
+    }
+
+    fn tick(ps: &mut ProcessState, now: f64) -> Vec<Effect> {
+        let mut fx = Vec::new();
+        ps.on_tick(now, &mut fx);
+        fx
+    }
+
+    fn exec_done(ps: &mut ProcessState, rt: ReadyTask, duration: f64, now: f64) -> Vec<Effect> {
+        let mut fx = Vec::new();
+        ps.on_exec_complete(rt, Payload::Sim, duration, now, &mut fx);
+        fx
+    }
+
     #[test]
     fn start_enqueues_ready_tasks_and_starts_cores() {
         let mut ps = bag_state(5, false, 2, 0);
-        let effects = ps.start(0.0);
+        let effects = run_start(&mut ps);
         // 1 core → exactly one StartExec; 4 remain queued
         let execs = effects.iter().filter(|e| matches!(e, Effect::StartExec { .. })).count();
         assert_eq!(execs, 1);
@@ -713,14 +724,14 @@ mod tests {
     #[test]
     fn role_thresholds_with_and_without_gap() {
         let mut ps = bag_state(8, true, 3, 0);
-        let _ = ps.start(0.0);
+        let _ = run_start(&mut ps);
         assert_eq!(ps.workload(), 7);
         assert_eq!(ps.role(), Role::Busy);
         assert!(!ps.in_middle_zone());
 
         // same queue with a gap of 10: w = 7 ≤ 3 + 10 → idle-ish middle zone
         let mut ps = bag_state(8, true, 3, 10);
-        let _ = ps.start(0.0);
+        let _ = run_start(&mut ps);
         assert_eq!(ps.role(), Role::Idle);
         assert!(ps.in_middle_zone());
     }
@@ -728,8 +739,9 @@ mod tests {
     #[test]
     fn middle_zone_declines_requests() {
         let mut ps = bag_state(8, true, 3, 10); // w = 7: middle zone
-        let _ = ps.start(0.0);
-        let effects = ps.on_message(
+        let _ = run_start(&mut ps);
+        let effects = deliver(
+            &mut ps,
             envelope(1, 0, Msg::PairRequest { round: 9, role: Role::Idle, load: 0, eta: 0.0 }),
             0.001,
         );
@@ -742,8 +754,9 @@ mod tests {
     #[test]
     fn busy_process_accepts_idle_request_and_exports() {
         let mut ps = bag_state(10, true, 2, 0); // w = 9 > 2: busy
-        let _ = ps.start(0.0);
-        let effects = ps.on_message(
+        let _ = run_start(&mut ps);
+        let effects = deliver(
+            &mut ps,
             envelope(1, 0, Msg::PairRequest { round: 1, role: Role::Idle, load: 0, eta: 0.0 }),
             0.001,
         );
@@ -751,7 +764,8 @@ mod tests {
             matches!(e, Effect::Send(env) if matches!(env.msg, Msg::PairAccept { .. }))
         }));
         // idle requester confirms → busy side ships the excess
-        let effects = ps.on_message(
+        let effects = deliver(
+            &mut ps,
             envelope(1, 0, Msg::PairConfirm { round: 1, load: 0, eta: 0.0 }),
             0.002,
         );
@@ -765,7 +779,7 @@ mod tests {
         assert_eq!(exported, Some(7), "basic: w−W_T = 9−2 tasks leave");
         assert_eq!(ps.workload(), 2);
         // idle side acks → transaction closes, counters recorded
-        let _ = ps.on_message(envelope(1, 0, Msg::ExportAck { round: 1, accepted: 7 }), 0.003);
+        let _ = deliver(&mut ps, envelope(1, 0, Msg::ExportAck { round: 1, accepted: 7 }), 0.003);
         assert!(!ps.policy.engaged());
         assert_eq!(ps.counters().tasks_exported, 7);
     }
@@ -780,13 +794,15 @@ mod tests {
         let t1 = b.task(TaskKind::Synthetic, vec![], d1, 1000, None);
         let g = b.build();
         let mut ps = ProcessState::new(ProcessId(1), 2, g, params(true, 2, 0), 1);
-        let _ = ps.start(0.0);
+        let _ = run_start(&mut ps);
         // fake an in-transaction state by receiving a request we accept
-        let _ = ps.on_message(
+        let _ = deliver(
+            &mut ps,
             envelope(0, 1, Msg::PairRequest { round: 4, role: Role::Busy, load: 9, eta: 1.0 }),
             0.001,
         );
-        let effects = ps.on_message(
+        let effects = deliver(
+            &mut ps,
             envelope(
                 0,
                 1,
@@ -815,10 +831,10 @@ mod tests {
         let t0 = b.task(TaskKind::Synthetic, vec![], d0, 1000, None);
         let g = b.build();
         let mut ps = ProcessState::new(ProcessId(1), 2, g, params(true, 2, 0), 1);
-        let _ = ps.start(0.0);
+        let _ = run_start(&mut ps);
         let rt = ReadyTask { task: t0, origin: ProcessId(0) };
         ps.executing = 1; // as if the engine had started it
-        let effects = ps.on_exec_complete(rt, Payload::Sim, 0.01, 0.5);
+        let effects = exec_done(&mut ps, rt, 0.01, 0.5);
         let returned = effects.iter().any(|e| {
             matches!(e, Effect::Send(env)
                 if env.to == ProcessId(0) && matches!(env.msg, Msg::ResultReturn { .. }))
@@ -836,9 +852,10 @@ mod tests {
         let _t1 = b.task(TaskKind::Synthetic, vec![d0], d1, 1000, None);
         let g = b.build();
         let mut ps = ProcessState::new(ProcessId(1), 2, g, params(false, 2, 0), 1);
-        let effects = ps.start(0.0);
+        let effects = run_start(&mut ps);
         assert!(effects.iter().all(|e| !matches!(e, Effect::StartExec { .. })), "not ready yet");
-        let effects = ps.on_message(
+        let effects = deliver(
+            &mut ps,
             envelope(0, 1, Msg::TaskDone { task: t0, data: d0, payload: Payload::Sim }),
             0.1,
         );
@@ -856,9 +873,9 @@ mod tests {
         b.task(TaskKind::Synthetic, vec![], d, 1000, None);
         let g = b.build();
         let mut ps = ProcessState::new(ProcessId(0), 2, g, params(false, 2, 0), 1);
-        let _ = ps.start(0.0);
+        let _ = run_start(&mut ps);
         assert!(!ps.halted);
-        let effects = ps.on_message(envelope(1, 0, Msg::OwnerDone { proc: ProcessId(1) }), 1.0);
+        let effects = deliver(&mut ps, envelope(1, 0, Msg::OwnerDone { proc: ProcessId(1) }), 1.0);
         assert!(ps.halted);
         assert!(effects.iter().any(|e| {
             matches!(e, Effect::Send(env) if matches!(env.msg, Msg::Shutdown))
@@ -869,9 +886,10 @@ mod tests {
     #[test]
     fn halted_process_ignores_messages() {
         let mut ps = bag_state(1, true, 2, 0);
-        let _ = ps.start(0.0);
+        let _ = run_start(&mut ps);
         ps.halted = true;
-        let effects = ps.on_message(
+        let effects = deliver(
+            &mut ps,
             envelope(1, 0, Msg::PairRequest { round: 1, role: Role::Idle, load: 0, eta: 0.0 }),
             0.1,
         );
@@ -881,9 +899,9 @@ mod tests {
     #[test]
     fn dlb_disabled_never_searches() {
         let mut ps = bag_state(20, false, 2, 0);
-        let effects = ps.start(0.0);
+        let effects = run_start(&mut ps);
         assert!(effects.iter().all(|e| !matches!(e, Effect::ScheduleTick { .. })));
-        let effects = ps.on_tick(1.0);
+        let effects = tick(&mut ps, 1.0);
         assert!(effects
             .iter()
             .all(|e| !matches!(e, Effect::Send(env) if env.msg.is_dlb())));
@@ -907,10 +925,11 @@ mod tests {
     #[test]
     fn steal_request_on_busy_process_exports_half_excess() {
         let mut ps = bag_state_policy(11, 2, PolicyKind::WorkStealing);
-        let _ = ps.start(0.0);
+        let _ = run_start(&mut ps);
         assert_eq!(ps.workload(), 10); // one executing
         // idle thief p1 asks: excess = 8 → steal-half = 4
-        let effects = ps.on_message(
+        let effects = deliver(
+            &mut ps,
             envelope(1, 0, Msg::StealRequest { round: 5, load: 0, eta: 0.0 }),
             0.001,
         );
@@ -929,9 +948,10 @@ mod tests {
     #[test]
     fn steal_request_on_idle_process_gets_empty_export() {
         let mut ps = bag_state_policy(2, 2, PolicyKind::WorkStealing);
-        let _ = ps.start(0.0);
+        let _ = run_start(&mut ps);
         assert_eq!(ps.workload(), 1); // idle
-        let effects = ps.on_message(
+        let effects = deliver(
+            &mut ps,
             envelope(1, 0, Msg::StealRequest { round: 3, load: 0, eta: 0.0 }),
             0.001,
         );
@@ -949,11 +969,11 @@ mod tests {
     #[test]
     fn diffusion_reports_load_and_flows_to_lighter_neighbor() {
         let mut ps = bag_state_policy(13, 2, PolicyKind::Diffusion);
-        let _ = ps.start(0.0);
+        let _ = run_start(&mut ps);
         assert_eq!(ps.workload(), 12);
         // first exchange (report-only: no neighbor loads known yet) — the
         // staggered start is < δ = 10 ms, so a 1 s tick certainly fires it
-        let effects = ps.on_tick(1.0);
+        let effects = tick(&mut ps, 1.0);
         let reports = effects
             .iter()
             .filter(|e| {
@@ -964,9 +984,9 @@ mod tests {
         assert_eq!(ps.workload(), 12, "no flow without neighbor data");
         // p1 reports empty right after (jitter keeps the next exchange
         // ≥ 0.75δ away, so this cannot race it) …
-        let _ = ps.on_message(envelope(1, 0, Msg::LoadReport { load: 0 }), 1.001);
+        let _ = deliver(&mut ps, envelope(1, 0, Msg::LoadReport { load: 0 }), 1.001);
         // … and the next period flows α·(12−0) = ⌊12/4⌋ = 3 tasks to p1
-        let effects = ps.on_tick(2.0);
+        let effects = tick(&mut ps, 2.0);
         let flowed = effects.iter().find_map(|e| match e {
             Effect::Send(env) => match &env.msg {
                 Msg::TaskExport { tasks, .. } if env.to == ProcessId(1) => Some(tasks.len()),
@@ -983,7 +1003,7 @@ mod tests {
     fn all_policies_schedule_wakeups_from_start() {
         for policy in PolicyKind::ALL {
             let mut ps = bag_state_policy(6, 2, policy);
-            let effects = ps.start(0.0);
+            let effects = run_start(&mut ps);
             assert!(
                 effects.iter().any(|e| matches!(e, Effect::ScheduleTick { .. })),
                 "{policy} must arm its timer"
@@ -994,10 +1014,10 @@ mod tests {
     #[test]
     fn local_completion_publishes_and_reports_done() {
         let mut ps = bag_state(1, false, 2, 0);
-        let effects = ps.start(0.0);
+        let effects = run_start(&mut ps);
         assert_eq!(effects.iter().filter(|e| matches!(e, Effect::StartExec { .. })).count(), 1);
         let rt = ReadyTask::home(TaskId(0), ProcessId(0));
-        let effects = ps.on_exec_complete(rt, Payload::Sim, 0.001, 0.1);
+        let effects = exec_done(&mut ps, rt, 0.001, 0.1);
         // sole task complete; rank 0 owns everything and p1 owns none…
         // p1 reports at its own start, so here p0 halts only after that
         // message. At minimum the task is recorded done locally:

@@ -14,8 +14,6 @@
 //! and stealing do not have.  On a flat topology the neighbor set is
 //! everyone and diffusion degenerates to global averaging.
 
-use std::collections::HashMap;
-
 use crate::core::ids::ProcessId;
 use crate::dlb::pairing::PairingConfig;
 use crate::metrics::counters::DlbCounters;
@@ -24,11 +22,17 @@ use crate::util::rng::Rng;
 
 use super::{BalancerPolicy, PolicyAction, PolicyObs};
 
+/// Sentinel for "no load report received yet from this process".
+const NO_REPORT: usize = usize::MAX;
+
 pub struct Diffusion {
     cfg: PairingConfig,
     next_exchange_at: f64,
-    /// Latest load each neighbor reported (absent until first report).
-    neighbor_loads: HashMap<ProcessId, usize>,
+    /// Latest load each neighbor reported, dense-indexed by process id
+    /// (`NO_REPORT` until the first report) — neighbor sets are small and
+    /// lookups sit on the per-exchange hot path, so a flat table beats a
+    /// hash map.
+    neighbor_loads: Vec<usize>,
     next_round: u64,
     pub counters: DlbCounters,
 }
@@ -39,10 +43,21 @@ impl Diffusion {
         Diffusion {
             cfg,
             next_exchange_at: 0.0,
-            neighbor_loads: HashMap::new(),
+            neighbor_loads: Vec::new(),
             next_round: 1,
             counters: DlbCounters::default(),
         }
+    }
+
+    fn load_of(&self, q: ProcessId) -> Option<usize> {
+        self.neighbor_loads.get(q.idx()).copied().filter(|&w| w != NO_REPORT)
+    }
+
+    fn set_load(&mut self, q: ProcessId, load: usize) {
+        if q.idx() >= self.neighbor_loads.len() {
+            self.neighbor_loads.resize(q.idx() + 1, NO_REPORT);
+        }
+        self.neighbor_loads[q.idx()] = load;
     }
 }
 
@@ -78,7 +93,7 @@ impl BalancerPolicy for Diffusion {
             return;
         }
         for &q in obs.neighbors {
-            let Some(&wj) = self.neighbor_loads.get(&q) else { continue };
+            let Some(wj) = self.load_of(q) else { continue };
             if wj >= obs.workload {
                 continue;
             }
@@ -101,7 +116,7 @@ impl BalancerPolicy for Diffusion {
             self.counters.transactions += 1;
             // assume the tasks land: avoids re-sending to the same
             // neighbor next period before its report catches up
-            self.neighbor_loads.insert(q, wj + flow);
+            self.set_load(q, wj + flow);
             out.push(PolicyAction::ExportCount { to: q, round, count: flow });
             if budget == 0 {
                 break;
@@ -120,7 +135,7 @@ impl BalancerPolicy for Diffusion {
         match *msg {
             Msg::LoadReport { load } => {
                 self.counters.requests_received += 1;
-                self.neighbor_loads.insert(from, load);
+                self.set_load(from, load);
             }
             // Transfers are fire-and-forget: the ack needs no bookkeeping.
             Msg::ExportAck { .. } => {}

@@ -1,0 +1,248 @@
+//! `ductr bench` — the repeatable DES hot-path baseline.
+//!
+//! Times full simulator runs on the two standing workloads (block Cholesky
+//! and the random layered DAG) across a process-count sweep, and writes a
+//! JSON baseline (`BENCH_pr3.json` by default) so successive PRs have a
+//! perf trajectory to compare against: events/sec, makespan, and the event-
+//! heap high-water mark per case.
+//!
+//! Wall-clock numbers are machine-dependent; everything else in the file
+//! (events, makespan, peak heap) is deterministic under the seed, which is
+//! what makes the baseline diffable across engine changes.
+
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::apps::rand_dag;
+use crate::cholesky::{self, ProcessGrid};
+use crate::config::Config;
+use crate::core::graph::TaskGraph;
+use crate::sim::engine::{SimEngine, SimResult};
+use crate::util::bench::{run_with, BenchConfig};
+use crate::util::error::{Error, Result};
+
+/// One timed workload/process-count cell.
+#[derive(Debug, Clone)]
+pub struct BenchCase {
+    pub name: String,
+    pub workload: &'static str,
+    pub processes: usize,
+    pub tasks: usize,
+    /// Events dispatched by one run (deterministic under the seed).
+    pub events: u64,
+    pub makespan: f64,
+    pub peak_event_heap: usize,
+    /// Median wall-clock seconds per run.
+    pub wall_secs: f64,
+    pub events_per_sec: f64,
+}
+
+#[derive(Debug)]
+pub struct BenchReport {
+    pub seed: u64,
+    pub smoke: bool,
+    pub cases: Vec<BenchCase>,
+}
+
+fn base_cfg(p: usize, seed: u64) -> Config {
+    let mut c = Config::default();
+    c.processes = p;
+    c.grid = None; // derive the squarest grid for the Cholesky cells
+    c.dlb_enabled = true;
+    c.wt = 3;
+    c.delta = 0.002;
+    c.seed = seed;
+    c
+}
+
+/// The full-profile random-DAG cell (the P = 256 instance is the hot-path
+/// acceptance workload).  Shared with `benches/hotpath.rs` so the two
+/// measurements cannot drift apart.
+pub fn rand_dag_case(p: usize, seed: u64) -> (Config, Arc<TaskGraph>, String) {
+    let mut cfg = base_cfg(p, seed);
+    cfg.validate().expect("bench config");
+    let mut params = rand_dag::DagParams::default();
+    params.layers = 24;
+    params.width = p.max(16);
+    let name = format!("rand_dag {}x{} P={p}", params.layers, params.width);
+    (cfg, rand_dag::build(p, params, seed), name)
+}
+
+/// Time `graph` under `cfg`; returns the (seed-deterministic) sim result of
+/// the last run plus the median wall seconds over the harness samples.
+fn time_case(cfg: &Config, graph: &Arc<TaskGraph>, name: &str, smoke: bool) -> (SimResult, f64) {
+    let bc = if smoke {
+        BenchConfig {
+            warmup_iters: 0,
+            samples: 2,
+            iters_per_sample: 1,
+            min_warmup_time: Duration::ZERO,
+            max_total_time: Duration::from_secs(120),
+        }
+    } else {
+        BenchConfig {
+            warmup_iters: 1,
+            samples: 3,
+            iters_per_sample: 1,
+            min_warmup_time: Duration::from_millis(1),
+            max_total_time: Duration::from_secs(300),
+        }
+    };
+    let mut last: Option<SimResult> = None;
+    let res = run_with(&bc, name, || {
+        let mut eng = SimEngine::from_config(cfg, Arc::clone(graph));
+        let r = eng.run().expect("bench sim run");
+        last = Some(r);
+    });
+    (last.expect("at least one sample ran"), res.summary.median)
+}
+
+/// Run the sweep.  `smoke` shrinks process counts and sizes to a few
+/// seconds total for CI.
+pub fn run(seed: u64, smoke: bool) -> Result<BenchReport> {
+    let ps: &[usize] = if smoke { &[4, 8] } else { &[16, 64, 256] };
+    let mut cases = Vec::new();
+
+    for &p in ps {
+        // --- block Cholesky ------------------------------------------
+        let mut cfg = base_cfg(p, seed);
+        cfg.nb = if smoke { 8 } else { 24 };
+        cfg.block = if smoke { 128 } else { 256 };
+        cfg.validate().map_err(Error::new)?;
+        let dag = cholesky::build(cfg.nb, cfg.block, ProcessGrid::new(cfg.effective_grid()));
+        let name = format!("cholesky nb={} P={p}", cfg.nb);
+        let (r, wall) = time_case(&cfg, &dag.graph, &name, smoke);
+        cases.push(case("cholesky", &name, p, dag.graph.num_tasks(), &r, wall));
+
+        // --- random layered DAG --------------------------------------
+        let (cfg, graph, name) = if smoke {
+            let mut c = base_cfg(p, seed);
+            c.validate().map_err(Error::new)?;
+            let mut params = rand_dag::DagParams::default();
+            params.layers = 6;
+            params.width = 8;
+            let name = format!("rand_dag {}x{} P={p}", params.layers, params.width);
+            (c, rand_dag::build(p, params, seed), name)
+        } else {
+            rand_dag_case(p, seed)
+        };
+        let (r, wall) = time_case(&cfg, &graph, &name, smoke);
+        cases.push(case("rand_dag", &name, p, graph.num_tasks(), &r, wall));
+    }
+
+    Ok(BenchReport { seed, smoke, cases })
+}
+
+fn case(
+    workload: &'static str,
+    name: &str,
+    p: usize,
+    tasks: usize,
+    r: &SimResult,
+    wall: f64,
+) -> BenchCase {
+    BenchCase {
+        name: name.to_string(),
+        workload,
+        processes: p,
+        tasks,
+        events: r.events_processed,
+        makespan: r.makespan,
+        peak_event_heap: r.peak_event_heap,
+        wall_secs: wall,
+        events_per_sec: if wall > 0.0 { r.events_processed as f64 / wall } else { 0.0 },
+    }
+}
+
+impl BenchReport {
+    /// ASCII quick-look table.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "ductr bench (seed {}{})\n{:<28} {:>6} {:>7} {:>10} {:>11} {:>10} {:>12}\n",
+            self.seed,
+            if self.smoke { ", smoke" } else { "" },
+            "case",
+            "P",
+            "tasks",
+            "events",
+            "makespan",
+            "peak-heap",
+            "events/s"
+        ));
+        for c in &self.cases {
+            s.push_str(&format!(
+                "{:<28} {:>6} {:>7} {:>10} {:>11.4} {:>10} {:>12.0}\n",
+                c.name, c.processes, c.tasks, c.events, c.makespan, c.peak_event_heap,
+                c.events_per_sec
+            ));
+        }
+        s
+    }
+
+    /// Hand-rolled JSON (the offline crate set has no serde): one object
+    /// with a `cases` array, numbers emitted raw.
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{{")?;
+        writeln!(f, "  \"generated_by\": \"ductr bench\",")?;
+        writeln!(f, "  \"seed\": {},", self.seed)?;
+        writeln!(f, "  \"smoke\": {},", self.smoke)?;
+        writeln!(f, "  \"cases\": [")?;
+        for (i, c) in self.cases.iter().enumerate() {
+            let comma = if i + 1 < self.cases.len() { "," } else { "" };
+            writeln!(
+                f,
+                "    {{\"name\": \"{}\", \"workload\": \"{}\", \"processes\": {}, \
+                 \"tasks\": {}, \"events\": {}, \"makespan\": {}, \
+                 \"peak_event_heap\": {}, \"wall_secs\": {}, \"events_per_sec\": {}}}{comma}",
+                c.name,
+                c.workload,
+                c.processes,
+                c.tasks,
+                c.events,
+                c.makespan,
+                c.peak_event_heap,
+                c.wall_secs,
+                c.events_per_sec
+            )?;
+        }
+        writeln!(f, "  ]")?;
+        writeln!(f, "}}")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_sweep_runs_and_serializes() {
+        let r = run(1, true).expect("smoke bench");
+        assert_eq!(r.cases.len(), 4); // 2 workloads × 2 process counts
+        assert!(r.cases.iter().all(|c| c.events > 0 && c.makespan > 0.0));
+        assert!(r.cases.iter().all(|c| c.peak_event_heap > 0));
+        let rendered = r.render();
+        assert!(rendered.contains("events/s"));
+        let p = std::env::temp_dir().join("ductr_bench_smoke.json");
+        r.write_json(&p).expect("json write");
+        let body = std::fs::read_to_string(&p).expect("json read");
+        assert!(body.starts_with('{') && body.trim_end().ends_with('}'));
+        assert_eq!(body.matches("\"name\"").count(), 4);
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn bench_metrics_deterministic_under_seed() {
+        let a = run(7, true).expect("a");
+        let b = run(7, true).expect("b");
+        for (x, y) in a.cases.iter().zip(&b.cases) {
+            assert_eq!(x.events, y.events, "{}", x.name);
+            assert_eq!(x.makespan, y.makespan, "{}", x.name);
+            assert_eq!(x.peak_event_heap, y.peak_event_heap, "{}", x.name);
+        }
+    }
+}

@@ -6,6 +6,7 @@
 //! experiment index.
 
 pub mod ablation;
+pub mod bench;
 pub mod compare;
 pub mod fig1;
 pub mod fig3;

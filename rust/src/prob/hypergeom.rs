@@ -115,13 +115,21 @@ impl Hypergeometric {
         let kk = self.busy as usize;
         let n = self.tries as usize;
         let mut hits = 0usize;
+        // dense membership mask reused across reps: set the k busy bits,
+        // test, clear the same bits — no per-rep allocation or hashing
+        let mut busy_mask = vec![false; p];
         for _ in 0..reps {
             // busy set = a random k-subset; try n distinct indices
             let busy = rng.sample_distinct(p, kk, None);
-            let mask: std::collections::HashSet<usize> = busy.into_iter().collect();
+            for &b in &busy {
+                busy_mask[b] = true;
+            }
             let tries = rng.sample_distinct(p, n, None);
-            if tries.iter().any(|t| mask.contains(t)) {
+            if tries.iter().any(|&t| busy_mask[t]) {
                 hits += 1;
+            }
+            for &b in &busy {
+                busy_mask[b] = false;
             }
         }
         hits as f64 / reps as f64

@@ -115,23 +115,54 @@ impl KernelLibrary {
     }
 }
 
+/// Cache-block edge for the tiled kernels.  The k reduction is kept whole
+/// (see `gemm_update`), so the working set of one (i, j) tile pair is two
+/// TILE-row bands of length n — 64 kB per operand at n = 256 — sized for
+/// L2 residency; what the tiling buys is that each B row loaded into cache
+/// is reused TILE times (once per i of the tile) instead of once per full
+/// i sweep.
+const TILE: usize = 64;
+
+/// Contiguous dot product with eight-lane partial accumulators — the shape
+/// LLVM reliably autovectorizes (one fused multiply-add per lane, reduction
+/// at the end).  Every kernel below funnels its inner loop through this.
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    let mut acc = [0.0f32; 8];
+    let mut ac = a.chunks_exact(8);
+    let mut bc = b.chunks_exact(8);
+    for (ca, cb) in (&mut ac).zip(&mut bc) {
+        for lane in 0..8 {
+            acc[lane] += ca[lane] * cb[lane];
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
 /// Lower Cholesky factor of the SPD block `a` (Cholesky–Banachiewicz),
 /// upper triangle explicitly zero — the `jnp.tril(cholesky(a))` oracle.
+/// Row-major storage makes every inner product a contiguous row-prefix
+/// `dot`; the column order itself is a data dependence and cannot tile.
 fn potrf(a: &[f32], n: usize) -> Vec<f32> {
     let mut l = vec![0.0f32; n * n];
     for j in 0..n {
-        let mut d = a[j * n + j];
-        for k in 0..j {
-            d -= l[j * n + k] * l[j * n + k];
-        }
-        let d = d.max(0.0).sqrt();
-        l[j * n + j] = d;
+        // rows 0..=j in `head`, rows j+1.. in `tail`: the write targets
+        // below are disjoint from the shared row-j prefix.
+        let (head, tail) = l.split_at_mut((j + 1) * n);
+        let ljrow = &head[j * n..j * n + j];
+        let d = (a[j * n + j] - dot(ljrow, ljrow)).max(0.0).sqrt();
+        head[j * n + j] = d;
+        let ljrow = &head[j * n..j * n + j];
         for i in (j + 1)..n {
-            let mut s = a[i * n + j];
-            for k in 0..j {
-                s -= l[i * n + k] * l[j * n + k];
-            }
-            l[i * n + j] = if d != 0.0 { s / d } else { 0.0 };
+            let ti = (i - j - 1) * n;
+            let s = a[i * n + j] - dot(&tail[ti..ti + j], ljrow);
+            tail[ti + j] = if d != 0.0 { s / d } else { 0.0 };
         }
     }
     l
@@ -139,31 +170,46 @@ fn potrf(a: &[f32], n: usize) -> Vec<f32> {
 
 /// Solve X·Lᵀ = B for X: forward substitution over columns,
 /// `x[:, j] = (b[:, j] − X[:, :j] · L[j, :j]ᵀ) / l[j, j]`.
+///
+/// Columns are a data dependence (column j reads columns < j of the same
+/// row) but rows are independent, so rows are blocked in TILE bands — the
+/// j-sweep over one band keeps its X rows cache-resident — and the inner
+/// reduction is a contiguous row-prefix `dot`.
 fn trsm(l: &[f32], b: &[f32], n: usize) -> Vec<f32> {
     let mut x = vec![0.0f32; n * n];
-    for j in 0..n {
-        let d = l[j * n + j];
-        for i in 0..n {
-            let mut s = b[i * n + j];
-            for k in 0..j {
-                s -= x[i * n + k] * l[j * n + k];
+    for i0 in (0..n).step_by(TILE) {
+        let imax = (i0 + TILE).min(n);
+        for j in 0..n {
+            let d = l[j * n + j];
+            let lrow = &l[j * n..j * n + j];
+            for i in i0..imax {
+                let s = b[i * n + j] - dot(&x[i * n..i * n + j], lrow);
+                x[i * n + j] = if d != 0.0 { s / d } else { 0.0 };
             }
-            x[i * n + j] = if d != 0.0 { s / d } else { 0.0 };
         }
     }
     x
 }
 
 /// C − A·Bᵀ (the gemm oracle; syrk is gemm with B = A).
+///
+/// i/j tiles bound the working set to one band of A rows against one band
+/// of B rows; because the product is against Bᵀ, the k reduction is
+/// contiguous in *both* operands and stays un-split (one `dot` per output
+/// element — no partial-sum reordering across tiles).
 fn gemm_update(c: &[f32], a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
     let mut out = c.to_vec();
-    for i in 0..n {
-        for j in 0..n {
-            let mut s = 0.0f32;
-            for k in 0..n {
-                s += a[i * n + k] * b[j * n + k];
+    for i0 in (0..n).step_by(TILE) {
+        let imax = (i0 + TILE).min(n);
+        for j0 in (0..n).step_by(TILE) {
+            let jmax = (j0 + TILE).min(n);
+            for i in i0..imax {
+                let arow = &a[i * n..i * n + n];
+                for j in j0..jmax {
+                    let brow = &b[j * n..j * n + n];
+                    out[i * n + j] -= dot(arow, brow);
+                }
             }
-            out[i * n + j] -= s;
         }
     }
     out
@@ -171,15 +217,7 @@ fn gemm_update(c: &[f32], a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
 
 /// A·x.
 fn gemv(a: &[f32], x: &[f32], n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n];
-    for i in 0..n {
-        let mut s = 0.0f32;
-        for k in 0..n {
-            s += a[i * n + k] * x[k];
-        }
-        out[i] = s;
-    }
-    out
+    (0..n).map(|i| dot(&a[i * n..i * n + n], x)).collect()
 }
 
 #[cfg(test)]
@@ -329,5 +367,221 @@ mod tests {
         assert_eq!(report.len(), 5);
         assert!(report.iter().all(|(_, dt)| *dt >= 0.0));
         assert_eq!(lib.executions, 5);
+    }
+
+    // ------------------------------------------------------------------
+    // naive reference oracles (the pre-blocking implementations, kept
+    // verbatim) + property tests pitting the tiled kernels against them
+    // on random sizes, including non-multiples of TILE.
+    // ------------------------------------------------------------------
+
+    fn naive_potrf(a: &[f32], n: usize) -> Vec<f32> {
+        let mut l = vec![0.0f32; n * n];
+        for j in 0..n {
+            let mut d = a[j * n + j];
+            for k in 0..j {
+                d -= l[j * n + k] * l[j * n + k];
+            }
+            let d = d.max(0.0).sqrt();
+            l[j * n + j] = d;
+            for i in (j + 1)..n {
+                let mut s = a[i * n + j];
+                for k in 0..j {
+                    s -= l[i * n + k] * l[j * n + k];
+                }
+                l[i * n + j] = if d != 0.0 { s / d } else { 0.0 };
+            }
+        }
+        l
+    }
+
+    fn naive_trsm(l: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+        let mut x = vec![0.0f32; n * n];
+        for j in 0..n {
+            let d = l[j * n + j];
+            for i in 0..n {
+                let mut s = b[i * n + j];
+                for k in 0..j {
+                    s -= x[i * n + k] * l[j * n + k];
+                }
+                x[i * n + j] = if d != 0.0 { s / d } else { 0.0 };
+            }
+        }
+        x
+    }
+
+    fn naive_gemm_update(c: &[f32], a: &[f32], b: &[f32], n: usize) -> Vec<f32> {
+        let mut out = c.to_vec();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for k in 0..n {
+                    s += a[i * n + k] * b[j * n + k];
+                }
+                out[i * n + j] -= s;
+            }
+        }
+        out
+    }
+
+    fn naive_gemv(a: &[f32], x: &[f32], n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n];
+        for i in 0..n {
+            let mut s = 0.0f32;
+            for k in 0..n {
+                s += a[i * n + k] * x[k];
+            }
+            out[i] = s;
+        }
+        out
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    /// Random matrix with entries in [-1, 1].
+    fn rand_mat(g: &mut crate::util::propcheck::Gen, elems: usize) -> Vec<f32> {
+        (0..elems).map(|_| g.f64_in(-1.0..1.0) as f32).collect()
+    }
+
+    /// Sizes that straddle the tile edge: 1..TILE, TILE exactly, and
+    /// TILE+remainder shapes.
+    fn rand_n(g: &mut crate::util::propcheck::Gen) -> usize {
+        g.usize_in(1..(2 * TILE + 9))
+    }
+
+    #[test]
+    fn prop_blocked_gemm_matches_naive() {
+        use crate::util::propcheck::forall;
+        forall(
+            30,
+            0x6E66,
+            |g| {
+                let n = rand_n(g);
+                (n, rand_mat(g, n * n), rand_mat(g, n * n), rand_mat(g, n * n))
+            },
+            |(n, c, a, b)| -> Result<(), String> {
+                let fast = gemm_update(c, a, b, *n);
+                let slow = naive_gemm_update(c, a, b, *n);
+                let err = max_abs_diff(&fast, &slow);
+                // n ≤ 137 accumulation terms in [-1,1]: rounding only
+                if err < 2e-4 {
+                    Ok(())
+                } else {
+                    Err(format!("n={n}: max |Δ| = {err}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_blocked_gemv_matches_naive() {
+        use crate::util::propcheck::forall;
+        forall(
+            30,
+            0x6E76,
+            |g| {
+                let n = rand_n(g);
+                (n, rand_mat(g, n * n), rand_mat(g, n))
+            },
+            |(n, a, x)| -> Result<(), String> {
+                let err = max_abs_diff(&gemv(a, x, *n), &naive_gemv(a, x, *n));
+                if err < 2e-4 {
+                    Ok(())
+                } else {
+                    Err(format!("n={n}: max |Δ| = {err}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_blocked_trsm_matches_naive() {
+        use crate::util::propcheck::forall;
+        forall(
+            30,
+            0x7257,
+            |g| {
+                let n = rand_n(g);
+                // a well-conditioned lower factor: unit-ish diagonal,
+                // small off-diagonal mass keeps the substitution stable
+                let mut l = vec![0.0f32; n * n];
+                for i in 0..n {
+                    for j in 0..i {
+                        l[i * n + j] = g.f64_in(-0.3..0.3) as f32 / n as f32;
+                    }
+                    l[i * n + i] = 1.0 + g.f64_in(0.0..1.0) as f32;
+                }
+                (n, l, rand_mat(g, n * n))
+            },
+            |(n, l, b)| -> Result<(), String> {
+                let err = max_abs_diff(&trsm(l, b, *n), &naive_trsm(l, b, *n));
+                if err < 1e-3 {
+                    Ok(())
+                } else {
+                    Err(format!("n={n}: max |Δ| = {err}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_blocked_potrf_matches_naive() {
+        use crate::util::propcheck::forall;
+        forall(
+            30,
+            0x9076,
+            |g| {
+                let n = rand_n(g);
+                // diagonally dominant SPD: stable under both variants
+                let mut a = vec![0.0f32; n * n];
+                for i in 0..n {
+                    for j in 0..i {
+                        let v = g.f64_in(-1.0..1.0) as f32;
+                        a[i * n + j] = v;
+                        a[j * n + i] = v;
+                    }
+                    a[i * n + i] = n as f32 + 1.0 + g.f64_in(0.0..1.0) as f32;
+                }
+                (n, a)
+            },
+            |(n, a)| -> Result<(), String> {
+                let err = max_abs_diff(&potrf(a, *n), &naive_potrf(a, *n));
+                if err < 1e-3 {
+                    Ok(())
+                } else {
+                    Err(format!("n={n}: max |Δ| = {err}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn blocked_kernels_handle_tile_edges_exactly() {
+        // deterministic spot checks at the awkward shapes: below, at, and
+        // just past the tile boundary, plus two tiles + remainder
+        for n in [1usize, 7, TILE - 1, TILE, TILE + 1, 2 * TILE + 5] {
+            let c: Vec<f32> = (0..n * n).map(|i| ((i % 7) as f32 - 3.0) / 3.0).collect();
+            let a: Vec<f32> = (0..n * n).map(|i| ((i % 5) as f32 - 2.0) / 2.0).collect();
+            let b: Vec<f32> = (0..n * n).map(|i| ((i % 3) as f32 - 1.0) / 1.5).collect();
+            let err = max_abs_diff(&gemm_update(&c, &a, &b, n), &naive_gemm_update(&c, &a, &b, n));
+            assert!(err < 2e-4, "gemm n={n}: {err}");
+            let x: Vec<f32> = (0..n).map(|i| (i % 4) as f32 - 1.5).collect();
+            let err = max_abs_diff(&gemv(&a, &x, n), &naive_gemv(&a, &x, n));
+            assert!(err < 2e-4, "gemv n={n}: {err}");
+        }
+    }
+
+    #[test]
+    fn dot_matches_scalar_sum() {
+        // lengths across the 8-lane boundary
+        for len in [0usize, 1, 7, 8, 9, 16, 31, 64, 65] {
+            let a: Vec<f32> = (0..len).map(|i| (i as f32 * 0.25).sin()).collect();
+            let b: Vec<f32> = (0..len).map(|i| (i as f32 * 0.5).cos()).collect();
+            let scalar: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - scalar).abs() < 1e-4, "len={len}");
+        }
     }
 }

@@ -14,7 +14,6 @@
 //! The coordinator contains no scheduling/DLB logic of its own — it is an
 //! interpreter over the same `ProcessState` the DES drives.
 
-use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -243,8 +242,10 @@ fn coordinator_loop(
     done_rx: Receiver<ExecDone>,
 ) -> Result<()> {
     let now = || epoch.elapsed().as_secs_f64();
-    let mut pending: VecDeque<Effect> = VecDeque::new();
-    pending.extend(ps.start(now()));
+    // One scratch buffer for the whole run: every ProcessState step appends
+    // into it, the apply pass below drains it in order.
+    let mut pending: Vec<Effect> = Vec::with_capacity(64);
+    ps.start(now(), &mut pending);
     let mut next_tick = f64::INFINITY;
     let mut next_worker = 0usize;
     let mut halted = false;
@@ -252,22 +253,21 @@ fn coordinator_loop(
     loop {
         // inbound messages
         while let Some(env) = mailbox.try_recv() {
-            pending.extend(ps.on_message(env, now()));
+            ps.on_message(env, now(), &mut pending);
         }
         // completed executions
         while let Ok(done) = done_rx.try_recv() {
             let _ = done.was_kernel;
-            pending.extend(ps.on_exec_complete(done.rt, done.output, done.duration, now()));
+            ps.on_exec_complete(done.rt, done.output, done.duration, now(), &mut pending);
         }
         // timers
         if now() >= next_tick {
             next_tick = f64::INFINITY;
-            pending.extend(ps.on_tick(now()));
+            ps.on_tick(now(), &mut pending);
         }
         // apply effects
-        let mut acted = false;
-        while let Some(e) = pending.pop_front() {
-            acted = true;
+        let acted = !pending.is_empty();
+        for e in pending.drain(..) {
             match e {
                 Effect::Send(env) => router.send(env).map_err(|e| anyhow!("router: {e}"))?,
                 Effect::StartExec { task } => {
@@ -290,7 +290,7 @@ fn coordinator_loop(
             };
             if wait > 0.0 {
                 if let Some(env) = mailbox.recv_timeout(Duration::from_secs_f64(wait)) {
-                    pending.extend(ps.on_message(env, now()));
+                    ps.on_message(env, now(), &mut pending);
                 }
             }
         }

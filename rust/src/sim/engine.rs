@@ -24,11 +24,16 @@ use crate::util::rng::Rng;
 
 use super::network::NetworkModel;
 
+/// Event payloads are kept small and flat: envelopes live in a slab on the
+/// engine (indexed by `slot`) rather than in per-event `Box`es, so pushing
+/// an event never allocates once the slab and heap have warmed up.
 #[derive(Debug)]
 enum EventKind {
-    Deliver(Box<Envelope>),
+    Deliver { slot: u32 },
     ExecDone { proc: ProcessId, rt: ReadyTask, duration: f64 },
-    Tick { proc: ProcessId },
+    /// `gen` is the process's tick generation at arm time: a popped tick
+    /// dispatches only while it is still the latest armed one.
+    Tick { proc: ProcessId, gen: u64 },
 }
 
 struct Event {
@@ -71,7 +76,12 @@ pub struct SimResult {
     pub traces: RunTraces,
     pub counters: DlbCounters,
     pub per_process_counters: Vec<DlbCounters>,
+    /// Events dispatched to a process state machine (suppressed stale
+    /// ticks are not counted — they do no work).
     pub events_processed: u64,
+    /// Largest number of simultaneously pending events (memory high-water
+    /// mark of the run — recorded for the perf trajectory in `ductr bench`).
+    pub peak_event_heap: usize,
     /// Aggregate compute utilization: Σ flops / (P · S · makespan).
     pub utilization: f64,
 }
@@ -105,12 +115,25 @@ pub struct SimEngine {
     pub processes: Vec<ProcessState>,
     network: NetworkModel,
     heap: BinaryHeap<Event>,
+    /// Envelope storage for in-flight `Deliver` events (slot-indexed slab;
+    /// freed slots are recycled via `env_free`).
+    env_slab: Vec<Option<Envelope>>,
+    env_free: Vec<u32>,
     now: f64,
     seq: u64,
     jitter: f64,
     rng: Rng,
-    /// Per-process time of the next scheduled tick (dedup guard).
+    /// Per-process time of the next scheduled tick (push-side dedup).
     tick_at: Vec<f64>,
+    /// Per-process tick generation: bumped on every arm, stamped into the
+    /// `Tick` event.  A popped tick whose generation is no longer current
+    /// was superseded and dies at the pop instead of firing `on_tick`
+    /// spuriously — exact even when a re-arm lands on the same timestamp.
+    tick_gen: Vec<u64>,
+    /// Processes that have not halted — O(1) termination check per event.
+    live: usize,
+    /// Event-heap high-water mark.
+    peak_heap: usize,
     pub max_events: u64,
     pub max_time: f64,
     /// Optional early-stop predicate (e.g. Fig 3 time-to-first-pair).
@@ -136,11 +159,16 @@ impl SimEngine {
                 cfg.build_topology(),
             ),
             heap: BinaryHeap::new(),
+            env_slab: Vec::new(),
+            env_free: Vec::new(),
             now: 0.0,
             seq: 0,
             jitter: cfg.exec_jitter,
             rng: Rng::new(cfg.seed ^ 0xE46E_17E5_u64),
             tick_at: vec![f64::NEG_INFINITY; p],
+            tick_gen: vec![0; p],
+            live: p,
+            peak_heap: 0,
             max_events: 500_000_000,
             max_time: f64::INFINITY,
             stop_when: None,
@@ -151,14 +179,46 @@ impl SimEngine {
         debug_assert!(t >= self.now, "event in the past: {t} < {}", self.now);
         self.seq += 1;
         self.heap.push(Event { t, seq: self.seq, kind });
+        self.peak_heap = self.peak_heap.max(self.heap.len());
     }
 
-    fn apply_effects(&mut self, proc: ProcessId, effects: Vec<Effect>) {
-        for e in effects {
+    fn stash_envelope(&mut self, env: Envelope) -> u32 {
+        match self.env_free.pop() {
+            Some(slot) => {
+                debug_assert!(self.env_slab[slot as usize].is_none());
+                self.env_slab[slot as usize] = Some(env);
+                slot
+            }
+            None => {
+                self.env_slab.push(Some(env));
+                (self.env_slab.len() - 1) as u32
+            }
+        }
+    }
+
+    fn unstash_envelope(&mut self, slot: u32) -> Envelope {
+        let env = self.env_slab[slot as usize].take().expect("live envelope slot");
+        self.env_free.push(slot);
+        env
+    }
+
+    /// Free the slab slot of a popped-but-undispatched event (the budget
+    /// error paths) so occupied slots always equal pending deliveries.
+    fn discard_event(&mut self, ev: &Event) {
+        if let EventKind::Deliver { slot } = ev.kind {
+            let _ = self.unstash_envelope(slot);
+        }
+    }
+
+    /// Drain `effects` into the event heap.  The buffer is the caller's
+    /// scratch space — emptied here, reused for the next step.
+    fn apply_effects(&mut self, proc: ProcessId, effects: &mut Vec<Effect>) {
+        for e in effects.drain(..) {
             match e {
                 Effect::Send(env) => {
                     let delay = self.network.delay_between(env.from, env.to, env.wire_doubles);
-                    self.push(self.now + delay, EventKind::Deliver(Box::new(env)));
+                    let slot = self.stash_envelope(env);
+                    self.push(self.now + delay, EventKind::Deliver { slot });
                 }
                 Effect::StartExec { task } => {
                     let node = self.processes[proc.idx()].graph.task(task.task);
@@ -180,58 +240,76 @@ impl SimEngine {
                         continue;
                     }
                     self.tick_at[proc.idx()] = at;
-                    self.push(at, EventKind::Tick { proc });
+                    self.tick_gen[proc.idx()] += 1;
+                    let gen = self.tick_gen[proc.idx()];
+                    self.push(at, EventKind::Tick { proc, gen });
                 }
-                Effect::Halt => {}
+                Effect::Halt => {
+                    debug_assert!(self.live > 0, "halt underflow");
+                    self.live = self.live.saturating_sub(1);
+                }
             }
         }
-    }
-
-    fn all_halted(&self) -> bool {
-        self.processes.iter().all(|p| p.halted)
     }
 
     /// Run to completion; returns the aggregated result.
     pub fn run(&mut self) -> Result<SimResult, SimError> {
+        // One scratch buffer for every ProcessState step of the run: the
+        // state machine appends effects here, `apply_effects` drains it.
+        let mut effects: Vec<Effect> = Vec::with_capacity(64);
+
         // boot every process at t = 0
         for i in 0..self.processes.len() {
-            let effects = self.processes[i].start(0.0);
-            self.apply_effects(ProcessId(i as u32), effects);
+            self.processes[i].start(0.0, &mut effects);
+            self.apply_effects(ProcessId(i as u32), &mut effects);
         }
 
         let mut events: u64 = 0;
-        while let Some(ev) = self.heap.pop() {
-            if self.all_halted() {
-                break;
+        while self.live > 0 {
+            let Some(ev) = self.heap.pop() else { break };
+            // Superseded tick: a newer arm replaced this one.  Drop it at
+            // the pop — before it counts as a dispatched event — instead
+            // of firing `on_tick` spuriously; this is both the perf win
+            // and the bug fix (dedup used to skip only pushes, never pops).
+            if let EventKind::Tick { proc, gen } = ev.kind {
+                if gen != self.tick_gen[proc.idx()] {
+                    continue;
+                }
             }
             self.now = ev.t;
             if self.now > self.max_time {
+                self.discard_event(&ev);
                 return Err(SimError::TimeBudget(self.now));
             }
             events += 1;
             if events > self.max_events {
+                self.discard_event(&ev);
                 return Err(SimError::EventBudget(events));
             }
             match ev.kind {
-                EventKind::Deliver(env) => {
+                EventKind::Deliver { slot } => {
+                    let env = self.unstash_envelope(slot);
                     let to = env.to;
-                    let effects = self.processes[to.idx()].on_message(*env, self.now);
-                    self.apply_effects(to, effects);
+                    self.processes[to.idx()].on_message(env, self.now, &mut effects);
+                    self.apply_effects(to, &mut effects);
                 }
                 EventKind::ExecDone { proc, rt, duration } => {
-                    let effects = self.processes[proc.idx()].on_exec_complete(
+                    self.processes[proc.idx()].on_exec_complete(
                         rt,
                         Payload::Sim,
                         duration,
                         self.now,
+                        &mut effects,
                     );
-                    self.apply_effects(proc, effects);
+                    self.apply_effects(proc, &mut effects);
                 }
-                EventKind::Tick { proc } => {
-                    let effects = self.processes[proc.idx()].on_tick(self.now);
-                    self.apply_effects(proc, effects);
+                EventKind::Tick { proc, .. } => {
+                    self.processes[proc.idx()].on_tick(self.now, &mut effects);
+                    self.apply_effects(proc, &mut effects);
                 }
             }
+            // Only dispatched (state-changing) events can satisfy the
+            // predicate; suppressed ticks skip the check via `continue`.
             if let Some(stop) = &self.stop_when {
                 if stop(&self.processes) {
                     break;
@@ -239,11 +317,8 @@ impl SimEngine {
             }
         }
 
-        if !self.all_halted() && self.heap.is_empty() && self.stop_when.is_none() {
-            let live = self.processes.iter().filter(|p| !p.halted).count();
-            if live > 0 {
-                return Err(SimError::Deadlock { live });
-            }
+        if self.live > 0 && self.heap.is_empty() && self.stop_when.is_none() {
+            return Err(SimError::Deadlock { live: self.live });
         }
 
         Ok(self.collect(events))
@@ -278,6 +353,7 @@ impl SimEngine {
             counters,
             per_process_counters: per,
             events_processed: events,
+            peak_event_heap: self.peak_heap,
             utilization,
         }
     }
@@ -400,6 +476,78 @@ mod tests {
         let r = SimEngine::from_config(&cfg, g).run().expect("run");
         assert!(r.traces.per_process[0].max_workload() > 0);
         assert!(r.traces.makespan > 0.0);
+    }
+
+    #[test]
+    fn peak_event_heap_recorded() {
+        let (cfg, g) = bag_cfg(16, 4, true, 5);
+        let r = SimEngine::from_config(&cfg, g).run().expect("run");
+        assert!(r.peak_event_heap > 0);
+    }
+
+    #[test]
+    fn stale_ticks_are_suppressed_at_pop() {
+        let (cfg, g) = chain_cfg(1, 1, true);
+        let mut eng = SimEngine::from_config(&cfg, g);
+        // Hand-schedule a tick at t=2, then a replacement at t=1 (allowed:
+        // dedup only skips pushes at-or-after the live tick).
+        let mut fx = vec![Effect::ScheduleTick { at: 2.0 }];
+        eng.apply_effects(ProcessId(0), &mut fx);
+        let mut fx = vec![Effect::ScheduleTick { at: 1.0 }];
+        eng.apply_effects(ProcessId(0), &mut fx);
+        assert_eq!(eng.tick_at[0], 1.0, "latest schedule wins");
+        // Earliest pop (t=1) is the live generation; the t=2 pop carries a
+        // superseded generation and must not reach on_tick.
+        let e1 = eng.heap.pop().expect("tick at 1");
+        assert_eq!(e1.t, 1.0);
+        let EventKind::Tick { gen: g1, .. } = e1.kind else { panic!("expected tick") };
+        assert_eq!(g1, eng.tick_gen[0], "t=1 would dispatch");
+        let e2 = eng.heap.pop().expect("tick at 2");
+        assert_eq!(e2.t, 2.0);
+        let EventKind::Tick { gen: g2, .. } = e2.kind else { panic!("expected tick") };
+        assert_ne!(g2, eng.tick_gen[0], "t=2 is stale and must be dropped");
+    }
+
+    #[test]
+    fn run_loop_drops_stale_ticks() {
+        // Hand-arm a tick at t=2µs, then replace it with t=1µs; the chain
+        // task runs ~118µs, so both pop mid-run.  Exactly one extra event
+        // (the live tick) may be dispatched versus an unarmed run — the
+        // superseded tick must die at the pop, not fire on_tick.
+        let (cfg, g) = chain_cfg(1, 1, false);
+        let mut eng = SimEngine::from_config(&cfg, g);
+        let mut fx = vec![Effect::ScheduleTick { at: 2e-6 }];
+        eng.apply_effects(ProcessId(0), &mut fx);
+        let mut fx = vec![Effect::ScheduleTick { at: 1e-6 }];
+        eng.apply_effects(ProcessId(0), &mut fx);
+        let r = eng.run().expect("run");
+
+        let (cfg2, g2) = chain_cfg(1, 1, false);
+        let base = SimEngine::from_config(&cfg2, g2).run().expect("base");
+        assert_eq!(
+            r.events_processed,
+            base.events_processed + 1,
+            "one live tick dispatched, one stale tick suppressed"
+        );
+    }
+
+    #[test]
+    fn envelope_slab_recycles_slots() {
+        let (cfg, g) = bag_cfg(32, 4, true, 7);
+        let mut eng = SimEngine::from_config(&cfg, g);
+        let r = eng.run().expect("run");
+        // far more messages flowed than the slab ever held live at once
+        assert!(
+            r.events_processed > eng.env_slab.len() as u64,
+            "slab must recycle slots: {} slots for {} events",
+            eng.env_slab.len(),
+            r.events_processed
+        );
+        // occupied slots are exactly the deliveries still pending at halt
+        let pending =
+            eng.heap.iter().filter(|e| matches!(e.kind, EventKind::Deliver { .. })).count();
+        let live_slots = eng.env_slab.iter().filter(|s| s.is_some()).count();
+        assert_eq!(live_slots, pending);
     }
 
     #[test]

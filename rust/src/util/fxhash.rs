@@ -1,0 +1,141 @@
+//! Vendored FxHash — the rustc/Firefox multiply-rotate hash — for maps and
+//! sets keyed by small integers where SipHash's DoS resistance buys nothing
+//! and its per-lookup cost is measurable (the offline crate set has no
+//! `rustc-hash`).
+//!
+//! Not DoS-resistant: use only on keys an attacker does not control (dense
+//! internal ids, process indices).  For the truly hot, fully dense tables
+//! the runtime goes further and uses plain `Vec` indexing (see
+//! `core::data::DataStore`); `Fx*` is for the cases where keys are sparse
+//! or unbounded.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// A `HashMap` seeded with [`FxHasher`].
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+/// A `HashSet` seeded with [`FxHasher`].
+pub type FxHashSet<T> = HashSet<T, FxBuildHasher>;
+/// Zero-sized default-seeding builder (deterministic across runs, unlike
+/// `RandomState` — which also matters for reproducible simulations).
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+const ROTATE: u32 = 5;
+
+/// The FxHash state machine: `hash = (hash.rotate_left(5) ^ word) * SEED`
+/// per input word.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(ROTATE) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        // Consume the tail as 4/2/1-byte reads (as rustc-hash does) rather
+        // than zero-padding one word: padding would hash e.g. "ab" and
+        // "ab\0" identically.
+        let mut b = bytes;
+        while b.len() >= 8 {
+            self.add_to_hash(u64::from_le_bytes(b[..8].try_into().expect("8 bytes")));
+            b = &b[8..];
+        }
+        if b.len() >= 4 {
+            self.add_to_hash(u32::from_le_bytes(b[..4].try_into().expect("4 bytes")) as u64);
+            b = &b[4..];
+        }
+        if b.len() >= 2 {
+            self.add_to_hash(u16::from_le_bytes(b[..2].try_into().expect("2 bytes")) as u64);
+            b = &b[2..];
+        }
+        if let Some(&x) = b.first() {
+            self.add_to_hash(x as u64);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, i: u8) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, i: u16) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_roundtrip() {
+        let mut m: FxHashMap<u32, &str> = FxHashMap::default();
+        m.insert(3, "three");
+        m.insert(u32::MAX, "max");
+        assert_eq!(m.get(&3), Some(&"three"));
+        assert_eq!(m.get(&u32::MAX), Some(&"max"));
+        assert_eq!(m.len(), 2);
+        assert!(m.remove(&3).is_some());
+        assert!(!m.contains_key(&3));
+    }
+
+    #[test]
+    fn set_membership() {
+        let s: FxHashSet<usize> = (0..100).filter(|i| i % 3 == 0).collect();
+        assert!(s.contains(&99));
+        assert!(!s.contains(&98));
+        assert_eq!(s.len(), 34);
+    }
+
+    #[test]
+    fn deterministic_across_hasher_instances() {
+        use std::hash::Hash;
+        let hash_of = |x: u64| {
+            let mut h = FxHasher::default();
+            x.hash(&mut h);
+            h.finish()
+        };
+        assert_eq!(hash_of(42), hash_of(42));
+        assert_ne!(hash_of(42), hash_of(43));
+    }
+
+    #[test]
+    fn byte_streams_differing_only_in_tail_differ() {
+        let hash_bytes = |b: &[u8]| {
+            let mut h = FxHasher::default();
+            h.write(b);
+            h.finish()
+        };
+        assert_ne!(hash_bytes(b"123456789"), hash_bytes(b"123456780"));
+        assert_ne!(hash_bytes(b"12345678"), hash_bytes(b"12345678\0"));
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod error;
+pub mod fxhash;
 pub mod plot;
 pub mod propcheck;
 pub mod rng;

@@ -1,0 +1,183 @@
+//! Determinism golden tests for the hot-path overhaul.
+//!
+//! The scratch-buffer effect API, the event slab, and the dense stores must
+//! not change *what* the simulator computes — only how fast.  Three layers
+//! of protection:
+//!
+//! 1. **bit-identity**: every policy × workload cell, run twice from the
+//!    same seed, must agree exactly on makespan, counters, and event count;
+//! 2. **state-machine replay**: driving one `ProcessState` through a fixed
+//!    event script with a reused scratch buffer produces the same effect
+//!    stream as fresh buffers per step (the engines reuse, the tests
+//!    mostly don't — both must see identical streams);
+//! 3. **golden snapshot**: run fingerprints are compared against
+//!    `tests/golden/determinism.txt` when it exists; absent, the file is
+//!    written (bless-on-first-run) so any later engine change that shifts a
+//!    makespan bit shows up as a diff, not silence.
+
+use std::sync::Arc;
+
+use ductr::config::{Config, PolicyKind};
+use ductr::core::graph::{GraphBuilder, TaskGraph};
+use ductr::core::ids::ProcessId;
+use ductr::core::process::{Effect, ProcessParams, ProcessState};
+use ductr::core::task::TaskKind;
+use ductr::net::message::{Envelope, Msg, Role};
+use ductr::sim::engine::SimEngine;
+
+/// Skewed bag: all tasks start on p0, DLB must spread them.
+fn bag_graph(n: usize) -> Arc<TaskGraph> {
+    let mut b = GraphBuilder::new();
+    for _ in 0..n {
+        let d = b.data(ProcessId(0), 64, 64);
+        b.task(TaskKind::Synthetic, vec![], d, 30_000_000, None);
+    }
+    b.build()
+}
+
+fn cfg_for(policy: PolicyKind, seed: u64) -> Config {
+    let mut cfg = Config::default();
+    cfg.processes = 4;
+    cfg.grid = None;
+    cfg.dlb_enabled = true;
+    cfg.policy = policy;
+    cfg.wt = 2;
+    cfg.delta = 0.001;
+    cfg.seed = seed;
+    cfg.validate().expect("valid");
+    cfg
+}
+
+/// A compact, exact fingerprint of one run: makespan bits + the counters
+/// that any behavioral drift would disturb.
+fn fingerprint(policy: PolicyKind, seed: u64) -> String {
+    let cfg = cfg_for(policy, seed);
+    let r = SimEngine::from_config(&cfg, bag_graph(24)).run().expect("run");
+    format!(
+        "{policy} seed={seed} makespan={:016x} events={} exported={} received={} rounds={}",
+        r.makespan.to_bits(),
+        r.events_processed,
+        r.counters.tasks_exported,
+        r.counters.tasks_received,
+        r.counters.rounds,
+    )
+}
+
+#[test]
+fn every_policy_is_bit_identical_across_runs() {
+    for policy in PolicyKind::ALL {
+        for seed in [1u64, 7, 42] {
+            let a = fingerprint(policy, seed);
+            let b = fingerprint(policy, seed);
+            assert_eq!(a, b, "{policy} seed {seed} must be deterministic");
+        }
+    }
+}
+
+#[test]
+fn every_policy_conserves_migrated_tasks() {
+    for policy in PolicyKind::ALL {
+        let cfg = cfg_for(policy, 11);
+        let r = SimEngine::from_config(&cfg, bag_graph(24)).run().expect("run");
+        assert_eq!(
+            r.counters.tasks_exported, r.counters.tasks_received,
+            "{policy}: every exported task must be received"
+        );
+        assert!(r.counters.tasks_exported > 0, "{policy}: the skewed bag must migrate");
+    }
+}
+
+/// Drive one busy `ProcessState` through a fixed pairing script twice: once
+/// with a single reused scratch buffer (the engine pattern), once with a
+/// fresh buffer per step.  The rendered effect streams must match exactly.
+#[test]
+fn scratch_buffer_reuse_matches_fresh_buffers() {
+    let script: &[(u32, Msg, f64)] = &[
+        (1, Msg::PairRequest { round: 1, role: Role::Idle, load: 0, eta: 0.0 }, 0.001),
+        (1, Msg::PairConfirm { round: 1, load: 0, eta: 0.0 }, 0.002),
+        (1, Msg::ExportAck { round: 1, accepted: 7 }, 0.003),
+        (2, Msg::PairRequest { round: 9, role: Role::Idle, load: 1, eta: 0.0 }, 0.004),
+    ];
+
+    let mk = || {
+        let mut cfg = Config::default();
+        cfg.dlb_enabled = true;
+        cfg.wt = 2;
+        cfg.validate().expect("valid");
+        let params = ProcessParams::from_config(&cfg);
+        ProcessState::new(ProcessId(0), 3, bag_graph(10), params, 5)
+    };
+    let env = |from: u32, msg: Msg| Envelope {
+        from: ProcessId(from),
+        to: ProcessId(0),
+        msg,
+        wire_doubles: 8,
+    };
+
+    // run A: one buffer, drained between steps (engine-style)
+    let mut a_log = Vec::new();
+    let mut ps = mk();
+    let mut buf: Vec<Effect> = Vec::new();
+    ps.start(0.0, &mut buf);
+    a_log.extend(buf.drain(..).map(|e| format!("{e:?}")));
+    for (from, msg, t) in script {
+        ps.on_message(env(*from, msg.clone()), *t, &mut buf);
+        a_log.extend(buf.drain(..).map(|e| format!("{e:?}")));
+    }
+
+    // run B: fresh buffer per step
+    let mut b_log = Vec::new();
+    let mut ps = mk();
+    let mut buf: Vec<Effect> = Vec::new();
+    ps.start(0.0, &mut buf);
+    b_log.extend(buf.into_iter().map(|e| format!("{e:?}")));
+    for (from, msg, t) in script {
+        let mut buf: Vec<Effect> = Vec::new();
+        ps.on_message(env(*from, msg.clone()), *t, &mut buf);
+        b_log.extend(buf.into_iter().map(|e| format!("{e:?}")));
+    }
+
+    assert_eq!(a_log, b_log, "effect stream must not depend on buffer reuse");
+    assert!(a_log.iter().any(|e| e.contains("TaskExport")), "script must export work");
+}
+
+/// Snapshot comparison.  When `tests/golden/determinism.txt` exists the
+/// current fingerprints must match it bit for bit; when it does not (first
+/// run on a new toolchain/checkout) it is written, and the test passes with
+/// a notice — commit the file to pin the baseline.
+///
+/// KNOWN LIMITATION: until the snapshot is committed, a fresh checkout
+/// (e.g. CI) takes the bless branch every time and this test guards
+/// nothing — the cross-PR protection starts the moment someone with a
+/// toolchain commits the generated file (ROADMAP.md open item).  Failing
+/// hard on absence is not an option: it would permanently fail `cargo
+/// test` on every fresh checkout until that commit exists.
+#[test]
+fn golden_fingerprints_match_snapshot() {
+    let mut lines = Vec::new();
+    for policy in PolicyKind::ALL {
+        lines.push(fingerprint(policy, 1));
+    }
+    let current = lines.join("\n") + "\n";
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/determinism.txt");
+    match std::fs::read_to_string(&path) {
+        Ok(golden) => {
+            assert_eq!(
+                current, golden,
+                "run fingerprints drifted from the blessed snapshot \
+                 ({}); if the change is intentional, delete the file and \
+                 re-run to re-bless",
+                path.display()
+            );
+        }
+        // Bless only on genuine absence; any other read failure (perms,
+        // I/O, bad UTF-8) must fail rather than overwrite the baseline.
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            std::fs::create_dir_all(path.parent().expect("parent")).expect("mkdir golden");
+            std::fs::write(&path, &current).expect("write golden");
+            eprintln!("blessed new golden snapshot at {}", path.display());
+        }
+        Err(e) => panic!("cannot read golden snapshot {}: {e}", path.display()),
+    }
+}
