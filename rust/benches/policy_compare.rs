@@ -1,6 +1,7 @@
-//! Balancer-policy benchmark: makespan and migration volume for
-//! pairing vs stealing vs diffusion, swept over topology and process
-//! count on the Cholesky and random-DAG workloads (DES mode).
+//! Balancer-policy benchmark: makespan and migration volume for pairing vs
+//! stealing vs hierarchical vs diffusion — fixed and adaptive δ — swept
+//! over topology and process count on the Cholesky and random-DAG
+//! workloads (DES mode).
 //!
 //! Figure-regeneration style (like `fig4_cholesky_dlb`): each cell runs
 //! once under a fixed seed — the DES is deterministic, so repetition would
@@ -16,7 +17,13 @@ use ductr::config::{Config, Grid, PolicyKind, TopologyKind};
 use ductr::sim::engine::SimEngine;
 use ductr::util::bench::{BenchConfig, Runner};
 
-fn cell_cfg(p: usize, grid: (usize, usize), policy: PolicyKind, topo: TopologyKind) -> Config {
+fn cell_cfg(
+    p: usize,
+    grid: (usize, usize),
+    policy: PolicyKind,
+    topo: TopologyKind,
+    adaptive: bool,
+) -> Config {
     let mut c = Config::default();
     c.processes = p;
     c.grid = Some(Grid::new(grid.0, grid.1));
@@ -25,6 +32,7 @@ fn cell_cfg(p: usize, grid: (usize, usize), policy: PolicyKind, topo: TopologyKi
     c.dlb_enabled = true;
     c.policy = policy;
     c.topology = topo;
+    c.adaptive_delta = adaptive;
     c.wt = 3;
     c.delta = 0.002;
     c.seed = 7;
@@ -33,40 +41,48 @@ fn cell_cfg(p: usize, grid: (usize, usize), policy: PolicyKind, topo: TopologyKi
 }
 
 fn main() {
-    let mut r = Runner::new("policy × topology × P", BenchConfig::macro_bench());
+    let mut r = Runner::new("policy × topology × adaptive × P", BenchConfig::macro_bench());
 
     for &(p, grid) in &[(8usize, (2usize, 4usize)), (16, (4, 4))] {
-        for topo in [TopologyKind::Flat, TopologyKind::Torus] {
+        for topo in [TopologyKind::Flat, TopologyKind::Torus, TopologyKind::Cluster] {
             for policy in PolicyKind::ALL {
-                let cfg = cell_cfg(p, grid, policy, topo);
-                let chol = cholesky::run_sim(&cfg).expect("cholesky sim");
-                r.record(
-                    &format!("cholesky P={p} {topo} {policy} makespan"),
-                    chol.makespan,
-                    "s",
-                );
-                r.record(
-                    &format!("cholesky P={p} {topo} {policy} migrated"),
-                    chol.counters.tasks_exported as f64,
-                    "tasks",
-                );
-                assert!(chol.makespan > 0.0);
+                for adaptive in [false, true] {
+                    let tag = if adaptive { "adaptive" } else { "fixed" };
+                    let cfg = cell_cfg(p, grid, policy, topo, adaptive);
+                    let chol = cholesky::run_sim(&cfg).expect("cholesky sim");
+                    r.record(
+                        &format!("cholesky P={p} {topo} {policy} {tag} makespan"),
+                        chol.makespan,
+                        "s",
+                    );
+                    r.record(
+                        &format!("cholesky P={p} {topo} {policy} {tag} migrated"),
+                        chol.counters.tasks_exported as f64,
+                        "tasks",
+                    );
+                    r.record(
+                        &format!("cholesky P={p} {topo} {policy} {tag} inter-node"),
+                        chol.counters.tasks_exported_remote as f64,
+                        "tasks",
+                    );
+                    assert!(chol.makespan > 0.0);
 
-                let g = rand_dag::build(p, rand_dag::DagParams::default(), 7);
-                let dag = SimEngine::from_config(&cfg, Arc::clone(&g))
-                    .run()
-                    .expect("rand_dag sim");
-                r.record(
-                    &format!("rand_dag P={p} {topo} {policy} makespan"),
-                    dag.makespan,
-                    "s",
-                );
-                r.record(
-                    &format!("rand_dag P={p} {topo} {policy} migrated"),
-                    dag.counters.tasks_exported as f64,
-                    "tasks",
-                );
-                assert!(dag.makespan > 0.0);
+                    let g = rand_dag::build(p, rand_dag::DagParams::default(), 7);
+                    let dag = SimEngine::from_config(&cfg, Arc::clone(&g))
+                        .run()
+                        .expect("rand_dag sim");
+                    r.record(
+                        &format!("rand_dag P={p} {topo} {policy} {tag} makespan"),
+                        dag.makespan,
+                        "s",
+                    );
+                    r.record(
+                        &format!("rand_dag P={p} {topo} {policy} {tag} migrated"),
+                        dag.counters.tasks_exported as f64,
+                        "tasks",
+                    );
+                    assert!(dag.makespan > 0.0);
+                }
             }
         }
     }

@@ -24,7 +24,8 @@ USAGE:
 
 SUBCOMMANDS:
     run               run one workload (see flags below)
-    compare           balancer shoot-out: policy × topology × workload table
+    compare           balancer shoot-out: policy × topology × adaptive-δ table
+                      (--quick/--smoke for the reduced CI profile)
     bench             DES hot-path baseline: cholesky + random-DAG sweep over P,
                       writes BENCH_pr3.json (--smoke for the quick CI profile,
                       --out FILE to choose the path)
@@ -42,11 +43,14 @@ RUN FLAGS (defaults in parentheses):
     --nb N              blocks per matrix dimension (12)
     --block N           block size; real mode needs a matching artifact (64)
     --dlb on|off        dynamic load balancing (on)
-    --policy P          balancer: pairing|stealing|diffusion (pairing)
+    --policy P          balancer: pairing|stealing|hierarchical|diffusion (pairing)
     --topology T        interconnect: flat|ring|torus|cluster (flat)
     --strategy S        basic|equalizing|smart (basic)
     --wt N              busy threshold W_T (5)
     --delta SECONDS     search back-off / exchange period δ (0.010)
+    --local-tries N     hierarchical: intra-node attempts before escalating (3)
+    --adaptive-delta    AIMD δ controller: shrink δ on successful transfers,
+                        grow on failed rounds, within [dlb.delta_min, delta_max]
     --seed N            run seed (1)
     --trace FILE.csv    write per-process workload traces
     --set sec.key=val   raw config override (repeatable)
@@ -117,6 +121,19 @@ fn config_from_args(args: &mut Args) -> Result<Config> {
     if let Some(d) = args.get_f64("delta")? {
         cfg.delta = d;
     }
+    if let Some(n) = args.get_usize("local-tries")? {
+        cfg.local_tries = n;
+    }
+    // `--adaptive-delta` alone switches it on; `--adaptive-delta off`
+    // overrides a config file that enabled it.  Anything else is an error —
+    // a typo must not silently run the experiment with fixed δ.
+    if let Some(v) = args.get_str("adaptive-delta") {
+        cfg.adaptive_delta = match v.as_str() {
+            "on" | "true" | "1" | "yes" => true,
+            "off" | "false" | "0" | "no" => false,
+            other => bail!("--adaptive-delta: expected on|off, got {other}"),
+        };
+    }
     if let Some(s) = args.get_u64("seed")? {
         cfg.seed = s;
     }
@@ -131,8 +148,13 @@ fn cmd_run(args: &mut Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     args.finish().map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
 
+    let delta_desc = if cfg.adaptive_delta {
+        format!("adaptive[{}..{}]s (start {})", cfg.delta_min, cfg.delta_max, cfg.delta)
+    } else {
+        format!("{}s", cfg.delta)
+    };
     println!(
-        "ductr run: workload={} mode={} P={} grid={} dlb={} policy={} topology={} strategy={} W_T={} δ={}s seed={}",
+        "ductr run: workload={} mode={} P={} grid={} dlb={} policy={} topology={} strategy={} W_T={} δ={} seed={}",
         cfg.workload,
         cfg.mode,
         cfg.processes,
@@ -142,7 +164,7 @@ fn cmd_run(args: &mut Args) -> Result<()> {
         cfg.topology,
         cfg.strategy,
         cfg.wt,
-        cfg.delta,
+        delta_desc,
         cfg.seed
     );
 
@@ -228,7 +250,12 @@ fn cmd_run(args: &mut Args) -> Result<()> {
 
 /// The balancer shoot-out (also reachable as `experiment compare`).
 fn cmd_compare(args: &mut Args) -> Result<()> {
-    let quick = args.get_bool("quick")?;
+    // `--smoke` is the CI spelling of `--quick` (matches `bench --smoke`).
+    // Evaluate both before or-ing: short-circuiting would leave the second
+    // flag unconsumed and `finish()` would reject it.
+    let quick_flag = args.get_bool("quick")?;
+    let smoke_flag = args.get_bool("smoke")?;
+    let quick = quick_flag || smoke_flag;
     let seed = args.get_u64("seed")?.unwrap_or(1);
     let out = args.get_str("out");
     args.finish().map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
@@ -279,7 +306,9 @@ fn cmd_experiment(args: &mut Args) -> Result<()> {
         .ok_or_else(|| {
             anyhow!("experiment needs an id: fig1|fig3|fig4|fig5|sec4|ablation|compare|all")
         })?;
-    let quick = args.get_bool("quick")?;
+    let quick_flag = args.get_bool("quick")?;
+    let smoke_flag = args.get_bool("smoke")?;
+    let quick = quick_flag || smoke_flag;
     let out = args.get_str("out");
     let seed = args.get_u64("seed")?.unwrap_or(1);
     args.finish().map_err(|e| anyhow!("{e}"))?;

@@ -122,6 +122,10 @@ pub enum PolicyKind {
     /// Receiver-initiated work stealing: idle processes steal from random
     /// victims with bounded retries (John et al. 2022).
     WorkStealing,
+    /// Locality-aware stealing: steal inside the cluster node (the nearest
+    /// topology tier) first, escalate to distance-weighted remote victims
+    /// only after `dlb.local_tries` consecutive local failures.
+    Hierarchical,
     /// First-order neighborhood diffusion over the network topology
     /// (Demirel & Sbalzarini 2013).
     Diffusion,
@@ -132,15 +136,20 @@ impl PolicyKind {
         match s {
             "pairing" | "random_pairing" => Ok(PolicyKind::RandomPairing),
             "stealing" | "work_stealing" => Ok(PolicyKind::WorkStealing),
+            "hierarchical" | "hier" => Ok(PolicyKind::Hierarchical),
             "diffusion" => Ok(PolicyKind::Diffusion),
             other => Err(ConfigError::new(format!(
-                "unknown policy: {other} (pairing|stealing|diffusion)"
+                "unknown policy: {other} (pairing|stealing|hierarchical|diffusion)"
             ))),
         }
     }
 
-    pub const ALL: [PolicyKind; 3] =
-        [PolicyKind::RandomPairing, PolicyKind::WorkStealing, PolicyKind::Diffusion];
+    pub const ALL: [PolicyKind; 4] = [
+        PolicyKind::RandomPairing,
+        PolicyKind::WorkStealing,
+        PolicyKind::Hierarchical,
+        PolicyKind::Diffusion,
+    ];
 }
 
 impl fmt::Display for PolicyKind {
@@ -148,6 +157,7 @@ impl fmt::Display for PolicyKind {
         f.write_str(match self {
             PolicyKind::RandomPairing => "pairing",
             PolicyKind::WorkStealing => "stealing",
+            PolicyKind::Hierarchical => "hierarchical",
             PolicyKind::Diffusion => "diffusion",
         })
     }
@@ -307,6 +317,14 @@ pub struct Config {
     pub delta: f64,
     pub tries: usize,
     pub confirm_timeout: f64,
+    /// Hierarchical stealing: consecutive failed intra-node attempts before
+    /// a hunt escalates to remote nodes.
+    pub local_tries: usize,
+    /// Reactive δ (AIMD): shrink δ multiplicatively on successful transfers,
+    /// grow it additively on failed rounds, bounded by [delta_min, delta_max].
+    pub adaptive_delta: bool,
+    pub delta_min: f64,
+    pub delta_max: f64,
 
     // [cost]  (paper §4: S flops/s, R doubles/s; Rackham S/R ≈ 40)
     pub flops_per_sec: f64,
@@ -357,6 +375,10 @@ impl Default for Config {
             delta: 0.010,
             tries: 5,
             confirm_timeout: 0.050,
+            local_tries: 3,
+            adaptive_delta: false,
+            delta_min: 0.001,
+            delta_max: 0.050,
             flops_per_sec: 8.8e9,
             doubles_per_sec: 2.2e8, // S/R = 40, the paper's machine balance
             exec_jitter: 0.0,
@@ -474,6 +496,10 @@ impl Config {
         get_f64(t, "dlb", "delta", &mut self.delta)?;
         get_usize(t, "dlb", "tries", &mut self.tries)?;
         get_f64(t, "dlb", "confirm_timeout", &mut self.confirm_timeout)?;
+        get_usize(t, "dlb", "local_tries", &mut self.local_tries)?;
+        get_bool(t, "dlb", "adaptive_delta", &mut self.adaptive_delta)?;
+        get_f64(t, "dlb", "delta_min", &mut self.delta_min)?;
+        get_f64(t, "dlb", "delta_max", &mut self.delta_max)?;
 
         get_f64(t, "cost", "flops_per_sec", &mut self.flops_per_sec)?;
         get_f64(t, "cost", "doubles_per_sec", &mut self.doubles_per_sec)?;
@@ -609,6 +635,24 @@ impl Config {
         }
         if self.inter_node_hops == 0 {
             return Err(ConfigError::new("network.inter_hops must be ≥ 1"));
+        }
+        if self.local_tries == 0 {
+            return Err(ConfigError::new("dlb.local_tries must be ≥ 1"));
+        }
+        if self.delta_min <= 0.0 || self.delta_max < self.delta_min {
+            return Err(ConfigError::new("dlb.delta_min must be > 0 and ≤ dlb.delta_max"));
+        }
+        // Topology-distance contract: the realized shape must give every
+        // rank its own slot; `hops` stays total regardless, but an
+        // under-sized shape would strand the excess ranks (empty neighbor
+        // sets — their load could never leave under diffusion).
+        let topo = self.build_topology();
+        if !topo.covers(self.processes) {
+            return Err(ConfigError::new(format!(
+                "topology {} does not cover run.processes = {}",
+                topo.label(),
+                self.processes
+            )));
         }
         Ok(())
     }
@@ -757,6 +801,49 @@ mod tests {
             c.build_topology(),
             Topology::Cluster { nodes: 3, per_node: 4, inter_hops: 4 }
         );
+    }
+
+    #[test]
+    fn locality_knobs_parse_and_validate() {
+        let c = Config::default();
+        assert_eq!(c.local_tries, 3);
+        assert!(!c.adaptive_delta);
+        assert!(c.delta_min > 0.0 && c.delta_min <= c.delta_max);
+
+        let doc = r#"
+            [dlb]
+            policy = "hierarchical"
+            local_tries = 2
+            adaptive_delta = true
+            delta_min = 0.0005
+            delta_max = 0.02
+        "#;
+        let c = Config::from_str_toml(doc).expect("parse");
+        assert_eq!(c.policy, PolicyKind::Hierarchical);
+        assert_eq!(c.local_tries, 2);
+        assert!(c.adaptive_delta);
+        assert!((c.delta_min - 0.0005).abs() < 1e-12);
+        assert!((c.delta_max - 0.02).abs() < 1e-12);
+        assert_eq!(PolicyKind::parse("hier").expect("alias"), PolicyKind::Hierarchical);
+
+        let mut c = Config::default();
+        c.local_tries = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.delta_min = 0.04;
+        c.delta_max = 0.01;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.delta_min = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn all_policies_listed_once() {
+        assert_eq!(PolicyKind::ALL.len(), 4);
+        for p in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(&p.to_string()).expect("roundtrip"), p);
+        }
     }
 
     #[test]

@@ -19,7 +19,9 @@ use std::sync::Arc;
 
 use crate::config::{Config, PolicyKind, Strategy};
 use crate::dlb::pairing::PairingConfig;
-use crate::dlb::policy::{self, BalancerPolicy, PolicyAction, PolicyObs};
+use crate::dlb::policy::{
+    self, AdaptiveConfig, BalancerPolicy, PolicyAction, PolicyObs, PolicySpec,
+};
 use crate::dlb::strategy::{select_exports, PartnerInfo};
 use crate::dlb::{CostModel, PerfRecorder};
 use crate::metrics::counters::DlbCounters;
@@ -66,6 +68,13 @@ pub struct ProcessParams {
     /// work does not immediately flip to busy).
     pub wt_gap: usize,
     pub pairing: PairingConfig,
+    /// Hierarchical stealing: consecutive failed intra-node attempts before
+    /// a hunt escalates to remote nodes.
+    pub local_tries: usize,
+    /// Wrap the policy in the AIMD δ controller (`dlb.adaptive_delta`).
+    pub adaptive_delta: bool,
+    pub delta_min: f64,
+    pub delta_max: f64,
     pub cores: usize,
     pub control_doubles: u64,
     pub cost: CostModel,
@@ -89,9 +98,28 @@ impl ProcessParams {
                 delta: c.delta,
                 confirm_timeout: c.confirm_timeout,
             },
+            local_tries: c.local_tries,
+            adaptive_delta: c.adaptive_delta,
+            delta_min: c.delta_min,
+            delta_max: c.delta_max,
             cores: c.cores_per_process,
             control_doubles: c.control_doubles,
             cost,
+        }
+    }
+
+    /// The balancer instantiation spec (shared by both engines).
+    pub fn policy_spec(&self) -> PolicySpec {
+        PolicySpec {
+            kind: self.policy,
+            pairing: self.pairing,
+            steal_half: self.steal_half,
+            local_tries: self.local_tries,
+            adaptive: if self.adaptive_delta {
+                Some(AdaptiveConfig::new(self.delta_min, self.delta_max))
+            } else {
+                None
+            },
         }
     }
 }
@@ -148,7 +176,7 @@ impl ProcessState {
     ) -> Self {
         let mut root = Rng::new(seed);
         let rng = root.fork(me.0 as u64 + 1);
-        let balancer = policy::build(params.policy, me, params.pairing, params.steal_half);
+        let balancer = policy::build(&params.policy_spec(), me, num_processes, &params.topology);
         let neighbors = params.topology.neighbors(me, num_processes);
         let perf = PerfRecorder::new(params.cost);
         let pending_deps = vec![0u32; graph.num_tasks()];
@@ -619,6 +647,12 @@ impl ProcessState {
             migrated.push(MigratedTask { task: rt.task, origin: rt.origin, inputs });
         }
         self.policy.counters_mut().tasks_exported += picked.len() as u64;
+        // Locality accounting: tasks that leave the cluster node / adjacency
+        // shell (> 1 hop) are the migrations locality-aware policies exist
+        // to avoid.
+        if !picked.is_empty() && self.params.topology.hops(self.me, partner) > 1 {
+            self.policy.counters_mut().tasks_exported_remote += picked.len() as u64;
+        }
         self.send(effects, partner, Msg::TaskExport { round, tasks: migrated });
         self.record_trace(now);
     }
@@ -997,6 +1031,45 @@ mod tests {
         assert_eq!(flowed, Some(3), "flow down the gradient: {effects:?}");
         assert_eq!(ps.workload(), 9);
         assert_eq!(ps.counters().tasks_exported, 3);
+    }
+
+    #[test]
+    fn remote_exports_counted_by_hop_distance() {
+        // 2 nodes × 2 ranks: p1 shares p0's node, p2/p3 are across the wire
+        let mut cfg = Config::default();
+        cfg.dlb_enabled = true;
+        cfg.wt = 2;
+        cfg.policy = PolicyKind::WorkStealing;
+        cfg.processes = 4;
+        cfg.topology = crate::config::TopologyKind::Cluster;
+        cfg.cluster_nodes = 2;
+        cfg.validate().expect("valid");
+        let params = ProcessParams::from_config(&cfg);
+        let mut b = GraphBuilder::new();
+        for _ in 0..13 {
+            let d = b.data(ProcessId(0), 8, 8);
+            b.task(TaskKind::Synthetic, vec![], d, 1000, None);
+        }
+        let mut ps = ProcessState::new(ProcessId(0), 4, b.build(), params, 1);
+        let _ = run_start(&mut ps);
+        // an intra-node steal (p1) migrates tasks but nothing "remote"
+        let _ = deliver(
+            &mut ps,
+            envelope(1, 0, Msg::StealRequest { round: 1, load: 0, eta: 0.0 }),
+            0.001,
+        );
+        let after_local = ps.counters().tasks_exported;
+        assert!(after_local > 0, "local steal must export");
+        assert_eq!(ps.counters().tasks_exported_remote, 0, "same node = not remote");
+        // an inter-node steal (p2) counts toward the remote tally
+        let _ = deliver(
+            &mut ps,
+            envelope(2, 0, Msg::StealRequest { round: 2, load: 0, eta: 0.0 }),
+            0.002,
+        );
+        let remote = ps.counters().tasks_exported_remote;
+        assert!(remote > 0, "cross-node steal must count as remote");
+        assert_eq!(ps.counters().tasks_exported, after_local + remote);
     }
 
     #[test]

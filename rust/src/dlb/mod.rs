@@ -1,7 +1,9 @@
 //! The paper's contribution: distributed dynamic load balancing.
 //!
 //! - `policy` — the pluggable balancer subsystem: the paper's random
-//!   pairing plus work stealing and topology diffusion, behind one trait;
+//!   pairing plus work stealing, hierarchical locality-aware stealing and
+//!   topology diffusion, behind one trait, with an optional AIMD adaptive-δ
+//!   wrapper;
 //! - `pairing` — the randomized idle–busy partner search (§3, Fig 1/3);
 //! - `strategy` — the Basic / Equalizing / Smart export policies (§3);
 //! - `costmodel` — the analytic migration cost model (§4);
@@ -18,5 +20,8 @@ pub mod threshold;
 pub use costmodel::CostModel;
 pub use pairing::{PairAction, Pairing, PairingConfig, PairStatus};
 pub use perfmodel::PerfRecorder;
-pub use policy::{BalancerPolicy, Diffusion, PolicyAction, PolicyObs, RandomPairing, WorkStealing};
+pub use policy::{
+    AdaptiveConfig, AdaptiveDelta, BalancerPolicy, Diffusion, HierarchicalStealing, PolicyAction,
+    PolicyObs, PolicySpec, RandomPairing, WorkStealing,
+};
 pub use strategy::{select_exports, PartnerInfo};

@@ -1,0 +1,249 @@
+//! Reactive δ: an AIMD controller wrapped around any [`BalancerPolicy`].
+//!
+//! The paper fixes the search back-off / exchange period δ for a whole run
+//! (§6: 10 ms).  Reactive balancing driven by observed outcomes beats a
+//! fixed period (Samfass et al. 2019): when transfers succeed the system is
+//! imbalanced and should rebalance *faster*; when rounds keep failing the
+//! system is balanced (or drained) and the protocol should quiesce.
+//!
+//! [`AdaptiveDelta`] implements that as the classic AIMD rule, inverted for
+//! a period rather than a rate:
+//!
+//! - **successful transfer** → δ ← max(δ · shrink, δ_min)  (multiplicative
+//!   decrease: react quickly to discovered imbalance);
+//! - **failed round / confirm timeout** → δ ← min(δ + grow, δ_max)
+//!   (additive increase: back off gently, avoid synchronized thrash).
+//!
+//! It is a pure decorator: it delegates every [`BalancerPolicy`] method to
+//! the wrapped policy, watches the outcome counters it already maintains
+//! (`transactions`, `failed_rounds`, `confirm_timeouts` — no new plumbing
+//! through the engines), and pushes the retuned δ back down through
+//! [`BalancerPolicy::set_delta`].  Works identically around all four
+//! policies and in both engines.
+
+use crate::core::ids::ProcessId;
+use crate::metrics::counters::DlbCounters;
+use crate::net::message::Msg;
+use crate::util::rng::Rng;
+
+use super::{BalancerPolicy, PolicyAction, PolicyObs};
+
+/// AIMD bounds and gains (`dlb.delta_min` / `dlb.delta_max`; the gains are
+/// the standard halving/one-step choices).
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveConfig {
+    pub delta_min: f64,
+    pub delta_max: f64,
+    /// Multiplicative factor applied on each successful transfer (< 1).
+    pub shrink: f64,
+    /// Additive growth in seconds applied on each failed round.
+    pub grow: f64,
+}
+
+impl AdaptiveConfig {
+    pub fn new(delta_min: f64, delta_max: f64) -> Self {
+        AdaptiveConfig { delta_min, delta_max, shrink: 0.5, grow: delta_min }
+    }
+}
+
+/// The decorator.  See the module docs for the control rule.
+pub struct AdaptiveDelta {
+    inner: Box<dyn BalancerPolicy>,
+    cfg: AdaptiveConfig,
+    delta: f64,
+    /// Counter watermarks from the last adjustment.
+    seen_transactions: u64,
+    seen_failures: u64,
+}
+
+impl AdaptiveDelta {
+    pub fn new(inner: Box<dyn BalancerPolicy>, cfg: AdaptiveConfig, initial_delta: f64) -> Self {
+        let delta = initial_delta.clamp(cfg.delta_min, cfg.delta_max);
+        let mut this = AdaptiveDelta {
+            inner,
+            cfg,
+            delta,
+            seen_transactions: 0,
+            seen_failures: 0,
+        };
+        this.inner.set_delta(delta);
+        this
+    }
+
+    /// The controller's current period (diagnostics and tests).
+    pub fn current_delta(&self) -> f64 {
+        self.delta
+    }
+
+    /// Compare the outcome counters against the watermarks and retune.
+    /// At most one adjustment per delegated call — success wins ties (a
+    /// call that both granted and failed still means there is work moving).
+    fn readjust(&mut self) {
+        let c = self.inner.counters();
+        let transactions = c.transactions;
+        let failures = c.failed_rounds + c.confirm_timeouts;
+        let mut changed = false;
+        if transactions > self.seen_transactions {
+            self.delta = (self.delta * self.cfg.shrink).max(self.cfg.delta_min);
+            changed = true;
+        } else if failures > self.seen_failures {
+            self.delta = (self.delta + self.cfg.grow).min(self.cfg.delta_max);
+            changed = true;
+        }
+        self.seen_transactions = transactions;
+        self.seen_failures = failures;
+        if changed {
+            self.inner.set_delta(self.delta);
+        }
+    }
+}
+
+impl BalancerPolicy for AdaptiveDelta {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn init(&mut self, now: f64, rng: &mut Rng) {
+        self.inner.init(now, rng);
+    }
+
+    fn poll(&mut self, obs: &mut PolicyObs<'_>, now: f64, out: &mut Vec<PolicyAction>) {
+        self.inner.poll(obs, now, out);
+        self.readjust();
+    }
+
+    fn on_message(
+        &mut self,
+        obs: &mut PolicyObs<'_>,
+        from: ProcessId,
+        msg: &Msg,
+        now: f64,
+        out: &mut Vec<PolicyAction>,
+    ) {
+        self.inner.on_message(obs, from, msg, now, out);
+        self.readjust();
+    }
+
+    fn on_transfer(
+        &mut self,
+        obs: &mut PolicyObs<'_>,
+        from: ProcessId,
+        round: u64,
+        received: usize,
+        now: f64,
+        out: &mut Vec<PolicyAction>,
+    ) {
+        self.inner.on_transfer(obs, from, round, received, now, out);
+        self.readjust();
+    }
+
+    fn on_tick(&mut self, now: f64, rng: &mut Rng) {
+        self.inner.on_tick(now, rng);
+        self.readjust();
+    }
+
+    fn next_wakeup(&self) -> Option<f64> {
+        self.inner.next_wakeup()
+    }
+
+    fn set_delta(&mut self, delta: f64) {
+        self.delta = delta.clamp(self.cfg.delta_min, self.cfg.delta_max);
+        self.inner.set_delta(self.delta);
+    }
+
+    fn engaged(&self) -> bool {
+        self.inner.engaged()
+    }
+
+    fn counters(&self) -> &DlbCounters {
+        self.inner.counters()
+    }
+
+    fn counters_mut(&mut self) -> &mut DlbCounters {
+        self.inner.counters_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::ObsBox;
+    use super::super::WorkStealing;
+    use super::*;
+    use crate::dlb::pairing::PairingConfig;
+
+    fn adaptive_ws(me: u32) -> AdaptiveDelta {
+        let cfg = PairingConfig::default(); // δ = 0.010
+        AdaptiveDelta::new(
+            Box::new(WorkStealing::new(ProcessId(me), cfg, true)),
+            AdaptiveConfig::new(0.001, 0.050),
+            cfg.delta,
+        )
+    }
+
+    #[test]
+    fn initial_delta_is_clamped_into_bounds() {
+        let inner = Box::new(WorkStealing::new(ProcessId(0), PairingConfig::default(), true));
+        let a = AdaptiveDelta::new(inner, AdaptiveConfig::new(0.001, 0.004), 0.010);
+        assert!((a.current_delta() - 0.004).abs() < 1e-12, "clamped to δ_max");
+    }
+
+    #[test]
+    fn success_shrinks_multiplicatively() {
+        let mut a = adaptive_ws(0);
+        let mut ob = ObsBox::new(0, 8, 0, 2); // idle thief
+        let mut out = Vec::new();
+        a.poll(&mut ob.obs(), 0.0, &mut out);
+        let round = match &out[0] {
+            PolicyAction::Send { msg: Msg::StealRequest { round, .. }, .. } => *round,
+            other => panic!("{other:?}"),
+        };
+        a.on_transfer(&mut ob.obs(), ProcessId(1), round, 3, 0.001, &mut out);
+        assert!((a.current_delta() - 0.005).abs() < 1e-12, "0.010 × 0.5");
+    }
+
+    #[test]
+    fn failure_grows_additively_to_the_cap() {
+        let mut a = adaptive_ws(0);
+        let mut ob = ObsBox::new(0, 8, 0, 2);
+        for i in 0..200 {
+            let mut out = Vec::new();
+            a.poll(&mut ob.obs(), i as f64, &mut out);
+            let round = match out.first() {
+                Some(PolicyAction::Send { msg: Msg::StealRequest { round, .. }, .. }) => *round,
+                _ => continue, // backing off this tick
+            };
+            a.on_transfer(&mut ob.obs(), ProcessId(1), round, 0, i as f64, &mut out);
+        }
+        assert!(
+            (a.current_delta() - 0.050).abs() < 1e-12,
+            "repeated failures must pin δ at δ_max, got {}",
+            a.current_delta()
+        );
+    }
+
+    #[test]
+    fn shrink_never_goes_below_delta_min() {
+        let mut a = adaptive_ws(0);
+        let mut ob = ObsBox::new(0, 8, 0, 2);
+        for i in 0..30 {
+            let now = i as f64;
+            let mut out = Vec::new();
+            a.poll(&mut ob.obs(), now, &mut out);
+            let round = match out.first() {
+                Some(PolicyAction::Send { msg: Msg::StealRequest { round, .. }, .. }) => *round,
+                _ => continue,
+            };
+            a.on_transfer(&mut ob.obs(), ProcessId(1), round, 2, now, &mut out);
+        }
+        assert!((a.current_delta() - 0.001).abs() < 1e-12, "floored at δ_min");
+    }
+
+    #[test]
+    fn counters_and_identity_pass_through() {
+        let mut a = adaptive_ws(3);
+        assert_eq!(a.name(), "stealing", "the wrapper is transparent");
+        a.counters_mut().rounds = 7;
+        assert_eq!(a.counters().rounds, 7);
+        assert!(!a.engaged());
+    }
+}

@@ -86,12 +86,17 @@ impl BalancerPolicy for Diffusion {
         }
 
         // 2. Push flow down the gradient: α(w_i − w_j) toward each lighter
-        //    neighbor, bounded by our remaining excess above W_T.
+        //    neighbor, bounded by our remaining excess above W_T.  An
+        //    exchange that moves nothing is this policy's "failed round" —
+        //    the quiescence signal the adaptive-δ controller lengthens the
+        //    period on.
         let alpha = 1.0 / (obs.neighbors.len() as f64 + 1.0);
         let mut budget = obs.workload.saturating_sub(obs.wt);
         if budget == 0 {
+            self.counters.failed_rounds += 1;
             return;
         }
+        let mut flowed = false;
         for &q in obs.neighbors {
             let Some(wj) = self.load_of(q) else { continue };
             if wj >= obs.workload {
@@ -111,6 +116,7 @@ impl BalancerPolicy for Diffusion {
                 continue;
             }
             budget -= flow;
+            flowed = true;
             let round = self.next_round;
             self.next_round += 1;
             self.counters.transactions += 1;
@@ -121,6 +127,9 @@ impl BalancerPolicy for Diffusion {
             if budget == 0 {
                 break;
             }
+        }
+        if !flowed {
+            self.counters.failed_rounds += 1;
         }
     }
 
@@ -164,6 +173,10 @@ impl BalancerPolicy for Diffusion {
 
     fn next_wakeup(&self) -> Option<f64> {
         Some(self.next_exchange_at)
+    }
+
+    fn set_delta(&mut self, delta: f64) {
+        self.cfg.delta = delta;
     }
 
     fn engaged(&self) -> bool {

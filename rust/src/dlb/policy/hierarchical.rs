@@ -1,0 +1,457 @@
+//! Hierarchical locality-aware work stealing as a [`BalancerPolicy`].
+//!
+//! The ROADMAP's "steal within the cluster node first" idea, generalized to
+//! every topology through the distance-ranked victim table
+//! (`Topology::neighbors_by_distance`): victims are split into a **local
+//! tier** — everyone at the minimum hop distance (the cluster node-mates,
+//! or the ring/torus adjacency shell) — and the **remote tiers** beyond it.
+//!
+//! A hunt walks an escalation ladder: the first `local_tries` attempts draw
+//! uniformly from the local tier; once that many consecutive attempts have
+//! failed, the remaining attempts of the hunt escalate to a 1/hops²-weighted
+//! draw over the remote tiers (near nodes dominate, far ones stay
+//! reachable).  Any success — local or remote — resets the ladder, so a
+//! thief returns to cheap intra-node stealing as soon as its neighborhood
+//! has work again.  Distributed task runtimes show exactly this
+//! locality-over-uniformity victim selection is what keeps stealing
+//! competitive once the interconnect is not flat (John et al. 2022).
+//!
+//! Wire protocol, steal amounts, retries and back-off are identical to
+//! [`super::WorkStealing`] — on a flat topology (every rank at one hop) the
+//! local tier is everybody and the policy degenerates to plain uniform
+//! stealing, which makes the comparison in `ductr compare` apples-to-apples:
+//! the only difference is *whom* the thief asks.
+
+use crate::core::ids::ProcessId;
+use crate::dlb::pairing::PairingConfig;
+use crate::metrics::counters::DlbCounters;
+use crate::net::message::{Msg, Role};
+use crate::net::topology::Topology;
+use crate::util::rng::Rng;
+
+use super::{BalancerPolicy, PolicyAction, PolicyObs};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum StealState {
+    /// No request in flight.
+    Free,
+    /// Waiting for a victim's reply.
+    Outstanding { round: u64, deadline: f64 },
+}
+
+pub struct HierarchicalStealing {
+    cfg: PairingConfig,
+    steal_half: bool,
+    /// Consecutive failed attempts before a hunt escalates off-node.
+    local_tries: usize,
+    me: ProcessId,
+    /// The minimum-distance tier (node-mates / adjacency shell).
+    local: Vec<ProcessId>,
+    /// Every farther rank, ascending distance.
+    far: Vec<ProcessId>,
+    /// Cumulative 1/hops² weights aligned with `far` (precomputed once:
+    /// victim draws stay allocation-free).
+    far_cum: Vec<f64>,
+    state: StealState,
+    /// Earliest time the next steal attempt may start.
+    next_attempt_at: f64,
+    /// Consecutive failures in the current hunt (drives escalation).
+    failures: usize,
+    /// Immediate retries left before backing off for δ.
+    retries_left: usize,
+    /// Rounds whose confirm-timeout fired before their reply arrived; a
+    /// reply carrying one of them is a late grant, not a live one.
+    stale_rounds: Vec<u64>,
+    next_round: u64,
+    pub counters: DlbCounters,
+}
+
+impl HierarchicalStealing {
+    pub fn new(
+        me: ProcessId,
+        cfg: PairingConfig,
+        steal_half: bool,
+        local_tries: usize,
+        topology: &Topology,
+        num_processes: usize,
+    ) -> Self {
+        let ranked = topology.neighbors_by_distance(me, num_processes);
+        let min_h = ranked.first().map(|&(_, h)| h).unwrap_or(1);
+        let local: Vec<ProcessId> =
+            ranked.iter().take_while(|&&(_, h)| h == min_h).map(|&(q, _)| q).collect();
+        let mut far = Vec::with_capacity(ranked.len() - local.len());
+        let mut far_cum = Vec::with_capacity(ranked.len() - local.len());
+        let mut acc = 0.0;
+        for &(q, h) in ranked.iter().skip(local.len()) {
+            acc += Topology::locality_weight(h);
+            far.push(q);
+            far_cum.push(acc);
+        }
+        let retries = cfg.tries.max(1);
+        HierarchicalStealing {
+            cfg,
+            steal_half,
+            local_tries: local_tries.max(1),
+            me,
+            local,
+            far,
+            far_cum,
+            state: StealState::Free,
+            next_attempt_at: 0.0,
+            failures: 0,
+            retries_left: retries,
+            stale_rounds: Vec::new(),
+            next_round: 1,
+            counters: DlbCounters::default(),
+        }
+    }
+
+    /// Is the current attempt past the local rungs of the ladder?
+    fn escalated(&self) -> bool {
+        self.failures >= self.local_tries && !self.far.is_empty()
+    }
+
+    /// Local phase: uniform node-mate.  Escalated: 1/hops²-weighted draw
+    /// over the remote tiers.
+    fn pick_victim(&self, rng: &mut Rng) -> Option<ProcessId> {
+        if !self.escalated() {
+            if self.local.is_empty() {
+                return None;
+            }
+            return Some(*rng.choose(&self.local));
+        }
+        let total = *self.far_cum.last().expect("escalated ⇒ non-empty far tier");
+        let x = rng.next_f64() * total;
+        let i = self.far_cum.partition_point(|&c| c < x).min(self.far.len() - 1);
+        Some(self.far[i])
+    }
+
+    /// An attempt came back empty (or timed out): climb the ladder, retry
+    /// now or back off for a jittered δ.
+    fn attempt_failed(&mut self, now: f64, rng: &mut Rng) {
+        self.state = StealState::Free;
+        self.counters.failed_rounds += 1;
+        self.failures += 1;
+        if self.retries_left > 0 {
+            self.retries_left -= 1;
+            self.next_attempt_at = now;
+        } else {
+            self.retries_left = self.cfg.tries.max(1);
+            // next hunt starts at the bottom of the ladder again
+            self.failures = 0;
+            let jitter = 0.5 + rng.next_f64();
+            self.next_attempt_at = now + self.cfg.delta * jitter;
+        }
+    }
+
+    /// How much a busy victim with workload `w` hands over (same rule as
+    /// plain stealing — the policies differ only in victim choice).
+    fn steal_amount(&self, w: usize, wt: usize) -> usize {
+        let excess = w.saturating_sub(wt);
+        if excess == 0 {
+            0
+        } else if self.steal_half {
+            (excess + 1) / 2
+        } else {
+            1
+        }
+    }
+}
+
+impl BalancerPolicy for HierarchicalStealing {
+    fn name(&self) -> &'static str {
+        "hierarchical"
+    }
+
+    fn init(&mut self, now: f64, rng: &mut Rng) {
+        // stagger first attempts uniformly over one δ
+        self.next_attempt_at = now + rng.next_f64() * self.cfg.delta;
+    }
+
+    fn poll(&mut self, obs: &mut PolicyObs<'_>, now: f64, out: &mut Vec<PolicyAction>) {
+        if obs.middle_zone
+            || obs.role != Role::Idle
+            || self.state != StealState::Free
+            || now < self.next_attempt_at
+            || obs.num_processes < 2
+        {
+            return;
+        }
+        let Some(victim) = self.pick_victim(obs.rng) else { return };
+        let round = self.next_round;
+        self.next_round += 1;
+        self.counters.rounds += 1;
+        self.counters.requests_sent += 1;
+        self.state = StealState::Outstanding { round, deadline: now + self.cfg.confirm_timeout };
+        out.push(PolicyAction::Send {
+            to: victim,
+            msg: Msg::StealRequest { round, load: obs.workload, eta: obs.queue_eta() },
+        });
+    }
+
+    fn on_message(
+        &mut self,
+        obs: &mut PolicyObs<'_>,
+        from: ProcessId,
+        msg: &Msg,
+        _now: f64,
+        out: &mut Vec<PolicyAction>,
+    ) {
+        match *msg {
+            Msg::StealRequest { round, .. } => {
+                self.counters.requests_received += 1;
+                let grant = if obs.middle_zone || obs.role != Role::Busy {
+                    0
+                } else {
+                    self.steal_amount(obs.workload, obs.wt)
+                };
+                if grant > 0 {
+                    self.counters.accepts_sent += 1;
+                    self.counters.transactions += 1;
+                } else {
+                    self.counters.declines_sent += 1;
+                }
+                // Always reply, even empty: the thief is blocked on us.
+                out.push(PolicyAction::ExportCount { to: from, round, count: grant });
+            }
+            // Victim side: transfer acked; stateless, nothing to unlock.
+            Msg::ExportAck { .. } => {}
+            _ => {}
+        }
+    }
+
+    /// Thief side: a steal reply landed (tasks already enqueued).
+    fn on_transfer(
+        &mut self,
+        obs: &mut PolicyObs<'_>,
+        _from: ProcessId,
+        round: u64,
+        received: usize,
+        now: f64,
+        _out: &mut Vec<PolicyAction>,
+    ) {
+        match self.state {
+            StealState::Outstanding { round: r, .. } if r == round => {
+                if received == 0 {
+                    self.attempt_failed(now, obs.rng);
+                } else {
+                    self.state = StealState::Free;
+                    self.counters.transactions += 1;
+                    self.retries_left = self.cfg.tries.max(1);
+                    // success anywhere resets the ladder: steal locally again
+                    self.failures = 0;
+                    self.next_attempt_at = now;
+                }
+            }
+            _ => {
+                // A reply for a round whose timeout already fired: the tasks
+                // are enqueued regardless (over-steal risk) — account for it.
+                if let Some(pos) = self.stale_rounds.iter().position(|&r| r == round) {
+                    self.stale_rounds.swap_remove(pos);
+                    if received > 0 {
+                        self.counters.late_grants += 1;
+                        self.counters.transactions += 1;
+                        self.failures = 0;
+                    }
+                }
+            }
+        }
+    }
+
+    fn on_tick(&mut self, now: f64, rng: &mut Rng) {
+        if let StealState::Outstanding { round, deadline } = self.state {
+            if now >= deadline {
+                // victim vanished or the reply is slow: remember the round
+                // so a late grant is recognized, count, and move on
+                self.stale_rounds.push(round);
+                self.counters.confirm_timeouts += 1;
+                self.attempt_failed(now, rng);
+            }
+        }
+    }
+
+    fn next_wakeup(&self) -> Option<f64> {
+        match self.state {
+            StealState::Free => Some(self.next_attempt_at),
+            StealState::Outstanding { deadline, .. } => Some(deadline),
+        }
+    }
+
+    fn set_delta(&mut self, delta: f64) {
+        self.cfg.delta = delta;
+    }
+
+    fn engaged(&self) -> bool {
+        self.state != StealState::Free
+    }
+
+    fn counters(&self) -> &DlbCounters {
+        &self.counters
+    }
+
+    fn counters_mut(&mut self) -> &mut DlbCounters {
+        &mut self.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::ObsBox;
+    use super::*;
+
+    /// 2 nodes × 4 ranks, inter-node cost 4 (the `cluster2x4` shape).
+    fn cluster() -> Topology {
+        Topology::Cluster { nodes: 2, per_node: 4, inter_hops: 4 }
+    }
+
+    fn hier(me: u32, local_tries: usize, topo: &Topology, p: usize) -> HierarchicalStealing {
+        HierarchicalStealing::new(
+            ProcessId(me),
+            PairingConfig::default(),
+            true,
+            local_tries,
+            topo,
+            p,
+        )
+    }
+
+    fn request_target(p: &mut HierarchicalStealing, ob: &mut ObsBox, now: f64) -> ProcessId {
+        let mut out = Vec::new();
+        p.poll(&mut ob.obs(), now, &mut out);
+        match out.as_slice() {
+            [PolicyAction::Send { to, msg: Msg::StealRequest { .. } }] => *to,
+            other => panic!("expected one StealRequest, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tiers_split_on_the_cluster_boundary() {
+        let p = hier(1, 3, &cluster(), 8);
+        assert_eq!(p.local, vec![ProcessId(0), ProcessId(2), ProcessId(3)]);
+        assert_eq!(
+            p.far,
+            (4..8).map(ProcessId).collect::<Vec<_>>(),
+            "remote tier = the other node"
+        );
+    }
+
+    #[test]
+    fn first_local_tries_attempts_stay_on_node() {
+        let topo = cluster();
+        let mut p = hier(1, 3, &topo, 8);
+        let mut ob = ObsBox::new(1, 8, 0, 2); // idle
+        for attempt in 0..3 {
+            let victim = request_target(&mut p, &mut ob, 0.0);
+            assert!(
+                victim.idx() < 4,
+                "attempt {attempt} must stay intra-node, asked {victim}"
+            );
+            let round = p.next_round - 1;
+            let mut out = Vec::new();
+            p.on_transfer(&mut ob.obs(), victim, round, 0, 0.0, &mut out); // denied
+        }
+        // ladder climbed: the 4th attempt escalates to the other node
+        let victim = request_target(&mut p, &mut ob, 0.0);
+        assert!(victim.idx() >= 4, "escalated attempt must leave the node, asked {victim}");
+    }
+
+    #[test]
+    fn success_resets_the_ladder_to_local() {
+        let topo = cluster();
+        let mut p = hier(0, 1, &topo, 8);
+        let mut ob = ObsBox::new(0, 8, 0, 2);
+        // fail once locally → escalate
+        let v = request_target(&mut p, &mut ob, 0.0);
+        let mut out = Vec::new();
+        p.on_transfer(&mut ob.obs(), v, p.next_round - 1, 0, 0.0, &mut out);
+        let v = request_target(&mut p, &mut ob, 0.0);
+        assert!(v.idx() >= 4, "escalated");
+        // remote grant succeeds → next hunt starts local again
+        p.on_transfer(&mut ob.obs(), v, p.next_round - 1, 2, 0.001, &mut out);
+        assert_eq!(p.failures, 0);
+        let v = request_target(&mut p, &mut ob, 0.001);
+        assert!(v.idx() < 4, "back to the local tier, asked {v}");
+        assert_eq!(p.counters.transactions, 1);
+    }
+
+    #[test]
+    fn flat_topology_degenerates_to_uniform_stealing() {
+        let p = hier(0, 3, &Topology::Flat, 6);
+        assert_eq!(p.local.len(), 5, "everyone is one hop away");
+        assert!(p.far.is_empty());
+        // escalation can never trigger — pick_victim stays on the local path
+        assert!(!p.escalated());
+    }
+
+    #[test]
+    fn busy_process_never_steals() {
+        let topo = cluster();
+        let mut p = hier(0, 3, &topo, 8);
+        let mut ob = ObsBox::new(0, 8, 9, 2); // busy
+        let mut out = Vec::new();
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn victim_grants_half_the_excess() {
+        let topo = cluster();
+        let mut p = hier(1, 3, &topo, 8);
+        let mut ob = ObsBox::new(1, 8, 12, 2); // excess 10 → grant 5
+        let mut out = Vec::new();
+        p.on_message(
+            &mut ob.obs(),
+            ProcessId(0),
+            &Msg::StealRequest { round: 9, load: 0, eta: 0.0 },
+            0.001,
+            &mut out,
+        );
+        assert!(matches!(
+            out.as_slice(),
+            [PolicyAction::ExportCount { to: ProcessId(0), round: 9, count: 5 }]
+        ));
+    }
+
+    #[test]
+    fn late_grant_is_counted_not_replayed() {
+        let topo = cluster();
+        let mut p = hier(0, 3, &topo, 8);
+        let mut ob = ObsBox::new(0, 8, 0, 2);
+        let mut out = Vec::new();
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        let round = p.next_round - 1;
+        let mut rng = Rng::new(7);
+        p.on_tick(10.0, &mut rng); // past the confirm deadline
+        assert!(!p.engaged());
+        assert_eq!(p.counters.confirm_timeouts, 1);
+        // the grant finally lands — tasks were enqueued by the process, the
+        // policy books it as a late grant and stays Free
+        p.on_transfer(&mut ob.obs(), ProcessId(1), round, 3, 10.1, &mut out);
+        assert_eq!(p.counters.late_grants, 1);
+        assert!(!p.engaged());
+    }
+
+    #[test]
+    fn backoff_after_exhausting_retries() {
+        let topo = cluster();
+        let mut p = hier(0, 2, &topo, 8);
+        let mut ob = ObsBox::new(0, 8, 0, 2);
+        let tries = p.cfg.tries;
+        let now = 0.01;
+        let mut failures = 0;
+        loop {
+            let mut out = Vec::new();
+            p.poll(&mut ob.obs(), now, &mut out);
+            if out.is_empty() {
+                break;
+            }
+            let round = p.next_round - 1;
+            p.on_transfer(&mut ob.obs(), ProcessId(1), round, 0, now, &mut out);
+            failures += 1;
+            assert!(failures < 100, "no backoff");
+        }
+        assert_eq!(failures, tries + 1);
+        assert!(p.next_attempt_at > now);
+        assert_eq!(p.failures, 0, "ladder reset with the backoff");
+    }
+}

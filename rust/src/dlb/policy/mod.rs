@@ -2,7 +2,7 @@
 //!
 //! A [`BalancerPolicy`] abstracts "what does a process do about load each
 //! time something happens": when to search, whom to talk to, and how much
-//! work to move.  Three implementations compete inside the same
+//! work to move.  Four implementations compete inside the same
 //! deterministic simulator and threaded runtime:
 //!
 //! - [`RandomPairing`] — the paper's randomized idle–busy pairing (§3),
@@ -10,8 +10,16 @@
 //!   behavior;
 //! - [`WorkStealing`] — receiver-initiated stealing from uniformly random
 //!   victims with bounded retries (John et al. 2022);
+//! - [`HierarchicalStealing`] — locality-aware stealing over the topology's
+//!   distance tiers: intra-node first, distance-weighted remote escalation
+//!   after `local_tries` consecutive local failures;
 //! - [`Diffusion`] — periodic first-order load averaging restricted to
 //!   topology neighbors (Demirel & Sbalzarini 2013).
+//!
+//! Any of the four can additionally be wrapped in [`AdaptiveDelta`], the
+//! AIMD controller that retunes the back-off / exchange period δ from
+//! observed outcomes (shrink on successful transfers, grow on failed
+//! rounds) instead of holding the paper's fixed δ.
 //!
 //! The split of responsibilities keeps every policy a pure, unit-testable
 //! state machine, exactly like `dlb::pairing` always was:
@@ -27,13 +35,17 @@
 //! Task transfers are policy-neutral on the wire: every policy moves work
 //! with `Msg::TaskExport` / `Msg::ExportAck`, so migrated-task accounting,
 //! re-export of stolen tasks, and result return-to-origin work identically
-//! under all three.
+//! under all of them.
 
+pub mod adaptive;
 pub mod diffusion;
+pub mod hierarchical;
 pub mod random_pairing;
 pub mod work_stealing;
 
+pub use adaptive::{AdaptiveConfig, AdaptiveDelta};
 pub use diffusion::Diffusion;
+pub use hierarchical::HierarchicalStealing;
 pub use random_pairing::RandomPairing;
 pub use work_stealing::WorkStealing;
 
@@ -45,6 +57,7 @@ use crate::dlb::perfmodel::PerfRecorder;
 use crate::dlb::strategy::PartnerInfo;
 use crate::metrics::counters::DlbCounters;
 use crate::net::message::{Msg, Role};
+use crate::net::topology::Topology;
 use crate::sched::queue::ReadyQueue;
 use crate::util::rng::Rng;
 
@@ -148,6 +161,11 @@ pub trait BalancerPolicy: Send {
     /// Earliest time `poll`/`on_tick` must run again, if any.
     fn next_wakeup(&self) -> Option<f64>;
 
+    /// Retune the back-off / exchange period δ (the [`AdaptiveDelta`]
+    /// wrapper's control knob).  Takes effect from the next scheduling
+    /// decision; an already-armed deadline is not rewound.
+    fn set_delta(&mut self, delta: f64);
+
     /// Mid-handshake or mid-transfer (diagnostics and tests).
     fn engaged(&self) -> bool;
 
@@ -155,17 +173,44 @@ pub trait BalancerPolicy: Send {
     fn counters_mut(&mut self) -> &mut DlbCounters;
 }
 
-/// Instantiate the configured policy for one process.
+/// Everything needed to instantiate one process's balancer (derived from
+/// `ProcessParams` by both engines).
+#[derive(Debug, Clone)]
+pub struct PolicySpec {
+    pub kind: PolicyKind,
+    pub pairing: PairingConfig,
+    /// Work stealing: steal half the victim's excess vs a single task.
+    pub steal_half: bool,
+    /// Hierarchical: consecutive failed local attempts before escalating.
+    pub local_tries: usize,
+    /// AIMD δ-controller bounds; `None` = the paper's fixed δ.
+    pub adaptive: Option<AdaptiveConfig>,
+}
+
+/// Instantiate the configured policy for one process, optionally wrapped in
+/// the adaptive-δ controller.
 pub fn build(
-    kind: PolicyKind,
+    spec: &PolicySpec,
     me: ProcessId,
-    pairing: PairingConfig,
-    steal_half: bool,
+    num_processes: usize,
+    topology: &Topology,
 ) -> Box<dyn BalancerPolicy> {
-    match kind {
-        PolicyKind::RandomPairing => Box::new(RandomPairing::new(me, pairing)),
-        PolicyKind::WorkStealing => Box::new(WorkStealing::new(me, pairing, steal_half)),
-        PolicyKind::Diffusion => Box::new(Diffusion::new(me, pairing)),
+    let base: Box<dyn BalancerPolicy> = match spec.kind {
+        PolicyKind::RandomPairing => Box::new(RandomPairing::new(me, spec.pairing)),
+        PolicyKind::WorkStealing => Box::new(WorkStealing::new(me, spec.pairing, spec.steal_half)),
+        PolicyKind::Hierarchical => Box::new(HierarchicalStealing::new(
+            me,
+            spec.pairing,
+            spec.steal_half,
+            spec.local_tries,
+            topology,
+            num_processes,
+        )),
+        PolicyKind::Diffusion => Box::new(Diffusion::new(me, spec.pairing)),
+    };
+    match spec.adaptive {
+        Some(cfg) => Box::new(AdaptiveDelta::new(base, cfg, spec.pairing.delta)),
+        None => base,
     }
 }
 

@@ -186,6 +186,10 @@ impl BalancerPolicy for RandomPairing {
         self.pairing.next_wakeup()
     }
 
+    fn set_delta(&mut self, delta: f64) {
+        self.pairing.cfg.delta = delta;
+    }
+
     fn engaged(&self) -> bool {
         !self.pairing.is_free()
     }

@@ -40,6 +40,11 @@ pub struct WorkStealing {
     next_attempt_at: f64,
     /// Immediate retries left before backing off for δ.
     retries_left: usize,
+    /// Rounds whose confirm-timeout fired before their reply arrived; a
+    /// reply carrying one of them is a late grant, not a live one.  Entries
+    /// leave when the reply lands; they accumulate only when a victim halts
+    /// without replying (shutdown), so the list stays tiny.
+    stale_rounds: Vec<u64>,
     next_round: u64,
     pub counters: DlbCounters,
 }
@@ -54,6 +59,7 @@ impl WorkStealing {
             state: StealState::Free,
             next_attempt_at: 0.0,
             retries_left: retries,
+            stale_rounds: Vec::new(),
             next_round: 1,
             counters: DlbCounters::default(),
         }
@@ -164,8 +170,8 @@ impl BalancerPolicy for WorkStealing {
         now: f64,
         _out: &mut Vec<PolicyAction>,
     ) {
-        if let StealState::Outstanding { round: r, .. } = self.state {
-            if r == round {
+        match self.state {
+            StealState::Outstanding { round: r, .. } if r == round => {
                 if received == 0 {
                     self.attempt_failed(now, obs.rng);
                 } else {
@@ -175,13 +181,29 @@ impl BalancerPolicy for WorkStealing {
                     self.next_attempt_at = now;
                 }
             }
+            _ => {
+                // A grant for a round whose confirm-timeout already fired:
+                // the process has enqueued its tasks regardless, so the
+                // thief may now hold this grant *plus* whatever its next
+                // in-flight request brings back (over-stealing).  Track the
+                // stale rounds explicitly and account for the double-fill.
+                if let Some(pos) = self.stale_rounds.iter().position(|&r| r == round) {
+                    self.stale_rounds.swap_remove(pos);
+                    if received > 0 {
+                        self.counters.late_grants += 1;
+                        self.counters.transactions += 1;
+                    }
+                }
+            }
         }
     }
 
     fn on_tick(&mut self, now: f64, rng: &mut Rng) {
-        if let StealState::Outstanding { deadline, .. } = self.state {
+        if let StealState::Outstanding { round, deadline } = self.state {
             if now >= deadline {
-                // victim vanished (shutdown race): count and move on
+                // victim vanished or the reply is slow: remember the round
+                // so a late grant is recognized, count, and move on
+                self.stale_rounds.push(round);
                 self.counters.confirm_timeouts += 1;
                 self.attempt_failed(now, rng);
             }
@@ -193,6 +215,10 @@ impl BalancerPolicy for WorkStealing {
             StealState::Free => Some(self.next_attempt_at),
             StealState::Outstanding { deadline, .. } => Some(deadline),
         }
+    }
+
+    fn set_delta(&mut self, delta: f64) {
+        self.cfg.delta = delta;
     }
 
     fn engaged(&self) -> bool {
@@ -338,6 +364,71 @@ mod tests {
         p.on_tick(10.0, &mut rng); // past deadline
         assert!(!p.engaged());
         assert_eq!(p.counters.confirm_timeouts, 1);
+    }
+
+    /// The PR-4 over-stealing bug: a grant that lands after the confirm
+    /// timeout was silently dropped by the round check although its tasks
+    /// were already enqueued — while a second steal was free to launch.
+    #[test]
+    fn late_grant_after_timeout_is_tracked() {
+        let mut p = ws(0, true);
+        let mut ob = ObsBox::new(0, 8, 0, 2);
+        let mut out = Vec::new();
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        let round1 = match &out[0] {
+            PolicyAction::Send { msg: Msg::StealRequest { round, .. }, .. } => *round,
+            other => panic!("{other:?}"),
+        };
+        let mut rng = Rng::new(7);
+        p.on_tick(10.0, &mut rng); // deadline fires: round 1 written off
+        assert!(!p.engaged());
+        // the thief immediately hunts again (over-steal window is open)
+        out.clear();
+        p.poll(&mut ob.obs(), 10.0, &mut out);
+        let round2 = match &out[0] {
+            PolicyAction::Send { msg: Msg::StealRequest { round, .. }, .. } => *round,
+            other => panic!("{other:?}"),
+        };
+        assert_ne!(round1, round2);
+        assert!(p.engaged());
+        // …and the delayed grant for round 1 finally lands, with tasks
+        p.on_transfer(&mut ob.obs(), ProcessId(1), round1, 4, 10.1, &mut out);
+        assert_eq!(p.counters.late_grants, 1, "late grant must be accounted");
+        assert!(p.engaged(), "round 2 must stay outstanding — not confused by round 1");
+        // the live reply still resolves normally
+        p.on_transfer(&mut ob.obs(), ProcessId(2), round2, 2, 10.2, &mut out);
+        assert!(!p.engaged());
+        // an empty late reply is not a grant
+        p.on_tick(10.2, &mut rng);
+        assert_eq!(p.counters.late_grants, 1);
+    }
+
+    /// Two rounds can be stale at once (both timed out before either reply
+    /// arrived); each late grant must still be recognized.
+    #[test]
+    fn overlapping_stale_rounds_both_recognized() {
+        let mut p = ws(0, true);
+        let mut ob = ObsBox::new(0, 8, 0, 2);
+        let mut rng = Rng::new(7);
+        let issue = |p: &mut WorkStealing, ob: &mut ObsBox, now: f64| -> u64 {
+            let mut out = Vec::new();
+            p.poll(&mut ob.obs(), now, &mut out);
+            match &out[0] {
+                PolicyAction::Send { msg: Msg::StealRequest { round, .. }, .. } => *round,
+                other => panic!("{other:?}"),
+            }
+        };
+        let r1 = issue(&mut p, &mut ob, 0.0);
+        p.on_tick(1.0, &mut rng); // round 1 times out
+        let r2 = issue(&mut p, &mut ob, 1.0);
+        p.on_tick(2.0, &mut rng); // round 2 times out as well
+        assert_eq!(p.counters.confirm_timeouts, 2);
+        // the *older* stale reply lands first, then the newer one
+        let mut out = Vec::new();
+        p.on_transfer(&mut ob.obs(), ProcessId(1), r1, 2, 2.1, &mut out);
+        p.on_transfer(&mut ob.obs(), ProcessId(2), r2, 3, 2.2, &mut out);
+        assert_eq!(p.counters.late_grants, 2, "both delayed grants accounted");
+        assert!(p.stale_rounds.is_empty(), "entries removed once matched");
     }
 
     #[test]

@@ -17,7 +17,7 @@ use std::time::Duration;
 
 use crate::apps::rand_dag;
 use crate::cholesky::{self, ProcessGrid};
-use crate::config::Config;
+use crate::config::{Config, PolicyKind, TopologyKind};
 use crate::core::graph::TaskGraph;
 use crate::sim::engine::{SimEngine, SimResult};
 use crate::util::bench::{run_with, BenchConfig};
@@ -130,6 +130,26 @@ pub fn run(seed: u64, smoke: bool) -> Result<BenchReport> {
         };
         let (r, wall) = time_case(&cfg, &graph, &name, smoke);
         cases.push(case("rand_dag", &name, p, graph.num_tasks(), &r, wall));
+
+        // --- locality layer: hierarchical stealing + adaptive δ on the
+        //     cluster fabric (PR 4's policy hot path) -------------------
+        let mut c = base_cfg(p, seed);
+        c.policy = PolicyKind::Hierarchical;
+        c.topology = TopologyKind::Cluster;
+        c.adaptive_delta = true;
+        c.validate().map_err(Error::new)?;
+        let mut params = rand_dag::DagParams::default();
+        if smoke {
+            params.layers = 6;
+            params.width = 8;
+        } else {
+            params.layers = 24;
+            params.width = p.max(16);
+        }
+        let name = format!("hier_cluster {}x{} P={p}", params.layers, params.width);
+        let graph = rand_dag::build(p, params, seed);
+        let (r, wall) = time_case(&c, &graph, &name, smoke);
+        cases.push(case("hier_cluster", &name, p, graph.num_tasks(), &r, wall));
     }
 
     Ok(BenchReport { seed, smoke, cases })
@@ -222,16 +242,17 @@ mod tests {
     #[test]
     fn smoke_sweep_runs_and_serializes() {
         let r = run(1, true).expect("smoke bench");
-        assert_eq!(r.cases.len(), 4); // 2 workloads × 2 process counts
+        assert_eq!(r.cases.len(), 6); // 3 workloads × 2 process counts
         assert!(r.cases.iter().all(|c| c.events > 0 && c.makespan > 0.0));
         assert!(r.cases.iter().all(|c| c.peak_event_heap > 0));
+        assert!(r.cases.iter().any(|c| c.workload == "hier_cluster"));
         let rendered = r.render();
         assert!(rendered.contains("events/s"));
         let p = std::env::temp_dir().join("ductr_bench_smoke.json");
         r.write_json(&p).expect("json write");
         let body = std::fs::read_to_string(&p).expect("json read");
         assert!(body.starts_with('{') && body.trim_end().ends_with('}'));
-        assert_eq!(body.matches("\"name\"").count(), 4);
+        assert_eq!(body.matches("\"name\"").count(), 6);
         let _ = std::fs::remove_file(p);
     }
 

@@ -1,13 +1,18 @@
-//! Head-to-head balancer comparison: policy × topology × workload.
+//! Head-to-head balancer comparison: policy × topology × adaptive-δ ×
+//! workload.
 //!
 //! The question the policy subsystem exists to answer: how do the paper's
-//! randomized pairing, classic work stealing, and neighborhood diffusion
-//! compare — on the same workloads, the same cost model, the same
-//! deterministic simulator — as the interconnect gets less flat?
+//! randomized pairing, classic work stealing, hierarchical locality-aware
+//! stealing, and neighborhood diffusion compare — on the same workloads,
+//! the same cost model, the same deterministic simulator — as the
+//! interconnect gets less flat, and does the AIMD δ controller help?
 //!
 //! For every (workload, topology) cell the experiment runs a DLB-off
-//! baseline plus one run per policy, reporting makespan, improvement over
-//! the baseline, migrated-task counts and control-message volume.
+//! baseline plus one run per (policy, adaptive on/off), reporting makespan,
+//! improvement over the baseline, migrated-task counts — total and
+//! **inter-node** (the > 1 hop migrations locality-aware stealing exists to
+//! avoid) — and control-message volume.  P = 16 on a 4×4 grid so the
+//! cluster topology realizes as `cluster4x4`: four nodes of four ranks.
 //! Everything is DES mode under one seed: rerunning with the same seed
 //! reproduces the table bit-for-bit.
 
@@ -50,6 +55,8 @@ pub struct CompareRow {
     pub topology: TopologyKind,
     /// `None` = the DLB-off baseline.
     pub policy: Option<PolicyKind>,
+    /// The AIMD δ controller was active (always false for the baseline).
+    pub adaptive: bool,
     pub makespan: f64,
     pub counters: DlbCounters,
 }
@@ -61,6 +68,14 @@ impl CompareRow {
             Some(p) => p.to_string(),
         }
     }
+
+    pub fn adaptive_label(&self) -> &'static str {
+        match (self.policy, self.adaptive) {
+            (None, _) => "—",
+            (_, true) => "on",
+            (_, false) => "off",
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -70,10 +85,14 @@ pub struct CompareResult {
     pub processes: usize,
 }
 
+/// P = 16 on a 4×4 grid: torus16 = torus4x4 and cluster = cluster4x4.
+const PROCESSES: usize = 16;
+
 fn base_config(w: CompareWorkload, topo: TopologyKind, seed: u64, quick: bool) -> Config {
     let mut c = Config::default();
-    c.processes = 10;
-    c.grid = Some(Grid::new(2, 5));
+    c.processes = PROCESSES;
+    c.grid = Some(Grid::new(4, 4));
+    c.cluster_nodes = 4;
     c.seed = seed;
     c.topology = topo;
     c.wt = 3;
@@ -109,7 +128,8 @@ fn run_one(w: CompareWorkload, cfg: &Config) -> Result<(f64, DlbCounters)> {
     }
 }
 
-/// Run the full sweep: 2 workloads × 3 topologies × (off + 3 policies).
+/// Run the full sweep: 2 workloads × 3 topologies × (off + 4 policies × 2
+/// adaptive settings).
 pub fn run(seed: u64, quick: bool) -> Result<CompareResult> {
     let mut rows = Vec::new();
     for w in CompareWorkload::ALL {
@@ -117,23 +137,34 @@ pub fn run(seed: u64, quick: bool) -> Result<CompareResult> {
             let mut cfg = base_config(w, topo, seed, quick);
             cfg.dlb_enabled = false;
             let (makespan, counters) = run_one(w, &cfg)?;
-            rows.push(CompareRow { workload: w, topology: topo, policy: None, makespan, counters });
+            rows.push(CompareRow {
+                workload: w,
+                topology: topo,
+                policy: None,
+                adaptive: false,
+                makespan,
+                counters,
+            });
             for policy in PolicyKind::ALL {
-                let mut cfg = base_config(w, topo, seed, quick);
-                cfg.dlb_enabled = true;
-                cfg.policy = policy;
-                let (makespan, counters) = run_one(w, &cfg)?;
-                rows.push(CompareRow {
-                    workload: w,
-                    topology: topo,
-                    policy: Some(policy),
-                    makespan,
-                    counters,
-                });
+                for adaptive in [false, true] {
+                    let mut cfg = base_config(w, topo, seed, quick);
+                    cfg.dlb_enabled = true;
+                    cfg.policy = policy;
+                    cfg.adaptive_delta = adaptive;
+                    let (makespan, counters) = run_one(w, &cfg)?;
+                    rows.push(CompareRow {
+                        workload: w,
+                        topology: topo,
+                        policy: Some(policy),
+                        adaptive,
+                        makespan,
+                        counters,
+                    });
+                }
             }
         }
     }
-    Ok(CompareResult { rows, seed, processes: 10 })
+    Ok(CompareResult { rows, seed, processes: PROCESSES })
 }
 
 impl CompareResult {
@@ -153,8 +184,16 @@ impl CompareResult {
             self.processes, self.seed
         ));
         out.push_str(&format!(
-            "{:<10} {:<12} {:<10} {:>12} {:>8} {:>10} {:>10}\n",
-            "workload", "topology", "policy", "makespan_s", "vs_off", "migrated", "ctrl_msgs"
+            "{:<10} {:<12} {:<13} {:<9} {:>12} {:>8} {:>10} {:>11} {:>10}\n",
+            "workload",
+            "topology",
+            "policy",
+            "adaptive",
+            "makespan_s",
+            "vs_off",
+            "migrated",
+            "inter_node",
+            "ctrl_msgs"
         ));
         for r in &self.rows {
             let vs = match (r.policy, self.baseline(r.workload, r.topology)) {
@@ -164,13 +203,15 @@ impl CompareResult {
                 _ => "—".to_string(),
             };
             out.push_str(&format!(
-                "{:<10} {:<12} {:<10} {:>12.6} {:>8} {:>10} {:>10}\n",
+                "{:<10} {:<12} {:<13} {:<9} {:>12.6} {:>8} {:>10} {:>11} {:>10}\n",
                 r.workload.label(),
                 r.topology.to_string(),
                 r.policy_label(),
+                r.adaptive_label(),
                 r.makespan,
                 vs,
                 r.counters.tasks_exported,
+                r.counters.tasks_exported_remote,
                 r.counters.requests_sent,
             ));
         }
@@ -181,16 +222,21 @@ impl CompareResult {
     pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
         use std::io::Write;
         let mut f = std::fs::File::create(path)?;
-        writeln!(f, "workload,topology,policy,makespan,migrated,received,transactions,requests")?;
+        writeln!(
+            f,
+            "workload,topology,policy,adaptive,makespan,migrated,migrated_remote,received,transactions,requests"
+        )?;
         for r in &self.rows {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{}",
                 r.workload.label(),
                 r.topology,
                 r.policy_label(),
+                r.adaptive,
                 r.makespan,
                 r.counters.tasks_exported,
+                r.counters.tasks_exported_remote,
                 r.counters.tasks_received,
                 r.counters.transactions,
                 r.counters.requests_sent,
@@ -207,12 +253,22 @@ mod tests {
     #[test]
     fn quick_compare_covers_the_grid_and_is_deterministic() {
         let a = run(3, true).expect("run a");
-        // 2 workloads × 3 topologies × (1 baseline + 3 policies)
-        assert_eq!(a.rows.len(), 2 * 3 * 4);
+        // 2 workloads × 3 topologies × (1 baseline + 4 policies × 2 adaptive)
+        assert_eq!(a.rows.len(), 2 * 3 * 9);
         for r in &a.rows {
             assert!(r.makespan > 0.0, "{r:?}");
             if r.policy.is_none() {
                 assert_eq!(r.counters.tasks_exported, 0, "baseline must not migrate");
+            }
+            assert!(
+                r.counters.tasks_exported_remote <= r.counters.tasks_exported,
+                "remote is a subset: {r:?}"
+            );
+            if r.topology == TopologyKind::Flat {
+                assert_eq!(
+                    r.counters.tasks_exported_remote, 0,
+                    "flat is single-hop everywhere: {r:?}"
+                );
             }
         }
         let b = run(3, true).expect("run b");
@@ -236,16 +292,43 @@ mod tests {
         }
     }
 
+    /// The acceptance bar of the locality layer: on the cluster fabric,
+    /// hierarchical stealing must move fewer tasks *across nodes* than
+    /// uniform stealing — that is the entire point of the escalation ladder.
+    #[test]
+    fn hierarchical_localizes_migration_on_cluster() {
+        let r = run(1, true).expect("run"); // the default seed
+        let remote_sum = |policy: PolicyKind| -> u64 {
+            r.rows
+                .iter()
+                .filter(|row| {
+                    row.topology == TopologyKind::Cluster
+                        && row.policy == Some(policy)
+                        && !row.adaptive
+                })
+                .map(|row| row.counters.tasks_exported_remote)
+                .sum()
+        };
+        let hier = remote_sum(PolicyKind::Hierarchical);
+        let steal = remote_sum(PolicyKind::WorkStealing);
+        assert!(
+            hier < steal,
+            "hierarchical must migrate fewer tasks across nodes than uniform \
+             stealing on cluster4x4: {hier} vs {steal}"
+        );
+    }
+
     #[test]
     fn render_and_csv_smoke() {
         let r = run(1, true).expect("run");
         let table = r.render();
         assert!(table.contains("cholesky"));
-        assert!(table.contains("diffusion"));
+        assert!(table.contains("hierarchical"));
+        assert!(table.contains("inter_node"));
         let p = std::env::temp_dir().join("ductr_compare_test.csv");
         r.write_csv(&p).expect("csv");
         let body = std::fs::read_to_string(&p).expect("read");
-        assert!(body.starts_with("workload,topology,policy"));
+        assert!(body.starts_with("workload,topology,policy,adaptive"));
         assert_eq!(body.lines().count(), 1 + r.rows.len());
         let _ = std::fs::remove_file(p);
     }

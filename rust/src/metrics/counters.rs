@@ -17,11 +17,18 @@ pub struct DlbCounters {
     /// Transactions where the busy side had nothing (beneficial) to export.
     pub empty_transactions: u64,
     pub tasks_exported: u64,
+    /// Subset of `tasks_exported` that crossed more than one hop (left the
+    /// cluster node / adjacency shell) — the locality cost of a policy.
+    pub tasks_exported_remote: u64,
     pub tasks_received: u64,
     /// Doubles shipped as migrated inputs + returned outputs.
     pub migration_doubles: u64,
     /// Accepter soft-lock timeouts (confirm never arrived).
     pub confirm_timeouts: u64,
+    /// Steal grants that arrived *after* the thief's confirm-timeout had
+    /// already written the round off: the tasks are enqueued anyway, so the
+    /// thief may over-steal with a second request already in flight.
+    pub late_grants: u64,
 }
 
 impl DlbCounters {
@@ -35,9 +42,11 @@ impl DlbCounters {
         self.transactions += o.transactions;
         self.empty_transactions += o.empty_transactions;
         self.tasks_exported += o.tasks_exported;
+        self.tasks_exported_remote += o.tasks_exported_remote;
         self.tasks_received += o.tasks_received;
         self.migration_doubles += o.migration_doubles;
         self.confirm_timeouts += o.confirm_timeouts;
+        self.late_grants += o.late_grants;
     }
 
     /// Fraction of rounds that found a partner — compare against the
@@ -51,7 +60,7 @@ impl DlbCounters {
 
     pub fn summary_line(&self) -> String {
         format!(
-            "rounds={} (failed {}), req {}/{} s/r, accepts {}, declines {}, tx={} (empty {}), tasks {}→/{}←, {} doubles, timeouts {}",
+            "rounds={} (failed {}), req {}/{} s/r, accepts {}, declines {}, tx={} (empty {}), tasks {}→/{}← ({} remote), {} doubles, timeouts {} (late grants {})",
             self.rounds,
             self.failed_rounds,
             self.requests_sent,
@@ -62,8 +71,10 @@ impl DlbCounters {
             self.empty_transactions,
             self.tasks_exported,
             self.tasks_received,
+            self.tasks_exported_remote,
             self.migration_doubles,
             self.confirm_timeouts,
+            self.late_grants,
         )
     }
 }

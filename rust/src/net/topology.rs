@@ -16,6 +16,7 @@
 //! exactly.
 
 use crate::core::ids::ProcessId;
+use crate::util::rng::Rng;
 
 /// A process interconnect shape.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,7 +35,15 @@ pub enum Topology {
 }
 
 impl Topology {
-    /// Hops between two processes (0 for self, ≥ 1 otherwise).
+    /// Hops between two processes — **total**: 0 iff `from == to`, ≥ 1 for
+    /// every distinct pair, for every shape and every rank.
+    ///
+    /// Ranks outside the shape's dimensions are reduced modulo the slot
+    /// count first; when two *distinct* ranks alias to the same slot the
+    /// distance is still 1, never 0 — a message between two real processes
+    /// always crosses the wire.  (`Config::validate` rejects shapes whose
+    /// dimensions do not cover `run.processes`, so aliasing is a
+    /// misconfiguration guard, not a steady-state code path.)
     pub fn hops(&self, from: ProcessId, to: ProcessId) -> u32 {
         if from == to {
             return 0;
@@ -42,25 +51,53 @@ impl Topology {
         match *self {
             Topology::Flat => 1,
             Topology::Ring { len } => {
+                if len < 2 {
+                    return 1;
+                }
                 let a = from.idx() % len;
                 let b = to.idx() % len;
                 let d = a.abs_diff(b);
-                d.min(len - d) as u32
+                (d.min(len - d) as u32).max(1)
             }
             Topology::Torus { rows, cols } => {
-                let (r1, c1) = (from.idx() / cols, from.idx() % cols);
-                let (r2, c2) = (to.idx() / cols, to.idx() % cols);
+                let cells = rows * cols;
+                if cells < 2 {
+                    return 1;
+                }
+                let a = from.idx() % cells;
+                let b = to.idx() % cells;
+                let (r1, c1) = (a / cols, a % cols);
+                let (r2, c2) = (b / cols, b % cols);
                 let dr = r1.abs_diff(r2);
                 let dc = c1.abs_diff(c2);
-                (dr.min(rows - dr) + dc.min(cols - dc)) as u32
+                ((dr.min(rows - dr) + dc.min(cols - dc)) as u32).max(1)
             }
-            Topology::Cluster { per_node, inter_hops, .. } => {
-                if from.idx() / per_node == to.idx() / per_node {
+            Topology::Cluster { nodes, per_node, inter_hops } => {
+                let slots = nodes * per_node;
+                if slots < 2 {
+                    return 1;
+                }
+                let a = from.idx() % slots;
+                let b = to.idx() % slots;
+                if a / per_node == b / per_node {
                     1
                 } else {
                     inter_hops.max(1)
                 }
             }
+        }
+    }
+
+    /// Does this shape assign every rank of a `p`-process run its own slot?
+    /// When false, `neighbors` strands out-of-shape ranks with an empty set
+    /// (their load can never leave under diffusion) and `hops` falls back to
+    /// modular aliasing — `Config::validate` rejects such configurations.
+    pub fn covers(&self, p: usize) -> bool {
+        match *self {
+            Topology::Flat => true,
+            Topology::Ring { len } => len == p,
+            Topology::Torus { rows, cols } => rows * cols == p,
+            Topology::Cluster { nodes, per_node, .. } => nodes * per_node == p,
         }
     }
 
@@ -117,6 +154,52 @@ impl Topology {
         out.dedup();
         out.retain(|&i| i != m && i < p);
         out.into_iter().map(|i| ProcessId(i as u32)).collect()
+    }
+
+    /// Every other rank of a `p`-process run with its hop distance, sorted
+    /// ascending by `(hops, rank)` — the distance-ranked victim table behind
+    /// hierarchical stealing's escalation ladder.  The leading run of
+    /// minimum-distance entries is the "local" tier: the cluster node, or
+    /// the same adjacency shell diffusion exchanges with on ring/torus.
+    pub fn neighbors_by_distance(&self, me: ProcessId, p: usize) -> Vec<(ProcessId, u32)> {
+        let mut out: Vec<(ProcessId, u32)> = (0..p)
+            .filter(|&i| i != me.idx())
+            .map(|i| {
+                let q = ProcessId(i as u32);
+                (q, self.hops(me, q))
+            })
+            .collect();
+        out.sort_unstable_by_key(|&(q, h)| (h, q.0));
+        out
+    }
+
+    /// The sampling weight a rank at `hops` distance carries: 1/hops².
+    /// Single source of truth for both [`Self::sample_near`] and
+    /// hierarchical stealing's precomputed escalation table.
+    pub fn locality_weight(hops: u32) -> f64 {
+        let h = hops.max(1) as f64;
+        1.0 / (h * h)
+    }
+
+    /// Draw one victim with probability ∝ 1/hops²: near ranks dominate, but
+    /// every rank stays reachable, so load can still escape a saturated
+    /// neighborhood.  `None` only when there is no other rank.
+    pub fn sample_near(&self, me: ProcessId, p: usize, rng: &mut Rng) -> Option<ProcessId> {
+        let weight = |i: usize| Self::locality_weight(self.hops(me, ProcessId(i as u32)));
+        let total: f64 = (0..p).filter(|&i| i != me.idx()).map(weight).sum();
+        if total <= 0.0 {
+            return None;
+        }
+        let mut x = rng.next_f64() * total;
+        let mut last = None;
+        for i in (0..p).filter(|&i| i != me.idx()) {
+            last = Some(ProcessId(i as u32));
+            x -= weight(i);
+            if x <= 0.0 {
+                break;
+            }
+        }
+        last
     }
 
     /// Human-readable tag for tables and CSV.
@@ -244,5 +327,109 @@ mod tests {
         for t in [Topology::Flat, Topology::Ring { len: 1 }] {
             assert!(t.neighbors(p(0), 1).is_empty());
         }
+    }
+
+    /// The PR-4 contract bug: ranks beyond the shape's dimensions aliased
+    /// onto in-shape slots and reported distance 0 for distinct processes
+    /// (Ring) or arithmetic garbage (Torus/Cluster).  `hops` must be total.
+    #[test]
+    fn hops_total_for_out_of_shape_ranks() {
+        let ring = Topology::Ring { len: 4 };
+        assert_eq!(ring.hops(p(0), p(4)), 1, "rank 4 aliases slot 0 — still ≥ 1");
+        assert_eq!(ring.hops(p(4), p(0)), 1, "and symmetric");
+        assert_eq!(ring.hops(p(1), p(9)), 1, "both sides aliased");
+
+        let torus = Topology::Torus { rows: 2, cols: 2 };
+        // rank 9 → slot 1: no usize underflow, distance ≥ 1
+        assert_eq!(torus.hops(p(0), p(9)), torus.hops(p(0), p(1)));
+        assert_eq!(torus.hops(p(4), p(8)), 1, "distinct ranks on one slot");
+
+        let cl = Topology::Cluster { nodes: 2, per_node: 2, inter_hops: 4 };
+        assert_eq!(cl.hops(p(0), p(4)), 1, "alias lands in node 0");
+        assert_eq!(cl.hops(p(1), p(6)), 4, "alias lands in node 1");
+
+        // degenerate shapes must not panic and must stay ≥ 1
+        assert_eq!(Topology::Ring { len: 1 }.hops(p(0), p(1)), 1);
+        assert_eq!(Topology::Torus { rows: 1, cols: 1 }.hops(p(2), p(3)), 1);
+        assert_eq!(
+            Topology::Cluster { nodes: 1, per_node: 1, inter_hops: 4 }.hops(p(0), p(1)),
+            1
+        );
+    }
+
+    #[test]
+    fn covers_matches_slot_count() {
+        assert!(Topology::Flat.covers(1) && Topology::Flat.covers(100));
+        assert!(Topology::Ring { len: 4 }.covers(4));
+        assert!(!Topology::Ring { len: 4 }.covers(5));
+        assert!(Topology::Torus { rows: 3, cols: 4 }.covers(12));
+        assert!(!Topology::Torus { rows: 3, cols: 4 }.covers(8));
+        let cl = Topology::Cluster { nodes: 2, per_node: 4, inter_hops: 4 };
+        assert!(cl.covers(8));
+        assert!(!cl.covers(10));
+    }
+
+    /// Stranded-rank regression: whenever the shape covers P and P ≥ 2,
+    /// *every* rank must have at least one neighbor (else its load can
+    /// never leave under diffusion).
+    #[test]
+    fn covering_shapes_leave_no_rank_stranded() {
+        let shapes: Vec<(Topology, usize)> = vec![
+            (Topology::Flat, 2),
+            (Topology::Flat, 7),
+            (Topology::Ring { len: 2 }, 2),
+            (Topology::Ring { len: 9 }, 9),
+            (Topology::Torus { rows: 1, cols: 2 }, 2),
+            (Topology::Torus { rows: 3, cols: 5 }, 15),
+            (Topology::Cluster { nodes: 2, per_node: 1, inter_hops: 4 }, 2),
+            (Topology::Cluster { nodes: 4, per_node: 4, inter_hops: 4 }, 16),
+        ];
+        for (t, p_n) in shapes {
+            assert!(t.covers(p_n), "{t:?} must cover {p_n}");
+            for i in 0..p_n {
+                assert!(
+                    !t.neighbors(p(i as u32), p_n).is_empty(),
+                    "{t:?}: rank {i} of {p_n} is stranded"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn distance_ranking_orders_cluster_tiers() {
+        let t = Topology::Cluster { nodes: 4, per_node: 4, inter_hops: 4 };
+        let ranked = t.neighbors_by_distance(p(5), 16);
+        assert_eq!(ranked.len(), 15);
+        // node 1 = ranks 4..8; the three node-mates lead at distance 1
+        let local: Vec<_> = ranked.iter().take_while(|&&(_, h)| h == 1).collect();
+        assert_eq!(
+            local.iter().map(|&&(q, _)| q).collect::<Vec<_>>(),
+            vec![p(4), p(6), p(7)]
+        );
+        assert!(ranked.iter().skip(3).all(|&(_, h)| h == 4), "remote tier at inter_hops");
+        // sorted ascending by (hops, rank)
+        for w in ranked.windows(2) {
+            assert!((w[0].1, w[0].0.idx()) < (w[1].1, w[1].0.idx()));
+        }
+    }
+
+    #[test]
+    fn sample_near_prefers_the_near_tier() {
+        let t = Topology::Cluster { nodes: 2, per_node: 4, inter_hops: 4 };
+        let mut rng = Rng::new(99);
+        let mut local = 0usize;
+        let n = 4000;
+        for _ in 0..n {
+            let q = t.sample_near(p(0), 8, &mut rng).expect("has peers");
+            assert_ne!(q, p(0), "never self");
+            if q.idx() < 4 {
+                local += 1;
+            }
+        }
+        // weights: 3 node-mates at 1/1 vs 4 remote at 1/16 → local share
+        // = 3 / 3.25 ≈ 92%
+        assert!(local as f64 / n as f64 > 0.85, "local draws {local}/{n}");
+        // single-process population has nobody to draw
+        assert_eq!(t.sample_near(p(0), 1, &mut rng), None);
     }
 }

@@ -35,12 +35,13 @@ fn bag_graph(n: usize) -> Arc<TaskGraph> {
     b.build()
 }
 
-fn cfg_for(policy: PolicyKind, seed: u64) -> Config {
+fn cfg_for(policy: PolicyKind, adaptive: bool, seed: u64) -> Config {
     let mut cfg = Config::default();
     cfg.processes = 4;
     cfg.grid = None;
     cfg.dlb_enabled = true;
     cfg.policy = policy;
+    cfg.adaptive_delta = adaptive;
     cfg.wt = 2;
     cfg.delta = 0.001;
     cfg.seed = seed;
@@ -50,11 +51,12 @@ fn cfg_for(policy: PolicyKind, seed: u64) -> Config {
 
 /// A compact, exact fingerprint of one run: makespan bits + the counters
 /// that any behavioral drift would disturb.
-fn fingerprint(policy: PolicyKind, seed: u64) -> String {
-    let cfg = cfg_for(policy, seed);
+fn fingerprint(policy: PolicyKind, adaptive: bool, seed: u64) -> String {
+    let cfg = cfg_for(policy, adaptive, seed);
     let r = SimEngine::from_config(&cfg, bag_graph(24)).run().expect("run");
     format!(
-        "{policy} seed={seed} makespan={:016x} events={} exported={} received={} rounds={}",
+        "{policy}{} seed={seed} makespan={:016x} events={} exported={} received={} rounds={}",
+        if adaptive { "+adaptive" } else { "" },
         r.makespan.to_bits(),
         r.events_processed,
         r.counters.tasks_exported,
@@ -66,10 +68,15 @@ fn fingerprint(policy: PolicyKind, seed: u64) -> String {
 #[test]
 fn every_policy_is_bit_identical_across_runs() {
     for policy in PolicyKind::ALL {
-        for seed in [1u64, 7, 42] {
-            let a = fingerprint(policy, seed);
-            let b = fingerprint(policy, seed);
-            assert_eq!(a, b, "{policy} seed {seed} must be deterministic");
+        for adaptive in [false, true] {
+            for seed in [1u64, 7, 42] {
+                let a = fingerprint(policy, adaptive, seed);
+                let b = fingerprint(policy, adaptive, seed);
+                assert_eq!(
+                    a, b,
+                    "{policy} (adaptive {adaptive}) seed {seed} must be deterministic"
+                );
+            }
         }
     }
 }
@@ -77,13 +84,18 @@ fn every_policy_is_bit_identical_across_runs() {
 #[test]
 fn every_policy_conserves_migrated_tasks() {
     for policy in PolicyKind::ALL {
-        let cfg = cfg_for(policy, 11);
-        let r = SimEngine::from_config(&cfg, bag_graph(24)).run().expect("run");
-        assert_eq!(
-            r.counters.tasks_exported, r.counters.tasks_received,
-            "{policy}: every exported task must be received"
-        );
-        assert!(r.counters.tasks_exported > 0, "{policy}: the skewed bag must migrate");
+        for adaptive in [false, true] {
+            let cfg = cfg_for(policy, adaptive, 11);
+            let r = SimEngine::from_config(&cfg, bag_graph(24)).run().expect("run");
+            assert_eq!(
+                r.counters.tasks_exported, r.counters.tasks_received,
+                "{policy} (adaptive {adaptive}): every exported task must be received"
+            );
+            assert!(
+                r.counters.tasks_exported > 0,
+                "{policy} (adaptive {adaptive}): the skewed bag must migrate"
+            );
+        }
     }
 }
 
@@ -156,7 +168,9 @@ fn scratch_buffer_reuse_matches_fresh_buffers() {
 fn golden_fingerprints_match_snapshot() {
     let mut lines = Vec::new();
     for policy in PolicyKind::ALL {
-        lines.push(fingerprint(policy, 1));
+        for adaptive in [false, true] {
+            lines.push(fingerprint(policy, adaptive, 1));
+        }
     }
     let current = lines.join("\n") + "\n";
 

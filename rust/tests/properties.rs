@@ -9,6 +9,8 @@ use std::sync::Arc;
 use ductr::apps::{bag, rand_dag};
 use ductr::config::{Config, Strategy};
 use ductr::core::graph::TaskGraph;
+use ductr::core::ids::ProcessId;
+use ductr::net::topology::Topology;
 use ductr::sim::engine::SimEngine;
 use ductr::util::propcheck::{forall, Gen};
 
@@ -164,6 +166,154 @@ fn prop_dlb_never_catastrophic() {
                 "{s:?}: DLB catastrophic: on={} off={}",
                 r_on.makespan, r_off.makespan
             ));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// topology-distance contract (PR 4): `hops` must be a total metric-like
+// function over *arbitrary* (shape, P) combinations — including shapes
+// whose dimensions do not cover P, the aliasing bug this PR fixed.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct TopoCase {
+    topo: Topology,
+    p: usize,
+}
+
+fn gen_shape(g: &mut Gen) -> Topology {
+    match g.usize_in(0..4) {
+        0 => Topology::Flat,
+        1 => Topology::Ring { len: g.usize_in(1..13) },
+        2 => Topology::Torus { rows: g.usize_in(1..6), cols: g.usize_in(1..6) },
+        _ => Topology::Cluster {
+            nodes: g.usize_in(1..6),
+            per_node: g.usize_in(1..6),
+            inter_hops: g.usize_in(1..8) as u32,
+        },
+    }
+}
+
+/// Shape and process count drawn independently: P may exceed, match, or
+/// undershoot the shape's slot count.
+fn gen_topo(g: &mut Gen) -> TopoCase {
+    TopoCase { topo: gen_shape(g), p: g.usize_in(2..24).max(2) }
+}
+
+#[test]
+fn prop_hops_zero_diagonal_positive_symmetric() {
+    forall(150, 0x4095, gen_topo, |c| -> Result<(), String> {
+        for i in 0..c.p {
+            for j in 0..c.p {
+                let (a, b) = (ProcessId(i as u32), ProcessId(j as u32));
+                let h = c.topo.hops(a, b);
+                let back = c.topo.hops(b, a);
+                if h != back {
+                    return Err(format!("{c:?}: hops({i},{j})={h} but hops({j},{i})={back}"));
+                }
+                if i == j && h != 0 {
+                    return Err(format!("{c:?}: hops({i},{i}) = {h}, want 0"));
+                }
+                if i != j && h == 0 {
+                    return Err(format!(
+                        "{c:?}: hops({i},{j}) = 0 for distinct processes (contract: ≥ 1)"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Covering shapes (P = slot count, the only configurations `validate`
+/// accepts): every rank's neighbor set is non-empty, self-free, symmetric,
+/// and the neighbor graph is connected — diffusion's liveness conditions.
+fn gen_covering(g: &mut Gen) -> TopoCase {
+    match g.usize_in(0..4) {
+        0 => TopoCase { topo: Topology::Flat, p: g.usize_in(2..24).max(2) },
+        1 => {
+            let len = g.usize_in(2..16).max(2);
+            TopoCase { topo: Topology::Ring { len }, p: len }
+        }
+        2 => {
+            let rows = g.usize_in(2..6).max(2);
+            let cols = g.usize_in(1..6);
+            TopoCase { topo: Topology::Torus { rows, cols }, p: rows * cols }
+        }
+        _ => {
+            let nodes = g.usize_in(2..6).max(2);
+            let per_node = g.usize_in(1..6);
+            TopoCase {
+                topo: Topology::Cluster { nodes, per_node, inter_hops: g.usize_in(1..8) as u32 },
+                p: nodes * per_node,
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_neighbors_symmetric_connected_nonempty() {
+    forall(150, 0xBEEF, gen_covering, |c| -> Result<(), String> {
+        assert!(c.topo.covers(c.p), "generator bug: {c:?}");
+        for i in 0..c.p {
+            let me = ProcessId(i as u32);
+            let n = c.topo.neighbors(me, c.p);
+            if n.is_empty() {
+                return Err(format!("{c:?}: rank {i} stranded (empty neighbor set)"));
+            }
+            if n.contains(&me) {
+                return Err(format!("{c:?}: rank {i} neighbors itself"));
+            }
+            for q in &n {
+                if !c.topo.neighbors(*q, c.p).contains(&me) {
+                    return Err(format!("{c:?}: {i} lists {q} but not vice versa"));
+                }
+            }
+        }
+        // connectivity: BFS from rank 0 must reach everyone
+        let mut seen = vec![false; c.p];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        while let Some(i) = stack.pop() {
+            for q in c.topo.neighbors(ProcessId(i as u32), c.p) {
+                if !seen[q.idx()] {
+                    seen[q.idx()] = true;
+                    stack.push(q.idx());
+                }
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err(format!("{c:?}: neighbor graph disconnected"));
+        }
+        Ok(())
+    });
+}
+
+/// The distance-ranked victim table agrees with `hops` and loses nobody.
+#[test]
+fn prop_distance_ranking_is_complete_and_sorted() {
+    forall(100, 0x8A1E, gen_covering, |c| -> Result<(), String> {
+        for i in 0..c.p {
+            let me = ProcessId(i as u32);
+            let ranked = c.topo.neighbors_by_distance(me, c.p);
+            if ranked.len() != c.p - 1 {
+                return Err(format!("{c:?}: rank {i} table has {} entries", ranked.len()));
+            }
+            for &(q, h) in &ranked {
+                if h != c.topo.hops(me, q) {
+                    return Err(format!("{c:?}: table distance {h} ≠ hops for {q}"));
+                }
+                if h == 0 {
+                    return Err(format!("{c:?}: zero-distance entry {q}"));
+                }
+            }
+            for w in ranked.windows(2) {
+                if (w[0].1, w[0].0.idx()) >= (w[1].1, w[1].0.idx()) {
+                    return Err(format!("{c:?}: table not sorted at {w:?}"));
+                }
+            }
         }
         Ok(())
     });
