@@ -93,11 +93,11 @@ fn main() {
         let mut eng = SimEngine::from_config(&cfg256, Arc::clone(&g256));
         let r = eng.run().expect("sim");
         events256 = r.events_processed as f64;
-        peak256 = r.peak_event_heap;
+        peak256 = r.peak_pending_events;
         bb(r.makespan)
     });
     println!(
-        "DES P=256 throughput: {:.0} events/s ({:.0} events per run, peak heap {peak256})",
+        "DES P=256 throughput: {:.0} events/s ({:.0} events per run, peak pending {peak256})",
         events256 / res256.secs_per_iter(),
         events256
     );

@@ -26,9 +26,12 @@ SUBCOMMANDS:
     run               run one workload (see flags below)
     compare           balancer shoot-out: policy × topology × adaptive-δ table
                       (--quick/--smoke for the reduced CI profile)
-    bench             DES hot-path baseline: cholesky + random-DAG sweep over P,
-                      writes BENCH_pr3.json (--smoke for the quick CI profile,
-                      --out FILE to choose the path)
+    bench             DES hot-path baseline: cholesky + random-DAG sweep over
+                      P ∈ {16..4096} with coalescing off/on per cell, writes
+                      BENCH_pr5.json (--smoke for the quick CI profile,
+                      --out FILE to choose the path, --baseline FILE to
+                      diff against a committed baseline — fails the run on
+                      an events/sec regression)
     experiment <id>   regenerate a paper figure: fig1 | fig3 | fig4 | fig5 | sec4 | ablation | compare | all
     calibrate-wt      §6 calibration: run without DLB, print W_T = max w/2
     artifacts-check   compile + smoke-run every AOT kernel artifact
@@ -51,6 +54,8 @@ RUN FLAGS (defaults in parentheses):
     --local-tries N     hierarchical: intra-node attempts before escalating (3)
     --adaptive-delta    AIMD δ controller: shrink δ on successful transfers,
                         grow on failed rounds, within [dlb.delta_min, delta_max]
+    --coalesce on|off   DES transport coalescing: pack same-(destination,
+                        delay) sends of one step into one delivery event (off)
     --seed N            run seed (1)
     --trace FILE.csv    write per-process workload traces
     --set sec.key=val   raw config override (repeatable)
@@ -132,6 +137,15 @@ fn config_from_args(args: &mut Args) -> Result<Config> {
             "on" | "true" | "1" | "yes" => true,
             "off" | "false" | "0" | "no" => false,
             other => bail!("--adaptive-delta: expected on|off, got {other}"),
+        };
+    }
+    // Same contract as --adaptive-delta: bare `--coalesce` switches it on,
+    // an explicit off overrides a config file, and a typo'd value errors.
+    if let Some(v) = args.get_str("coalesce") {
+        cfg.coalesce = match v.as_str() {
+            "on" | "true" | "1" | "yes" => true,
+            "off" | "false" | "0" | "no" => false,
+            other => bail!("--coalesce: expected on|off, got {other}"),
         };
     }
     if let Some(s) = args.get_u64("seed")? {
@@ -271,30 +285,48 @@ fn cmd_compare(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-/// The DES hot-path baseline (ISSUE 3's perf trajectory record).
+/// The DES hot-path baseline (the perf trajectory record, BENCH_pr5.json).
 fn cmd_bench(args: &mut Args) -> Result<()> {
     let smoke = args.get_bool("smoke")?;
     let seed = args.get_u64("seed")?.unwrap_or(1);
+    let baseline = args.get_str("baseline");
     // Full sweeps default to the committed baseline at this checkout's
     // repo root (compile-time anchor, checked at runtime so a copied
     // binary on another machine falls back to the current directory
     // instead of failing or touching an unrelated file).  Smoke runs must
     // not overwrite the baseline — they default to a temp path.
-    let repo_baseline = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pr3.json");
+    let repo_baseline = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pr5.json");
     let out = match args.get_str("out") {
         Some(o) => o,
         None if smoke => {
             std::env::temp_dir().join("ductr_bench_smoke.json").display().to_string()
         }
         None if std::path::Path::new(repo_baseline).exists() => repo_baseline.to_string(),
-        None => "BENCH_pr3.json".to_string(),
+        None => "BENCH_pr5.json".to_string(),
     };
     args.finish().map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+    // Read the baseline BEFORE anything is written: the default full-sweep
+    // out path IS the committed baseline, so loading later would diff the
+    // fresh run against its own just-written numbers (always passing) and
+    // clobber the reference irrecoverably.
+    let base = match &baseline {
+        Some(bp) => {
+            Some(ductr::experiments::bench::load_baseline(std::path::Path::new(bp))?)
+        }
+        None => None,
+    };
     let r = ductr::experiments::bench::run(seed, smoke)?;
     print!("{}", r.render());
     r.write_json(std::path::Path::new(&out))
         .map_err(|e| anyhow!("writing {out}: {e}"))?;
     println!("baseline → {out}");
+    // Regression gate last, after the fresh numbers are safely on disk: a
+    // placeholder baseline compares informationally, a real one fails the
+    // command on deterministic event drift or an events/sec collapse.
+    if let (Some(base), Some(bp)) = (base, baseline) {
+        let table = r.compare_to_baseline(&base, &bp)?;
+        print!("{table}");
+    }
     Ok(())
 }
 

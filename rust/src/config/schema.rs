@@ -326,6 +326,17 @@ pub struct Config {
     pub delta_min: f64,
     pub delta_max: f64,
 
+    // [sim]
+    /// DES transport coalescing: pack every `Effect::Send` of one process
+    /// step that shares (destination, computed delay) into a single
+    /// delivery event.  Arrival times are unchanged (the delay already
+    /// includes the size term, so only same-size messages merge) but the
+    /// event count — and therefore scheduler work — drops sharply once
+    /// control traffic fans out at scale.  Off by default so determinism
+    /// fingerprints match historical runs; flip on for the A/B columns of
+    /// `ductr bench`.
+    pub coalesce: bool,
+
     // [cost]  (paper §4: S flops/s, R doubles/s; Rackham S/R ≈ 40)
     pub flops_per_sec: f64,
     pub doubles_per_sec: f64,
@@ -379,6 +390,7 @@ impl Default for Config {
             adaptive_delta: false,
             delta_min: 0.001,
             delta_max: 0.050,
+            coalesce: false,
             flops_per_sec: 8.8e9,
             doubles_per_sec: 2.2e8, // S/R = 40, the paper's machine balance
             exec_jitter: 0.0,
@@ -500,6 +512,8 @@ impl Config {
         get_bool(t, "dlb", "adaptive_delta", &mut self.adaptive_delta)?;
         get_f64(t, "dlb", "delta_min", &mut self.delta_min)?;
         get_f64(t, "dlb", "delta_max", &mut self.delta_max)?;
+
+        get_bool(t, "sim", "coalesce", &mut self.coalesce)?;
 
         get_f64(t, "cost", "flops_per_sec", &mut self.flops_per_sec)?;
         get_f64(t, "cost", "doubles_per_sec", &mut self.doubles_per_sec)?;
@@ -844,6 +858,17 @@ mod tests {
         for p in PolicyKind::ALL {
             assert_eq!(PolicyKind::parse(&p.to_string()).expect("roundtrip"), p);
         }
+    }
+
+    #[test]
+    fn coalesce_parses_and_defaults_off() {
+        let c = Config::default();
+        assert!(!c.coalesce, "historical fingerprints require coalesce off by default");
+        let c = Config::from_str_toml("[sim]\ncoalesce = true").expect("parse");
+        assert!(c.coalesce);
+        let mut c = Config::default();
+        c.apply_overrides(["sim.coalesce=true"]).expect("override");
+        assert!(c.coalesce);
     }
 
     #[test]

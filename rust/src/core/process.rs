@@ -38,7 +38,11 @@ use super::ids::{DataId, ProcessId, TaskId};
 /// Instructions to the surrounding engine.
 #[derive(Debug)]
 pub enum Effect {
-    /// Transmit a message.
+    /// Transmit a message.  Sends of one step that share (destination,
+    /// computed delay) may be coalesced by the DES transport into a single
+    /// delivery event (`[sim] coalesce`); the receiver still observes them
+    /// individually, in this buffer's emission order, at the same arrival
+    /// time — so the state machine never needs to know.
     Send(Envelope),
     /// Begin executing `task` on a free core; the engine must call
     /// `on_exec_complete` when it finishes (after the modeled or real

@@ -16,35 +16,27 @@
 //! locality-over-uniformity victim selection is what keeps stealing
 //! competitive once the interconnect is not flat (John et al. 2022).
 //!
-//! Wire protocol, steal amounts, retries and back-off are identical to
-//! [`super::WorkStealing`] — on a flat topology (every rank at one hop) the
-//! local tier is everybody and the policy degenerates to plain uniform
-//! stealing, which makes the comparison in `ductr compare` apples-to-apples:
-//! the only difference is *whom* the thief asks.
+//! Wire protocol, steal amounts, retries and back-off are *shared*, not
+//! mirrored: the whole policy is [`StealProtocol`] (see
+//! `super::work_stealing`) instantiated with the [`LocalityLadder`] victim
+//! selector — the only ~60 lines that ever differed from plain stealing.
+//! On a flat topology (every rank at one hop) the local tier is everybody
+//! and the ladder never escalates, so the policy degenerates to plain
+//! uniform stealing, which keeps the comparison in `ductr compare`
+//! apples-to-apples: the only difference is *whom* the thief asks.
 
 use crate::core::ids::ProcessId;
 use crate::dlb::pairing::PairingConfig;
-use crate::metrics::counters::DlbCounters;
-use crate::net::message::{Msg, Role};
 use crate::net::topology::Topology;
 use crate::util::rng::Rng;
 
-use super::{BalancerPolicy, PolicyAction, PolicyObs};
+use super::work_stealing::{StealProtocol, VictimSelector};
 
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum StealState {
-    /// No request in flight.
-    Free,
-    /// Waiting for a victim's reply.
-    Outstanding { round: u64, deadline: f64 },
-}
-
-pub struct HierarchicalStealing {
-    cfg: PairingConfig,
-    steal_half: bool,
+/// The distance-tiered escalation ladder: local first, 1/hops²-weighted
+/// remote after `local_tries` consecutive failures, reset on any success.
+pub struct LocalityLadder {
     /// Consecutive failed attempts before a hunt escalates off-node.
     local_tries: usize,
-    me: ProcessId,
     /// The minimum-distance tier (node-mates / adjacency shell).
     local: Vec<ProcessId>,
     /// Every farther rank, ascending distance.
@@ -52,25 +44,13 @@ pub struct HierarchicalStealing {
     /// Cumulative 1/hops² weights aligned with `far` (precomputed once:
     /// victim draws stay allocation-free).
     far_cum: Vec<f64>,
-    state: StealState,
-    /// Earliest time the next steal attempt may start.
-    next_attempt_at: f64,
     /// Consecutive failures in the current hunt (drives escalation).
     failures: usize,
-    /// Immediate retries left before backing off for δ.
-    retries_left: usize,
-    /// Rounds whose confirm-timeout fired before their reply arrived; a
-    /// reply carrying one of them is a late grant, not a live one.
-    stale_rounds: Vec<u64>,
-    next_round: u64,
-    pub counters: DlbCounters,
 }
 
-impl HierarchicalStealing {
+impl LocalityLadder {
     pub fn new(
         me: ProcessId,
-        cfg: PairingConfig,
-        steal_half: bool,
         local_tries: usize,
         topology: &Topology,
         num_processes: usize,
@@ -87,33 +67,23 @@ impl HierarchicalStealing {
             far.push(q);
             far_cum.push(acc);
         }
-        let retries = cfg.tries.max(1);
-        HierarchicalStealing {
-            cfg,
-            steal_half,
-            local_tries: local_tries.max(1),
-            me,
-            local,
-            far,
-            far_cum,
-            state: StealState::Free,
-            next_attempt_at: 0.0,
-            failures: 0,
-            retries_left: retries,
-            stale_rounds: Vec::new(),
-            next_round: 1,
-            counters: DlbCounters::default(),
-        }
+        LocalityLadder { local_tries: local_tries.max(1), local, far, far_cum, failures: 0 }
     }
 
-    /// Is the current attempt past the local rungs of the ladder?
+    /// Is the current hunt past the local rungs of the ladder?
     fn escalated(&self) -> bool {
         self.failures >= self.local_tries && !self.far.is_empty()
+    }
+}
+
+impl VictimSelector for LocalityLadder {
+    fn name(&self) -> &'static str {
+        "hierarchical"
     }
 
     /// Local phase: uniform node-mate.  Escalated: 1/hops²-weighted draw
     /// over the remote tiers.
-    fn pick_victim(&self, rng: &mut Rng) -> Option<ProcessId> {
+    fn pick(&mut self, _num_processes: usize, rng: &mut Rng) -> Option<ProcessId> {
         if !self.escalated() {
             if self.local.is_empty() {
                 return None;
@@ -126,178 +96,48 @@ impl HierarchicalStealing {
         Some(self.far[i])
     }
 
-    /// An attempt came back empty (or timed out): climb the ladder, retry
-    /// now or back off for a jittered δ.
-    fn attempt_failed(&mut self, now: f64, rng: &mut Rng) {
-        self.state = StealState::Free;
-        self.counters.failed_rounds += 1;
+    fn on_failed_attempt(&mut self) {
         self.failures += 1;
-        if self.retries_left > 0 {
-            self.retries_left -= 1;
-            self.next_attempt_at = now;
-        } else {
-            self.retries_left = self.cfg.tries.max(1);
-            // next hunt starts at the bottom of the ladder again
-            self.failures = 0;
-            let jitter = 0.5 + rng.next_f64();
-            self.next_attempt_at = now + self.cfg.delta * jitter;
-        }
     }
 
-    /// How much a busy victim with workload `w` hands over (same rule as
-    /// plain stealing — the policies differ only in victim choice).
-    fn steal_amount(&self, w: usize, wt: usize) -> usize {
-        let excess = w.saturating_sub(wt);
-        if excess == 0 {
-            0
-        } else if self.steal_half {
-            (excess + 1) / 2
-        } else {
-            1
-        }
+    fn on_hunt_end(&mut self) {
+        // next hunt starts at the bottom of the ladder again
+        self.failures = 0;
+    }
+
+    fn on_success(&mut self) {
+        // success anywhere resets the ladder: steal locally again
+        self.failures = 0;
     }
 }
 
-impl BalancerPolicy for HierarchicalStealing {
-    fn name(&self) -> &'static str {
-        "hierarchical"
-    }
+/// Locality-aware stealing: the shared steal protocol driven by the
+/// escalation ladder.
+pub type HierarchicalStealing = StealProtocol<LocalityLadder>;
 
-    fn init(&mut self, now: f64, rng: &mut Rng) {
-        // stagger first attempts uniformly over one δ
-        self.next_attempt_at = now + rng.next_f64() * self.cfg.delta;
-    }
-
-    fn poll(&mut self, obs: &mut PolicyObs<'_>, now: f64, out: &mut Vec<PolicyAction>) {
-        if obs.middle_zone
-            || obs.role != Role::Idle
-            || self.state != StealState::Free
-            || now < self.next_attempt_at
-            || obs.num_processes < 2
-        {
-            return;
-        }
-        let Some(victim) = self.pick_victim(obs.rng) else { return };
-        let round = self.next_round;
-        self.next_round += 1;
-        self.counters.rounds += 1;
-        self.counters.requests_sent += 1;
-        self.state = StealState::Outstanding { round, deadline: now + self.cfg.confirm_timeout };
-        out.push(PolicyAction::Send {
-            to: victim,
-            msg: Msg::StealRequest { round, load: obs.workload, eta: obs.queue_eta() },
-        });
-    }
-
-    fn on_message(
-        &mut self,
-        obs: &mut PolicyObs<'_>,
-        from: ProcessId,
-        msg: &Msg,
-        _now: f64,
-        out: &mut Vec<PolicyAction>,
-    ) {
-        match *msg {
-            Msg::StealRequest { round, .. } => {
-                self.counters.requests_received += 1;
-                let grant = if obs.middle_zone || obs.role != Role::Busy {
-                    0
-                } else {
-                    self.steal_amount(obs.workload, obs.wt)
-                };
-                if grant > 0 {
-                    self.counters.accepts_sent += 1;
-                    self.counters.transactions += 1;
-                } else {
-                    self.counters.declines_sent += 1;
-                }
-                // Always reply, even empty: the thief is blocked on us.
-                out.push(PolicyAction::ExportCount { to: from, round, count: grant });
-            }
-            // Victim side: transfer acked; stateless, nothing to unlock.
-            Msg::ExportAck { .. } => {}
-            _ => {}
-        }
-    }
-
-    /// Thief side: a steal reply landed (tasks already enqueued).
-    fn on_transfer(
-        &mut self,
-        obs: &mut PolicyObs<'_>,
-        _from: ProcessId,
-        round: u64,
-        received: usize,
-        now: f64,
-        _out: &mut Vec<PolicyAction>,
-    ) {
-        match self.state {
-            StealState::Outstanding { round: r, .. } if r == round => {
-                if received == 0 {
-                    self.attempt_failed(now, obs.rng);
-                } else {
-                    self.state = StealState::Free;
-                    self.counters.transactions += 1;
-                    self.retries_left = self.cfg.tries.max(1);
-                    // success anywhere resets the ladder: steal locally again
-                    self.failures = 0;
-                    self.next_attempt_at = now;
-                }
-            }
-            _ => {
-                // A reply for a round whose timeout already fired: the tasks
-                // are enqueued regardless (over-steal risk) — account for it.
-                if let Some(pos) = self.stale_rounds.iter().position(|&r| r == round) {
-                    self.stale_rounds.swap_remove(pos);
-                    if received > 0 {
-                        self.counters.late_grants += 1;
-                        self.counters.transactions += 1;
-                        self.failures = 0;
-                    }
-                }
-            }
-        }
-    }
-
-    fn on_tick(&mut self, now: f64, rng: &mut Rng) {
-        if let StealState::Outstanding { round, deadline } = self.state {
-            if now >= deadline {
-                // victim vanished or the reply is slow: remember the round
-                // so a late grant is recognized, count, and move on
-                self.stale_rounds.push(round);
-                self.counters.confirm_timeouts += 1;
-                self.attempt_failed(now, rng);
-            }
-        }
-    }
-
-    fn next_wakeup(&self) -> Option<f64> {
-        match self.state {
-            StealState::Free => Some(self.next_attempt_at),
-            StealState::Outstanding { deadline, .. } => Some(deadline),
-        }
-    }
-
-    fn set_delta(&mut self, delta: f64) {
-        self.cfg.delta = delta;
-    }
-
-    fn engaged(&self) -> bool {
-        self.state != StealState::Free
-    }
-
-    fn counters(&self) -> &DlbCounters {
-        &self.counters
-    }
-
-    fn counters_mut(&mut self) -> &mut DlbCounters {
-        &mut self.counters
+impl StealProtocol<LocalityLadder> {
+    pub fn new(
+        me: ProcessId,
+        cfg: PairingConfig,
+        steal_half: bool,
+        local_tries: usize,
+        topology: &Topology,
+        num_processes: usize,
+    ) -> Self {
+        StealProtocol::with_selector(
+            cfg,
+            steal_half,
+            LocalityLadder::new(me, local_tries, topology, num_processes),
+        )
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::testutil::ObsBox;
+    use super::super::{BalancerPolicy, PolicyAction};
     use super::*;
+    use crate::net::message::Msg;
 
     /// 2 nodes × 4 ranks, inter-node cost 4 (the `cluster2x4` shape).
     fn cluster() -> Topology {
@@ -326,10 +166,10 @@ mod tests {
 
     #[test]
     fn tiers_split_on_the_cluster_boundary() {
-        let p = hier(1, 3, &cluster(), 8);
-        assert_eq!(p.local, vec![ProcessId(0), ProcessId(2), ProcessId(3)]);
+        let l = LocalityLadder::new(ProcessId(1), 3, &cluster(), 8);
+        assert_eq!(l.local, vec![ProcessId(0), ProcessId(2), ProcessId(3)]);
         assert_eq!(
-            p.far,
+            l.far,
             (4..8).map(ProcessId).collect::<Vec<_>>(),
             "remote tier = the other node"
         );
@@ -368,7 +208,7 @@ mod tests {
         assert!(v.idx() >= 4, "escalated");
         // remote grant succeeds → next hunt starts local again
         p.on_transfer(&mut ob.obs(), v, p.next_round - 1, 2, 0.001, &mut out);
-        assert_eq!(p.failures, 0);
+        assert_eq!(p.selector.failures, 0);
         let v = request_target(&mut p, &mut ob, 0.001);
         assert!(v.idx() < 4, "back to the local tier, asked {v}");
         assert_eq!(p.counters.transactions, 1);
@@ -376,11 +216,11 @@ mod tests {
 
     #[test]
     fn flat_topology_degenerates_to_uniform_stealing() {
-        let p = hier(0, 3, &Topology::Flat, 6);
-        assert_eq!(p.local.len(), 5, "everyone is one hop away");
-        assert!(p.far.is_empty());
-        // escalation can never trigger — pick_victim stays on the local path
-        assert!(!p.escalated());
+        let l = LocalityLadder::new(ProcessId(0), 3, &Topology::Flat, 6);
+        assert_eq!(l.local.len(), 5, "everyone is one hop away");
+        assert!(l.far.is_empty());
+        // escalation can never trigger — pick stays on the local path
+        assert!(!l.escalated());
     }
 
     #[test]
@@ -429,6 +269,7 @@ mod tests {
         p.on_transfer(&mut ob.obs(), ProcessId(1), round, 3, 10.1, &mut out);
         assert_eq!(p.counters.late_grants, 1);
         assert!(!p.engaged());
+        assert_eq!(p.selector.failures, 0, "a late grant still resets the ladder");
     }
 
     #[test]
@@ -452,6 +293,6 @@ mod tests {
         }
         assert_eq!(failures, tries + 1);
         assert!(p.next_attempt_at > now);
-        assert_eq!(p.failures, 0, "ladder reset with the backoff");
+        assert_eq!(p.selector.failures, 0, "ladder reset with the backoff");
     }
 }

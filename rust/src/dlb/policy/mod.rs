@@ -16,6 +16,11 @@
 //! - [`Diffusion`] — periodic first-order load averaging restricted to
 //!   topology neighbors (Demirel & Sbalzarini 2013).
 //!
+//! The two stealing policies are one state machine: [`StealProtocol`]
+//! parameterized by a [`VictimSelector`] (`UniformVictims` vs the
+//! `LocalityLadder`), so the wire protocol, retry/back-off and late-grant
+//! accounting exist exactly once.
+//!
 //! Any of the four can additionally be wrapped in [`AdaptiveDelta`], the
 //! AIMD controller that retunes the back-off / exchange period δ from
 //! observed outcomes (shrink on successful transfers, grow on failed
@@ -45,9 +50,9 @@ pub mod work_stealing;
 
 pub use adaptive::{AdaptiveConfig, AdaptiveDelta};
 pub use diffusion::Diffusion;
-pub use hierarchical::HierarchicalStealing;
+pub use hierarchical::{HierarchicalStealing, LocalityLadder};
 pub use random_pairing::RandomPairing;
-pub use work_stealing::WorkStealing;
+pub use work_stealing::{StealProtocol, UniformVictims, VictimSelector, WorkStealing};
 
 use crate::config::PolicyKind;
 use crate::core::graph::TaskGraph;

@@ -1,14 +1,23 @@
 //! `ductr bench` — the repeatable DES hot-path baseline.
 //!
-//! Times full simulator runs on the two standing workloads (block Cholesky
-//! and the random layered DAG) across a process-count sweep, and writes a
-//! JSON baseline (`BENCH_pr3.json` by default) so successive PRs have a
-//! perf trajectory to compare against: events/sec, makespan, and the event-
-//! heap high-water mark per case.
+//! Times full simulator runs on the standing workloads (block Cholesky,
+//! random layered DAG, hierarchical-stealing-on-cluster) across a process
+//! count sweep reaching P = 4096, with every cell measured twice — transport
+//! coalescing off and on — and writes a JSON baseline (`BENCH_pr5.json` by
+//! default) so successive PRs have a perf trajectory to compare against:
+//! events/sec, makespan, and the pending-event high-water mark per case.
+//!
+//! `--baseline FILE` re-reads a committed baseline and prints per-case
+//! deltas; on any matching (name, coalesce) case the command fails on
+//! deterministic event-count drift (the machine-independent canary) or
+//! an events/sec collapse beyond [`REGRESSION_TOLERANCE`].  Case names
+//! encode the profile, so CI diffs its smoke run against the committed
+//! smoke baseline (`bench --smoke --baseline BENCH_pr5_smoke.json`)
+//! while full sweeps diff against `BENCH_pr5.json`.
 //!
 //! Wall-clock numbers are machine-dependent; everything else in the file
-//! (events, makespan, peak heap) is deterministic under the seed, which is
-//! what makes the baseline diffable across engine changes.
+//! (events, makespan, peak pending) is deterministic under the seed, which
+//! is what makes the baseline diffable across engine changes.
 
 use std::io::Write as _;
 use std::path::Path;
@@ -23,17 +32,29 @@ use crate::sim::engine::{SimEngine, SimResult};
 use crate::util::bench::{run_with, BenchConfig};
 use crate::util::error::{Error, Result};
 
-/// One timed workload/process-count cell.
+/// Fractional events/sec drop against the baseline that fails a
+/// comparison.  Deliberately loose: wall-clock throughput on shared CI
+/// runners routinely swings tens of percent, so this only catches
+/// catastrophic slowdowns — the *primary* gate is deterministic
+/// event-count drift, which is machine-independent and exact.
+pub const REGRESSION_TOLERANCE: f64 = 0.50;
+
+/// One timed workload/process-count/coalesce cell.
 #[derive(Debug, Clone)]
 pub struct BenchCase {
     pub name: String,
     pub workload: &'static str,
     pub processes: usize,
     pub tasks: usize,
+    /// Transport coalescing on for this cell (the A/B dimension).
+    pub coalesce: bool,
     /// Events dispatched by one run (deterministic under the seed).
     pub events: u64,
     pub makespan: f64,
-    pub peak_event_heap: usize,
+    /// Pending-event high-water mark of the scheduler.
+    pub peak_pending_events: usize,
+    /// Messages that rode an existing flight instead of their own event.
+    pub messages_coalesced: u64,
     /// Median wall-clock seconds per run.
     pub wall_secs: f64,
     pub events_per_sec: f64,
@@ -99,22 +120,47 @@ fn time_case(cfg: &Config, graph: &Arc<TaskGraph>, name: &str, smoke: bool) -> (
     (last.expect("at least one sample ran"), res.summary.median)
 }
 
+/// Time one workload cell under coalescing off *and* on, pushing two cases.
+fn time_ab(
+    cases: &mut Vec<BenchCase>,
+    workload: &'static str,
+    cfg: &Config,
+    graph: &Arc<TaskGraph>,
+    name: &str,
+    smoke: bool,
+) {
+    for coalesce in [false, true] {
+        let mut c = cfg.clone();
+        c.coalesce = coalesce;
+        let (r, wall) = time_case(&c, graph, name, smoke);
+        cases.push(case(workload, name, c.processes, graph.num_tasks(), coalesce, &r, wall));
+    }
+}
+
 /// Run the sweep.  `smoke` shrinks process counts and sizes to a few
-/// seconds total for CI.
+/// seconds total for CI — but keeps one P = 1024 cell so the large-P
+/// scheduler and coalescing paths are exercised on every push.
 pub fn run(seed: u64, smoke: bool) -> Result<BenchReport> {
-    let ps: &[usize] = if smoke { &[4, 8] } else { &[16, 64, 256] };
+    let ps: &[usize] = if smoke { &[4, 8] } else { &[16, 64, 256, 1024, 4096] };
     let mut cases = Vec::new();
 
     for &p in ps {
         // --- block Cholesky ------------------------------------------
         let mut cfg = base_cfg(p, seed);
-        cfg.nb = if smoke { 8 } else { 24 };
+        // keep tasks ≳ P at the top of the sweep so the large-P cells
+        // measure a loaded scheduler, not just termination chatter
+        cfg.nb = if smoke {
+            8
+        } else if p >= 1024 {
+            32
+        } else {
+            24
+        };
         cfg.block = if smoke { 128 } else { 256 };
         cfg.validate().map_err(Error::new)?;
         let dag = cholesky::build(cfg.nb, cfg.block, ProcessGrid::new(cfg.effective_grid()));
         let name = format!("cholesky nb={} P={p}", cfg.nb);
-        let (r, wall) = time_case(&cfg, &dag.graph, &name, smoke);
-        cases.push(case("cholesky", &name, p, dag.graph.num_tasks(), &r, wall));
+        time_ab(&mut cases, "cholesky", &cfg, &dag.graph, &name, smoke);
 
         // --- random layered DAG --------------------------------------
         let (cfg, graph, name) = if smoke {
@@ -128,8 +174,7 @@ pub fn run(seed: u64, smoke: bool) -> Result<BenchReport> {
         } else {
             rand_dag_case(p, seed)
         };
-        let (r, wall) = time_case(&cfg, &graph, &name, smoke);
-        cases.push(case("rand_dag", &name, p, graph.num_tasks(), &r, wall));
+        time_ab(&mut cases, "rand_dag", &cfg, &graph, &name, smoke);
 
         // --- locality layer: hierarchical stealing + adaptive δ on the
         //     cluster fabric (PR 4's policy hot path) -------------------
@@ -148,8 +193,21 @@ pub fn run(seed: u64, smoke: bool) -> Result<BenchReport> {
         }
         let name = format!("hier_cluster {}x{} P={p}", params.layers, params.width);
         let graph = rand_dag::build(p, params, seed);
-        let (r, wall) = time_case(&c, &graph, &name, smoke);
-        cases.push(case("hier_cluster", &name, p, graph.num_tasks(), &r, wall));
+        time_ab(&mut cases, "hier_cluster", &c, &graph, &name, smoke);
+    }
+
+    if smoke {
+        // the CI large-P canary: a small DAG over 1024 processes drives
+        // the calendar queue through boot-storm, rebuild and termination
+        let p = 1024;
+        let mut c = base_cfg(p, seed);
+        c.validate().map_err(Error::new)?;
+        let mut params = rand_dag::DagParams::default();
+        params.layers = 4;
+        params.width = 64;
+        let name = format!("rand_dag {}x{} P={p}", params.layers, params.width);
+        let graph = rand_dag::build(p, params, seed);
+        time_ab(&mut cases, "rand_dag", &c, &graph, &name, smoke);
     }
 
     Ok(BenchReport { seed, smoke, cases })
@@ -160,6 +218,7 @@ fn case(
     name: &str,
     p: usize,
     tasks: usize,
+    coalesce: bool,
     r: &SimResult,
     wall: f64,
 ) -> BenchCase {
@@ -168,9 +227,11 @@ fn case(
         workload,
         processes: p,
         tasks,
+        coalesce,
         events: r.events_processed,
         makespan: r.makespan,
-        peak_event_heap: r.peak_event_heap,
+        peak_pending_events: r.peak_pending_events,
+        messages_coalesced: r.counters.messages_coalesced,
         wall_secs: wall,
         events_per_sec: if wall > 0.0 { r.events_processed as f64 / wall } else { 0.0 },
     }
@@ -181,21 +242,30 @@ impl BenchReport {
     pub fn render(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "ductr bench (seed {}{})\n{:<28} {:>6} {:>7} {:>10} {:>11} {:>10} {:>12}\n",
+            "ductr bench (seed {}{})\n{:<28} {:>6} {:>7} {:>4} {:>10} {:>11} {:>10} {:>10} {:>12}\n",
             self.seed,
             if self.smoke { ", smoke" } else { "" },
             "case",
             "P",
             "tasks",
+            "coal",
             "events",
             "makespan",
-            "peak-heap",
+            "peak-pend",
+            "coalesced",
             "events/s"
         ));
         for c in &self.cases {
             s.push_str(&format!(
-                "{:<28} {:>6} {:>7} {:>10} {:>11.4} {:>10} {:>12.0}\n",
-                c.name, c.processes, c.tasks, c.events, c.makespan, c.peak_event_heap,
+                "{:<28} {:>6} {:>7} {:>4} {:>10} {:>11.4} {:>10} {:>10} {:>12.0}\n",
+                c.name,
+                c.processes,
+                c.tasks,
+                if c.coalesce { "on" } else { "off" },
+                c.events,
+                c.makespan,
+                c.peak_pending_events,
+                c.messages_coalesced,
                 c.events_per_sec
             ));
         }
@@ -208,6 +278,7 @@ impl BenchReport {
         let mut f = std::fs::File::create(path)?;
         writeln!(f, "{{")?;
         writeln!(f, "  \"generated_by\": \"ductr bench\",")?;
+        writeln!(f, "  \"placeholder\": false,")?;
         writeln!(f, "  \"seed\": {},", self.seed)?;
         writeln!(f, "  \"smoke\": {},", self.smoke)?;
         writeln!(f, "  \"cases\": [")?;
@@ -216,15 +287,18 @@ impl BenchReport {
             writeln!(
                 f,
                 "    {{\"name\": \"{}\", \"workload\": \"{}\", \"processes\": {}, \
-                 \"tasks\": {}, \"events\": {}, \"makespan\": {}, \
-                 \"peak_event_heap\": {}, \"wall_secs\": {}, \"events_per_sec\": {}}}{comma}",
+                 \"tasks\": {}, \"coalesce\": {}, \"events\": {}, \"makespan\": {}, \
+                 \"peak_pending_events\": {}, \"messages_coalesced\": {}, \
+                 \"wall_secs\": {}, \"events_per_sec\": {}}}{comma}",
                 c.name,
                 c.workload,
                 c.processes,
                 c.tasks,
+                c.coalesce,
                 c.events,
                 c.makespan,
-                c.peak_event_heap,
+                c.peak_pending_events,
+                c.messages_coalesced,
                 c.wall_secs,
                 c.events_per_sec
             )?;
@@ -235,6 +309,160 @@ impl BenchReport {
     }
 }
 
+// ---------------------------------------------------------------------
+// baseline comparison (`bench --baseline FILE`)
+// ---------------------------------------------------------------------
+
+/// The slice of a committed baseline needed for regression checks.
+#[derive(Debug, Clone)]
+pub struct BaselineCase {
+    pub name: String,
+    pub coalesce: bool,
+    pub events: Option<u64>,
+    pub events_per_sec: f64,
+}
+
+#[derive(Debug)]
+pub struct Baseline {
+    /// A committed file generated off-machine may be a placeholder (no
+    /// toolchain where it was authored); comparisons against it are
+    /// informational, never failing.
+    pub placeholder: bool,
+    pub cases: Vec<BaselineCase>,
+}
+
+/// Extract `"key": <value>` from a single JSON-object line (the format
+/// `write_json` emits — one case per line; no serde offline).
+fn json_field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let rest = line[at..].trim_start();
+    if let Some(stripped) = rest.strip_prefix('"') {
+        return Some(&stripped[..stripped.find('"')?]);
+    }
+    let end = rest.find([',', '}']).unwrap_or(rest.len());
+    Some(rest[..end].trim())
+}
+
+/// Load a `ductr bench` JSON baseline.  Tolerant of older layouts: missing
+/// `coalesce` reads as off, missing `placeholder` as false.
+pub fn load_baseline(path: &Path) -> Result<Baseline> {
+    let body = std::fs::read_to_string(path)
+        .map_err(|e| Error::msg(format!("cannot read baseline {}: {e}", path.display())))?;
+    let placeholder = body
+        .lines()
+        .find_map(|l| json_field(l, "placeholder"))
+        .map(|v| v == "true")
+        // legacy placeholder marker lived in the generated_by free text
+        .unwrap_or_else(|| body.contains("placeholder"));
+    let mut cases = Vec::new();
+    for line in body.lines() {
+        let Some(name) = json_field(line, "name") else { continue };
+        let Some(eps) = json_field(line, "events_per_sec").and_then(|v| v.parse::<f64>().ok())
+        else {
+            continue;
+        };
+        cases.push(BaselineCase {
+            name: name.to_string(),
+            coalesce: json_field(line, "coalesce").map(|v| v == "true").unwrap_or(false),
+            events: json_field(line, "events").and_then(|v| v.parse().ok()),
+            events_per_sec: eps,
+        });
+    }
+    Ok(Baseline { placeholder, cases })
+}
+
+impl BenchReport {
+    /// Render per-case deltas against `base`.  Two failure conditions on
+    /// matching (name, coalesce) cases, neither of which a placeholder
+    /// baseline or an unmatched case can trigger:
+    ///
+    /// - **event-count drift** — `events` is deterministic under the seed
+    ///   and machine-independent, so any mismatch is a real behavioral
+    ///   change: either a regression or an intentional engine change that
+    ///   must re-bless the baseline.  This is the reliable CI canary.
+    /// - **events/sec collapse** beyond [`REGRESSION_TOLERANCE`] — a
+    ///   coarse wall-clock backstop for slowdowns that keep event counts
+    ///   intact; loose enough to tolerate shared-runner variance.
+    pub fn compare_to_baseline(&self, base: &Baseline, label: &str) -> Result<String> {
+        let mut s = format!(
+            "baseline comparison vs {label}{}\n{:<28} {:>4} {:>14} {:>14} {:>8}\n",
+            if base.placeholder { " (placeholder — informational)" } else { "" },
+            "case",
+            "coal",
+            "base ev/s",
+            "now ev/s",
+            "delta"
+        );
+        let mut matched = 0usize;
+        let mut regressed = Vec::new();
+        let mut drifted = Vec::new();
+        for c in &self.cases {
+            let Some(b) =
+                base.cases.iter().find(|b| b.name == c.name && b.coalesce == c.coalesce)
+            else {
+                continue;
+            };
+            matched += 1;
+            let delta = if b.events_per_sec > 0.0 {
+                c.events_per_sec / b.events_per_sec - 1.0
+            } else {
+                0.0
+            };
+            let drift = matches!(b.events, Some(be) if be != c.events);
+            s.push_str(&format!(
+                "{:<28} {:>4} {:>14.0} {:>14.0} {:>+7.1}%{}\n",
+                c.name,
+                if c.coalesce { "on" } else { "off" },
+                b.events_per_sec,
+                c.events_per_sec,
+                delta * 100.0,
+                if drift { "  [event-count drift]" } else { "" }
+            ));
+            if drift {
+                drifted.push(format!(
+                    "{} (coalesce {}): {} → {} events",
+                    c.name,
+                    if c.coalesce { "on" } else { "off" },
+                    b.events.unwrap_or(0),
+                    c.events
+                ));
+            }
+            if delta < -REGRESSION_TOLERANCE {
+                regressed.push(format!(
+                    "{} (coalesce {}): {:+.1}%",
+                    c.name,
+                    if c.coalesce { "on" } else { "off" },
+                    delta * 100.0
+                ));
+            }
+        }
+        if matched == 0 {
+            s.push_str("  (no matching cases — baseline profile differs from this run)\n");
+        }
+        if base.placeholder {
+            return Ok(s);
+        }
+        if !drifted.is_empty() {
+            return Err(Error::msg(format!(
+                "{s}\ndeterministic event counts drifted from the baseline on {} case(s): {} \
+                 — an engine-behavior change; re-bless the baseline if intentional",
+                drifted.len(),
+                drifted.join("; ")
+            )));
+        }
+        if !regressed.is_empty() {
+            return Err(Error::msg(format!(
+                "{s}\nevents/sec regressed beyond {:.0}% on {} case(s): {}",
+                REGRESSION_TOLERANCE * 100.0,
+                regressed.len(),
+                regressed.join("; ")
+            )));
+        }
+        Ok(s)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,17 +470,31 @@ mod tests {
     #[test]
     fn smoke_sweep_runs_and_serializes() {
         let r = run(1, true).expect("smoke bench");
-        assert_eq!(r.cases.len(), 6); // 3 workloads × 2 process counts
+        // (3 workloads × 2 process counts + 1 large-P canary) × coalesce A/B
+        assert_eq!(r.cases.len(), 14);
         assert!(r.cases.iter().all(|c| c.events > 0 && c.makespan > 0.0));
-        assert!(r.cases.iter().all(|c| c.peak_event_heap > 0));
+        assert!(r.cases.iter().all(|c| c.peak_pending_events > 0));
         assert!(r.cases.iter().any(|c| c.workload == "hier_cluster"));
+        assert!(
+            r.cases.iter().any(|c| c.processes == 1024),
+            "smoke must exercise the large-P path"
+        );
+        // the cholesky boot storm fans v0 blocks out per destination, so
+        // the coalesce=on cells must actually coalesce
+        assert!(
+            r.cases
+                .iter()
+                .any(|c| c.coalesce && c.workload == "cholesky" && c.messages_coalesced > 0),
+            "coalescing must engage on the cholesky cells"
+        );
+        assert!(r.cases.iter().all(|c| c.coalesce || c.messages_coalesced == 0));
         let rendered = r.render();
         assert!(rendered.contains("events/s"));
         let p = std::env::temp_dir().join("ductr_bench_smoke.json");
         r.write_json(&p).expect("json write");
         let body = std::fs::read_to_string(&p).expect("json read");
         assert!(body.starts_with('{') && body.trim_end().ends_with('}'));
-        assert_eq!(body.matches("\"name\"").count(), 6);
+        assert_eq!(body.matches("\"name\"").count(), 14);
         let _ = std::fs::remove_file(p);
     }
 
@@ -263,7 +505,104 @@ mod tests {
         for (x, y) in a.cases.iter().zip(&b.cases) {
             assert_eq!(x.events, y.events, "{}", x.name);
             assert_eq!(x.makespan, y.makespan, "{}", x.name);
-            assert_eq!(x.peak_event_heap, y.peak_event_heap, "{}", x.name);
+            assert_eq!(x.peak_pending_events, y.peak_pending_events, "{}", x.name);
+            assert_eq!(x.messages_coalesced, y.messages_coalesced, "{}", x.name);
         }
+    }
+
+    fn tiny_report() -> BenchReport {
+        BenchReport {
+            seed: 1,
+            smoke: true,
+            cases: vec![BenchCase {
+                name: "cell A".into(),
+                workload: "rand_dag",
+                processes: 4,
+                tasks: 10,
+                coalesce: false,
+                events: 100,
+                makespan: 0.5,
+                peak_pending_events: 9,
+                messages_coalesced: 0,
+                wall_secs: 0.01,
+                events_per_sec: 10_000.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn baseline_roundtrip_and_comparison() {
+        let r = tiny_report();
+        let p = std::env::temp_dir().join("ductr_bench_baseline_rt.json");
+        r.write_json(&p).expect("write");
+        let base = load_baseline(&p).expect("load");
+        assert!(!base.placeholder);
+        assert_eq!(base.cases.len(), 1);
+        assert_eq!(base.cases[0].name, "cell A");
+        assert!(!base.cases[0].coalesce);
+        assert_eq!(base.cases[0].events, Some(100));
+        assert!((base.cases[0].events_per_sec - 10_000.0).abs() < 1e-6);
+        // identical numbers: no regression
+        let s = r.compare_to_baseline(&base, "rt").expect("no regression");
+        assert!(s.contains("cell A"));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn baseline_regression_fails_matching_case() {
+        let r = tiny_report();
+        let base = Baseline {
+            placeholder: false,
+            cases: vec![BaselineCase {
+                name: "cell A".into(),
+                coalesce: false,
+                events: Some(100),
+                // current run is 10k ev/s — a > 30% drop vs 100k
+                events_per_sec: 100_000.0,
+            }],
+        };
+        let err = r.compare_to_baseline(&base, "x").expect_err("must regress");
+        assert!(err.to_string().contains("regressed"), "{err}");
+        // the same drop against a placeholder baseline is informational
+        let mut ph = base;
+        ph.placeholder = true;
+        let s = r.compare_to_baseline(&ph, "x").expect("placeholder never fails");
+        assert!(s.contains("placeholder"));
+    }
+
+    #[test]
+    fn baseline_event_drift_fails_deterministically() {
+        let r = tiny_report();
+        let base = Baseline {
+            placeholder: false,
+            cases: vec![BaselineCase {
+                name: "cell A".into(),
+                coalesce: false,
+                // identical throughput but a different deterministic event
+                // count: the machine-independent canary must fire
+                events: Some(101),
+                events_per_sec: 10_000.0,
+            }],
+        };
+        let err = r.compare_to_baseline(&base, "x").expect_err("drift must fail");
+        assert!(err.to_string().contains("drifted"), "{err}");
+    }
+
+    #[test]
+    fn baseline_with_no_matching_cases_reports_not_fails() {
+        let r = tiny_report();
+        let base = Baseline { placeholder: false, cases: vec![] };
+        let s = r.compare_to_baseline(&base, "empty").expect("nothing to compare");
+        assert!(s.contains("no matching cases"));
+    }
+
+    #[test]
+    fn json_field_extracts_strings_numbers_bools() {
+        let line = r#"    {"name": "cholesky nb=8 P=4", "coalesce": true, "events": 123, "events_per_sec": 4567.8},"#;
+        assert_eq!(json_field(line, "name"), Some("cholesky nb=8 P=4"));
+        assert_eq!(json_field(line, "coalesce"), Some("true"));
+        assert_eq!(json_field(line, "events"), Some("123"));
+        assert_eq!(json_field(line, "events_per_sec"), Some("4567.8"));
+        assert_eq!(json_field(line, "absent"), None);
     }
 }

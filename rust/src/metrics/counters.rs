@@ -29,6 +29,11 @@ pub struct DlbCounters {
     /// already written the round off: the tasks are enqueued anyway, so the
     /// thief may over-steal with a second request already in flight.
     pub late_grants: u64,
+    /// Messages this process emitted that the transport packed into an
+    /// already-scheduled delivery (same destination, same computed delay,
+    /// same step) instead of their own event — the saving of
+    /// `[sim] coalesce = true`.  Zero with coalescing off.
+    pub messages_coalesced: u64,
 }
 
 impl DlbCounters {
@@ -47,6 +52,7 @@ impl DlbCounters {
         self.migration_doubles += o.migration_doubles;
         self.confirm_timeouts += o.confirm_timeouts;
         self.late_grants += o.late_grants;
+        self.messages_coalesced += o.messages_coalesced;
     }
 
     /// Fraction of rounds that found a partner — compare against the
@@ -60,7 +66,7 @@ impl DlbCounters {
 
     pub fn summary_line(&self) -> String {
         format!(
-            "rounds={} (failed {}), req {}/{} s/r, accepts {}, declines {}, tx={} (empty {}), tasks {}→/{}← ({} remote), {} doubles, timeouts {} (late grants {})",
+            "rounds={} (failed {}), req {}/{} s/r, accepts {}, declines {}, tx={} (empty {}), tasks {}→/{}← ({} remote), {} doubles, timeouts {} (late grants {}), coalesced {}",
             self.rounds,
             self.failed_rounds,
             self.requests_sent,
@@ -75,6 +81,7 @@ impl DlbCounters {
             self.migration_doubles,
             self.confirm_timeouts,
             self.late_grants,
+            self.messages_coalesced,
         )
     }
 }

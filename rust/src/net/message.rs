@@ -192,6 +192,40 @@ pub struct Envelope {
     pub wire_doubles: u64,
 }
 
+/// One scheduled delivery on the simulated transport: a head envelope plus
+/// any further messages coalesced behind it.
+///
+/// The DES packs every `Effect::Send` emitted by one `ProcessState` step
+/// that shares `(destination, computed delay)` into a single `Flight` and
+/// a single `Deliver` event (`[sim] coalesce = true`).  Members necessarily
+/// share the arrival time — the delay already includes the per-message
+/// bandwidth term, so only same-size messages can coalesce and nobody's
+/// delivery moves.  At dispatch the engine unpacks `head` first, then the
+/// `tail` messages in their original emission order, so the receiving state
+/// machine observes exactly the uncoalesced message sequence.  (Packing
+/// makes a flight's messages dispatch contiguously, so the *global*
+/// interleaving with other same-instant deliveries to other receivers may
+/// shift — still deterministic, just not bit-identical to coalesce-off
+/// unless every step sends ≤ 1 message per destination.)
+#[derive(Debug, Clone)]
+pub struct Flight {
+    pub head: Envelope,
+    /// Messages delivered immediately after `head`, in emission order.
+    /// Empty unless coalescing is enabled.
+    pub tail: Vec<Msg>,
+}
+
+impl Flight {
+    pub fn new(head: Envelope) -> Self {
+        Flight { head, tail: Vec::new() }
+    }
+
+    /// Messages carried by this delivery (head + coalesced tail).
+    pub fn messages(&self) -> usize {
+        1 + self.tail.len()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,6 +265,21 @@ mod tests {
             ],
         };
         assert_eq!(m.wire_doubles(4), 4 + (4 + 30) + 4);
+    }
+
+    #[test]
+    fn flight_counts_head_plus_tail() {
+        let env = Envelope {
+            from: ProcessId(0),
+            to: ProcessId(1),
+            msg: Msg::PairDecline { round: 1 },
+            wire_doubles: 8,
+        };
+        let mut fl = Flight::new(env);
+        assert_eq!(fl.messages(), 1);
+        fl.tail.push(Msg::PairDecline { round: 2 });
+        fl.tail.push(Msg::LoadReport { load: 3 });
+        assert_eq!(fl.messages(), 3);
     }
 
     #[test]

@@ -6,6 +6,6 @@ pub mod message;
 pub mod topology;
 pub mod transport;
 
-pub use message::{Envelope, MigratedTask, Msg, Role};
+pub use message::{Envelope, Flight, MigratedTask, Msg, Role};
 pub use topology::Topology;
-pub use transport::{mesh, mesh_on, Mailbox, Router, Shaper};
+pub use transport::{mesh, mesh_on, precise_wait, Mailbox, Router, Shaper};

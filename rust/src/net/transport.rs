@@ -88,9 +88,32 @@ impl Mailbox {
     }
 }
 
+/// Wait for `total` with sub-sleep-granularity precision without burning a
+/// core: sleep through all but the last [`SPIN_RESIDUE`], then spin the
+/// residue.  A pure busy-wait pinned a core for the full delay (the old
+/// `Shaper` behavior); a pure sleep overshoots by the scheduler quantum,
+/// which is larger than the sub-millisecond delays shaped sends model.
+pub fn precise_wait(total: Duration) {
+    /// Largest wait that is spun in full; longer waits sleep the excess
+    /// first.  ~100 µs is safely above the sleep wake-up slop on Linux, so
+    /// the residual spin still ends on time.
+    const SPIN_RESIDUE: Duration = Duration::from_micros(100);
+    if total.is_zero() {
+        return;
+    }
+    let t0 = Instant::now();
+    if total > SPIN_RESIDUE {
+        std::thread::sleep(total - SPIN_RESIDUE);
+    }
+    while t0.elapsed() < total {
+        std::hint::spin_loop();
+    }
+}
+
 /// Optional outbound delay to emulate a slower interconnect on a laptop:
-/// `latency + doubles/bandwidth` of busy-wait (sleep is too coarse under
-/// 1 ms on Linux for the sizes involved).
+/// `latency + doubles/bandwidth` of [`precise_wait`] (sleep alone is too
+/// coarse under 1 ms on Linux for the sizes involved; spinning alone
+/// burned a full core per shaped sender).
 #[derive(Debug, Clone, Copy)]
 pub struct Shaper {
     pub latency: Duration,
@@ -103,7 +126,7 @@ impl Shaper {
         self.delay_hops(doubles, 1)
     }
 
-    /// Busy-wait `hops × latency + size / bandwidth` — the topology-aware
+    /// Wait out `hops × latency + size / bandwidth` — the topology-aware
     /// injection delay (bandwidth is paid once; latency per hop).
     pub fn delay_hops(&self, doubles: u64, hops: u32) {
         let size_s = if self.doubles_per_sec.is_finite() && self.doubles_per_sec > 0.0 {
@@ -111,18 +134,7 @@ impl Shaper {
         } else {
             0.0
         };
-        let total = self.latency * hops.max(1) + Duration::from_secs_f64(size_s);
-        if total.is_zero() {
-            return;
-        }
-        if total < Duration::from_micros(200) {
-            let t0 = Instant::now();
-            while t0.elapsed() < total {
-                std::hint::spin_loop();
-            }
-        } else {
-            std::thread::sleep(total);
-        }
+        precise_wait(self.latency * hops.max(1) + Duration::from_secs_f64(size_s));
     }
 }
 
@@ -231,5 +243,17 @@ mod tests {
         let t0 = Instant::now();
         sh.delay(5000); // 5 ms at 1e6 doubles/s
         assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn precise_wait_is_accurate_above_and_below_the_sleep_cutoff() {
+        for total in [Duration::from_micros(50), Duration::from_millis(2)] {
+            let t0 = Instant::now();
+            precise_wait(total);
+            let elapsed = t0.elapsed();
+            assert!(elapsed >= total, "{elapsed:?} < {total:?}");
+        }
+        // zero is a no-op, not a panic
+        precise_wait(Duration::ZERO);
     }
 }

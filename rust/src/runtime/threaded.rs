@@ -202,10 +202,16 @@ fn worker_loop(
         let t0 = Instant::now();
         let (output, was_kernel) = match req.kind {
             TaskKind::Synthetic => {
+                // Emulate the modeled duration without pinning the core for
+                // all of it: sleep the bulk, spin only the precision residue
+                // (same hybrid the Shaper uses).  Trade-off: sleeping
+                // workers no longer contend for CPU, so an oversubscribed
+                // run (processes × cores > physical cores) completes in
+                // modeled time instead of stretching under contention — the
+                // synthetic mode measures protocol behavior, not machine
+                // saturation (real-kernel tasks still burn real CPU).
                 let dur = req.flops as f64 / flops_per_sec;
-                while t0.elapsed().as_secs_f64() < dur {
-                    std::hint::spin_loop();
-                }
+                crate::net::transport::precise_wait(Duration::from_secs_f64(dur));
                 (Payload::Sim, false)
             }
             kind => {

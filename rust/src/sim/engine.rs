@@ -1,14 +1,18 @@
-//! The discrete-event simulator: virtual clock + event heap driving the
-//! same `ProcessState` machines the threaded runtime uses.
+//! The discrete-event simulator: virtual clock + calendar-queue scheduler
+//! driving the same `ProcessState` machines the threaded runtime uses.
 //!
 //! Determinism: events are ordered by (time, sequence number); all
 //! randomness flows from the run seed through per-process RNG streams plus
 //! one engine stream for execution-time jitter.  Two runs with the same
 //! seed are bit-identical — which is how Fig 5's "lucky vs unlucky" pair of
 //! runs is reproduced honestly (two *named* seeds).
+//!
+//! Scale: the scheduler is a two-level calendar queue (`sim::calendar`)
+//! with O(1) amortized push/pop instead of a `BinaryHeap`'s O(log n), and
+//! the transport optionally coalesces same-(destination, delay) control
+//! messages of one step into single delivery events (`[sim] coalesce`) —
+//! the two changes that keep per-event cost flat as P grows to 4096.
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 use std::sync::Arc;
 
 use crate::config::Config;
@@ -18,15 +22,17 @@ use crate::core::ids::ProcessId;
 use crate::core::process::{Effect, ProcessParams, ProcessState};
 use crate::metrics::counters::DlbCounters;
 use crate::metrics::trace::RunTraces;
-use crate::net::message::Envelope;
+use crate::net::message::{Envelope, Flight};
 use crate::sched::queue::ReadyTask;
 use crate::util::rng::Rng;
 
+use super::calendar::{CalendarQueue, Entry};
 use super::network::NetworkModel;
 
-/// Event payloads are kept small and flat: envelopes live in a slab on the
-/// engine (indexed by `slot`) rather than in per-event `Box`es, so pushing
-/// an event never allocates once the slab and heap have warmed up.
+/// Event payloads are kept small and flat: flights (envelope + coalesced
+/// tail) live in a slab on the engine (indexed by `slot`) rather than in
+/// per-event `Box`es, so pushing an event never allocates once the slab and
+/// queue have warmed up.
 #[derive(Debug)]
 enum EventKind {
     Deliver { slot: u32 },
@@ -34,35 +40,6 @@ enum EventKind {
     /// `gen` is the process's tick generation at arm time: a popped tick
     /// dispatches only while it is still the latest armed one.
     Tick { proc: ProcessId, gen: u64 },
-}
-
-struct Event {
-    t: f64,
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
-    }
-}
-impl Eq for Event {}
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap: reverse for earliest-first, seq breaks
-        // ties deterministically in insertion order.
-        other
-            .t
-            .partial_cmp(&self.t)
-            .expect("no NaN times")
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
 }
 
 /// Outcome of a simulated run.
@@ -76,12 +53,14 @@ pub struct SimResult {
     pub traces: RunTraces,
     pub counters: DlbCounters,
     pub per_process_counters: Vec<DlbCounters>,
-    /// Events dispatched to a process state machine (suppressed stale
+    /// Events dispatched to a process state machine — every delivered
+    /// message counts, including the coalesced tail of a flight, so the
+    /// number is comparable across `coalesce` on/off (suppressed stale
     /// ticks are not counted — they do no work).
     pub events_processed: u64,
     /// Largest number of simultaneously pending events (memory high-water
     /// mark of the run — recorded for the perf trajectory in `ductr bench`).
-    pub peak_event_heap: usize,
+    pub peak_pending_events: usize,
     /// Aggregate compute utilization: Σ flops / (P · S · makespan).
     pub utilization: f64,
 }
@@ -114,11 +93,16 @@ impl std::error::Error for SimError {}
 pub struct SimEngine {
     pub processes: Vec<ProcessState>,
     network: NetworkModel,
-    heap: BinaryHeap<Event>,
-    /// Envelope storage for in-flight `Deliver` events (slot-indexed slab;
+    queue: CalendarQueue<EventKind>,
+    /// Flight storage for in-flight `Deliver` events (slot-indexed slab;
     /// freed slots are recycled via `env_free`).
-    env_slab: Vec<Option<Envelope>>,
+    env_slab: Vec<Option<Flight>>,
     env_free: Vec<u32>,
+    /// Pack same-(destination, delay) sends of one step into one flight.
+    coalesce: bool,
+    /// Per-step scratch for coalescing: (destination, delay bits, slot) of
+    /// every flight opened by the step currently being applied.
+    step_flights: Vec<(ProcessId, u64, u32)>,
     now: f64,
     seq: u64,
     jitter: f64,
@@ -132,8 +116,8 @@ pub struct SimEngine {
     tick_gen: Vec<u64>,
     /// Processes that have not halted — O(1) termination check per event.
     live: usize,
-    /// Event-heap high-water mark.
-    peak_heap: usize,
+    /// Pending-event high-water mark.
+    peak_pending: usize,
     pub max_events: u64,
     pub max_time: f64,
     /// Optional early-stop predicate (e.g. Fig 3 time-to-first-pair).
@@ -158,9 +142,11 @@ impl SimEngine {
                 cfg.doubles_per_sec,
                 cfg.build_topology(),
             ),
-            heap: BinaryHeap::new(),
+            queue: CalendarQueue::new(),
             env_slab: Vec::new(),
             env_free: Vec::new(),
+            coalesce: cfg.coalesce,
+            step_flights: Vec::new(),
             now: 0.0,
             seq: 0,
             jitter: cfg.exec_jitter,
@@ -168,7 +154,7 @@ impl SimEngine {
             tick_at: vec![f64::NEG_INFINITY; p],
             tick_gen: vec![0; p],
             live: p,
-            peak_heap: 0,
+            peak_pending: 0,
             max_events: 500_000_000,
             max_time: f64::INFINITY,
             stop_when: None,
@@ -178,47 +164,73 @@ impl SimEngine {
     fn push(&mut self, t: f64, kind: EventKind) {
         debug_assert!(t >= self.now, "event in the past: {t} < {}", self.now);
         self.seq += 1;
-        self.heap.push(Event { t, seq: self.seq, kind });
-        self.peak_heap = self.peak_heap.max(self.heap.len());
+        self.queue.push(t, self.seq, kind);
+        self.peak_pending = self.peak_pending.max(self.queue.len());
     }
 
-    fn stash_envelope(&mut self, env: Envelope) -> u32 {
+    fn stash_flight(&mut self, fl: Flight) -> u32 {
         match self.env_free.pop() {
             Some(slot) => {
                 debug_assert!(self.env_slab[slot as usize].is_none());
-                self.env_slab[slot as usize] = Some(env);
+                self.env_slab[slot as usize] = Some(fl);
                 slot
             }
             None => {
-                self.env_slab.push(Some(env));
+                self.env_slab.push(Some(fl));
                 (self.env_slab.len() - 1) as u32
             }
         }
     }
 
-    fn unstash_envelope(&mut self, slot: u32) -> Envelope {
-        let env = self.env_slab[slot as usize].take().expect("live envelope slot");
+    fn unstash_flight(&mut self, slot: u32) -> Flight {
+        let fl = self.env_slab[slot as usize].take().expect("live flight slot");
         self.env_free.push(slot);
-        env
+        fl
     }
 
     /// Free the slab slot of a popped-but-undispatched event (the budget
     /// error paths) so occupied slots always equal pending deliveries.
-    fn discard_event(&mut self, ev: &Event) {
-        if let EventKind::Deliver { slot } = ev.kind {
-            let _ = self.unstash_envelope(slot);
+    fn discard_event(&mut self, kind: &EventKind) {
+        if let EventKind::Deliver { slot } = *kind {
+            let _ = self.unstash_flight(slot);
         }
     }
 
-    /// Drain `effects` into the event heap.  The buffer is the caller's
+    /// Drain `effects` into the event queue.  The buffer is the caller's
     /// scratch space — emptied here, reused for the next step.
+    ///
+    /// With `coalesce` on, sends of this one step that share (destination,
+    /// computed delay) are appended to the flight the first of them opened
+    /// instead of getting their own `Deliver` event; the coalesced count is
+    /// credited to the stepping process's counters.
     fn apply_effects(&mut self, proc: ProcessId, effects: &mut Vec<Effect>) {
+        self.step_flights.clear();
+        let mut coalesced: u64 = 0;
         for e in effects.drain(..) {
             match e {
                 Effect::Send(env) => {
                     let delay = self.network.delay_between(env.from, env.to, env.wire_doubles);
-                    let slot = self.stash_envelope(env);
-                    self.push(self.now + delay, EventKind::Deliver { slot });
+                    if self.coalesce {
+                        let key = (env.to, delay.to_bits());
+                        if let Some(&(_, _, slot)) = self
+                            .step_flights
+                            .iter()
+                            .find(|&&(to, bits, _)| to == key.0 && bits == key.1)
+                        {
+                            let fl = self.env_slab[slot as usize]
+                                .as_mut()
+                                .expect("open flight slot");
+                            fl.tail.push(env.msg);
+                            coalesced += 1;
+                            continue;
+                        }
+                        let slot = self.stash_flight(Flight::new(env));
+                        self.step_flights.push((key.0, key.1, slot));
+                        self.push(self.now + delay, EventKind::Deliver { slot });
+                    } else {
+                        let slot = self.stash_flight(Flight::new(env));
+                        self.push(self.now + delay, EventKind::Deliver { slot });
+                    }
                 }
                 Effect::StartExec { task } => {
                     let node = self.processes[proc.idx()].graph.task(task.task);
@@ -250,6 +262,9 @@ impl SimEngine {
                 }
             }
         }
+        if coalesced > 0 {
+            self.processes[proc.idx()].policy.counters_mut().messages_coalesced += coalesced;
+        }
     }
 
     /// Run to completion; returns the aggregated result.
@@ -266,32 +281,53 @@ impl SimEngine {
 
         let mut events: u64 = 0;
         while self.live > 0 {
-            let Some(ev) = self.heap.pop() else { break };
+            let Some(Entry { t, item: kind, .. }) = self.queue.pop() else { break };
             // Superseded tick: a newer arm replaced this one.  Drop it at
             // the pop — before it counts as a dispatched event — instead
             // of firing `on_tick` spuriously; this is both the perf win
             // and the bug fix (dedup used to skip only pushes, never pops).
-            if let EventKind::Tick { proc, gen } = ev.kind {
+            if let EventKind::Tick { proc, gen } = kind {
                 if gen != self.tick_gen[proc.idx()] {
                     continue;
                 }
             }
-            self.now = ev.t;
+            self.now = t;
             if self.now > self.max_time {
-                self.discard_event(&ev);
+                self.discard_event(&kind);
                 return Err(SimError::TimeBudget(self.now));
             }
             events += 1;
+            // Every coalesced message counts as a dispatched event — and
+            // toward the budget — so event totals and budget enforcement
+            // stay comparable across coalesce on/off.
+            if let EventKind::Deliver { slot } = kind {
+                let tail = self.env_slab[slot as usize]
+                    .as_ref()
+                    .map_or(0, |fl| fl.tail.len() as u64);
+                events += tail;
+            }
             if events > self.max_events {
-                self.discard_event(&ev);
+                self.discard_event(&kind);
                 return Err(SimError::EventBudget(events));
             }
-            match ev.kind {
+            match kind {
                 EventKind::Deliver { slot } => {
-                    let env = self.unstash_envelope(slot);
-                    let to = env.to;
-                    self.processes[to.idx()].on_message(env, self.now, &mut effects);
+                    let fl = self.unstash_flight(slot);
+                    let (from, to) = (fl.head.from, fl.head.to);
+                    self.processes[to.idx()].on_message(fl.head, self.now, &mut effects);
                     self.apply_effects(to, &mut effects);
+                    for msg in fl.tail {
+                        let env = Envelope {
+                            from,
+                            to,
+                            msg,
+                            // the wire charge was paid when the member's
+                            // delay was computed; the receiver ignores it
+                            wire_doubles: 0,
+                        };
+                        self.processes[to.idx()].on_message(env, self.now, &mut effects);
+                        self.apply_effects(to, &mut effects);
+                    }
                 }
                 EventKind::ExecDone { proc, rt, duration } => {
                     self.processes[proc.idx()].on_exec_complete(
@@ -317,7 +353,7 @@ impl SimEngine {
             }
         }
 
-        if self.live > 0 && self.heap.is_empty() && self.stop_when.is_none() {
+        if self.live > 0 && self.queue.is_empty() && self.stop_when.is_none() {
             return Err(SimError::Deadlock { live: self.live });
         }
 
@@ -353,7 +389,7 @@ impl SimEngine {
             counters,
             per_process_counters: per,
             events_processed: events,
-            peak_event_heap: self.peak_heap,
+            peak_pending_events: self.peak_pending,
             utilization,
         }
     }
@@ -479,10 +515,10 @@ mod tests {
     }
 
     #[test]
-    fn peak_event_heap_recorded() {
+    fn peak_pending_events_recorded() {
         let (cfg, g) = bag_cfg(16, 4, true, 5);
         let r = SimEngine::from_config(&cfg, g).run().expect("run");
-        assert!(r.peak_event_heap > 0);
+        assert!(r.peak_pending_events > 0);
     }
 
     #[test]
@@ -498,13 +534,13 @@ mod tests {
         assert_eq!(eng.tick_at[0], 1.0, "latest schedule wins");
         // Earliest pop (t=1) is the live generation; the t=2 pop carries a
         // superseded generation and must not reach on_tick.
-        let e1 = eng.heap.pop().expect("tick at 1");
+        let e1 = eng.queue.pop().expect("tick at 1");
         assert_eq!(e1.t, 1.0);
-        let EventKind::Tick { gen: g1, .. } = e1.kind else { panic!("expected tick") };
+        let EventKind::Tick { gen: g1, .. } = e1.item else { panic!("expected tick") };
         assert_eq!(g1, eng.tick_gen[0], "t=1 would dispatch");
-        let e2 = eng.heap.pop().expect("tick at 2");
+        let e2 = eng.queue.pop().expect("tick at 2");
         assert_eq!(e2.t, 2.0);
-        let EventKind::Tick { gen: g2, .. } = e2.kind else { panic!("expected tick") };
+        let EventKind::Tick { gen: g2, .. } = e2.item else { panic!("expected tick") };
         assert_ne!(g2, eng.tick_gen[0], "t=2 is stale and must be dropped");
     }
 
@@ -532,7 +568,7 @@ mod tests {
     }
 
     #[test]
-    fn envelope_slab_recycles_slots() {
+    fn flight_slab_recycles_slots() {
         let (cfg, g) = bag_cfg(32, 4, true, 7);
         let mut eng = SimEngine::from_config(&cfg, g);
         let r = eng.run().expect("run");
@@ -545,7 +581,7 @@ mod tests {
         );
         // occupied slots are exactly the deliveries still pending at halt
         let pending =
-            eng.heap.iter().filter(|e| matches!(e.kind, EventKind::Deliver { .. })).count();
+            eng.queue.iter().filter(|e| matches!(e.item, EventKind::Deliver { .. })).count();
         let live_slots = eng.env_slab.iter().filter(|s| s.is_some()).count();
         assert_eq!(live_slots, pending);
     }
@@ -556,5 +592,67 @@ mod tests {
         let mut eng = SimEngine::from_config(&cfg, g);
         eng.max_events = 10;
         assert!(matches!(eng.run(), Err(SimError::EventBudget(_))));
+    }
+
+    /// A fan-out graph whose boot step sends several same-size v0 blocks to
+    /// the same remote consumer — the canonical coalescing opportunity.
+    fn v0_fanout_cfg(blocks: usize, coalesce: bool) -> (Config, Arc<TaskGraph>) {
+        let mut cfg = Config::default();
+        cfg.processes = 2;
+        cfg.grid = None;
+        cfg.dlb_enabled = false;
+        cfg.coalesce = coalesce;
+        cfg.validate().expect("valid");
+        let mut b = GraphBuilder::new();
+        // v0 data homed on p0, consumed by tasks on p1 → p0's start step
+        // emits `blocks` DataSends to p1, all the same size/delay.
+        let args: Vec<_> = (0..blocks).map(|_| b.data(ProcessId(0), 32, 32)).collect();
+        let out = b.data(ProcessId(1), 32, 32);
+        b.task(TaskKind::Synthetic, args, out, 1_000_000, None);
+        (cfg, b.build())
+    }
+
+    #[test]
+    fn coalescing_packs_v0_fanout_into_one_delivery() {
+        let (cfg_off, g_off) = v0_fanout_cfg(6, false);
+        let off = SimEngine::from_config(&cfg_off, g_off).run().expect("off");
+        let (cfg_on, g_on) = v0_fanout_cfg(6, true);
+        let on = SimEngine::from_config(&cfg_on, g_on).run().expect("on");
+        // identical logical message count and identical timing …
+        assert_eq!(on.events_processed, off.events_processed);
+        assert_eq!(on.makespan.to_bits(), off.makespan.to_bits());
+        // … but 5 of the 6 boot-time DataSends rode an existing flight
+        assert_eq!(off.counters.messages_coalesced, 0);
+        assert_eq!(on.counters.messages_coalesced, 5);
+        // which shrinks the pending-event high-water mark
+        assert!(
+            on.peak_pending_events < off.peak_pending_events,
+            "coalescing must shrink pending events: on={} off={}",
+            on.peak_pending_events,
+            off.peak_pending_events
+        );
+    }
+
+    #[test]
+    fn coalescing_off_is_bit_identical_to_default() {
+        // `coalesce = false` is the default: constructing it explicitly
+        // must not disturb anything (guards the config plumbing).
+        let (cfg_a, g_a) = bag_cfg(16, 4, true, 11);
+        let mut cfg_b = cfg_a.clone();
+        cfg_b.coalesce = false;
+        let a = SimEngine::from_config(&cfg_a, g_a).run().expect("a");
+        let b = SimEngine::from_config(&cfg_b, bag_cfg(16, 4, true, 11).1).run().expect("b");
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.events_processed, b.events_processed);
+    }
+
+    #[test]
+    fn coalesced_bag_run_still_balances_and_conserves_tasks() {
+        let (mut cfg, g) = bag_cfg(32, 4, true, 7);
+        cfg.coalesce = true;
+        let r = SimEngine::from_config(&cfg, g).run().expect("run");
+        assert!(r.counters.tasks_exported > 0);
+        assert_eq!(r.counters.tasks_exported, r.counters.tasks_received);
     }
 }

@@ -1,8 +1,10 @@
 //! Discrete-event simulation mode: virtual clock + modeled network driving
 //! the identical coordinator state machines as the threaded runtime.
 
+pub mod calendar;
 pub mod engine;
 pub mod network;
 
+pub use calendar::CalendarQueue;
 pub use engine::{SimEngine, SimError, SimResult};
 pub use network::NetworkModel;

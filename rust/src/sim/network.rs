@@ -43,6 +43,13 @@ impl NetworkModel {
     /// Topology-aware delivery time: latency is paid per hop, bandwidth
     /// once (store-and-forward of small messages is dominated by the wire
     /// time of the single largest segment).
+    ///
+    /// This value doubles as the transport-coalescing key: two sends of one
+    /// process step may share a delivery event iff they agree on
+    /// `(destination, delay_between(..).to_bits())`.  Because the delay
+    /// already contains the per-message size term, only same-size messages
+    /// to the same destination can merge — coalescing never moves an
+    /// arrival, it only removes scheduler events.
     pub fn delay_between(&self, from: ProcessId, to: ProcessId, doubles: u64) -> f64 {
         let hops = self.topology.hops(from, to).max(1);
         hops as f64 * self.latency + doubles as f64 / self.doubles_per_sec
@@ -85,6 +92,18 @@ mod tests {
         let far = n.delay_between(ProcessId(0), ProcessId(5), 0);
         assert!((near - 1e-6).abs() < 1e-15);
         assert!((far - 5e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn equal_size_messages_share_the_coalesce_delay() {
+        // same pair + same size → bit-identical delay (the coalescing key);
+        // a different size must produce a different delay
+        let n = NetworkModel::with_topology(1e-6, 1e8, Topology::Ring { len: 8 });
+        let a = n.delay_between(ProcessId(0), ProcessId(3), 8);
+        let b = n.delay_between(ProcessId(0), ProcessId(3), 8);
+        assert_eq!(a.to_bits(), b.to_bits());
+        let c = n.delay_between(ProcessId(0), ProcessId(3), 9);
+        assert_ne!(a.to_bits(), c.to_bits());
     }
 
     #[test]

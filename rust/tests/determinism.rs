@@ -153,6 +153,39 @@ fn scratch_buffer_reuse_matches_fresh_buffers() {
     assert!(a_log.iter().any(|e| e.contains("TaskExport")), "script must export work");
 }
 
+/// Transport coalescing is transparent when it has nothing to pack: on a
+/// dependency chain alternating between two processes every step emits at
+/// most one message per destination, so `[sim] coalesce = true` must
+/// reproduce the coalesce-off run bit for bit — makespan, counters and
+/// event count.  (The golden snapshot below runs with the default
+/// `coalesce = false`, so it is untouched by this PR either way.)
+#[test]
+fn coalesce_onoff_identical_when_steps_send_one_message_per_destination() {
+    let chain = |coalesce: bool| {
+        let mut cfg = Config::default();
+        cfg.processes = 2;
+        cfg.grid = None;
+        cfg.dlb_enabled = false;
+        cfg.coalesce = coalesce;
+        cfg.validate().expect("valid");
+        let mut b = GraphBuilder::new();
+        let mut prev: Option<ductr::core::ids::DataId> = None;
+        for i in 0..12u32 {
+            let d = b.data(ProcessId(i % 2), 32, 32);
+            let args = prev.map(|x| vec![x]).unwrap_or_default();
+            b.task(TaskKind::Synthetic, args, d, 2_000_000, None);
+            prev = Some(d);
+        }
+        SimEngine::from_config(&cfg, b.build()).run().expect("run")
+    };
+    let off = chain(false);
+    let on = chain(true);
+    assert_eq!(on.makespan.to_bits(), off.makespan.to_bits(), "makespan must not move");
+    assert_eq!(on.events_processed, off.events_processed);
+    assert_eq!(on.counters, off.counters);
+    assert_eq!(on.counters.messages_coalesced, 0, "nothing to pack on a chain");
+}
+
 /// Snapshot comparison.  When `tests/golden/determinism.txt` exists the
 /// current fingerprints must match it bit for bit; when it does not (first
 /// run on a new toolchain/checkout) it is written, and the test passes with

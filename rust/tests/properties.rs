@@ -4,6 +4,7 @@
 //! Built on `ductr::util::propcheck` (the in-repo proptest substitute) —
 //! every case is reproducible from the reported seed.
 
+use std::collections::BinaryHeap;
 use std::sync::Arc;
 
 use ductr::apps::{bag, rand_dag};
@@ -11,6 +12,7 @@ use ductr::config::{Config, Strategy};
 use ductr::core::graph::TaskGraph;
 use ductr::core::ids::ProcessId;
 use ductr::net::topology::Topology;
+use ductr::sim::calendar::CalendarQueue;
 use ductr::sim::engine::SimEngine;
 use ductr::util::propcheck::{forall, Gen};
 
@@ -314,6 +316,152 @@ fn prop_distance_ranking_is_complete_and_sorted() {
                     return Err(format!("{c:?}: table not sorted at {w:?}"));
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// calendar-queue scheduler (PR 5): the DES event queue must pop in exactly
+// the `(time, seq)` total order the old `BinaryHeap` produced — the oracle
+// below *is* that heap's ordering, kept alive as test-only code.
+// ---------------------------------------------------------------------
+
+/// The pre-calendar event ordering, verbatim: a max-heap reversed on
+/// `(t, seq)` so `pop` yields earliest-first, ties in insertion order.
+#[derive(Debug, PartialEq)]
+struct OracleEntry {
+    t: f64,
+    seq: u64,
+}
+
+impl Eq for OracleEntry {}
+impl PartialOrd for OracleEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for OracleEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .t
+            .partial_cmp(&self.t)
+            .expect("no NaN times")
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// A random scheduler workload: each element is one operation.  Values of
+/// `op` select pushes of several flavors (plain near-future, same-timestamp
+/// burst, far-future outlier, tick-style re-arm pair) or an interleaved
+/// pop; `a` parameterizes the timestamps.
+fn gen_stream(g: &mut Gen) -> Vec<(usize, usize)> {
+    let n = g.usize_in(4..400).max(4);
+    (0..n).map(|_| (g.rng().range_usize(0, 12), g.rng().range_usize(0, 5000))).collect()
+}
+
+#[test]
+fn prop_calendar_pop_order_matches_heap_oracle() {
+    forall(120, 0xCA1E, gen_stream, |ops| -> Result<(), String> {
+        let mut cal: CalendarQueue<()> = CalendarQueue::new();
+        let mut oracle: BinaryHeap<OracleEntry> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let mut now = 0.0f64;
+        let push = |cal: &mut CalendarQueue<()>,
+                        oracle: &mut BinaryHeap<OracleEntry>,
+                        seq: &mut u64,
+                        t: f64| {
+            *seq += 1;
+            cal.push(t, *seq, ());
+            oracle.push(OracleEntry { t, seq: *seq });
+        };
+        for &(op, a) in ops {
+            match op {
+                // plain near-future push (µs scale, the control-plane regime)
+                0..=4 => push(&mut cal, &mut oracle, &mut seq, now + a as f64 * 1e-6),
+                // same-timestamp burst: ties must resolve by seq
+                5 | 6 => {
+                    let t = now + a as f64 * 1e-6;
+                    for _ in 0..3 {
+                        push(&mut cal, &mut oracle, &mut seq, t);
+                    }
+                }
+                // far-future outlier (seconds out: the overflow list)
+                7 => push(&mut cal, &mut oracle, &mut seq, now + 1_000.0 + a as f64),
+                // tick re-arm: a later deadline pushed first, then its
+                // earlier replacement — both must still pop in (t, seq)
+                // order (the engine drops the stale one by generation)
+                8 => {
+                    let t_old = now + (2 * a + 2) as f64 * 1e-6;
+                    let t_new = now + (a + 1) as f64 * 1e-6;
+                    push(&mut cal, &mut oracle, &mut seq, t_old);
+                    push(&mut cal, &mut oracle, &mut seq, t_new);
+                }
+                // interleaved pop
+                _ => {
+                    let c = cal.pop();
+                    let o = oracle.pop();
+                    match (&c, &o) {
+                        (None, None) => {}
+                        (Some(ce), Some(oe)) => {
+                            if ce.t != oe.t || ce.seq != oe.seq {
+                                return Err(format!(
+                                    "pop mismatch: calendar ({}, {}) vs oracle ({}, {})",
+                                    ce.t, ce.seq, oe.t, oe.seq
+                                ));
+                            }
+                            now = ce.t;
+                        }
+                        _ => return Err(format!("length mismatch: {c:?} vs {o:?}")),
+                    }
+                }
+            }
+        }
+        // full drain must agree too
+        loop {
+            match (cal.pop(), oracle.pop()) {
+                (None, None) => break,
+                (Some(ce), Some(oe)) if ce.t == oe.t && ce.seq == oe.seq => {}
+                (c, o) => return Err(format!("drain mismatch: {c:?} vs {o:?}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Coalescing is pure transport batching: on workloads where no step ever
+/// emits two messages to one destination (random DAGs with DLB off — task
+/// completions send one grouped `TaskDone` per remote consumer), switching
+/// it on must not move a single bit of the run.
+#[test]
+fn prop_coalesce_identity_without_multi_send_steps() {
+    forall(15, 0xC0A1, gen_scenario, |s| -> Result<(), String> {
+        let mut s = s.clone();
+        s.kind = 1; // layered DAG: layer-0 tasks have no v0 fan-out
+        s.dlb = false;
+        let mut cfg_off = config_of(&s);
+        cfg_off.coalesce = false;
+        let mut cfg_on = cfg_off.clone();
+        cfg_on.coalesce = true;
+        let off = SimEngine::from_config(&cfg_off, build_graph(&s))
+            .run()
+            .map_err(|e| format!("{e}"))?;
+        let on = SimEngine::from_config(&cfg_on, build_graph(&s))
+            .run()
+            .map_err(|e| format!("{e}"))?;
+        if on.counters.messages_coalesced != 0 {
+            return Err(format!(
+                "{s:?}: a ≤1-message-per-destination workload coalesced {} messages",
+                on.counters.messages_coalesced
+            ));
+        }
+        if on.makespan.to_bits() != off.makespan.to_bits()
+            || on.events_processed != off.events_processed
+        {
+            return Err(format!(
+                "{s:?}: coalesce on/off diverged (makespan {} vs {}, events {} vs {})",
+                on.makespan, off.makespan, on.events_processed, off.events_processed
+            ));
         }
         Ok(())
     });
