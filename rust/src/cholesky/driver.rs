@@ -11,6 +11,7 @@ use crate::core::data::Payload;
 use crate::core::ids::DataId;
 use crate::metrics::counters::DlbCounters;
 use crate::metrics::trace::RunTraces;
+use crate::metrics::RunTrace;
 use crate::runtime::threaded::{run_threaded, InitialData};
 use crate::sim::engine::SimEngine;
 use crate::util::rng::Rng;
@@ -24,6 +25,8 @@ use super::verify::{gather_lower, residual, Dense};
 pub struct CholeskyReport {
     pub makespan: f64,
     pub traces: RunTraces,
+    /// Structured span/instant events (empty unless `cfg.trace_enabled`).
+    pub trace: RunTrace,
     pub counters: DlbCounters,
     pub per_process_counters: Vec<DlbCounters>,
     /// Relative residual of L·Lᵀ vs A (real mode only).
@@ -93,6 +96,7 @@ pub fn run_sim(cfg: &Config) -> Result<CholeskyReport> {
     Ok(CholeskyReport {
         makespan: r.makespan,
         traces: r.traces,
+        trace: r.trace,
         counters: r.counters,
         per_process_counters: r.per_process_counters,
         residual: None,
@@ -119,6 +123,7 @@ pub fn run_real(cfg: &Config) -> Result<CholeskyReport> {
     Ok(CholeskyReport {
         makespan: r.makespan,
         traces: r.traces,
+        trace: r.trace,
         counters: r.counters,
         per_process_counters: r.per_process_counters,
         residual: Some(res),

@@ -10,7 +10,9 @@ use ductr::config::{Config, Grid, Mode, PolicyKind, Strategy, TopologyKind, Work
 use ductr::core::task::TaskKind;
 use ductr::dlb::threshold::calibrate_from_traces;
 use ductr::experiments::{ablation, compare, fig1, fig3, fig4, fig5, sec4};
-use ductr::metrics::csv;
+use ductr::metrics::counters::DlbCounters;
+use ductr::metrics::trace::RunTraces;
+use ductr::metrics::{chrome, csv, LatencyReport, RunTrace};
 use ductr::runtime::{KernelLibrary, Manifest};
 use ductr::sim::engine::SimEngine;
 use std::sync::Arc;
@@ -33,6 +35,11 @@ SUBCOMMANDS:
                       diff against a committed baseline — fails the run on
                       an events/sec regression)
     experiment <id>   regenerate a paper figure: fig1 | fig3 | fig4 | fig5 | sec4 | ablation | compare | all
+    trace             run one workload with the span recorder armed, print
+                      latency percentiles, and write a Chrome trace-event
+                      JSON (open in ui.perfetto.dev or chrome://tracing);
+                      takes all RUN FLAGS plus --out FILE (trace.json), or
+                      --validate FILE to check an existing trace instead
     calibrate-wt      §6 calibration: run without DLB, print W_T = max w/2
     artifacts-check   compile + smoke-run every AOT kernel artifact
     help              this text
@@ -58,6 +65,11 @@ RUN FLAGS (defaults in parentheses):
                         delay) sends of one step into one delivery event (off)
     --seed N            run seed (1)
     --trace FILE.csv    write per-process workload traces
+    --trace-record on|off  arm the structured span recorder: prints round /
+                        queue-wait latency percentiles after the run (off)
+    --trace-out FILE    also write a Chrome trace-event JSON of the run
+                        (implies --trace-record on)
+    --csv-dir DIR       write workload.csv + per-rank counters.csv into DIR
     --set sec.key=val   raw config override (repeatable)
 
 EXPERIMENT FLAGS:
@@ -73,6 +85,7 @@ pub fn dispatch() -> Result<()> {
         "compare" => cmd_compare(&mut args),
         "bench" => cmd_bench(&mut args),
         "experiment" => cmd_experiment(&mut args),
+        "trace" => cmd_trace(&mut args),
         "calibrate-wt" => cmd_calibrate(&mut args),
         "artifacts-check" => cmd_artifacts_check(&mut args),
         "help" | "--help" | "-h" => {
@@ -148,6 +161,19 @@ fn config_from_args(args: &mut Args) -> Result<Config> {
             other => bail!("--coalesce: expected on|off, got {other}"),
         };
     }
+    // Same on/off contract again for the span recorder: a typo'd value must
+    // not silently run untraced (or traced) — it errors.
+    if let Some(v) = args.get_str("trace-record") {
+        cfg.trace_enabled = match v.as_str() {
+            "on" | "true" | "1" | "yes" => true,
+            "off" | "false" | "0" | "no" => false,
+            other => bail!("--trace-record: expected on|off, got {other}"),
+        };
+    }
+    if let Some(p) = args.get_str("trace-out") {
+        cfg.trace_out = p;
+        cfg.trace_enabled = true;
+    }
     if let Some(s) = args.get_u64("seed")? {
         cfg.seed = s;
     }
@@ -157,50 +183,51 @@ fn config_from_args(args: &mut Args) -> Result<Config> {
     Ok(cfg)
 }
 
-fn cmd_run(args: &mut Args) -> Result<()> {
-    let trace_out = args.get_str("trace");
-    let cfg = config_from_args(args)?;
-    args.finish().map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+/// Everything a workload run produces that the CLI reports on, whatever
+/// the workload × mode combination was.
+struct WorkloadRun {
+    makespan: f64,
+    traces: RunTraces,
+    trace: RunTrace,
+    counters: DlbCounters,
+    per_process: Vec<DlbCounters>,
+}
 
-    let delta_desc = if cfg.adaptive_delta {
-        format!("adaptive[{}..{}]s (start {})", cfg.delta_min, cfg.delta_max, cfg.delta)
-    } else {
-        format!("{}s", cfg.delta)
-    };
-    println!(
-        "ductr run: workload={} mode={} P={} grid={} dlb={} policy={} topology={} strategy={} W_T={} δ={} seed={}",
-        cfg.workload,
-        cfg.mode,
-        cfg.processes,
-        cfg.effective_grid(),
-        cfg.dlb_enabled,
-        cfg.policy,
-        cfg.topology,
-        cfg.strategy,
-        cfg.wt,
-        delta_desc,
-        cfg.seed
-    );
-
-    let (makespan, traces, counters) = match (cfg.workload, cfg.mode) {
+/// Run the configured workload in the configured mode, printing the
+/// per-workload summary lines (tasks, residual, utilization) as it goes.
+/// Shared by `ductr run` and `ductr trace`.
+fn run_workload(cfg: &Config) -> Result<WorkloadRun> {
+    Ok(match (cfg.workload, cfg.mode) {
         (Workload::Cholesky, Mode::Sim) => {
-            let r = cholesky::run_sim(&cfg)?;
+            let r = cholesky::run_sim(cfg)?;
             println!(
                 "tasks={} static-imbalance={:.3} utilization={:.1}%",
                 r.tasks,
                 r.static_imbalance,
                 r.utilization.unwrap_or(0.0) * 100.0
             );
-            (r.makespan, r.traces, r.counters)
+            WorkloadRun {
+                makespan: r.makespan,
+                traces: r.traces,
+                trace: r.trace,
+                counters: r.counters,
+                per_process: r.per_process_counters,
+            }
         }
         (Workload::Cholesky, Mode::Real) => {
-            let r = cholesky::run_real(&cfg)?;
+            let r = cholesky::run_real(cfg)?;
             let res = r.residual.unwrap_or(f64::NAN);
             println!("tasks={} residual={res:.3e}", r.tasks);
             if !(res < 1e-3) {
                 bail!("numeric verification FAILED: residual {res:.3e}");
             }
-            (r.makespan, r.traces, r.counters)
+            WorkloadRun {
+                makespan: r.makespan,
+                traces: r.traces,
+                trace: r.trace,
+                counters: r.counters,
+                per_process: r.per_process_counters,
+            }
         }
         (w, Mode::Sim) => {
             let graph = match w {
@@ -226,9 +253,15 @@ fn cmd_run(args: &mut Args) -> Result<()> {
                 }
                 Workload::Cholesky => unreachable!(),
             };
-            let r = SimEngine::from_config(&cfg, graph).run().map_err(Error::new)?;
+            let r = SimEngine::from_config(cfg, graph).run().map_err(Error::new)?;
             println!("utilization={:.1}%", r.utilization * 100.0);
-            (r.makespan, r.traces, r.counters)
+            WorkloadRun {
+                makespan: r.makespan,
+                traces: r.traces,
+                trace: r.trace,
+                counters: r.counters,
+                per_process: r.per_process_counters,
+            }
         }
         (w, Mode::Real) => {
             let graph = match w {
@@ -248,17 +281,107 @@ fn cmd_run(args: &mut Args) -> Result<()> {
                 other => bail!("real mode for `{other}` not supported (synthetic payloads)"),
             };
             let init = vec![Vec::new(); cfg.processes];
-            let r = ductr::runtime::run_threaded(&cfg, graph, init, false)?;
-            (r.makespan, r.traces, r.counters)
+            let r = ductr::runtime::run_threaded(cfg, graph, init, false)?;
+            WorkloadRun {
+                makespan: r.makespan,
+                traces: r.traces,
+                trace: r.trace,
+                counters: r.counters,
+                per_process: r.per_process_counters,
+            }
         }
-    };
+    })
+}
 
-    println!("makespan: {makespan:.6} s");
-    println!("dlb: {}", counters.summary_line());
+fn cmd_run(args: &mut Args) -> Result<()> {
+    let trace_out = args.get_str("trace");
+    let csv_dir = args.get_str("csv-dir");
+    let cfg = config_from_args(args)?;
+    args.finish().map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+
+    let delta_desc = if cfg.adaptive_delta {
+        format!("adaptive[{}..{}]s (start {})", cfg.delta_min, cfg.delta_max, cfg.delta)
+    } else {
+        format!("{}s", cfg.delta)
+    };
+    println!(
+        "ductr run: workload={} mode={} P={} grid={} dlb={} policy={} topology={} strategy={} W_T={} δ={} seed={}",
+        cfg.workload,
+        cfg.mode,
+        cfg.processes,
+        cfg.effective_grid(),
+        cfg.dlb_enabled,
+        cfg.policy,
+        cfg.topology,
+        cfg.strategy,
+        cfg.wt,
+        delta_desc,
+        cfg.seed
+    );
+
+    let r = run_workload(&cfg)?;
+
+    println!("makespan: {:.6} s", r.makespan);
+    println!("dlb: {}", r.counters.summary_line());
+    if cfg.trace_enabled {
+        print!("{}", LatencyReport::from_trace(&r.trace).render());
+    }
+    if !cfg.trace_out.is_empty() {
+        chrome::write_trace(&cfg.trace_out, &r.trace, &r.traces)?;
+        println!("chrome trace → {}", cfg.trace_out);
+    }
     if let Some(path) = trace_out {
-        csv::write_traces(&path, &traces)?;
+        csv::write_traces(&path, &r.traces)?;
         println!("traces → {path}");
     }
+    if let Some(dir) = csv_dir {
+        let dir = std::path::PathBuf::from(dir);
+        std::fs::create_dir_all(&dir)?;
+        csv::write_traces(dir.join("workload.csv"), &r.traces)?;
+        csv::write_counters(dir.join("counters.csv"), &r.per_process)?;
+        println!("csv → {} (workload.csv, counters.csv)", dir.display());
+    }
+    Ok(())
+}
+
+/// `ductr trace`: one run with the recorder armed, percentile report, and a
+/// Chrome trace-event JSON on disk.  `--validate FILE` instead checks an
+/// existing trace file (the CI smoke path).
+fn cmd_trace(args: &mut Args) -> Result<()> {
+    if let Some(path) = args.get_str("validate") {
+        args.finish().map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+        let s = chrome::validate_file(&path)?;
+        println!(
+            "trace {path}: {} events ({} spans, {} instants, {} counter samples, \
+             {} metadata), {} distinct event names",
+            s.total, s.spans, s.instants, s.counters, s.metadata, s.names
+        );
+        return Ok(());
+    }
+    let out = args.get_str("out");
+    let mut cfg = config_from_args(args)?;
+    args.finish().map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+    cfg.trace_enabled = true;
+    if let Some(o) = out {
+        cfg.trace_out = o;
+    }
+    if cfg.trace_out.is_empty() {
+        cfg.trace_out = "trace.json".to_string();
+    }
+
+    println!(
+        "ductr trace: workload={} mode={} P={} dlb={} policy={} seed={}",
+        cfg.workload, cfg.mode, cfg.processes, cfg.dlb_enabled, cfg.policy, cfg.seed
+    );
+    let r = run_workload(&cfg)?;
+    println!("makespan: {:.6} s", r.makespan);
+    print!("{}", LatencyReport::from_trace(&r.trace).render());
+    chrome::write_trace(&cfg.trace_out, &r.trace, &r.traces)?;
+    println!(
+        "chrome trace → {} ({} events; open in ui.perfetto.dev or chrome://tracing)",
+        cfg.trace_out,
+        r.trace.total_events()
+    );
     Ok(())
 }
 

@@ -358,7 +358,14 @@ pub struct Config {
     pub artifacts_dir: String,
 
     // [trace]
+    /// Arm the flight recorder: typed span/instant events per process
+    /// (round lifecycle, task lifecycle, message flights) feeding the
+    /// latency histograms and the Chrome/Perfetto exporter.  Off by
+    /// default — the recorder is provably fingerprint-neutral, but off
+    /// keeps the hot paths free of event appends.
     pub trace_enabled: bool,
+    /// Chrome trace-event JSON output path ("" = don't write a file).
+    /// Setting it via `--trace-out` implies `trace_enabled`.
     pub trace_out: String,
 }
 
@@ -401,7 +408,7 @@ impl Default for Config {
             cluster_nodes: 0,
             inter_node_hops: 4,
             artifacts_dir: "artifacts".to_string(),
-            trace_enabled: true,
+            trace_enabled: false,
             trace_out: String::new(),
         }
     }

@@ -25,6 +25,7 @@ use crate::dlb::policy::{
 use crate::dlb::strategy::{select_exports, PartnerInfo};
 use crate::dlb::{CostModel, PerfRecorder};
 use crate::metrics::counters::DlbCounters;
+use crate::metrics::recorder::TraceRecorder;
 use crate::metrics::trace::WorkloadTrace;
 use crate::net::message::{Envelope, MigratedTask, Msg, Role};
 use crate::net::topology::Topology;
@@ -82,6 +83,10 @@ pub struct ProcessParams {
     pub cores: usize,
     pub control_doubles: u64,
     pub cost: CostModel,
+    /// Arm the per-process flight recorder (`[trace] enabled`).  Off is the
+    /// default and costs one enum-discriminant test per hook; determinism
+    /// tests pin that *on* changes no fingerprint bit either.
+    pub trace: bool,
 }
 
 impl ProcessParams {
@@ -109,6 +114,7 @@ impl ProcessParams {
             cores: c.cores_per_process,
             control_doubles: c.control_doubles,
             cost,
+            trace: c.trace_enabled,
         }
     }
 
@@ -140,6 +146,10 @@ pub struct ProcessState {
     pub policy: Box<dyn BalancerPolicy>,
     pub perf: PerfRecorder,
     pub trace: WorkloadTrace,
+    /// Flight recorder: typed span/instant events when `params.trace` is
+    /// set, a free no-op otherwise.  Strictly write-only from this state
+    /// machine — it never feeds back into decisions or the RNG.
+    pub recorder: TraceRecorder,
     pub halted: bool,
     /// Pin this process's busy/idle classification regardless of queue
     /// state — protocol micro-benchmarks only (Fig 3's pairing lab).
@@ -187,6 +197,7 @@ impl ProcessState {
         let v0_waiting = vec![Vec::new(); graph.data.len()];
         let exported = vec![false; graph.num_tasks()];
         let store = DataStore::with_capacity(graph.data.len());
+        let recorder = TraceRecorder::new(params.trace, graph.num_tasks());
         ProcessState {
             me,
             num_processes,
@@ -197,6 +208,7 @@ impl ProcessState {
             policy: balancer,
             perf,
             trace: WorkloadTrace::new(),
+            recorder,
             halted: false,
             role_override: None,
             pending_deps,
@@ -310,6 +322,7 @@ impl ProcessState {
             self.pending_deps[t.id.idx()] = t.deps.len() as u32 + missing;
             if self.pending_deps[t.id.idx()] == 0 {
                 self.queue.push(ReadyTask::home(t.id, self.me));
+                self.recorder.task_ready(t.id, now);
             }
         }
         // Ship v0 handles homed here to their remote consumers (the
@@ -325,7 +338,7 @@ impl ProcessState {
 
         // done before starting? (process owns zero tasks)
         self.maybe_report_done(now, effects);
-        self.maybe_exec(effects);
+        self.maybe_exec(now, effects);
 
         if self.params.dlb_enabled {
             // stagger the first balancer activity uniformly over one δ
@@ -335,11 +348,12 @@ impl ProcessState {
     }
 
     /// Start executions on free cores.
-    fn maybe_exec(&mut self, effects: &mut Vec<Effect>) {
+    fn maybe_exec(&mut self, now: f64, effects: &mut Vec<Effect>) {
         while self.executing < self.params.cores {
             match self.queue.pop() {
                 Some(rt) => {
                     self.executing += 1;
+                    self.recorder.exec_start(rt.task, now);
                     effects.push(Effect::StartExec { task: rt });
                 }
                 None => break,
@@ -359,6 +373,7 @@ impl ProcessState {
         self.executing -= 1;
         let node = self.graph.task(rt.task);
         self.perf.record_exec(node.kind, duration);
+        self.recorder.exec_end(rt.task, duration, now);
         self.last_completion = now;
 
         if rt.is_migrated(self.me) {
@@ -369,7 +384,7 @@ impl ProcessState {
             self.publish_completion(rt.task, now, effects);
         }
         self.record_trace(now);
-        self.maybe_exec(effects);
+        self.maybe_exec(now, effects);
         self.dlb_poll(now, effects);
     }
 
@@ -415,8 +430,9 @@ impl ProcessState {
         *p -= 1;
         if *p == 0 {
             self.queue.push(ReadyTask::home(task, self.me));
+            self.recorder.task_ready(task, now);
             self.record_trace(now);
-            self.maybe_exec(effects);
+            self.maybe_exec(now, effects);
         }
     }
 
@@ -431,7 +447,7 @@ impl ProcessState {
         }
     }
 
-    fn on_owner_done(&mut self, _now: f64, effects: &mut Vec<Effect>) {
+    fn on_owner_done(&mut self, now: f64, effects: &mut Vec<Effect>) {
         debug_assert_eq!(self.me, ProcessId(0));
         self.owners_done += 1;
         if self.owners_done == self.num_processes {
@@ -441,6 +457,7 @@ impl ProcessState {
                 }
             }
             self.halted = true;
+            self.recorder.run_end(now);
             effects.push(Effect::Halt);
         }
     }
@@ -482,6 +499,7 @@ impl ProcessState {
                 if !matches!(payload, Payload::None) {
                     self.store.insert(out, payload);
                 }
+                self.recorder.result_returned(task, now);
                 self.last_completion = now;
                 self.publish_completion(task, now, effects);
             }
@@ -497,12 +515,15 @@ impl ProcessState {
                     // origin is the task's home (not necessarily `from`:
                     // tasks may propagate through intermediaries, §7)
                     self.queue.push(ReadyTask { task: mt.task, origin: mt.origin });
+                    self.recorder.migrated_in(mt.task, from, now);
+                    self.recorder.task_ready(mt.task, now);
                 }
+                self.recorder.round_granted(round, n, now);
                 self.policy.counters_mut().tasks_received += n as u64;
                 self.send(effects, from, Msg::ExportAck { round, accepted: n });
                 self.drive_policy(PolicyEvent::Transfer { from, round, received: n }, now, effects);
                 self.record_trace(now);
-                self.maybe_exec(effects);
+                self.maybe_exec(now, effects);
             }
 
             Msg::OwnerDone { .. } => {
@@ -510,6 +531,7 @@ impl ProcessState {
             }
             Msg::Shutdown => {
                 self.halted = true;
+                self.recorder.run_end(now);
                 effects.push(Effect::Halt);
             }
 
@@ -518,6 +540,7 @@ impl ProcessState {
             // reports, export acks).
             other => {
                 debug_assert!(other.is_dlb(), "unhandled non-DLB message {other:?}");
+                self.recorder.protocol_recv(&other, from, now);
                 self.drive_policy(PolicyEvent::Message { from, msg: &other }, now, effects);
             }
         }
@@ -572,7 +595,12 @@ impl ProcessState {
     ) {
         for a in actions {
             match a {
-                PolicyAction::Send { to, msg } => self.send(effects, to, msg),
+                PolicyAction::Send { to, msg } => {
+                    // observe *after* the policy decided — the recorder sits
+                    // strictly downstream of the RNG
+                    self.recorder.protocol_send(&msg, to, now);
+                    self.send(effects, to, msg);
+                }
                 PolicyAction::ExportSelected { to, round, partner } => {
                     self.export_selected(to, round, partner, now, effects);
                 }
@@ -642,6 +670,7 @@ impl ProcessState {
                 // our own task leaves: expect a ResultReturn for it
                 self.exported[rt.task.idx()] = true;
             }
+            self.recorder.migrated_out(rt.task, partner, now);
             let inputs: Vec<(DataId, Payload)> = node
                 .args
                 .iter()
@@ -1086,6 +1115,70 @@ mod tests {
                 "{policy} must arm its timer"
             );
         }
+    }
+
+    #[test]
+    fn recorder_captures_protocol_and_task_events_only_when_armed() {
+        use crate::metrics::recorder::{RoundOutcome, TraceEvent};
+        // default params: recorder off, hooks are no-ops
+        let mut ps = bag_state(10, true, 2, 0);
+        let _ = run_start(&mut ps);
+        assert!(!ps.recorder.is_on());
+        assert!(ps.recorder.events().is_empty());
+
+        // armed: the busy-side accept → confirm → export → ack flow leaves
+        // a round span plus task events
+        let mut cfg = Config::default();
+        cfg.dlb_enabled = true;
+        cfg.wt = 2;
+        cfg.trace_enabled = true;
+        let params = ProcessParams::from_config(&cfg);
+        let mut b = GraphBuilder::new();
+        for _ in 0..10 {
+            let d = b.data(ProcessId(0), 8, 8);
+            b.task(TaskKind::Synthetic, vec![], d, 1000, None);
+        }
+        let mut ps = ProcessState::new(ProcessId(0), 2, b.build(), params, 1);
+        let _ = run_start(&mut ps);
+        assert!(ps.recorder.is_on());
+        let ready = ps
+            .recorder
+            .events()
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::TaskReady { .. }))
+            .count();
+        assert_eq!(ready, 10, "every start-ready task must be recorded");
+        assert!(ps
+            .recorder
+            .events()
+            .iter()
+            .any(|e| matches!(e, TraceEvent::ExecStart { .. })));
+
+        let _ = deliver(
+            &mut ps,
+            envelope(1, 0, Msg::PairRequest { round: 1, role: Role::Idle, load: 0, eta: 0.0 }),
+            0.001,
+        );
+        let _ = deliver(
+            &mut ps,
+            envelope(1, 0, Msg::PairConfirm { round: 1, load: 0, eta: 0.0 }),
+            0.002,
+        );
+        let _ = deliver(&mut ps, envelope(1, 0, Msg::ExportAck { round: 1, accepted: 7 }), 0.003);
+        let evs = ps.recorder.events();
+        let migrated = evs.iter().filter(|e| matches!(e, TraceEvent::MigratedOut { .. })).count();
+        assert_eq!(migrated, 7, "the shipped excess must be recorded per task");
+        // this process answered the search; if it also opened its own busy
+        // round it must close as Granted on the ack
+        if let Some(TraceEvent::RoundEnd { outcome, tasks, .. }) =
+            evs.iter().find(|e| matches!(e, TraceEvent::RoundEnd { .. }))
+        {
+            assert_eq!(*outcome, RoundOutcome::Granted);
+            assert_eq!(*tasks, 7);
+        }
+        // append order keeps per-process streams time-monotone
+        let times: Vec<f64> = evs.iter().map(TraceEvent::time).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "{times:?}");
     }
 
     #[test]

@@ -28,9 +28,11 @@ use crate::apps::rand_dag;
 use crate::cholesky::{self, ProcessGrid};
 use crate::config::{Config, PolicyKind, TopologyKind};
 use crate::core::graph::TaskGraph;
+use crate::metrics::LatencyReport;
 use crate::sim::engine::{SimEngine, SimResult};
 use crate::util::bench::{run_with, BenchConfig};
 use crate::util::error::{Error, Result};
+use crate::util::json::field as json_field;
 
 /// Fractional events/sec drop against the baseline that fails a
 /// comparison.  Deliberately loose: wall-clock throughput on shared CI
@@ -58,6 +60,16 @@ pub struct BenchCase {
     /// Median wall-clock seconds per run.
     pub wall_secs: f64,
     pub events_per_sec: f64,
+    /// Latency quantiles from one extra *untimed* run with the span
+    /// recorder armed (recording overhead must not contaminate the timed
+    /// samples).  `0.0` = not traced (the very largest cells) or no
+    /// samples in the distribution.
+    pub round_p50: f64,
+    pub round_p95: f64,
+    pub round_p99: f64,
+    pub qwait_p50: f64,
+    pub qwait_p95: f64,
+    pub qwait_p99: f64,
 }
 
 #[derive(Debug)]
@@ -129,11 +141,32 @@ fn time_ab(
     name: &str,
     smoke: bool,
 ) {
+    let start = cases.len();
     for coalesce in [false, true] {
         let mut c = cfg.clone();
         c.coalesce = coalesce;
         let (r, wall) = time_case(&c, graph, name, smoke);
         cases.push(case(workload, name, c.processes, graph.num_tasks(), coalesce, &r, wall));
+    }
+    // One extra untimed run with the recorder armed fills the latency
+    // quantiles for both A/B rows (tracing is a no-op on the sim outcome,
+    // so one traced run describes both).  Skipped on the largest cells —
+    // the event buffer there costs more memory than the quantiles are
+    // worth in a perf baseline.
+    if cfg.processes <= 1024 {
+        let mut c = cfg.clone();
+        c.trace_enabled = true;
+        let r = SimEngine::from_config(&c, Arc::clone(graph)).run().expect("bench trace run");
+        let lat = LatencyReport::from_trace(&r.trace);
+        let q = |v: f64| if v.is_finite() { v } else { 0.0 };
+        for cell in &mut cases[start..] {
+            cell.round_p50 = q(lat.round.quantile(0.50));
+            cell.round_p95 = q(lat.round.quantile(0.95));
+            cell.round_p99 = q(lat.round.quantile(0.99));
+            cell.qwait_p50 = q(lat.queue_wait.quantile(0.50));
+            cell.qwait_p95 = q(lat.queue_wait.quantile(0.95));
+            cell.qwait_p99 = q(lat.queue_wait.quantile(0.99));
+        }
     }
 }
 
@@ -234,6 +267,12 @@ fn case(
         messages_coalesced: r.counters.messages_coalesced,
         wall_secs: wall,
         events_per_sec: if wall > 0.0 { r.events_processed as f64 / wall } else { 0.0 },
+        round_p50: 0.0,
+        round_p95: 0.0,
+        round_p99: 0.0,
+        qwait_p50: 0.0,
+        qwait_p95: 0.0,
+        qwait_p99: 0.0,
     }
 }
 
@@ -289,7 +328,9 @@ impl BenchReport {
                 "    {{\"name\": \"{}\", \"workload\": \"{}\", \"processes\": {}, \
                  \"tasks\": {}, \"coalesce\": {}, \"events\": {}, \"makespan\": {}, \
                  \"peak_pending_events\": {}, \"messages_coalesced\": {}, \
-                 \"wall_secs\": {}, \"events_per_sec\": {}}}{comma}",
+                 \"wall_secs\": {}, \"events_per_sec\": {}, \
+                 \"round_p50\": {}, \"round_p95\": {}, \"round_p99\": {}, \
+                 \"qwait_p50\": {}, \"qwait_p95\": {}, \"qwait_p99\": {}}}{comma}",
                 c.name,
                 c.workload,
                 c.processes,
@@ -300,7 +341,13 @@ impl BenchReport {
                 c.peak_pending_events,
                 c.messages_coalesced,
                 c.wall_secs,
-                c.events_per_sec
+                c.events_per_sec,
+                c.round_p50,
+                c.round_p95,
+                c.round_p99,
+                c.qwait_p50,
+                c.qwait_p95,
+                c.qwait_p99
             )?;
         }
         writeln!(f, "  ]")?;
@@ -331,18 +378,8 @@ pub struct Baseline {
     pub cases: Vec<BaselineCase>,
 }
 
-/// Extract `"key": <value>` from a single JSON-object line (the format
-/// `write_json` emits — one case per line; no serde offline).
-fn json_field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
-    let pat = format!("\"{key}\":");
-    let at = line.find(&pat)? + pat.len();
-    let rest = line[at..].trim_start();
-    if let Some(stripped) = rest.strip_prefix('"') {
-        return Some(&stripped[..stripped.find('"')?]);
-    }
-    let end = rest.find([',', '}']).unwrap_or(rest.len());
-    Some(rest[..end].trim())
-}
+// The `"key": value` line extractor used below (`json_field`) lives in
+// `util::json` now — the trace validator shares it.
 
 /// Load a `ductr bench` JSON baseline.  Tolerant of older layouts: missing
 /// `coalesce` reads as off, missing `placeholder` as false.
@@ -488,6 +525,18 @@ mod tests {
             "coalescing must engage on the cholesky cells"
         );
         assert!(r.cases.iter().all(|c| c.coalesce || c.messages_coalesced == 0));
+        // every smoke cell is ≤ 1024 processes, so all get the traced run:
+        // tasks always queue (qwait counted) and DLB is on (rounds happen
+        // somewhere); quantiles are finite and non-negative everywhere
+        assert!(r.cases.iter().all(|c| {
+            [c.round_p50, c.round_p95, c.round_p99, c.qwait_p50, c.qwait_p95, c.qwait_p99]
+                .iter()
+                .all(|v| v.is_finite() && *v >= 0.0)
+        }));
+        assert!(
+            r.cases.iter().any(|c| c.round_p95 > 0.0),
+            "some smoke cell must record pair-search rounds"
+        );
         let rendered = r.render();
         assert!(rendered.contains("events/s"));
         let p = std::env::temp_dir().join("ductr_bench_smoke.json");
@@ -526,6 +575,12 @@ mod tests {
                 messages_coalesced: 0,
                 wall_secs: 0.01,
                 events_per_sec: 10_000.0,
+                round_p50: 0.0,
+                round_p95: 0.0,
+                round_p99: 0.0,
+                qwait_p50: 0.0,
+                qwait_p95: 0.0,
+                qwait_p99: 0.0,
             }],
         }
     }

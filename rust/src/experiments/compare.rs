@@ -22,6 +22,8 @@ use crate::apps::rand_dag;
 use crate::cholesky;
 use crate::config::{Config, Grid, PolicyKind, TopologyKind};
 use crate::metrics::counters::DlbCounters;
+use crate::metrics::histogram::fmt_secs;
+use crate::metrics::LatencyReport;
 use crate::sim::engine::SimEngine;
 use crate::util::error::{Context, Result};
 
@@ -59,6 +61,11 @@ pub struct CompareRow {
     pub adaptive: bool,
     pub makespan: f64,
     pub counters: DlbCounters,
+    /// p95 pair-search round latency (NaN when the run had no rounds —
+    /// the DLB-off baseline).
+    pub round_p95: f64,
+    /// p95 task queue wait (ready → execution start).
+    pub queue_wait_p95: f64,
 }
 
 impl CompareRow {
@@ -97,6 +104,10 @@ fn base_config(w: CompareWorkload, topo: TopologyKind, seed: u64, quick: bool) -
     c.topology = topo;
     c.wt = 3;
     c.delta = 0.002;
+    // Record spans everywhere: the determinism test below doubles as the
+    // standing check that tracing never perturbs results, and the table
+    // gains latency columns for free.
+    c.trace_enabled = true;
     match w {
         CompareWorkload::Cholesky => {
             c.nb = if quick { 8 } else { 12 };
@@ -108,12 +119,12 @@ fn base_config(w: CompareWorkload, topo: TopologyKind, seed: u64, quick: bool) -
     c
 }
 
-fn run_one(w: CompareWorkload, cfg: &Config) -> Result<(f64, DlbCounters)> {
+fn run_one(w: CompareWorkload, cfg: &Config) -> Result<(f64, DlbCounters, LatencyReport)> {
     match w {
         CompareWorkload::Cholesky => {
             let r = cholesky::run_sim(cfg)
                 .with_context(|| format!("cholesky on {}", cfg.topology))?;
-            Ok((r.makespan, r.counters))
+            Ok((r.makespan, r.counters, LatencyReport::from_trace(&r.trace)))
         }
         CompareWorkload::RandDag => {
             let mut params = rand_dag::DagParams::default();
@@ -123,7 +134,7 @@ fn run_one(w: CompareWorkload, cfg: &Config) -> Result<(f64, DlbCounters)> {
             let r = SimEngine::from_config(cfg, Arc::clone(&g))
                 .run()
                 .map_err(crate::util::error::Error::new)?;
-            Ok((r.makespan, r.counters))
+            Ok((r.makespan, r.counters, LatencyReport::from_trace(&r.trace)))
         }
     }
 }
@@ -136,7 +147,7 @@ pub fn run(seed: u64, quick: bool) -> Result<CompareResult> {
         for topo in TOPOLOGIES {
             let mut cfg = base_config(w, topo, seed, quick);
             cfg.dlb_enabled = false;
-            let (makespan, counters) = run_one(w, &cfg)?;
+            let (makespan, counters, lat) = run_one(w, &cfg)?;
             rows.push(CompareRow {
                 workload: w,
                 topology: topo,
@@ -144,6 +155,8 @@ pub fn run(seed: u64, quick: bool) -> Result<CompareResult> {
                 adaptive: false,
                 makespan,
                 counters,
+                round_p95: lat.round.quantile(0.95),
+                queue_wait_p95: lat.queue_wait.quantile(0.95),
             });
             for policy in PolicyKind::ALL {
                 for adaptive in [false, true] {
@@ -151,7 +164,7 @@ pub fn run(seed: u64, quick: bool) -> Result<CompareResult> {
                     cfg.dlb_enabled = true;
                     cfg.policy = policy;
                     cfg.adaptive_delta = adaptive;
-                    let (makespan, counters) = run_one(w, &cfg)?;
+                    let (makespan, counters, lat) = run_one(w, &cfg)?;
                     rows.push(CompareRow {
                         workload: w,
                         topology: topo,
@@ -159,6 +172,8 @@ pub fn run(seed: u64, quick: bool) -> Result<CompareResult> {
                         adaptive,
                         makespan,
                         counters,
+                        round_p95: lat.round.quantile(0.95),
+                        queue_wait_p95: lat.queue_wait.quantile(0.95),
                     });
                 }
             }
@@ -184,7 +199,7 @@ impl CompareResult {
             self.processes, self.seed
         ));
         out.push_str(&format!(
-            "{:<10} {:<12} {:<13} {:<9} {:>12} {:>8} {:>10} {:>11} {:>10}\n",
+            "{:<10} {:<12} {:<13} {:<9} {:>12} {:>8} {:>10} {:>11} {:>10} {:>10} {:>10}\n",
             "workload",
             "topology",
             "policy",
@@ -193,7 +208,9 @@ impl CompareResult {
             "vs_off",
             "migrated",
             "inter_node",
-            "ctrl_msgs"
+            "ctrl_msgs",
+            "round_p95",
+            "qwait_p95"
         ));
         for r in &self.rows {
             let vs = match (r.policy, self.baseline(r.workload, r.topology)) {
@@ -203,7 +220,7 @@ impl CompareResult {
                 _ => "—".to_string(),
             };
             out.push_str(&format!(
-                "{:<10} {:<12} {:<13} {:<9} {:>12.6} {:>8} {:>10} {:>11} {:>10}\n",
+                "{:<10} {:<12} {:<13} {:<9} {:>12.6} {:>8} {:>10} {:>11} {:>10} {:>10} {:>10}\n",
                 r.workload.label(),
                 r.topology.to_string(),
                 r.policy_label(),
@@ -213,6 +230,8 @@ impl CompareResult {
                 r.counters.tasks_exported,
                 r.counters.tasks_exported_remote,
                 r.counters.requests_sent,
+                fmt_secs(r.round_p95),
+                fmt_secs(r.queue_wait_p95),
             ));
         }
         out
@@ -224,12 +243,12 @@ impl CompareResult {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "workload,topology,policy,adaptive,makespan,migrated,migrated_remote,received,transactions,requests"
+            "workload,topology,policy,adaptive,makespan,migrated,migrated_remote,received,transactions,requests,round_p95,queue_wait_p95"
         )?;
         for r in &self.rows {
             writeln!(
                 f,
-                "{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.workload.label(),
                 r.topology,
                 r.policy_label(),
@@ -240,6 +259,8 @@ impl CompareResult {
                 r.counters.tasks_received,
                 r.counters.transactions,
                 r.counters.requests_sent,
+                r.round_p95,
+                r.queue_wait_p95,
             )?;
         }
         Ok(())
@@ -257,8 +278,12 @@ mod tests {
         assert_eq!(a.rows.len(), 2 * 3 * 9);
         for r in &a.rows {
             assert!(r.makespan > 0.0, "{r:?}");
+            // every run executes tasks, so queue-wait always has samples;
+            // the DLB-off baseline has no rounds, so its round p95 is NaN
+            assert!(r.queue_wait_p95.is_finite(), "{r:?}");
             if r.policy.is_none() {
                 assert_eq!(r.counters.tasks_exported, 0, "baseline must not migrate");
+                assert!(r.round_p95.is_nan(), "baseline has no rounds: {r:?}");
             }
             assert!(
                 r.counters.tasks_exported_remote <= r.counters.tasks_exported,
@@ -275,6 +300,8 @@ mod tests {
         for (x, y) in a.rows.iter().zip(&b.rows) {
             assert_eq!(x.makespan, y.makespan, "seeded rerun must reproduce");
             assert_eq!(x.counters, y.counters);
+            assert_eq!(x.round_p95.to_bits(), y.round_p95.to_bits());
+            assert_eq!(x.queue_wait_p95.to_bits(), y.queue_wait_p95.to_bits());
         }
     }
 

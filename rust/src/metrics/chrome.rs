@@ -1,0 +1,306 @@
+//! Chrome trace-event / Perfetto exporter for recorder output.
+//!
+//! Emits the JSON Array-of-objects trace format that chrome://tracing and
+//! https://ui.perfetto.dev load directly: one `pid` per simulated process,
+//! three `tid` tracks each (protocol rounds, task execution, network
+//! flights), "X" complete events for spans, "i" instants for handshake and
+//! migration markers, and a "C" counter track carrying the ready-queue
+//! depth (`w_i(t)`).  Timestamps are microseconds (the format's unit) from
+//! the engine clock — virtual time in the DES, monotonic run time in the
+//! threaded runtime.
+//!
+//! The writer puts one event object per line so [`validate_file`] — and
+//! CI's smoke-trace step — can sanity-check an emitted file with the same
+//! line-oriented `util::json::field` parser the bench baselines use,
+//! without a JSON parser dependency.
+
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use super::recorder::{RunTrace, TraceEvent};
+use super::trace::RunTraces;
+use crate::util::error::{Error, Result};
+
+/// `tid` of the protocol-round track.
+const TID_PROTOCOL: u32 = 0;
+/// `tid` of the task-execution track.
+const TID_TASKS: u32 = 1;
+/// `tid` of the network-flight track.
+const TID_NET: u32 = 2;
+
+fn us(t: f64) -> f64 {
+    t * 1e6
+}
+
+/// Write one run's trace (plus queue-depth counters from the workload
+/// traces) as Chrome trace-event JSON.
+pub fn write_trace(
+    path: impl AsRef<Path>,
+    run: &RunTrace,
+    workloads: &RunTraces,
+) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "{{\"displayTimeUnit\":\"ms\",\"traceEvents\":[")?;
+    let mut first = true;
+    let mut emit = |w: &mut BufWriter<std::fs::File>, line: String| -> std::io::Result<()> {
+        if first {
+            first = false;
+            writeln!(w, "{line}")
+        } else {
+            writeln!(w, ",{line}")
+        }
+    };
+
+    for (pid, evs) in run.per_process.iter().enumerate() {
+        emit(
+            &mut w,
+            format!(
+                "{{\"ph\":\"M\",\"pid\":{pid},\"name\":\"process_name\",\"args\":{{\"name\":\"rank {pid}\"}}}}"
+            ),
+        )?;
+        for (tid, tname) in
+            [(TID_PROTOCOL, "protocol"), (TID_TASKS, "tasks"), (TID_NET, "net")]
+        {
+            emit(
+                &mut w,
+                format!(
+                    "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"thread_name\",\"args\":{{\"name\":\"{tname}\"}}}}"
+                ),
+            )?;
+        }
+        for e in evs {
+            let line = match *e {
+                TraceEvent::RoundEnd { round, outcome, tasks, started, t, .. } => format!(
+                    "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{TID_PROTOCOL},\"name\":\"round\",\"ts\":{:.3},\"dur\":{:.3},\"args\":{{\"round\":{round},\"outcome\":\"{}\",\"tasks\":{tasks}}}}}",
+                    us(started),
+                    us((t - started).max(0.0)),
+                    outcome.name(),
+                ),
+                TraceEvent::RoundStart { .. } => continue, // folded into the RoundEnd span
+                TraceEvent::RoundRequest { round, to, t } => instant(
+                    pid, TID_PROTOCOL, "request", t,
+                    format!("\"round\":{round},\"peer\":{}", to.0),
+                ),
+                TraceEvent::RoundAccept { round, from, t } => instant(
+                    pid, TID_PROTOCOL, "accept", t,
+                    format!("\"round\":{round},\"peer\":{}", from.0),
+                ),
+                TraceEvent::RoundDecline { round, from, t } => instant(
+                    pid, TID_PROTOCOL, "decline", t,
+                    format!("\"round\":{round},\"peer\":{}", from.0),
+                ),
+                TraceEvent::RoundConfirm { round, to, t } => instant(
+                    pid, TID_PROTOCOL, "confirm", t,
+                    format!("\"round\":{round},\"peer\":{}", to.0),
+                ),
+                TraceEvent::ExecEnd { task, started, t } => format!(
+                    "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{TID_TASKS},\"name\":\"exec\",\"ts\":{:.3},\"dur\":{:.3},\"args\":{{\"task\":{}}}}}",
+                    us(started),
+                    us((t - started).max(0.0)),
+                    task.0,
+                ),
+                // ready/start feed the queue-wait histogram; the span view
+                // only needs the ExecEnd-carried interval
+                TraceEvent::TaskReady { .. } | TraceEvent::ExecStart { .. } => continue,
+                TraceEvent::MigratedOut { task, to, t } => instant(
+                    pid, TID_TASKS, "migrated_out", t,
+                    format!("\"task\":{},\"peer\":{}", task.0, to.0),
+                ),
+                TraceEvent::MigratedIn { task, from, t } => instant(
+                    pid, TID_TASKS, "migrated_in", t,
+                    format!("\"task\":{},\"peer\":{}", task.0, from.0),
+                ),
+                TraceEvent::ResultReturned { task, t } => instant(
+                    pid, TID_TASKS, "result_returned", t,
+                    format!("\"task\":{}", task.0),
+                ),
+                TraceEvent::MsgFlight { kind, from, sent, t } => format!(
+                    "{{\"ph\":\"X\",\"pid\":{pid},\"tid\":{TID_NET},\"name\":\"{kind}\",\"ts\":{:.3},\"dur\":{:.3},\"args\":{{\"from\":{}}}}}",
+                    us(sent),
+                    us((t - sent).max(0.0)),
+                    from.0,
+                ),
+            };
+            emit(&mut w, line)?;
+        }
+    }
+
+    // queue-depth counter tracks from the w_i(t) step functions
+    for (pid, tr) in workloads.per_process.iter().enumerate() {
+        for &(t, depth) in tr.samples() {
+            emit(
+                &mut w,
+                format!(
+                    "{{\"ph\":\"C\",\"pid\":{pid},\"name\":\"queue depth\",\"ts\":{:.3},\"args\":{{\"ready\":{depth}}}}}",
+                    us(t),
+                ),
+            )?;
+        }
+    }
+
+    writeln!(w, "]}}")?;
+    w.flush()
+}
+
+fn instant(pid: usize, tid: u32, name: &str, t: f64, args: String) -> String {
+    format!(
+        "{{\"ph\":\"i\",\"pid\":{pid},\"tid\":{tid},\"name\":\"{name}\",\"ts\":{:.3},\"s\":\"t\",\"args\":{{{args}}}}}",
+        us(t),
+    )
+}
+
+/// Shape summary of an emitted trace file, from the line-oriented parser.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub struct TraceStats {
+    pub total: usize,
+    pub spans: usize,
+    pub instants: usize,
+    pub counters: usize,
+    pub metadata: usize,
+    /// Distinct event names seen (round, exec, pair_request, ...).
+    pub names: usize,
+}
+
+/// Validate a trace file written by [`write_trace`]: the envelope must be
+/// present, every event line must parse, and there must be at least one
+/// non-metadata event.  Returns counts per event phase for reporting.
+pub fn validate_file(path: impl AsRef<Path>) -> Result<TraceStats> {
+    let path = path.as_ref();
+    let body = std::fs::read_to_string(path)
+        .map_err(|e| Error::msg(format!("cannot read trace {}: {e}", path.display())))?;
+    if !body.contains("\"traceEvents\"") {
+        return Err(Error::msg(format!("{}: missing traceEvents envelope", path.display())));
+    }
+    if !body.trim_end().ends_with("]}") {
+        return Err(Error::msg(format!("{}: truncated (no closing ]}})", path.display())));
+    }
+    let mut stats = TraceStats::default();
+    let mut names = std::collections::BTreeSet::new();
+    for line in body.lines() {
+        let Some(ph) = crate::util::json::field(line, "ph") else { continue };
+        let trimmed = line.trim_start_matches(',').trim();
+        if !trimmed.starts_with('{') || !trimmed.ends_with("}") {
+            return Err(Error::msg(format!("{}: malformed event line: {line}", path.display())));
+        }
+        stats.total += 1;
+        match ph {
+            "X" => stats.spans += 1,
+            "i" => stats.instants += 1,
+            "C" => stats.counters += 1,
+            "M" => stats.metadata += 1,
+            other => {
+                return Err(Error::msg(format!(
+                    "{}: unexpected event phase {other:?}",
+                    path.display()
+                )))
+            }
+        }
+        if ph != "M" {
+            if let Some(name) = crate::util::json::field(line, "name") {
+                names.insert(name.to_string());
+            }
+        }
+    }
+    stats.names = names.len();
+    if stats.total - stats.metadata == 0 {
+        return Err(Error::msg(format!("{}: no events beyond metadata", path.display())));
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ids::{ProcessId, TaskId};
+    use crate::metrics::recorder::{RoundOutcome, TraceRecorder};
+    use crate::net::message::{Msg, Role};
+
+    fn sample_trace() -> (RunTrace, RunTraces) {
+        let mut rec = TraceRecorder::new(true, 4);
+        rec.task_ready(TaskId(0), 0.0);
+        rec.protocol_send(
+            &Msg::PairRequest { round: 1, role: Role::Idle, load: 0, eta: 0.0 },
+            ProcessId(1),
+            1.0e-4,
+        );
+        rec.protocol_recv(&Msg::PairAccept { round: 1, load: 5, eta: 0.0 }, ProcessId(1), 2.0e-4);
+        rec.protocol_send(&Msg::PairConfirm { round: 1, load: 0, eta: 0.0 }, ProcessId(1), 2.1e-4);
+        rec.msg_flight("task_export", ProcessId(1), 2.5e-4, 3.0e-4);
+        rec.migrated_in(TaskId(2), ProcessId(1), 3.0e-4);
+        rec.round_granted(1, 1, 3.0e-4);
+        rec.exec_start(TaskId(0), 4.0e-4);
+        rec.exec_end(TaskId(0), 2.0e-4, 6.0e-4);
+        rec.run_end(1.0e-3);
+
+        let mut run = RunTrace::new(2);
+        run.per_process[0] = rec.take_events();
+        let mut wl = RunTraces::new(2);
+        wl.record(ProcessId(0), 0.0, 1);
+        wl.record(ProcessId(0), 6.0e-4, 0);
+        wl.record(ProcessId(1), 0.0, 3);
+        (run, wl)
+    }
+
+    #[test]
+    fn roundtrip_write_then_validate() {
+        let (run, wl) = sample_trace();
+        let p = std::env::temp_dir().join("ductr_chrome_rt.json");
+        write_trace(&p, &run, &wl).expect("write");
+        let body = std::fs::read_to_string(&p).expect("read");
+        assert!(body.starts_with("{\"displayTimeUnit\""));
+        // spans: round + exec + flight; counter samples: 3
+        let stats = validate_file(&p).expect("valid");
+        assert_eq!(stats.spans, 3);
+        assert!(stats.instants >= 4, "{stats:?}"); // request/accept/confirm/migrated_in
+        assert_eq!(stats.counters, 3);
+        // ≥ 4 distinct event types: round, exec, task_export, queue depth, ...
+        assert!(stats.names >= 4, "{stats:?}");
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn spans_fold_start_into_end() {
+        let (run, wl) = sample_trace();
+        assert!(run
+            .per_process[0]
+            .iter()
+            .any(|e| matches!(e, TraceEvent::RoundEnd { outcome: RoundOutcome::Granted, .. })));
+        let p = std::env::temp_dir().join("ductr_chrome_spans.json");
+        write_trace(&p, &run, &wl).expect("write");
+        let body = std::fs::read_to_string(&p).expect("read");
+        let round_line = body
+            .lines()
+            .find(|l| l.contains("\"name\":\"round\""))
+            .expect("round span present");
+        assert_eq!(crate::util::json::field(round_line, "ph"), Some("X"));
+        // round 1 opened at 100µs, granted at 300µs
+        assert_eq!(crate::util::json::field(round_line, "ts"), Some("100.000"));
+        assert_eq!(crate::util::json::field(round_line, "dur"), Some("200.000"));
+        assert!(round_line.contains("\"outcome\":\"granted\""));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn validate_rejects_garbage_and_empty() {
+        let p = std::env::temp_dir().join("ductr_chrome_bad.json");
+        std::fs::write(&p, "not json at all").expect("write");
+        assert!(validate_file(&p).is_err());
+        std::fs::write(&p, "{\"traceEvents\":[\n]}\n").expect("write");
+        assert!(validate_file(&p).is_err(), "no events must fail");
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn empty_processes_still_produce_valid_envelope_with_counters() {
+        let run = RunTrace::new(1);
+        let mut wl = RunTraces::new(1);
+        wl.record(ProcessId(0), 0.0, 2);
+        let p = std::env::temp_dir().join("ductr_chrome_empty.json");
+        write_trace(&p, &run, &wl).expect("write");
+        let stats = validate_file(&p).expect("valid");
+        assert_eq!(stats.spans, 0);
+        assert_eq!(stats.counters, 1);
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -4,6 +4,7 @@
 use std::io::{self, Write};
 use std::path::Path;
 
+use super::counters::DlbCounters;
 use super::trace::RunTraces;
 
 /// Write per-process workload traces as long-format CSV:
@@ -15,6 +16,41 @@ pub fn write_traces(path: impl AsRef<Path>, traces: &RunTraces) -> io::Result<()
         for &(t, w) in tr.samples() {
             writeln!(f, "{p},{t},{w}")?;
         }
+    }
+    Ok(())
+}
+
+/// Write per-process DLB counters, one row per rank — the full counter
+/// set a merged run summary collapses away, for offline per-rank analysis
+/// of sweeps (`ductr run --csv-dir`).
+pub fn write_counters(path: impl AsRef<Path>, per_process: &[DlbCounters]) -> io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(
+        f,
+        "process,rounds,failed_rounds,requests_sent,requests_received,accepts_sent,\
+         declines_sent,transactions,empty_transactions,tasks_exported,tasks_exported_remote,\
+         tasks_received,migration_doubles,confirm_timeouts,late_grants,messages_coalesced"
+    )?;
+    for (p, c) in per_process.iter().enumerate() {
+        writeln!(
+            f,
+            "{p},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+            c.rounds,
+            c.failed_rounds,
+            c.requests_sent,
+            c.requests_received,
+            c.accepts_sent,
+            c.declines_sent,
+            c.transactions,
+            c.empty_transactions,
+            c.tasks_exported,
+            c.tasks_exported_remote,
+            c.tasks_received,
+            c.migration_doubles,
+            c.confirm_timeouts,
+            c.late_grants,
+            c.messages_coalesced,
+        )?;
     }
     Ok(())
 }
@@ -50,6 +86,26 @@ mod tests {
         assert!(body.starts_with("process,time,workload\n"));
         assert!(body.contains("0,0,1"));
         assert!(body.contains("1,0.5,2"));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn counters_csv_one_row_per_rank() {
+        use crate::metrics::DlbCounters;
+        let per = vec![
+            DlbCounters { rounds: 3, tasks_exported: 2, ..Default::default() },
+            DlbCounters { requests_received: 5, ..Default::default() },
+        ];
+        let p = std::env::temp_dir().join("ductr_counters_test.csv");
+        write_counters(&p, &per).expect("write");
+        let body = std::fs::read_to_string(&p).expect("read");
+        let mut lines = body.lines();
+        let header = lines.next().expect("header");
+        assert!(header.starts_with("process,rounds,failed_rounds,"));
+        assert_eq!(header.split(',').count(), 16);
+        assert_eq!(lines.next().expect("rank 0"), "0,3,0,0,0,0,0,0,0,2,0,0,0,0,0,0");
+        assert_eq!(lines.next().expect("rank 1"), "1,0,0,0,5,0,0,0,0,0,0,0,0,0,0,0");
+        assert!(lines.next().is_none());
         let _ = std::fs::remove_file(p);
     }
 

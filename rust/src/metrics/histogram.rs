@@ -1,0 +1,293 @@
+//! Log-bucketed latency histograms over recorder events.
+//!
+//! The recorder ([`super::recorder`]) captures raw spans; this module folds
+//! them into fixed-size log₂ histograms so `ductr run`/`compare`/`bench`
+//! can print p50/p95/p99 without keeping every sample.  Buckets cover
+//! 1 ns .. ~1100 s with 4 sub-buckets per octave (≈ 19 % relative
+//! resolution), which is far finer than the scheduling noise of either
+//! engine.  Histograms merge associatively, so per-process recorders can
+//! be folded into one run-wide report in any order.
+
+use super::recorder::{RoundOutcome, RunTrace, TraceEvent};
+
+/// Smallest distinguishable latency: everything at or below lands in
+/// bucket 0.
+const MIN_LAT: f64 = 1e-9;
+/// Sub-buckets per factor-of-two.
+const SUB: usize = 4;
+/// 40 octaves × 4 ⇒ 1 ns .. ~1100 s before the overflow bucket.
+const BUCKETS: usize = 40 * SUB;
+
+/// Fixed-memory log₂ latency histogram with exact count/sum/min/max.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+fn bucket_of(x: f64) -> usize {
+    if x <= MIN_LAT {
+        return 0;
+    }
+    (((x / MIN_LAT).log2() * SUB as f64) as usize).min(BUCKETS - 1)
+}
+
+/// Upper edge of bucket `i` in seconds.
+fn bucket_hi(i: usize) -> f64 {
+    MIN_LAT * ((i + 1) as f64 / SUB as f64).exp2()
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one latency in seconds.  Negative and non-finite samples are
+    /// dropped (they indicate a recorder bug, which the property tests
+    /// catch directly on the raw events).
+    pub fn record(&mut self, x: f64) {
+        if !x.is_finite() || x < 0.0 {
+            return;
+        }
+        self.buckets[bucket_of(x)] += 1;
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { f64::NAN } else { self.sum / self.count as f64 }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { f64::NAN } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { f64::NAN } else { self.max }
+    }
+
+    /// Quantile estimate (`q` in [0, 1]): walk the cumulative bucket counts
+    /// and report the matched bucket's upper edge, clamped to the exact
+    /// observed [min, max].  NaN on an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return bucket_hi(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, o: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&o.buckets) {
+            *a += b;
+        }
+        self.count += o.count;
+        self.sum += o.sum;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+    }
+}
+
+/// Seconds formatted with an auto-scaled unit; `—` for NaN (empty sample).
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return "—".to_string();
+    }
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// The four standing latency distributions of one run.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyReport {
+    /// Pair-search round latency: `RoundStart` → terminal outcome.
+    pub round: LatencyHistogram,
+    /// Steal-grant latency: last request sent → tasks arrived (granted
+    /// rounds only).
+    pub grant: LatencyHistogram,
+    /// Task queue wait: ready → execution start.
+    pub queue_wait: LatencyHistogram,
+    /// Message flight time: send → delivery (DES only; the threaded
+    /// runtime's channels have no stamped send time).
+    pub flight: LatencyHistogram,
+}
+
+impl LatencyReport {
+    /// Fold every process's recorded events into run-wide histograms.
+    pub fn from_trace(rt: &RunTrace) -> LatencyReport {
+        let mut rep = LatencyReport::default();
+        for evs in &rt.per_process {
+            for e in evs {
+                match *e {
+                    TraceEvent::RoundEnd { outcome, started, requested, t, .. } => {
+                        rep.round.record(t - started);
+                        if outcome == RoundOutcome::Granted {
+                            rep.grant.record(t - requested);
+                        }
+                    }
+                    TraceEvent::ExecStart { queue_wait, .. } => {
+                        rep.queue_wait.record(queue_wait);
+                    }
+                    TraceEvent::MsgFlight { sent, t, .. } => {
+                        rep.flight.record(t - sent);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        rep
+    }
+
+    /// Quick-look table: one line per distribution with n/p50/p95/p99/max.
+    pub fn render(&self) -> String {
+        let mut s = String::from("latency            n        p50        p95        p99        max\n");
+        for (name, h) in [
+            ("round", &self.round),
+            ("grant", &self.grant),
+            ("queue-wait", &self.queue_wait),
+            ("msg-flight", &self.flight),
+        ] {
+            s.push_str(&format!(
+                "  {:<12} {:>8} {:>10} {:>10} {:>10} {:>10}\n",
+                name,
+                h.count(),
+                fmt_secs(h.quantile(0.50)),
+                fmt_secs(h.quantile(0.95)),
+                fmt_secs(h.quantile(0.99)),
+                fmt_secs(h.max()),
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_nan_everywhere() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.quantile(0.5).is_nan());
+        assert!(h.mean().is_nan());
+        assert!(h.min().is_nan() && h.max().is_nan());
+        assert_eq!(fmt_secs(h.quantile(0.5)), "—");
+    }
+
+    #[test]
+    fn quantiles_bracket_the_sample_within_bucket_resolution() {
+        let mut h = LatencyHistogram::new();
+        // 1..=1000 µs uniform
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-6);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        // log buckets at 4/octave have ≤ 19% upward error
+        assert!(p50 >= 500e-6 && p50 <= 500e-6 * 1.2, "p50={p50}");
+        assert!(p99 >= 990e-6 && p99 <= 990e-6 * 1.2, "p99={p99}");
+        assert!(p50 <= h.quantile(0.95) && h.quantile(0.95) <= p99);
+        assert!((h.mean() - 500.5e-6).abs() < 1e-9);
+        assert_eq!(h.min(), 1e-6);
+        assert_eq!(h.max(), 1000e-6);
+    }
+
+    #[test]
+    fn quantile_clamps_to_observed_range() {
+        let mut h = LatencyHistogram::new();
+        h.record(3.0e-3);
+        assert_eq!(h.quantile(0.0), 3.0e-3);
+        assert_eq!(h.quantile(0.5), 3.0e-3);
+        assert_eq!(h.quantile(1.0), 3.0e-3);
+    }
+
+    #[test]
+    fn zero_and_tiny_latencies_land_in_bucket_zero() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.0);
+        h.record(1e-12);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.99) <= MIN_LAT * 2.0);
+    }
+
+    #[test]
+    fn invalid_samples_are_dropped() {
+        let mut h = LatencyHistogram::new();
+        h.record(-1.0);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn merge_equals_single_pass() {
+        let xs: Vec<f64> = (1..200).map(|i| i as f64 * 7.3e-7).collect();
+        let mut whole = LatencyHistogram::new();
+        for &x in &xs {
+            whole.record(x);
+        }
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for &x in &xs[..71] {
+            a.record(x);
+        }
+        for &x in &xs[71..] {
+            b.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.quantile(0.5), whole.quantile(0.5));
+        assert_eq!(a.quantile(0.99), whole.quantile(0.99));
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+    }
+
+    #[test]
+    fn fmt_secs_picks_sane_units() {
+        assert_eq!(fmt_secs(2.5), "2.500s");
+        assert_eq!(fmt_secs(2.5e-3), "2.500ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.500µs");
+        assert_eq!(fmt_secs(2.5e-9), "2.5ns");
+    }
+}

@@ -1,9 +1,16 @@
 //! Observability: per-process workload traces (the w_i(t) of Figs 4–5),
-//! DLB event counters, and CSV writers.
+//! DLB event counters, CSV writers, and the flight recorder — typed
+//! span/instant events (`recorder`), latency histograms over them
+//! (`histogram`), and a Chrome/Perfetto trace exporter (`chrome`).
 
+pub mod chrome;
 pub mod counters;
 pub mod csv;
+pub mod histogram;
+pub mod recorder;
 pub mod trace;
 
 pub use counters::DlbCounters;
+pub use histogram::{LatencyHistogram, LatencyReport};
+pub use recorder::{RoundOutcome, RunTrace, TraceEvent, TraceRecorder};
 pub use trace::WorkloadTrace;

@@ -1,0 +1,490 @@
+//! The flight recorder: typed span/instant events for one process.
+//!
+//! [`TraceRecorder`] is an enum with a no-op variant so a disabled recorder
+//! (the default) costs one discriminant test per hook and allocates
+//! nothing — determinism tests in `tests/determinism.rs` enforce that
+//! enabling it changes no fingerprint bit either, because the recorder
+//! only *observes* the coordinator: it never touches the RNG, the queues,
+//! or the effect stream.
+//!
+//! Timestamps are whatever clock the host engine passes in: virtual
+//! seconds in the DES, monotonic seconds since run start in the threaded
+//! runtime ("one coordinator, two clocks" — see ARCHITECTURE.md).  Events
+//! are appended in call order, so per-process streams are time-monotone
+//! as long as the engine's `now` is (both are).
+//!
+//! Event taxonomy (three tracks per process):
+//!
+//! - **protocol**: pair-search round lifecycle.  A *round* opens when the
+//!   coordinator sends its first `PairRequest`/`StealRequest` with a new
+//!   round id, accumulates handshake instants (accept/decline/confirm),
+//!   and closes with a terminal [`RoundOutcome`] — `Granted`/`Empty` when
+//!   tasks (or an empty export / its ack) arrive, `Superseded` when a new
+//!   round starts first, `Abandoned` at shutdown.
+//! - **tasks**: ready → exec start (with queue wait) → exec end, plus
+//!   migration and result-return instants.
+//! - **net**: per-message in-flight intervals, recorded on the *receiver*
+//!   (the DES stamps `Flight::sent_at`; the threaded runtime's channels
+//!   carry no send stamp, so this track is DES-only).
+
+use crate::core::ids::{ProcessId, TaskId};
+use crate::net::message::Msg;
+
+/// How a pair-search round ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundOutcome {
+    /// Tasks were obtained (idle side) or shipped and acked (busy side).
+    Granted,
+    /// The transaction completed but moved zero tasks.
+    Empty,
+    /// A new round started before this one reached a terminal message.
+    Superseded,
+    /// Still open when the process halted.
+    Abandoned,
+}
+
+impl RoundOutcome {
+    pub fn name(self) -> &'static str {
+        match self {
+            RoundOutcome::Granted => "granted",
+            RoundOutcome::Empty => "empty",
+            RoundOutcome::Superseded => "superseded",
+            RoundOutcome::Abandoned => "abandoned",
+        }
+    }
+}
+
+/// One recorded event.  Spans carry their start instant inline
+/// (`started`/`requested`/`sent`) and are emitted at their *end*, which
+/// keeps the per-process stream append-only and time-monotone.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceEvent {
+    /// First request of a new pair-search round.
+    RoundStart { round: u64, t: f64 },
+    /// A `PairRequest`/`StealRequest` left for `to`.
+    RoundRequest { round: u64, to: ProcessId, t: f64 },
+    /// `PairAccept` arrived from `from`.
+    RoundAccept { round: u64, from: ProcessId, t: f64 },
+    /// `PairDecline` arrived from `from`.
+    RoundDecline { round: u64, from: ProcessId, t: f64 },
+    /// `PairConfirm` sent to `to` (partner committed).
+    RoundConfirm { round: u64, to: ProcessId, t: f64 },
+    /// Round closed.  `started` is the `RoundStart` instant, `requested`
+    /// the last request send; `tasks` the number of tasks moved.
+    RoundEnd {
+        round: u64,
+        outcome: RoundOutcome,
+        tasks: usize,
+        started: f64,
+        requested: f64,
+        t: f64,
+    },
+    /// Task entered the ready queue.
+    TaskReady { task: TaskId, t: f64 },
+    /// Execution began; `queue_wait` = t − ready instant.
+    ExecStart { task: TaskId, queue_wait: f64, t: f64 },
+    /// Execution finished; `started` = t − kernel duration.
+    ExecEnd { task: TaskId, started: f64, t: f64 },
+    /// Task shipped to `to` in an export.
+    MigratedOut { task: TaskId, to: ProcessId, t: f64 },
+    /// Task received from `from` in an export.
+    MigratedIn { task: TaskId, from: ProcessId, t: f64 },
+    /// A migrated task's output arrived back at its origin (this process).
+    ResultReturned { task: TaskId, t: f64 },
+    /// A message was delivered here; `sent` is its send instant.
+    MsgFlight { kind: &'static str, from: ProcessId, sent: f64, t: f64 },
+}
+
+impl TraceEvent {
+    /// The instant the event was recorded at (span end for spans).
+    pub fn time(&self) -> f64 {
+        match *self {
+            TraceEvent::RoundStart { t, .. }
+            | TraceEvent::RoundRequest { t, .. }
+            | TraceEvent::RoundAccept { t, .. }
+            | TraceEvent::RoundDecline { t, .. }
+            | TraceEvent::RoundConfirm { t, .. }
+            | TraceEvent::RoundEnd { t, .. }
+            | TraceEvent::TaskReady { t, .. }
+            | TraceEvent::ExecStart { t, .. }
+            | TraceEvent::ExecEnd { t, .. }
+            | TraceEvent::MigratedOut { t, .. }
+            | TraceEvent::MigratedIn { t, .. }
+            | TraceEvent::ResultReturned { t, .. }
+            | TraceEvent::MsgFlight { t, .. } => t,
+        }
+    }
+}
+
+/// A pair-search round the recorder is still watching.
+#[derive(Debug, Clone, Copy)]
+struct OpenRound {
+    round: u64,
+    started: f64,
+    /// Last request send instant (grant latency measures from here: with
+    /// `tries` candidates per round, earlier requests were declined).
+    requested: f64,
+    /// Partner this round committed to via `PairConfirm` (initiator side).
+    /// Round ids are per-process counters, so an `ExportAck` round number
+    /// alone can collide with a foreign transaction this process merely
+    /// served; requiring the ack to come from the confirmed partner keeps
+    /// the busy-initiator close correct.
+    confirmed_to: Option<ProcessId>,
+}
+
+/// Live recorder state (heap-allocated only when tracing is on).
+#[derive(Debug)]
+pub struct Recorder {
+    events: Vec<TraceEvent>,
+    /// Ready instant per task id (NaN = never seen here), for queue-wait.
+    ready_at: Vec<f64>,
+    open: Option<OpenRound>,
+}
+
+impl Recorder {
+    fn new(num_tasks: usize) -> Self {
+        Recorder { events: Vec::new(), ready_at: vec![f64::NAN; num_tasks], open: None }
+    }
+
+    fn close_round(&mut self, outcome: RoundOutcome, tasks: usize, t: f64) {
+        if let Some(o) = self.open.take() {
+            self.events.push(TraceEvent::RoundEnd {
+                round: o.round,
+                outcome,
+                tasks,
+                started: o.started,
+                requested: o.requested,
+                t,
+            });
+        }
+    }
+}
+
+/// Per-process trace recorder: `Off` is free, `On` appends typed events.
+///
+/// Every hook takes the coordinator's current `now` and is a single
+/// discriminant test when disabled.  The recorder must never be consulted
+/// by the coordinator — information flows strictly *into* it.
+#[derive(Debug)]
+pub enum TraceRecorder {
+    Off,
+    On(Box<Recorder>),
+}
+
+impl TraceRecorder {
+    pub fn new(enabled: bool, num_tasks: usize) -> Self {
+        if enabled { TraceRecorder::On(Box::new(Recorder::new(num_tasks))) } else { TraceRecorder::Off }
+    }
+
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        matches!(self, TraceRecorder::On(_))
+    }
+
+    /// Recorded events so far (empty slice when off).
+    pub fn events(&self) -> &[TraceEvent] {
+        match self {
+            TraceRecorder::Off => &[],
+            TraceRecorder::On(r) => &r.events,
+        }
+    }
+
+    /// Drain the event stream (for the threaded runtime's result assembly).
+    pub fn take_events(&mut self) -> Vec<TraceEvent> {
+        match self {
+            TraceRecorder::Off => Vec::new(),
+            TraceRecorder::On(r) => std::mem::take(&mut r.events),
+        }
+    }
+
+    // ---- task lifecycle ----------------------------------------------
+
+    #[inline]
+    pub fn task_ready(&mut self, task: TaskId, t: f64) {
+        if let TraceRecorder::On(r) = self {
+            if let Some(slot) = r.ready_at.get_mut(task.idx()) {
+                *slot = t;
+            }
+            r.events.push(TraceEvent::TaskReady { task, t });
+        }
+    }
+
+    #[inline]
+    pub fn exec_start(&mut self, task: TaskId, t: f64) {
+        if let TraceRecorder::On(r) = self {
+            let ready = r.ready_at.get(task.idx()).copied().unwrap_or(f64::NAN);
+            let queue_wait = if ready.is_finite() { (t - ready).max(0.0) } else { 0.0 };
+            r.events.push(TraceEvent::ExecStart { task, queue_wait, t });
+        }
+    }
+
+    #[inline]
+    pub fn exec_end(&mut self, task: TaskId, duration: f64, t: f64) {
+        if let TraceRecorder::On(r) = self {
+            r.events.push(TraceEvent::ExecEnd { task, started: t - duration, t });
+        }
+    }
+
+    #[inline]
+    pub fn migrated_out(&mut self, task: TaskId, to: ProcessId, t: f64) {
+        if let TraceRecorder::On(r) = self {
+            r.events.push(TraceEvent::MigratedOut { task, to, t });
+        }
+    }
+
+    #[inline]
+    pub fn migrated_in(&mut self, task: TaskId, from: ProcessId, t: f64) {
+        if let TraceRecorder::On(r) = self {
+            r.events.push(TraceEvent::MigratedIn { task, from, t });
+        }
+    }
+
+    #[inline]
+    pub fn result_returned(&mut self, task: TaskId, t: f64) {
+        if let TraceRecorder::On(r) = self {
+            r.events.push(TraceEvent::ResultReturned { task, t });
+        }
+    }
+
+    // ---- pair-search round lifecycle ---------------------------------
+
+    /// Observe an outbound DLB message (called from the coordinator's
+    /// policy-action interpreter, after the policy decided — never before,
+    /// so RNG order is untouched).
+    #[inline]
+    pub fn protocol_send(&mut self, msg: &Msg, to: ProcessId, t: f64) {
+        if let TraceRecorder::On(r) = self {
+            match *msg {
+                Msg::PairRequest { round, .. } | Msg::StealRequest { round, .. } => {
+                    match r.open {
+                        Some(ref mut o) if o.round == round => o.requested = t,
+                        _ => {
+                            // a still-open previous round never got a
+                            // terminal message: a fresh search replaced it
+                            r.close_round(RoundOutcome::Superseded, 0, t);
+                            r.open = Some(OpenRound {
+                                round,
+                                started: t,
+                                requested: t,
+                                confirmed_to: None,
+                            });
+                            r.events.push(TraceEvent::RoundStart { round, t });
+                        }
+                    }
+                    r.events.push(TraceEvent::RoundRequest { round, to, t });
+                }
+                Msg::PairConfirm { round, .. } => {
+                    if let Some(ref mut o) = r.open {
+                        if o.round == round {
+                            o.confirmed_to = Some(to);
+                        }
+                    }
+                    r.events.push(TraceEvent::RoundConfirm { round, to, t });
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Observe an inbound DLB message (called from `on_message` before the
+    /// policy sees it).
+    #[inline]
+    pub fn protocol_recv(&mut self, msg: &Msg, from: ProcessId, t: f64) {
+        if let TraceRecorder::On(r) = self {
+            match *msg {
+                Msg::PairAccept { round, .. } => {
+                    r.events.push(TraceEvent::RoundAccept { round, from, t });
+                }
+                Msg::PairDecline { round } => {
+                    r.events.push(TraceEvent::RoundDecline { round, from, t });
+                }
+                // a busy-*initiated* round ends when the confirmed partner
+                // acks the export shipped to it (idle-initiated rounds
+                // close at TaskExport arrival via `round_granted`)
+                Msg::ExportAck { round, accepted } => {
+                    if matches!(r.open, Some(o) if o.round == round && o.confirmed_to == Some(from))
+                    {
+                        let outcome =
+                            if accepted > 0 { RoundOutcome::Granted } else { RoundOutcome::Empty };
+                        r.close_round(outcome, accepted, t);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// The idle side's round ends when the export lands: `tasks` ready
+    /// tasks arrived (0 ⇒ the victim had nothing to give).
+    #[inline]
+    pub fn round_granted(&mut self, round: u64, tasks: usize, t: f64) {
+        if let TraceRecorder::On(r) = self {
+            if matches!(r.open, Some(o) if o.round == round) {
+                let outcome = if tasks > 0 { RoundOutcome::Granted } else { RoundOutcome::Empty };
+                r.close_round(outcome, tasks, t);
+            }
+        }
+    }
+
+    /// Process halted: close any round still in flight.
+    #[inline]
+    pub fn run_end(&mut self, t: f64) {
+        if let TraceRecorder::On(r) = self {
+            r.close_round(RoundOutcome::Abandoned, 0, t);
+        }
+    }
+
+    // ---- transport ----------------------------------------------------
+
+    /// A message addressed here was delivered; `sent` is its engine-stamped
+    /// send instant (DES only).
+    #[inline]
+    pub fn msg_flight(&mut self, kind: &'static str, from: ProcessId, sent: f64, t: f64) {
+        if let TraceRecorder::On(r) = self {
+            r.events.push(TraceEvent::MsgFlight { kind, from, sent, t });
+        }
+    }
+}
+
+/// All processes' event streams from one run, indexed by rank.
+#[derive(Debug, Clone, Default)]
+pub struct RunTrace {
+    pub per_process: Vec<Vec<TraceEvent>>,
+}
+
+impl RunTrace {
+    pub fn new(processes: usize) -> Self {
+        RunTrace { per_process: vec![Vec::new(); processes] }
+    }
+
+    pub fn total_events(&self) -> usize {
+        self.per_process.iter().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_events() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::message::Role;
+
+    fn pid(i: u32) -> ProcessId {
+        ProcessId(i)
+    }
+
+    #[test]
+    fn off_recorder_records_nothing() {
+        let mut rec = TraceRecorder::new(false, 8);
+        assert!(!rec.is_on());
+        rec.task_ready(TaskId(0), 0.0);
+        rec.exec_start(TaskId(0), 0.1);
+        rec.protocol_send(
+            &Msg::PairRequest { round: 1, role: Role::Idle, load: 0, eta: 0.0 },
+            pid(1),
+            0.2,
+        );
+        rec.run_end(1.0);
+        assert!(rec.events().is_empty());
+        assert!(rec.take_events().is_empty());
+    }
+
+    #[test]
+    fn task_lifecycle_computes_queue_wait() {
+        let mut rec = TraceRecorder::new(true, 4);
+        rec.task_ready(TaskId(2), 1.0);
+        rec.exec_start(TaskId(2), 1.5);
+        rec.exec_end(TaskId(2), 0.25, 1.75);
+        let evs = rec.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[1], TraceEvent::ExecStart { task: TaskId(2), queue_wait: 0.5, t: 1.5 });
+        assert_eq!(evs[2], TraceEvent::ExecEnd { task: TaskId(2), started: 1.5, t: 1.75 });
+    }
+
+    #[test]
+    fn round_grant_measures_from_last_request() {
+        let mut rec = TraceRecorder::new(true, 1);
+        let req = |round| Msg::StealRequest { round, load: 0, eta: 0.0 };
+        rec.protocol_send(&req(7), pid(1), 1.0);
+        // declined, retry same round at a new victim
+        rec.protocol_recv(&Msg::PairDecline { round: 7 }, pid(1), 1.2);
+        rec.protocol_send(&req(7), pid(2), 1.3);
+        rec.round_granted(7, 3, 1.9);
+        let end = rec
+            .events()
+            .iter()
+            .find_map(|e| match *e {
+                TraceEvent::RoundEnd { round, outcome, tasks, started, requested, t } => {
+                    Some((round, outcome, tasks, started, requested, t))
+                }
+                _ => None,
+            })
+            .expect("round must close");
+        assert_eq!(end, (7, RoundOutcome::Granted, 3, 1.0, 1.3, 1.9));
+    }
+
+    #[test]
+    fn new_round_supersedes_open_round() {
+        let mut rec = TraceRecorder::new(true, 1);
+        let req = |round| Msg::PairRequest { round, role: Role::Idle, load: 0, eta: 0.0 };
+        rec.protocol_send(&req(1), pid(1), 0.5);
+        rec.protocol_send(&req(2), pid(2), 0.9);
+        rec.run_end(2.0);
+        let outcomes: Vec<_> = rec
+            .events()
+            .iter()
+            .filter_map(|e| match *e {
+                TraceEvent::RoundEnd { round, outcome, .. } => Some((round, outcome)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            outcomes,
+            vec![(1, RoundOutcome::Superseded), (2, RoundOutcome::Abandoned)]
+        );
+    }
+
+    #[test]
+    fn export_ack_closes_busy_side_round_only_if_confirmed() {
+        let mut rec = TraceRecorder::new(true, 1);
+        // an ack for a round this process never opened must be ignored
+        rec.protocol_recv(&Msg::ExportAck { round: 9, accepted: 2 }, pid(1), 0.4);
+        assert!(rec.events().is_empty());
+        rec.protocol_send(
+            &Msg::PairRequest { round: 3, role: Role::Busy, load: 8, eta: 0.0 },
+            pid(1),
+            1.0,
+        );
+        // foreign transaction that happens to share the round id: the ack
+        // comes from a process this round never confirmed — ignore it
+        rec.protocol_recv(&Msg::ExportAck { round: 3, accepted: 5 }, pid(2), 1.3);
+        assert!(!rec.events().iter().any(|e| matches!(e, TraceEvent::RoundEnd { .. })));
+        rec.protocol_send(&Msg::PairConfirm { round: 3, load: 8, eta: 0.0 }, pid(1), 1.4);
+        rec.protocol_recv(&Msg::ExportAck { round: 3, accepted: 0 }, pid(1), 1.6);
+        let last = *rec.events().last().expect("events");
+        assert!(matches!(
+            last,
+            TraceEvent::RoundEnd { round: 3, outcome: RoundOutcome::Empty, tasks: 0, .. }
+        ));
+    }
+
+    #[test]
+    fn per_process_stream_is_time_monotone() {
+        let mut rec = TraceRecorder::new(true, 4);
+        rec.task_ready(TaskId(0), 0.0);
+        rec.protocol_send(
+            &Msg::StealRequest { round: 1, load: 0, eta: 0.0 },
+            pid(1),
+            0.2,
+        );
+        rec.msg_flight("task_export", pid(1), 0.2, 0.4);
+        rec.round_granted(1, 1, 0.4);
+        rec.exec_start(TaskId(0), 0.5);
+        rec.exec_end(TaskId(0), 0.3, 0.8);
+        rec.run_end(1.0);
+        let times: Vec<f64> = rec.events().iter().map(TraceEvent::time).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "{times:?}");
+    }
+}

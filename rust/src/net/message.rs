@@ -154,6 +154,26 @@ impl Msg {
         }
     }
 
+    /// Static variant name, for trace events and debug output.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Msg::TaskDone { .. } => "task_done",
+            Msg::ResultReturn { .. } => "result_return",
+            Msg::DataSend { .. } => "data_send",
+            Msg::PairRequest { .. } => "pair_request",
+            Msg::PairAccept { .. } => "pair_accept",
+            Msg::PairDecline { .. } => "pair_decline",
+            Msg::PairConfirm { .. } => "pair_confirm",
+            Msg::PairRelease { .. } => "pair_release",
+            Msg::StealRequest { .. } => "steal_request",
+            Msg::LoadReport { .. } => "load_report",
+            Msg::TaskExport { .. } => "task_export",
+            Msg::ExportAck { .. } => "export_ack",
+            Msg::OwnerDone { .. } => "owner_done",
+            Msg::Shutdown => "shutdown",
+        }
+    }
+
     /// True for messages belonging to the DLB control plane (metrics).
     pub fn is_dlb(&self) -> bool {
         matches!(
@@ -213,11 +233,16 @@ pub struct Flight {
     /// Messages delivered immediately after `head`, in emission order.
     /// Empty unless coalescing is enabled.
     pub tail: Vec<Msg>,
+    /// Simulated send instant, stamped by the engine when the flight is
+    /// scheduled.  Tail members share it (coalescing only packs messages
+    /// emitted in the same process step).  Feeds the trace recorder's
+    /// message-flight spans; 0.0 until stamped.
+    pub sent_at: f64,
 }
 
 impl Flight {
     pub fn new(head: Envelope) -> Self {
-        Flight { head, tail: Vec::new() }
+        Flight { head, tail: Vec::new(), sent_at: 0.0 }
     }
 
     /// Messages carried by this delivery (head + coalesced tail).

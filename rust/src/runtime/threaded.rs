@@ -29,6 +29,7 @@ use crate::core::process::{Effect, ProcessParams, ProcessState};
 use crate::core::task::TaskKind;
 use crate::metrics::counters::DlbCounters;
 use crate::metrics::trace::RunTraces;
+use crate::metrics::RunTrace;
 use crate::net::transport::{mesh_on, Mailbox, Router, Shaper};
 use crate::sched::queue::ReadyTask;
 
@@ -41,6 +42,10 @@ pub struct RealRunResult {
     /// Wallclock seconds from start to last task completion.
     pub makespan: f64,
     pub traces: RunTraces,
+    /// Structured span/instant events (empty unless `cfg.trace_enabled`).
+    /// Threaded runs have no network track: channels carry no send stamp,
+    /// so `MsgFlight` events are DES-only.
+    pub trace: RunTrace,
     pub counters: DlbCounters,
     pub per_process_counters: Vec<DlbCounters>,
     /// Final data stores (for numeric verification).
@@ -141,6 +146,7 @@ pub fn run_threaded(
             r?;
             Ok(ProcessWrap {
                 trace: ps.trace.clone(),
+                events: ps.recorder.take_events(),
                 counters: *ps.counters(),
                 store: std::mem::take(&mut ps.store),
                 last_completion: ps.last_completion,
@@ -150,6 +156,7 @@ pub fn run_threaded(
     }
 
     let mut traces = RunTraces::new(p);
+    let mut trace = RunTrace::new(p);
     let mut counters = DlbCounters::default();
     let mut per = Vec::with_capacity(p);
     let mut stores = Vec::with_capacity(p);
@@ -164,6 +171,7 @@ pub fn run_threaded(
         counters.merge(&w.counters);
         per.push(w.counters);
         traces.per_process[i] = w.trace;
+        trace.per_process[i] = w.events;
         stores.push(w.store);
         kexecs += w.kernel_executions;
     }
@@ -171,6 +179,7 @@ pub fn run_threaded(
     Ok(RealRunResult {
         makespan,
         traces,
+        trace,
         counters,
         per_process_counters: per,
         stores,
@@ -180,6 +189,7 @@ pub fn run_threaded(
 
 struct ProcessWrap {
     trace: crate::metrics::trace::WorkloadTrace,
+    events: Vec<crate::metrics::TraceEvent>,
     counters: DlbCounters,
     store: DataStore,
     last_completion: f64,
@@ -391,6 +401,24 @@ mod tests {
             assert!(r.makespan > 0.0);
             assert!(r.counters.tasks_exported > 0, "{policy} must migrate work");
             assert_eq!(r.counters.tasks_exported, r.counters.tasks_received, "{policy}");
+        }
+    }
+
+    #[test]
+    fn threaded_run_collects_trace_events_when_enabled() {
+        use crate::metrics::TraceEvent;
+        let (mut cfg, g, init) = bag(12, 2, true);
+        cfg.trace_enabled = true;
+        let r = run_threaded(&cfg, g, init, false).expect("run");
+        assert!(!r.trace.is_empty(), "tracing on must record events");
+        let all: Vec<&TraceEvent> = r.trace.per_process.iter().flatten().collect();
+        assert!(all.iter().any(|e| matches!(e, TraceEvent::ExecEnd { .. })));
+        assert!(all.iter().any(|e| matches!(e, TraceEvent::TaskReady { .. })));
+        // wallclock stamps are monotone per process stream
+        for stream in &r.trace.per_process {
+            for w in stream.windows(2) {
+                assert!(w[0].time() <= w[1].time() + 1e-9);
+            }
         }
     }
 

@@ -21,6 +21,7 @@ use crate::core::graph::TaskGraph;
 use crate::core::ids::ProcessId;
 use crate::core::process::{Effect, ProcessParams, ProcessState};
 use crate::metrics::counters::DlbCounters;
+use crate::metrics::recorder::RunTrace;
 use crate::metrics::trace::RunTraces;
 use crate::net::message::{Envelope, Flight};
 use crate::sched::queue::ReadyTask;
@@ -51,6 +52,8 @@ pub struct SimResult {
     /// protocol included).
     pub end_time: f64,
     pub traces: RunTraces,
+    /// Flight-recorder event streams (empty unless `[trace] enabled`).
+    pub trace: RunTrace,
     pub counters: DlbCounters,
     pub per_process_counters: Vec<DlbCounters>,
     /// Events dispatched to a process state machine — every delivered
@@ -224,11 +227,15 @@ impl SimEngine {
                             coalesced += 1;
                             continue;
                         }
-                        let slot = self.stash_flight(Flight::new(env));
+                        let mut fl = Flight::new(env);
+                        fl.sent_at = self.now;
+                        let slot = self.stash_flight(fl);
                         self.step_flights.push((key.0, key.1, slot));
                         self.push(self.now + delay, EventKind::Deliver { slot });
                     } else {
-                        let slot = self.stash_flight(Flight::new(env));
+                        let mut fl = Flight::new(env);
+                        fl.sent_at = self.now;
+                        let slot = self.stash_flight(fl);
                         self.push(self.now + delay, EventKind::Deliver { slot });
                     }
                 }
@@ -314,9 +321,25 @@ impl SimEngine {
                 EventKind::Deliver { slot } => {
                     let fl = self.unstash_flight(slot);
                     let (from, to) = (fl.head.from, fl.head.to);
+                    let sent_at = fl.sent_at;
+                    // flight span lands on the receiver's recorder (no-op
+                    // when tracing is off); tail members share the send
+                    // instant and arrival by construction
+                    self.processes[to.idx()].recorder.msg_flight(
+                        fl.head.msg.kind_name(),
+                        from,
+                        sent_at,
+                        self.now,
+                    );
                     self.processes[to.idx()].on_message(fl.head, self.now, &mut effects);
                     self.apply_effects(to, &mut effects);
                     for msg in fl.tail {
+                        self.processes[to.idx()].recorder.msg_flight(
+                            msg.kind_name(),
+                            from,
+                            sent_at,
+                            self.now,
+                        );
                         let env = Envelope {
                             from,
                             to,
@@ -371,8 +394,12 @@ impl SimEngine {
             counters.merge(ps.counters());
             per.push(*ps.counters());
         }
+        let mut trace = RunTrace::new(p);
         for (i, ps) in self.processes.iter().enumerate() {
             traces.per_process[i] = ps.trace.clone();
+            if ps.recorder.is_on() {
+                trace.per_process[i] = ps.recorder.events().to_vec();
+            }
         }
         traces.makespan = makespan;
         let total_flops: u64 = self.processes[0].graph.total_flops();
@@ -386,6 +413,7 @@ impl SimEngine {
             makespan,
             end_time: self.now,
             traces,
+            trace,
             counters,
             per_process_counters: per,
             events_processed: events,
@@ -512,6 +540,38 @@ mod tests {
         let r = SimEngine::from_config(&cfg, g).run().expect("run");
         assert!(r.traces.per_process[0].max_workload() > 0);
         assert!(r.traces.makespan > 0.0);
+    }
+
+    #[test]
+    fn tracing_is_fingerprint_neutral_and_captures_events() {
+        use crate::metrics::recorder::TraceEvent;
+        let (cfg_off, g) = bag_cfg(16, 4, true, 5);
+        let off = SimEngine::from_config(&cfg_off, Arc::clone(&g)).run().expect("off");
+        let mut cfg_on = cfg_off.clone();
+        cfg_on.trace_enabled = true;
+        let on = SimEngine::from_config(&cfg_on, g).run().expect("on");
+        // the recorder is write-only: identical run, bit for bit
+        assert_eq!(on.makespan.to_bits(), off.makespan.to_bits());
+        assert_eq!(on.counters, off.counters);
+        assert_eq!(on.events_processed, off.events_processed);
+        // off (the default) records nothing; on records the full taxonomy
+        assert!(off.trace.is_empty());
+        assert!(on.trace.total_events() > 0);
+        let all: Vec<&TraceEvent> = on.trace.per_process.iter().flatten().collect();
+        assert!(all.iter().any(|e| matches!(e, TraceEvent::RoundEnd { .. })));
+        assert!(all.iter().any(|e| matches!(e, TraceEvent::ExecEnd { .. })));
+        assert!(all.iter().any(|e| matches!(e, TraceEvent::MigratedIn { .. })));
+        // every DES flight span is causal: sent stamped at Send-apply time
+        for e in &all {
+            if let TraceEvent::MsgFlight { sent, t, .. } = e {
+                assert!(sent <= t, "flight arrived before it left: {sent} > {t}");
+                assert!(*sent > 0.0 || *t >= 0.0);
+            }
+        }
+        assert!(
+            all.iter().any(|e| matches!(e, TraceEvent::MsgFlight { .. })),
+            "DES runs must record message flights"
+        );
     }
 
     #[test]

@@ -1,0 +1,49 @@
+//! Minimal line-oriented JSON field extraction (the offline crate set has
+//! no serde).  Works on the one-object-per-line layout that every hand-
+//! rolled writer in this repo emits (`experiments/bench.rs` baselines,
+//! `metrics/chrome.rs` trace events), so readers can validate or diff
+//! generated artifacts without a parser dependency.
+
+/// Extract `"key": <value>` from a single JSON-object line.  Quoted string
+/// values are returned without their quotes; bare values (numbers, bools)
+/// are returned trimmed, terminated by `,` or `}`.
+pub fn field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)? + pat.len();
+    let rest = line[at..].trim_start();
+    if let Some(stripped) = rest.strip_prefix('"') {
+        return Some(&stripped[..stripped.find('"')?]);
+    }
+    let end = rest.find([',', '}']).unwrap_or(rest.len());
+    Some(rest[..end].trim())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_extracts_strings_numbers_bools() {
+        let line = r#"    {"name": "cholesky nb=8 P=4", "coalesce": true, "events": 123, "events_per_sec": 4567.8},"#;
+        assert_eq!(field(line, "name"), Some("cholesky nb=8 P=4"));
+        assert_eq!(field(line, "coalesce"), Some("true"));
+        assert_eq!(field(line, "events"), Some("123"));
+        assert_eq!(field(line, "events_per_sec"), Some("4567.8"));
+        assert_eq!(field(line, "absent"), None);
+    }
+
+    #[test]
+    fn field_handles_chrome_trace_lines() {
+        let line = r#"{"ph":"X","pid":3,"tid":1,"name":"exec","ts":12.500,"dur":4.250,"args":{"task":17}},"#;
+        assert_eq!(field(line, "ph"), Some("X"));
+        assert_eq!(field(line, "pid"), Some("3"));
+        assert_eq!(field(line, "ts"), Some("12.500"));
+        assert_eq!(field(line, "dur"), Some("4.250"));
+    }
+
+    #[test]
+    fn field_tolerates_unterminated_values() {
+        assert_eq!(field(r#"{"k": 12"#, "k"), Some("12"));
+        assert_eq!(field(r#"{"k": "unclosed"#, "k"), None);
+    }
+}

@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod error;
 pub mod fxhash;
+pub mod json;
 pub mod plot;
 pub mod propcheck;
 pub mod rng;

@@ -186,6 +186,32 @@ fn coalesce_onoff_identical_when_steps_send_one_message_per_destination() {
     assert_eq!(on.counters.messages_coalesced, 0, "nothing to pack on a chain");
 }
 
+/// Arming the span recorder must not move a single bit of any run: the
+/// recorder is write-only and lives strictly downstream of every RNG draw
+/// and policy decision.  Checked across the full policy × adaptive grid so
+/// a future hook placed upstream of a decision cannot slip through on the
+/// one policy the other tests happen to exercise.
+#[test]
+fn tracing_on_is_bit_identical_to_tracing_off_for_every_policy() {
+    for policy in PolicyKind::ALL {
+        for adaptive in [false, true] {
+            let run = |trace: bool| {
+                let mut cfg = cfg_for(policy, adaptive, 3);
+                cfg.trace_enabled = trace;
+                SimEngine::from_config(&cfg, bag_graph(24)).run().expect("run")
+            };
+            let off = run(false);
+            let on = run(true);
+            let tag = format!("{policy} (adaptive {adaptive})");
+            assert_eq!(on.makespan.to_bits(), off.makespan.to_bits(), "{tag}: makespan moved");
+            assert_eq!(on.events_processed, off.events_processed, "{tag}: event count moved");
+            assert_eq!(on.counters, off.counters, "{tag}: counters moved");
+            assert!(off.trace.is_empty(), "{tag}: recorder off must record nothing");
+            assert!(on.trace.total_events() > 0, "{tag}: recorder on must record");
+        }
+    }
+}
+
 /// Snapshot comparison.  When `tests/golden/determinism.txt` exists the
 /// current fingerprints must match it bit for bit; when it does not (first
 /// run on a new toolchain/checkout) it is written, and the test passes with

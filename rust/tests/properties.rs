@@ -467,6 +467,85 @@ fn prop_coalesce_identity_without_multi_send_steps() {
     });
 }
 
+// ---------------------------------------------------------------------
+// span recorder (PR 6): arming the tracer must be invisible to the run,
+// and every recorded interval must be well-formed — ends after it starts,
+// stamps monotone within a process stream, queue waits non-negative, and
+// exec spans non-overlapping on the default single-core processes.
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_trace_spans_well_formed_and_run_unperturbed() {
+    use ductr::metrics::TraceEvent;
+    const EPS: f64 = 1e-9;
+    forall(25, 0x7ACE, gen_scenario, |s| -> Result<(), String> {
+        let plain = SimEngine::from_config(&config_of(s), build_graph(s))
+            .run()
+            .map_err(|e| format!("{e}"))?;
+        let mut cfg = config_of(s);
+        cfg.trace_enabled = true;
+        let traced = SimEngine::from_config(&cfg, build_graph(s))
+            .run()
+            .map_err(|e| format!("{e}"))?;
+        if traced.makespan.to_bits() != plain.makespan.to_bits()
+            || traced.events_processed != plain.events_processed
+        {
+            return Err(format!(
+                "{s:?}: tracing perturbed the run (makespan {} vs {}, events {} vs {})",
+                traced.makespan, plain.makespan, traced.events_processed, plain.events_processed
+            ));
+        }
+        if traced.trace.total_events() == 0 {
+            return Err(format!("{s:?}: recorder armed but nothing recorded"));
+        }
+        for (i, evs) in traced.trace.per_process.iter().enumerate() {
+            let mut prev_t = f64::NEG_INFINITY;
+            let mut execs: Vec<(f64, f64)> = Vec::new();
+            for e in evs {
+                let t = e.time();
+                if t < prev_t - EPS {
+                    return Err(format!("{s:?}: p{i} event stamps went backwards at {e:?}"));
+                }
+                prev_t = prev_t.max(t);
+                match *e {
+                    TraceEvent::RoundEnd { started, requested, t, .. } => {
+                        if started > requested + EPS || requested > t + EPS {
+                            return Err(format!("{s:?}: p{i} malformed round span {e:?}"));
+                        }
+                    }
+                    TraceEvent::ExecStart { queue_wait, .. } => {
+                        if queue_wait < 0.0 {
+                            return Err(format!("{s:?}: p{i} negative queue wait {e:?}"));
+                        }
+                    }
+                    TraceEvent::ExecEnd { started, t, .. } => {
+                        if started > t + EPS {
+                            return Err(format!("{s:?}: p{i} exec ends before start {e:?}"));
+                        }
+                        execs.push((started, t));
+                    }
+                    TraceEvent::MsgFlight { sent, t, .. } => {
+                        if sent > t + EPS {
+                            return Err(format!("{s:?}: p{i} flight arrives before send {e:?}"));
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            execs.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+            for w in execs.windows(2) {
+                if w[1].0 < w[0].1 - EPS {
+                    return Err(format!(
+                        "{s:?}: p{i} overlapping exec spans {:?} and {:?} on one core",
+                        w[0], w[1]
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_workload_trace_monotone_time() {
     forall(25, 0x7EA7, gen_scenario, |s| -> Result<(), String> {
