@@ -13,7 +13,6 @@ use crate::metrics::counters::DlbCounters;
 use crate::metrics::trace::RunTraces;
 use crate::metrics::RunTrace;
 use crate::runtime::threaded::{run_threaded, InitialData};
-use crate::sim::engine::SimEngine;
 use crate::util::rng::Rng;
 
 use super::dag::{build, CholeskyDag};
@@ -91,8 +90,9 @@ pub fn run_sim(cfg: &Config) -> Result<CholeskyReport> {
     }
     let dag = build(cfg.nb, cfg.block, grid);
     let tasks = dag.graph.num_tasks();
-    let mut eng = SimEngine::from_config(cfg, Arc::clone(&dag.graph));
-    let r = eng.run().map_err(|e| anyhow!("sim: {e}"))?;
+    // sim.threads picks the engine: sharded parallel (> 1) or the
+    // single-threaded oracle — bit-identical either way.
+    let r = crate::sim::run_config(cfg, Arc::clone(&dag.graph)).map_err(|e| anyhow!("sim: {e}"))?;
     Ok(CholeskyReport {
         makespan: r.makespan,
         traces: r.traces,

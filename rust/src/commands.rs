@@ -14,7 +14,6 @@ use ductr::metrics::counters::DlbCounters;
 use ductr::metrics::trace::RunTraces;
 use ductr::metrics::{chrome, csv, LatencyReport, RunTrace};
 use ductr::runtime::{KernelLibrary, Manifest};
-use ductr::sim::engine::SimEngine;
 use std::sync::Arc;
 
 const USAGE: &str = "\
@@ -29,11 +28,13 @@ SUBCOMMANDS:
     compare           balancer shoot-out: policy × topology × adaptive-δ table
                       (--quick/--smoke for the reduced CI profile)
     bench             DES hot-path baseline: cholesky + random-DAG sweep over
-                      P ∈ {16..4096} with coalescing off/on per cell, writes
+                      P ∈ {16..65536} with coalescing off/on per cell, writes
                       BENCH_pr5.json (--smoke for the quick CI profile,
                       --out FILE to choose the path, --baseline FILE to
                       diff against a committed baseline — fails the run on
-                      an events/sec regression)
+                      an events/sec regression; --sim-threads N adds a
+                      threads=N row per cell, gated bit-for-bit against its
+                      threads=1 twin)
     experiment <id>   regenerate a paper figure: fig1 | fig3 | fig4 | fig5 | sec4 | ablation | compare | all
     trace             run one workload with the span recorder armed, print
                       latency percentiles, and write a Chrome trace-event
@@ -63,6 +64,9 @@ RUN FLAGS (defaults in parentheses):
                         grow on failed rounds, within [dlb.delta_min, delta_max]
     --coalesce on|off   DES transport coalescing: pack same-(destination,
                         delay) sends of one step into one delivery event (off)
+    --sim-threads N     shard the DES across N worker threads (conservative
+                        time-windowed sync; results stay bit-identical to
+                        the single-threaded engine) (1)
     --seed N            run seed (1)
     --trace FILE.csv    write per-process workload traces
     --trace-record on|off  arm the structured span recorder: prints round /
@@ -161,6 +165,15 @@ fn config_from_args(args: &mut Args) -> Result<Config> {
             other => bail!("--coalesce: expected on|off, got {other}"),
         };
     }
+    // Thread counts get the same typo protection: 0 is a likely slip for 1
+    // and would otherwise vanish into validate()'s generic message;
+    // non-numeric values already die in `get_usize`.
+    if let Some(n) = args.get_usize("sim-threads")? {
+        if n == 0 {
+            bail!("--sim-threads: must be ≥ 1, got 0");
+        }
+        cfg.sim_threads = n;
+    }
     // Same on/off contract again for the span recorder: a typo'd value must
     // not silently run untraced (or traced) — it errors.
     if let Some(v) = args.get_str("trace-record") {
@@ -253,7 +266,7 @@ fn run_workload(cfg: &Config) -> Result<WorkloadRun> {
                 }
                 Workload::Cholesky => unreachable!(),
             };
-            let r = SimEngine::from_config(cfg, graph).run().map_err(Error::new)?;
+            let r = ductr::sim::run_config(cfg, graph).map_err(Error::new)?;
             println!("utilization={:.1}%", r.utilization * 100.0);
             WorkloadRun {
                 makespan: r.makespan,
@@ -412,6 +425,13 @@ fn cmd_compare(args: &mut Args) -> Result<()> {
 fn cmd_bench(args: &mut Args) -> Result<()> {
     let smoke = args.get_bool("smoke")?;
     let seed = args.get_u64("seed")?.unwrap_or(1);
+    // Same 0-is-a-typo contract as the run flag: each cell always gets its
+    // threads=1 oracle row; N > 1 adds a sharded row gated against it.
+    let threads = match args.get_usize("sim-threads")? {
+        Some(0) => bail!("--sim-threads: must be ≥ 1, got 0"),
+        Some(n) => n,
+        None => 1,
+    };
     let baseline = args.get_str("baseline");
     // Full sweeps default to the committed baseline at this checkout's
     // repo root (compile-time anchor, checked at runtime so a copied
@@ -438,7 +458,7 @@ fn cmd_bench(args: &mut Args) -> Result<()> {
         }
         None => None,
     };
-    let r = ductr::experiments::bench::run(seed, smoke)?;
+    let r = ductr::experiments::bench::run(seed, smoke, threads)?;
     print!("{}", r.render());
     r.write_json(std::path::Path::new(&out))
         .map_err(|e| anyhow!("writing {out}: {e}"))?;

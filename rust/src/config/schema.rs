@@ -336,6 +336,14 @@ pub struct Config {
     /// fingerprints match historical runs; flip on for the A/B columns of
     /// `ductr bench`.
     pub coalesce: bool,
+    /// Shard the DES across this many worker threads (conservative
+    /// time-windowed synchronization, `sim::parallel`).  1 = the
+    /// single-threaded oracle engine.  Results are bit-identical either
+    /// way; N > 1 buys wall-clock speed at large P.  Requires
+    /// `exec_jitter = 0` (jitter draws from one engine-global RNG stream
+    /// in dispatch order) and `net_latency > 0` (the lookahead window is
+    /// derived from the cross-shard latency floor).
+    pub sim_threads: usize,
 
     // [cost]  (paper §4: S flops/s, R doubles/s; Rackham S/R ≈ 40)
     pub flops_per_sec: f64,
@@ -398,6 +406,7 @@ impl Default for Config {
             delta_min: 0.001,
             delta_max: 0.050,
             coalesce: false,
+            sim_threads: 1,
             flops_per_sec: 8.8e9,
             doubles_per_sec: 2.2e8, // S/R = 40, the paper's machine balance
             exec_jitter: 0.0,
@@ -521,6 +530,7 @@ impl Config {
         get_f64(t, "dlb", "delta_max", &mut self.delta_max)?;
 
         get_bool(t, "sim", "coalesce", &mut self.coalesce)?;
+        get_usize(t, "sim", "threads", &mut self.sim_threads)?;
 
         get_f64(t, "cost", "flops_per_sec", &mut self.flops_per_sec)?;
         get_f64(t, "cost", "doubles_per_sec", &mut self.doubles_per_sec)?;
@@ -662,6 +672,33 @@ impl Config {
         }
         if self.delta_min <= 0.0 || self.delta_max < self.delta_min {
             return Err(ConfigError::new("dlb.delta_min must be > 0 and ≤ dlb.delta_max"));
+        }
+        if self.sim_threads == 0 {
+            return Err(ConfigError::new("sim.threads must be ≥ 1"));
+        }
+        if self.sim_threads > self.processes {
+            return Err(ConfigError::new(format!(
+                "sim.threads = {} exceeds run.processes = {} — a shard needs at least one rank",
+                self.sim_threads, self.processes
+            )));
+        }
+        if self.sim_threads > 1 {
+            // The sharded engine's preconditions: jitter draws from one
+            // engine-global RNG stream in dispatch order (unshardable), and
+            // a zero latency floor would make the conservative lookahead
+            // window zero-width.
+            if self.exec_jitter > 0.0 {
+                return Err(ConfigError::new(
+                    "sim.threads > 1 requires cost.exec_jitter = 0 (jitter is \
+                     drawn from a global engine RNG in dispatch order)",
+                ));
+            }
+            if self.net_latency <= 0.0 {
+                return Err(ConfigError::new(
+                    "sim.threads > 1 requires network.latency > 0 (the lookahead \
+                     window is the cross-shard latency floor)",
+                ));
+            }
         }
         // Topology-distance contract: the realized shape must give every
         // rank its own slot; `hops` stays total regardless, but an
@@ -876,6 +913,41 @@ mod tests {
         let mut c = Config::default();
         c.apply_overrides(["sim.coalesce=true"]).expect("override");
         assert!(c.coalesce);
+    }
+
+    #[test]
+    fn sim_threads_parses_and_defaults_to_one() {
+        let c = Config::default();
+        assert_eq!(c.sim_threads, 1, "single-threaded oracle by default");
+        let c = Config::from_str_toml("[sim]\nthreads = 4").expect("parse");
+        assert_eq!(c.sim_threads, 4);
+        let mut c = Config::default();
+        c.apply_overrides(["sim.threads=2"]).expect("override");
+        assert_eq!(c.sim_threads, 2);
+        // non-numeric values die in the parser, not silently
+        assert!(Config::from_str_toml("[sim]\nthreads = \"two\"").is_err());
+    }
+
+    #[test]
+    fn sim_threads_validation_guards() {
+        let mut c = Config::default();
+        c.sim_threads = 0;
+        assert!(c.validate().is_err(), "0 threads is a typo, not a request");
+        let mut c = Config::default();
+        c.processes = 4;
+        c.sim_threads = 5;
+        assert!(c.validate().is_err(), "more shards than ranks");
+        let mut c = Config::default();
+        c.sim_threads = 2;
+        c.exec_jitter = 0.1;
+        assert!(c.validate().is_err(), "jitter is unshardable");
+        let mut c = Config::default();
+        c.sim_threads = 2;
+        c.net_latency = 0.0;
+        assert!(c.validate().is_err(), "zero latency → zero lookahead");
+        let mut c = Config::default();
+        c.sim_threads = 2;
+        c.validate().expect("2 threads over 10 ranks is fine");
     }
 
     #[test]

@@ -245,6 +245,14 @@ impl Flight {
         Flight { head, tail: Vec::new(), sent_at: 0.0 }
     }
 
+    /// A flight stamped with its send instant — the form both simulator
+    /// engines open flights in (the recorder derives its flight spans from
+    /// `sent_at`, and cross-shard outbox flights carry it across the window
+    /// barrier unchanged).
+    pub fn sent(head: Envelope, at: f64) -> Self {
+        Flight { head, tail: Vec::new(), sent_at: at }
+    }
+
     /// Messages carried by this delivery (head + coalesced tail).
     pub fn messages(&self) -> usize {
         1 + self.tail.len()
@@ -305,6 +313,19 @@ mod tests {
         fl.tail.push(Msg::PairDecline { round: 2 });
         fl.tail.push(Msg::LoadReport { load: 3 });
         assert_eq!(fl.messages(), 3);
+    }
+
+    #[test]
+    fn flight_sent_stamps_send_instant() {
+        let env = Envelope {
+            from: ProcessId(0),
+            to: ProcessId(1),
+            msg: Msg::PairDecline { round: 1 },
+            wire_doubles: 8,
+        };
+        let fl = Flight::sent(env, 2.5);
+        assert_eq!(fl.sent_at, 2.5);
+        assert_eq!(fl.messages(), 1);
     }
 
     #[test]

@@ -101,6 +101,64 @@ impl Topology {
         }
     }
 
+    /// Partition `p` ranks into at most `shards` contiguous blocks for the
+    /// sharded DES (`sim::parallel`); returns `shard_of[rank]`.
+    ///
+    /// Blocks are contiguous so each shard owns a rank interval, and on
+    /// `Cluster` the block size is rounded up to a multiple of `per_node`
+    /// so node-mates always co-locate — intra-node traffic (the 1-hop bulk
+    /// of a cluster workload) then never crosses a shard boundary, and the
+    /// cross-shard lookahead grows to the inter-node price.  Later blocks
+    /// may end up empty (e.g. 4 ranks into 3 shards of block 2); empty
+    /// shards are simply never materialized by the coordinator.
+    pub fn shard_partition(&self, p: usize, shards: usize) -> Vec<u32> {
+        let shards = shards.clamp(1, p.max(1));
+        let mut block = p.div_ceil(shards).max(1);
+        if let Topology::Cluster { per_node, .. } = *self {
+            if per_node > 1 {
+                block = block.div_ceil(per_node) * per_node;
+            }
+        }
+        (0..p).map(|r| (r / block) as u32).collect()
+    }
+
+    /// Minimum `hops` over all cross-partition pairs, or `None` when fewer
+    /// than two shards are populated (then there is no cross-shard traffic
+    /// and the lookahead is unbounded).
+    ///
+    /// Computed per shape in O(P) instead of scanning all pairs:
+    /// - `Flat`/`Ring`/`Torus` are connected graphs whose every edge costs
+    ///   1 hop, so any path between two differently-sharded ranks contains
+    ///   an edge that crosses a partition boundary — the minimum is 1
+    ///   whenever ≥ 2 shards are populated.  (Consecutive ranks are *not*
+    ///   always 1 hop apart on a torus; the crossing-edge argument is the
+    ///   proof, not rank adjacency.)
+    /// - `Cluster`: 1 if some node's ranks span two shards, otherwise every
+    ///   cross-shard pair is cross-node and costs `inter_hops`.
+    pub fn min_cross_partition_hops(&self, shard_of: &[u32]) -> Option<u32> {
+        let mut populated = std::collections::BTreeSet::new();
+        for &s in shard_of {
+            populated.insert(s);
+        }
+        if populated.len() < 2 {
+            return None;
+        }
+        match *self {
+            Topology::Flat | Topology::Ring { .. } | Topology::Torus { .. } => Some(1),
+            Topology::Cluster { per_node, inter_hops, .. } => {
+                let split_node = per_node > 0
+                    && shard_of
+                        .chunks(per_node)
+                        .any(|node| node.iter().any(|&s| s != node[0]));
+                if split_node {
+                    Some(1)
+                } else {
+                    Some(inter_hops.max(1))
+                }
+            }
+        }
+    }
+
     /// The neighbor set diffusion exchanges load with.  Always symmetric
     /// (j ∈ N(i) ⇔ i ∈ N(j)), never contains `me`, sorted ascending.
     ///
@@ -411,6 +469,47 @@ mod tests {
         for w in ranked.windows(2) {
             assert!((w[0].1, w[0].0.idx()) < (w[1].1, w[1].0.idx()));
         }
+    }
+
+    #[test]
+    fn shard_partition_is_contiguous_and_balanced() {
+        let shard_of = Topology::Flat.shard_partition(10, 3);
+        // block = ceil(10/3) = 4 → shards of 4, 4, 2 ranks
+        assert_eq!(shard_of, vec![0, 0, 0, 0, 1, 1, 1, 1, 2, 2]);
+        // degenerate requests clamp instead of panicking
+        assert_eq!(Topology::Flat.shard_partition(4, 100), vec![0, 1, 2, 3]);
+        assert_eq!(Topology::Flat.shard_partition(4, 0), vec![0, 0, 0, 0]);
+        assert!(Topology::Flat.shard_partition(0, 3).is_empty());
+    }
+
+    #[test]
+    fn cluster_sharding_keeps_node_mates_together() {
+        let t = Topology::Cluster { nodes: 4, per_node: 4, inter_hops: 4 };
+        // 16 ranks into 3 shards: block ceil(16/3)=6 rounds up to 8 (two
+        // whole nodes per shard) — no node is ever split across shards.
+        let shard_of = t.shard_partition(16, 3);
+        for node in shard_of.chunks(4) {
+            assert!(node.iter().all(|&s| s == node[0]), "split node: {shard_of:?}");
+        }
+        // and the lookahead therefore prices at the inter-node tier
+        assert_eq!(t.min_cross_partition_hops(&shard_of), Some(4));
+    }
+
+    #[test]
+    fn min_cross_partition_hops_per_shape() {
+        // unit-edge shapes: any populated 2-shard split crosses at 1 hop
+        let ring = Topology::Ring { len: 8 };
+        assert_eq!(ring.min_cross_partition_hops(&ring.shard_partition(8, 2)), Some(1));
+        let torus = Topology::Torus { rows: 2, cols: 4 };
+        assert_eq!(torus.min_cross_partition_hops(&torus.shard_partition(8, 3)), Some(1));
+        assert_eq!(Topology::Flat.min_cross_partition_hops(&[0, 0, 1, 1]), Some(1));
+        // a split node collapses a cluster's lookahead to the 1-hop tier
+        let cl = Topology::Cluster { nodes: 2, per_node: 4, inter_hops: 4 };
+        assert_eq!(cl.min_cross_partition_hops(&[0, 0, 1, 1, 1, 1, 1, 1]), Some(1));
+        assert_eq!(cl.min_cross_partition_hops(&[0, 0, 0, 0, 1, 1, 1, 1]), Some(4));
+        // fewer than two populated shards → no cross-shard traffic at all
+        assert_eq!(Topology::Flat.min_cross_partition_hops(&[0, 0, 0]), None);
+        assert_eq!(Topology::Flat.min_cross_partition_hops(&[]), None);
     }
 
     #[test]

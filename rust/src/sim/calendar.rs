@@ -172,9 +172,53 @@ impl<T> CalendarQueue<T> {
         if self.len == 0 {
             return None;
         }
+        self.settle();
+        let Slot(e) = self.buckets[self.cursor].pop().expect("non-empty bucket");
+        self.near_len -= 1;
+        self.len -= 1;
+        Some(e)
+    }
+
+    /// Fire time of the earliest pending entry without removing it (`None`
+    /// when empty).  Takes `&mut self` because locating the minimum may
+    /// trigger the same far-list rebuild a `pop` would.
+    pub fn next_time(&mut self) -> Option<f64> {
+        if self.len == 0 {
+            return None;
+        }
+        self.settle();
+        Some(self.buckets[self.cursor].peek().expect("settled cursor bucket").0.t)
+    }
+
+    /// Pop the earliest entry strictly before `before`; `None` when the
+    /// queue is empty or its minimum is at or past `before`.
+    ///
+    /// This is the window primitive of the sharded DES (`sim::parallel`): a
+    /// worker drains its calendar up to the conservative horizon and not
+    /// one event further — an entry exactly **at** the horizon stays queued
+    /// for the next window, because a cross-shard message may still arrive
+    /// at that instant.
+    pub fn pop_before(&mut self, before: f64) -> Option<Entry<T>> {
+        if self.len == 0 {
+            return None;
+        }
+        self.settle();
+        if self.buckets[self.cursor].peek().expect("settled cursor bucket").0.t >= before {
+            return None;
+        }
+        let Slot(e) = self.buckets[self.cursor].pop().expect("settled cursor bucket");
+        self.near_len -= 1;
+        self.len -= 1;
+        Some(e)
+    }
+
+    /// Position `cursor` on the bucket holding the global minimum entry.
+    /// Requires `len > 0`.  When the near wheel is drained (or before the
+    /// first pop), rebuilds over the far-list anchored at its earliest
+    /// entry — exactly the lazy recalibration `pop` has always done.
+    fn settle(&mut self) {
+        debug_assert!(self.len > 0);
         if self.near_len == 0 {
-            // Window exhausted (or first pop): rebuild over the far-list,
-            // anchored at its earliest entry.
             let start = self.far.iter().map(|e| e.t).fold(f64::INFINITY, f64::min);
             self.rebuild(start);
         }
@@ -182,10 +226,6 @@ impl<T> CalendarQueue<T> {
             self.cursor += 1;
             debug_assert!(self.cursor < self.buckets.len(), "near_len > 0 but wheel empty");
         }
-        let Slot(e) = self.buckets[self.cursor].pop().expect("non-empty bucket");
-        self.near_len -= 1;
-        self.len -= 1;
-        Some(e)
     }
 
     /// Recalibrate the wheel over everything pending and re-partition.
@@ -286,6 +326,47 @@ mod tests {
         }
         let seqs: Vec<u64> = drain(&mut q).into_iter().map(|(_, s)| s).collect();
         assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn next_time_peeks_without_removing() {
+        let mut q = CalendarQueue::new();
+        assert_eq!(q.next_time(), None);
+        q.push(3.0, 1, 0u32);
+        q.push(1.0, 2, 0u32);
+        assert_eq!(q.next_time(), Some(1.0));
+        assert_eq!(q.len(), 2, "next_time must not consume");
+        assert_eq!(q.pop().map(|e| e.t), Some(1.0));
+        assert_eq!(q.next_time(), Some(3.0));
+    }
+
+    #[test]
+    fn pop_before_is_strict_at_the_horizon() {
+        let mut q = CalendarQueue::new();
+        q.push(1.0, 1, 0u32);
+        q.push(2.0, 2, 0u32);
+        q.push(3.0, 3, 0u32);
+        assert_eq!(q.pop_before(2.0).map(|e| e.t), Some(1.0));
+        // Strict `<`: an entry exactly AT the horizon is not eligible — a
+        // cross-shard message may still arrive at that very instant.
+        assert!(q.pop_before(2.0).is_none());
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.next_time(), Some(2.0));
+        assert_eq!(q.pop_before(f64::INFINITY).map(|e| e.t), Some(2.0));
+        assert_eq!(q.pop_before(3.5).map(|e| e.t), Some(3.0));
+        assert!(q.pop_before(f64::INFINITY).is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_before_rebuilds_over_the_far_list() {
+        // A lone far-future entry forces the same lazy recalibration pop
+        // performs; pop_before must see it land in the near wheel.
+        let mut q = CalendarQueue::new();
+        q.push(5_000.0, 1, 0u32);
+        assert!(q.pop_before(5_000.0).is_none());
+        assert_eq!(q.pop_before(5_001.0).map(|e| e.t), Some(5_000.0));
+        assert!(q.is_empty());
     }
 
     #[test]

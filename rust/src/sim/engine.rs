@@ -1,11 +1,15 @@
 //! The discrete-event simulator: virtual clock + calendar-queue scheduler
 //! driving the same `ProcessState` machines the threaded runtime uses.
 //!
-//! Determinism: events are ordered by (time, sequence number); all
-//! randomness flows from the run seed through per-process RNG streams plus
-//! one engine stream for execution-time jitter.  Two runs with the same
-//! seed are bit-identical — which is how Fig 5's "lucky vs unlucky" pair of
-//! runs is reproduced honestly (two *named* seeds).
+//! Determinism: events are ordered by (time, key) where the key is the
+//! parallel-stable `emit × P + rank` of the emitting process — unique, and
+//! a function of the emitter's own step sequence rather than of global
+//! dispatch interleaving, so the sharded engine (`sim::parallel`) can
+//! reproduce the exact same total order shard-locally.  All randomness
+//! flows from the run seed through per-process RNG streams plus one engine
+//! stream for execution-time jitter.  Two runs with the same seed are
+//! bit-identical — which is how Fig 5's "lucky vs unlucky" pair of runs is
+//! reproduced honestly (two *named* seeds).
 //!
 //! Scale: the scheduler is a two-level calendar queue (`sim::calendar`)
 //! with O(1) amortized push/pop instead of a `BinaryHeap`'s O(log n), and
@@ -35,7 +39,7 @@ use super::network::NetworkModel;
 /// per-event `Box`es, so pushing an event never allocates once the slab and
 /// queue have warmed up.
 #[derive(Debug)]
-enum EventKind {
+pub(crate) enum EventKind {
     Deliver { slot: u32 },
     ExecDone { proc: ProcessId, rt: ReadyTask, duration: f64 },
     /// `gen` is the process's tick generation at arm time: a popped tick
@@ -107,7 +111,11 @@ pub struct SimEngine {
     /// every flight opened by the step currently being applied.
     step_flights: Vec<(ProcessId, u64, u32)>,
     now: f64,
-    seq: u64,
+    /// Per-process emission counters backing the parallel-stable event
+    /// keys: the k-th event emitted by rank r gets key `k·P + r`.  Unique
+    /// across processes, and advanced only by the emitter's own steps, so
+    /// the sharded engine reproduces identical keys without coordination.
+    emit_seq: Vec<u64>,
     jitter: f64,
     rng: Rng,
     /// Per-process time of the next scheduled tick (push-side dedup).
@@ -151,7 +159,7 @@ impl SimEngine {
             coalesce: cfg.coalesce,
             step_flights: Vec::new(),
             now: 0.0,
-            seq: 0,
+            emit_seq: vec![0; p],
             jitter: cfg.exec_jitter,
             rng: Rng::new(cfg.seed ^ 0xE46E_17E5_u64),
             tick_at: vec![f64::NEG_INFINITY; p],
@@ -164,10 +172,16 @@ impl SimEngine {
         }
     }
 
-    fn push(&mut self, t: f64, kind: EventKind) {
+    /// Queue an event emitted by `src`.  The tiebreak key is `emit·P + rank`
+    /// of the emitter — at equal timestamps, events dispatch by (emission
+    /// index, source rank) rather than by global push order, which is what
+    /// lets `sim::parallel` reproduce this engine's order bit for bit.
+    fn push(&mut self, src: ProcessId, t: f64, kind: EventKind) {
         debug_assert!(t >= self.now, "event in the past: {t} < {}", self.now);
-        self.seq += 1;
-        self.queue.push(t, self.seq, kind);
+        let p = self.processes.len() as u64;
+        let key = self.emit_seq[src.idx()] * p + src.idx() as u64;
+        self.emit_seq[src.idx()] += 1;
+        self.queue.push(t, key, kind);
         self.peak_pending = self.peak_pending.max(self.queue.len());
     }
 
@@ -227,16 +241,14 @@ impl SimEngine {
                             coalesced += 1;
                             continue;
                         }
-                        let mut fl = Flight::new(env);
-                        fl.sent_at = self.now;
+                        let fl = Flight::sent(env, self.now);
                         let slot = self.stash_flight(fl);
                         self.step_flights.push((key.0, key.1, slot));
-                        self.push(self.now + delay, EventKind::Deliver { slot });
+                        self.push(proc, self.now + delay, EventKind::Deliver { slot });
                     } else {
-                        let mut fl = Flight::new(env);
-                        fl.sent_at = self.now;
+                        let fl = Flight::sent(env, self.now);
                         let slot = self.stash_flight(fl);
-                        self.push(self.now + delay, EventKind::Deliver { slot });
+                        self.push(proc, self.now + delay, EventKind::Deliver { slot });
                     }
                 }
                 Effect::StartExec { task } => {
@@ -248,7 +260,8 @@ impl SimEngine {
                         1.0
                     };
                     let duration = (base * factor).max(1e-12);
-                    self.push(self.now + duration, EventKind::ExecDone { proc, rt: task, duration });
+                    let done = EventKind::ExecDone { proc, rt: task, duration };
+                    self.push(proc, self.now + duration, done);
                 }
                 Effect::ScheduleTick { at } => {
                     let at = at.max(self.now);
@@ -261,7 +274,7 @@ impl SimEngine {
                     self.tick_at[proc.idx()] = at;
                     self.tick_gen[proc.idx()] += 1;
                     let gen = self.tick_gen[proc.idx()];
-                    self.push(at, EventKind::Tick { proc, gen });
+                    self.push(proc, at, EventKind::Tick { proc, gen });
                 }
                 Effect::Halt => {
                     debug_assert!(self.live > 0, "halt underflow");
@@ -287,7 +300,13 @@ impl SimEngine {
         }
 
         let mut events: u64 = 0;
-        while self.live > 0 {
+        // Drain to empty rather than stopping at the last Halt: events left
+        // behind the final halt (in-flight deliveries, armed ticks) are
+        // no-ops on halted state machines, so the observable outcome is
+        // unchanged — but the exit condition no longer depends on global
+        // pop order, which is the property the sharded engine
+        // (`sim::parallel`) needs to reproduce this run bit for bit.
+        loop {
             let Some(Entry { t, item: kind, .. }) = self.queue.pop() else { break };
             // Superseded tick: a newer arm replaced this one.  Drop it at
             // the pop — before it counts as a dispatched event — instead
@@ -376,7 +395,8 @@ impl SimEngine {
             }
         }
 
-        if self.live > 0 && self.queue.is_empty() && self.stop_when.is_none() {
+        // The queue is empty here unless `stop_when` broke out early.
+        if self.live > 0 && self.stop_when.is_none() {
             return Err(SimError::Deadlock { live: self.live });
         }
 
@@ -639,7 +659,10 @@ mod tests {
             eng.env_slab.len(),
             r.events_processed
         );
-        // occupied slots are exactly the deliveries still pending at halt
+        // occupied slots are exactly the deliveries still pending at exit
+        // (both zero after a full drain — the invariant matters on the
+        // `stop_when` early-break path, where flights can still be in the
+        // air)
         let pending =
             eng.queue.iter().filter(|e| matches!(e.item, EventKind::Deliver { .. })).count();
         let live_slots = eng.env_slab.iter().filter(|s| s.is_some()).count();

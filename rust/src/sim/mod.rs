@@ -1,10 +1,35 @@
 //! Discrete-event simulation mode: virtual clock + modeled network driving
 //! the identical coordinator state machines as the threaded runtime.
+//!
+//! Two interchangeable engines: the single-threaded `SimEngine` (the
+//! determinism oracle) and the sharded, conservatively-synchronized
+//! `ParallelSimEngine` (`[sim] threads > 1`).  They produce bit-identical
+//! results; `run_config` dispatches between them.
+
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::core::graph::TaskGraph;
 
 pub mod calendar;
 pub mod engine;
 pub mod network;
+pub mod parallel;
+mod shard;
 
 pub use calendar::CalendarQueue;
 pub use engine::{SimEngine, SimError, SimResult};
 pub use network::NetworkModel;
+pub use parallel::ParallelSimEngine;
+
+/// Run a simulation with the engine the config asks for: the sharded
+/// parallel engine when `[sim] threads > 1`, the single-threaded oracle
+/// otherwise.  Callers needing engine extras (`stop_when`, custom budgets)
+/// construct their engine directly.
+pub fn run_config(cfg: &Config, graph: Arc<TaskGraph>) -> Result<SimResult, SimError> {
+    if cfg.sim_threads > 1 {
+        ParallelSimEngine::from_config(cfg, graph).run()
+    } else {
+        SimEngine::from_config(cfg, graph).run()
+    }
+}

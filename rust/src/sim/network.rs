@@ -54,6 +54,23 @@ impl NetworkModel {
         let hops = self.topology.hops(from, to).max(1);
         hops as f64 * self.latency + doubles as f64 / self.doubles_per_sec
     }
+
+    /// Conservative lookahead for the sharded DES (`sim::parallel`): a lower
+    /// bound on `delay_between` over every cross-shard pair under the given
+    /// partition, taken at zero payload — `hops·latency ≤ hops·latency +
+    /// doubles/R` for every message size.  `None` when fewer than two shards
+    /// are populated (no cross-shard traffic; the window is unbounded).
+    ///
+    /// Safety: a message sent at `t ≥ t_window` crossing shards arrives at
+    /// `t + delay ≥ t_window + lookahead` — correctly-rounded f64 `+`/`×`
+    /// are weakly monotone, so the bound survives rounding bit-exactly and
+    /// a strict `< horizon` pop never dispatches an event a future
+    /// cross-shard arrival could precede.
+    pub fn min_cross_shard_delay(&self, shard_of: &[u32]) -> Option<f64> {
+        self.topology
+            .min_cross_partition_hops(shard_of)
+            .map(|hops| hops.max(1) as f64 * self.latency)
+    }
 }
 
 #[cfg(test)]
@@ -104,6 +121,25 @@ mod tests {
         assert_eq!(a.to_bits(), b.to_bits());
         let c = n.delay_between(ProcessId(0), ProcessId(3), 9);
         assert_ne!(a.to_bits(), c.to_bits());
+    }
+
+    #[test]
+    fn min_cross_shard_delay_lower_bounds_every_cross_pair() {
+        let t = Topology::Cluster { nodes: 2, per_node: 4, inter_hops: 4 };
+        let n = NetworkModel::with_topology(1e-6, 1e8, t);
+        let shard_of = t.shard_partition(8, 2); // node-aligned: [0,0,0,0,1,1,1,1]
+        let la = n.min_cross_shard_delay(&shard_of).expect("two shards");
+        assert!((la - 4e-6).abs() < 1e-18, "inter-node tier: {la}");
+        for a in 0..8u32 {
+            for b in 0..8u32 {
+                if shard_of[a as usize] != shard_of[b as usize] {
+                    let d = n.delay_between(ProcessId(a), ProcessId(b), 0);
+                    assert!(d >= la, "pair ({a},{b}): {d} < lookahead {la}");
+                }
+            }
+        }
+        // single populated shard → unbounded window
+        assert_eq!(n.min_cross_shard_delay(&[0, 0, 0]), None);
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! The sharded DES coordinator: conservative time-windowed parallel
+//! execution over `Shard` workers.
+//!
+//! Synchronization protocol (classic conservative / lookahead-based PDES):
+//!
+//! 1. partition the P ranks into S contiguous shards
+//!    (`Topology::shard_partition` — node-aligned on clusters);
+//! 2. derive the lookahead L = `NetworkModel::min_cross_shard_delay`, a
+//!    lower bound on the delay of *any* message crossing a shard boundary;
+//! 3. repeat: find the earliest pending event time `t_next` anywhere, run
+//!    every shard concurrently up to the horizon `t_next + L` (strict `<`),
+//!    then exchange the cross-shard flights produced during the window and
+//!    advance.
+//!
+//! Safety: a cross-shard message sent inside the window (at `t ≥ t_next`)
+//! arrives at `t + delay ≥ t_next + L` — at or past the horizon — so no
+//! shard can dispatch an event that a message it has not yet seen could
+//! precede.  Combined with the engine's parallel-stable event keys
+//! (`emit × P + rank`), every shard dispatches exactly the subsequence of
+//! the single-threaded (time, key) order it owns, and the run is
+//! bit-identical to `SimEngine`: same makespan, same counters, same
+//! fingerprints.  The only intentional deviations: `peak_pending_events`
+//! is the sum of per-shard peaks (an upper bound on the true global
+//! high-water mark), budget errors are window-granular, and `stop_when`
+//! is unsupported (callers needing early-stop predicates use `SimEngine`).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::core::graph::TaskGraph;
+use crate::core::ids::ProcessId;
+use crate::core::process::{Effect, ProcessParams, ProcessState};
+use crate::metrics::counters::DlbCounters;
+use crate::metrics::recorder::RunTrace;
+use crate::metrics::trace::RunTraces;
+use crate::sim::engine::{SimError, SimResult};
+use crate::sim::network::NetworkModel;
+use crate::sim::shard::{OutFlight, Shard, ShardReport};
+
+/// One barrier-to-barrier work order for a shard worker.
+struct WindowCmd {
+    horizon: f64,
+    inbox: Vec<OutFlight>,
+}
+
+/// The parallel simulator.  Same construction surface as `SimEngine`;
+/// dispatch between the two lives in `sim::run_config`.
+pub struct ParallelSimEngine {
+    shards: Vec<Shard>,
+    /// Conservative window length (∞ when only one shard is populated —
+    /// then the whole run is a single window and the worker just drains).
+    lookahead: f64,
+    p: usize,
+    graph: Arc<TaskGraph>,
+    flops_per_sec: f64,
+    pub max_events: u64,
+    pub max_time: f64,
+}
+
+impl ParallelSimEngine {
+    pub fn from_config(cfg: &Config, graph: Arc<TaskGraph>) -> Self {
+        let params = ProcessParams::from_config(cfg);
+        let p = cfg.processes;
+        let threads = cfg.sim_threads.clamp(1, p.max(1));
+        let topo = cfg.build_topology();
+        let shard_of = Arc::new(topo.shard_partition(p, threads));
+        let network =
+            NetworkModel::with_topology(cfg.net_latency, cfg.doubles_per_sec, topo);
+        let lookahead = network.min_cross_shard_delay(&shard_of).unwrap_or(f64::INFINITY);
+        debug_assert!(
+            cfg.exec_jitter == 0.0,
+            "Config::validate rejects exec_jitter > 0 under sim.threads > 1"
+        );
+        // Shard ids from the partition are contiguous and all populated.
+        let n = shard_of.last().map_or(0, |&s| s as usize + 1).max(1);
+        let flops_per_sec = params.cost.flops_per_sec;
+        let mut shards = Vec::with_capacity(n);
+        let mut lo = 0usize;
+        for sid in 0..n {
+            let hi = shard_of.iter().filter(|&&s| s <= sid as u32).count();
+            let procs: Vec<ProcessState> = (lo..hi)
+                .map(|r| {
+                    ProcessState::new(
+                        ProcessId(r as u32),
+                        p,
+                        Arc::clone(&graph),
+                        params.clone(),
+                        cfg.seed,
+                    )
+                })
+                .collect();
+            shards.push(Shard::new(
+                sid as u32,
+                lo,
+                procs,
+                p,
+                network,
+                Arc::clone(&shard_of),
+                cfg.coalesce,
+                n,
+            ));
+            lo = hi;
+        }
+        ParallelSimEngine {
+            shards,
+            lookahead,
+            p,
+            graph,
+            flops_per_sec,
+            max_events: 500_000_000,
+            max_time: f64::INFINITY,
+        }
+    }
+
+    /// Run to completion; bit-identical results to `SimEngine::run` (see
+    /// module docs for the two intentional deviations).
+    pub fn run(&mut self) -> Result<SimResult, SimError> {
+        let n = self.shards.len();
+        let shards_in = std::mem::take(&mut self.shards);
+        let lookahead = self.lookahead;
+        let max_time = self.max_time;
+        let max_events = self.max_events;
+
+        let outcome: Result<(Vec<Shard>, u64), SimError> = std::thread::scope(|scope| {
+            let mut cmd_txs: Vec<mpsc::Sender<WindowCmd>> = Vec::with_capacity(n);
+            let mut rep_rxs: Vec<mpsc::Receiver<ShardReport>> = Vec::with_capacity(n);
+            let (shard_tx, shard_rx) = mpsc::channel::<Shard>();
+            for mut shard in shards_in {
+                let (cmd_tx, cmd_rx) = mpsc::channel::<WindowCmd>();
+                let (rep_tx, rep_rx) = mpsc::channel::<ShardReport>();
+                cmd_txs.push(cmd_tx);
+                rep_rxs.push(rep_rx);
+                let shard_tx = shard_tx.clone();
+                scope.spawn(move || {
+                    // One effects scratch buffer per worker for the whole
+                    // run, mirroring the single-threaded engine.
+                    let mut effects: Vec<Effect> = Vec::with_capacity(64);
+                    shard.boot(&mut effects);
+                    let mut alive = rep_tx.send(shard.take_report()).is_ok();
+                    while alive {
+                        // Sender dropped = coordinator is done (or bailed
+                        // on a budget error): hand the shard back.
+                        let Ok(cmd) = cmd_rx.recv() else { break };
+                        shard.run_window(cmd.horizon, cmd.inbox, &mut effects);
+                        alive = rep_tx.send(shard.take_report()).is_ok();
+                    }
+                    let _ = shard_tx.send(shard);
+                });
+            }
+            drop(shard_tx);
+
+            let mut pending: Vec<Vec<OutFlight>> = (0..n).map(|_| Vec::new()).collect();
+            let mut nexts: Vec<Option<f64>> = vec![None; n];
+            let mut shard_events = vec![0u64; n];
+            let mut shard_live = vec![0usize; n];
+            // Post-boot and per-barrier: collect in shard order so routing
+            // is deterministic (keys make pop order independent of it, but
+            // determinism in the transport layer costs nothing).
+            for i in 0..n {
+                let r = rep_rxs[i].recv().expect("shard worker alive");
+                for (dst, v) in r.outboxes {
+                    pending[dst].extend(v);
+                }
+                nexts[i] = r.next_time;
+                shard_events[i] = r.events;
+                shard_live[i] = r.live;
+            }
+            loop {
+                let mut t_next = f64::INFINITY;
+                for nt in nexts.iter().flatten() {
+                    t_next = t_next.min(*nt);
+                }
+                for inbox in &pending {
+                    for of in inbox {
+                        t_next = t_next.min(of.t);
+                    }
+                }
+                if !t_next.is_finite() {
+                    break;
+                }
+                if t_next > max_time {
+                    drop(cmd_txs);
+                    return Err(SimError::TimeBudget(t_next));
+                }
+                let horizon = t_next + lookahead;
+                for (i, tx) in cmd_txs.iter().enumerate() {
+                    let inbox = std::mem::take(&mut pending[i]);
+                    tx.send(WindowCmd { horizon, inbox }).expect("shard worker alive");
+                }
+                for i in 0..n {
+                    let r = rep_rxs[i].recv().expect("shard worker alive");
+                    for (dst, v) in r.outboxes {
+                        pending[dst].extend(v);
+                    }
+                    nexts[i] = r.next_time;
+                    shard_events[i] = r.events;
+                    shard_live[i] = r.live;
+                }
+                let events: u64 = shard_events.iter().sum();
+                if events > max_events {
+                    drop(cmd_txs);
+                    return Err(SimError::EventBudget(events));
+                }
+            }
+            drop(cmd_txs);
+            let mut out: Vec<Shard> = shard_rx.iter().collect();
+            out.sort_by_key(|s| s.id);
+            let live: usize = shard_live.iter().sum();
+            if live > 0 {
+                return Err(SimError::Deadlock { live });
+            }
+            Ok((out, shard_events.iter().sum()))
+        });
+
+        let (shards, events) = outcome?;
+        let result = Self::collect(self.p, &self.graph, self.flops_per_sec, &shards, events);
+        self.shards = shards;
+        Ok(result)
+    }
+
+    /// `SimEngine::collect`, reassembled from the shards in rank order.
+    fn collect(
+        p: usize,
+        graph: &TaskGraph,
+        flops_per_sec: f64,
+        shards: &[Shard],
+        events: u64,
+    ) -> SimResult {
+        let mut traces = RunTraces::new(p);
+        let mut counters = DlbCounters::default();
+        let mut per = Vec::with_capacity(p);
+        let mut trace = RunTrace::new(p);
+        let mut makespan: f64 = 0.0;
+        let mut end_time: f64 = 0.0;
+        let mut peak = 0usize;
+        for s in shards {
+            end_time = end_time.max(s.now);
+            peak += s.peak_pending;
+            for (k, ps) in s.procs.iter().enumerate() {
+                let i = s.lo + k;
+                makespan = makespan.max(ps.last_completion);
+                counters.merge(ps.counters());
+                per.push(*ps.counters());
+                traces.per_process[i] = ps.trace.clone();
+                if ps.recorder.is_on() {
+                    trace.per_process[i] = ps.recorder.events().to_vec();
+                }
+            }
+        }
+        traces.makespan = makespan;
+        let total_flops: u64 = graph.total_flops();
+        let utilization = if makespan > 0.0 {
+            total_flops as f64 / (p as f64 * flops_per_sec * makespan)
+        } else {
+            0.0
+        };
+        SimResult {
+            makespan,
+            end_time,
+            traces,
+            trace,
+            counters,
+            per_process_counters: per,
+            events_processed: events,
+            peak_pending_events: peak,
+            utilization,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::task::TaskKind;
+    use crate::sim::engine::SimEngine;
+
+    /// Independent tasks all homed on p0 — heavy migration traffic, the
+    /// worst case for cross-shard determinism.
+    fn bag_cfg(n: usize, p: usize, seed: u64, threads: usize) -> (Config, Arc<TaskGraph>) {
+        let mut cfg = Config::default();
+        cfg.processes = p;
+        cfg.dlb_enabled = true;
+        cfg.wt = 3;
+        cfg.delta = 0.0005;
+        cfg.seed = seed;
+        cfg.sim_threads = threads;
+        cfg.validate().expect("valid");
+        let mut b = GraphBuilder::new();
+        for _ in 0..n {
+            let d = b.data(ProcessId(0), 256, 256);
+            b.task(TaskKind::Synthetic, vec![], d, 440_000_000, None);
+        }
+        (cfg, b.build())
+    }
+
+    fn assert_bit_identical(par: &SimResult, single: &SimResult) {
+        assert_eq!(par.makespan.to_bits(), single.makespan.to_bits(), "makespan drifted");
+        assert_eq!(par.end_time.to_bits(), single.end_time.to_bits(), "end_time drifted");
+        assert_eq!(par.events_processed, single.events_processed, "event count drifted");
+        assert_eq!(par.counters, single.counters, "aggregate counters drifted");
+        assert_eq!(par.per_process_counters, single.per_process_counters, "per-rank drift");
+    }
+
+    #[test]
+    fn sharded_bag_is_bit_identical_to_single_thread() {
+        for threads in [2, 3] {
+            let (cfg, g) = bag_cfg(32, 4, 7, threads);
+            let single = {
+                let mut c1 = cfg.clone();
+                c1.sim_threads = 1;
+                SimEngine::from_config(&c1, Arc::clone(&g)).run().expect("single")
+            };
+            let par = ParallelSimEngine::from_config(&cfg, g).run().expect("parallel");
+            assert_bit_identical(&par, &single);
+            assert!(par.counters.tasks_exported > 0, "work must migrate across shards");
+        }
+    }
+
+    #[test]
+    fn sharded_run_with_coalescing_is_bit_identical() {
+        let (mut cfg, g) = bag_cfg(32, 4, 11, 2);
+        cfg.coalesce = true;
+        let single = {
+            let mut c1 = cfg.clone();
+            c1.sim_threads = 1;
+            SimEngine::from_config(&c1, Arc::clone(&g)).run().expect("single")
+        };
+        let par = ParallelSimEngine::from_config(&cfg, g).run().expect("parallel");
+        assert_bit_identical(&par, &single);
+        assert!(par.counters.messages_coalesced > 0);
+    }
+
+    #[test]
+    fn single_shard_degenerates_to_one_window() {
+        // threads = 1 through the parallel path: lookahead is ∞, the whole
+        // run is one window, results still match the oracle.
+        let (cfg, g) = bag_cfg(16, 4, 5, 1);
+        let single = SimEngine::from_config(&cfg, Arc::clone(&g)).run().expect("single");
+        let par = ParallelSimEngine::from_config(&cfg, g).run().expect("parallel");
+        assert_bit_identical(&par, &single);
+    }
+
+    #[test]
+    fn parallel_event_budget_guard() {
+        let (cfg, g) = bag_cfg(16, 4, 5, 2);
+        let mut eng = ParallelSimEngine::from_config(&cfg, g);
+        eng.max_events = 10;
+        assert!(matches!(eng.run(), Err(SimError::EventBudget(_))));
+    }
+
+    #[test]
+    fn chain_across_shards_terminates() {
+        // A dependency chain alternating between ranks in different shards:
+        // every hand-off crosses the barrier.
+        let mut cfg = Config::default();
+        cfg.processes = 2;
+        cfg.dlb_enabled = false;
+        cfg.sim_threads = 2;
+        cfg.validate().expect("valid");
+        let mut b = GraphBuilder::new();
+        let mut prev = None;
+        for i in 0..10 {
+            let home = ProcessId((i % 2) as u32);
+            let d = b.data(home, 64, 64);
+            let args = match prev {
+                Some(pd) => vec![pd],
+                None => vec![],
+            };
+            b.task(TaskKind::Synthetic, args, d, 1_000_000, None);
+            prev = Some(d);
+        }
+        let g = b.build();
+        let single = {
+            let mut c1 = cfg.clone();
+            c1.sim_threads = 1;
+            SimEngine::from_config(&c1, Arc::clone(&g)).run().expect("single")
+        };
+        let par = ParallelSimEngine::from_config(&cfg, g).run().expect("parallel");
+        assert_bit_identical(&par, &single);
+        assert!(par.makespan > 0.0);
+    }
+}

@@ -1,0 +1,443 @@
+//! One shard of the parallel DES: a contiguous block of ranks, their
+//! `ProcessState`s, and a private calendar queue.
+//!
+//! A shard is the single-threaded engine's hot path minus global state:
+//! shard-local sends go straight into the local calendar (no
+//! synchronization whatsoever), cross-shard sends are appended to
+//! per-destination outboxes that the coordinator (`sim::parallel`) routes
+//! at the window barrier.  Event keys are the same parallel-stable
+//! `emit × P + rank` values `SimEngine` uses, so replaying a shard's slice
+//! of the run reproduces the single-threaded dispatch order bit for bit.
+
+use std::sync::Arc;
+
+use crate::core::data::Payload;
+use crate::core::ids::ProcessId;
+use crate::core::process::{Effect, ProcessState};
+use crate::net::message::{Envelope, Flight};
+use crate::sim::calendar::{CalendarQueue, Entry};
+use crate::sim::engine::EventKind;
+use crate::sim::network::NetworkModel;
+
+/// A flight crossing a shard boundary: arrival time and event key travel
+/// with it so the destination shard can enqueue it exactly as the
+/// single-threaded engine would have.
+#[derive(Debug)]
+pub(crate) struct OutFlight {
+    /// Arrival time (`send_time + delay_between`, computed sender-side with
+    /// the exact same float expression as the local path).
+    pub(crate) t: f64,
+    /// The sender's parallel-stable event key (`emit × P + rank`).
+    pub(crate) key: u64,
+    pub(crate) flight: Flight,
+}
+
+/// Where a step's open flight lives — the coalescing scratch must be able
+/// to append tail messages to local slab flights and outbox flights alike.
+#[derive(Debug, Clone, Copy)]
+enum FlightRef {
+    Local(u32),
+    Out { shard: usize, idx: usize },
+}
+
+/// Per-window report a worker hands the coordinator at the barrier.
+#[derive(Debug)]
+pub(crate) struct ShardReport {
+    /// Earliest pending local event, `None` when this shard is drained.
+    pub(crate) next_time: Option<f64>,
+    /// Drained cross-shard outboxes: (destination shard, flights).
+    pub(crate) outboxes: Vec<(usize, Vec<OutFlight>)>,
+    /// Cumulative dispatched events (coalesced tails included), matching
+    /// the single-threaded engine's counting rules.
+    pub(crate) events: u64,
+    /// Owned processes that have not halted.
+    pub(crate) live: usize,
+}
+
+pub(crate) struct Shard {
+    pub(crate) id: u32,
+    /// First owned global rank — ownership is a contiguous interval, so
+    /// `global - lo` indexes `procs`.
+    pub(crate) lo: usize,
+    pub(crate) procs: Vec<ProcessState>,
+    queue: CalendarQueue<EventKind>,
+    env_slab: Vec<Option<Flight>>,
+    env_free: Vec<u32>,
+    coalesce: bool,
+    step_flights: Vec<(ProcessId, u64, FlightRef)>,
+    /// Time of the last event this shard dispatched.
+    pub(crate) now: f64,
+    /// Per-owned-rank emission counters (see `SimEngine::push`).
+    emit_seq: Vec<u64>,
+    tick_at: Vec<f64>,
+    tick_gen: Vec<u64>,
+    pub(crate) live: usize,
+    /// Local pending-event high-water mark; the coordinator reports the
+    /// sum over shards (an upper bound on the true global peak).
+    pub(crate) peak_pending: usize,
+    events: u64,
+    p_total: u64,
+    network: NetworkModel,
+    shard_of: Arc<Vec<u32>>,
+    /// Per-destination-shard outboxes, drained into `take_report`.
+    outboxes: Vec<Vec<OutFlight>>,
+}
+
+impl Shard {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        id: u32,
+        lo: usize,
+        procs: Vec<ProcessState>,
+        p_total: usize,
+        network: NetworkModel,
+        shard_of: Arc<Vec<u32>>,
+        coalesce: bool,
+        n_shards: usize,
+    ) -> Self {
+        let owned = procs.len();
+        Shard {
+            id,
+            lo,
+            procs,
+            queue: CalendarQueue::new(),
+            env_slab: Vec::new(),
+            env_free: Vec::new(),
+            coalesce,
+            step_flights: Vec::new(),
+            now: 0.0,
+            emit_seq: vec![0; owned],
+            tick_at: vec![f64::NEG_INFINITY; owned],
+            tick_gen: vec![0; owned],
+            live: owned,
+            peak_pending: 0,
+            events: 0,
+            p_total: p_total as u64,
+            network,
+            shard_of,
+            outboxes: (0..n_shards).map(|_| Vec::new()).collect(),
+        }
+    }
+
+    /// Local index of an owned global rank.
+    fn li(&self, g: ProcessId) -> usize {
+        debug_assert!(self.owns(g), "rank {g:?} not owned by shard {}", self.id);
+        g.idx() - self.lo
+    }
+
+    fn owns(&self, g: ProcessId) -> bool {
+        self.shard_of[g.idx()] == self.id
+    }
+
+    /// Consume the emitter's next parallel-stable event key.
+    fn next_key(&mut self, src: ProcessId) -> u64 {
+        let li = src.idx() - self.lo;
+        let key = self.emit_seq[li] * self.p_total + src.idx() as u64;
+        self.emit_seq[li] += 1;
+        key
+    }
+
+    fn push(&mut self, src: ProcessId, t: f64, kind: EventKind) {
+        debug_assert!(t >= self.now, "event in the past: {t} < {}", self.now);
+        let key = self.next_key(src);
+        self.queue.push(t, key, kind);
+        self.peak_pending = self.peak_pending.max(self.queue.len());
+    }
+
+    fn stash_flight(&mut self, fl: Flight) -> u32 {
+        match self.env_free.pop() {
+            Some(slot) => {
+                debug_assert!(self.env_slab[slot as usize].is_none());
+                self.env_slab[slot as usize] = Some(fl);
+                slot
+            }
+            None => {
+                self.env_slab.push(Some(fl));
+                (self.env_slab.len() - 1) as u32
+            }
+        }
+    }
+
+    fn unstash_flight(&mut self, slot: u32) -> Flight {
+        let fl = self.env_slab[slot as usize].take().expect("live flight slot");
+        self.env_free.push(slot);
+        fl
+    }
+
+    /// `SimEngine::apply_effects`, split along the shard boundary: local
+    /// sends keep the engine's zero-allocation slab path, cross-shard sends
+    /// consume their event key immediately (key order is per-emitter, so
+    /// this matches the single-threaded engine exactly) and park in the
+    /// destination's outbox until the barrier.  Coalescing stays per-step
+    /// and works on both kinds of open flight via `FlightRef`.
+    fn apply_effects(&mut self, proc: ProcessId, effects: &mut Vec<Effect>) {
+        self.step_flights.clear();
+        let mut coalesced: u64 = 0;
+        for e in effects.drain(..) {
+            match e {
+                Effect::Send(env) => {
+                    let delay = self.network.delay_between(env.from, env.to, env.wire_doubles);
+                    let to = env.to;
+                    if self.coalesce {
+                        let bits = delay.to_bits();
+                        if let Some(&(_, _, fref)) = self
+                            .step_flights
+                            .iter()
+                            .find(|&&(t, b, _)| t == to && b == bits)
+                        {
+                            match fref {
+                                FlightRef::Local(slot) => {
+                                    let fl = self.env_slab[slot as usize]
+                                        .as_mut()
+                                        .expect("open flight slot");
+                                    fl.tail.push(env.msg);
+                                }
+                                FlightRef::Out { shard, idx } => {
+                                    self.outboxes[shard][idx].flight.tail.push(env.msg);
+                                }
+                            }
+                            coalesced += 1;
+                            continue;
+                        }
+                    }
+                    let fl = Flight::sent(env, self.now);
+                    let bits = delay.to_bits();
+                    if self.owns(to) {
+                        let slot = self.stash_flight(fl);
+                        if self.coalesce {
+                            self.step_flights.push((to, bits, FlightRef::Local(slot)));
+                        }
+                        self.push(proc, self.now + delay, EventKind::Deliver { slot });
+                    } else {
+                        let dst = self.shard_of[to.idx()] as usize;
+                        let key = self.next_key(proc);
+                        let idx = self.outboxes[dst].len();
+                        self.outboxes[dst].push(OutFlight { t: self.now + delay, key, flight: fl });
+                        if self.coalesce {
+                            self.step_flights.push((to, bits, FlightRef::Out { shard: dst, idx }));
+                        }
+                    }
+                }
+                Effect::StartExec { task } => {
+                    let li = self.li(proc);
+                    let node = self.procs[li].graph.task(task.task);
+                    let base = self.procs[li].params.cost.local_time(node.flops);
+                    // No jitter term: `Config::validate` rejects
+                    // exec_jitter > 0 under sim.threads > 1, because jitter
+                    // draws from one engine-global RNG stream in dispatch
+                    // order — inherently unshardable.
+                    let duration = base.max(1e-12);
+                    let done = EventKind::ExecDone { proc, rt: task, duration };
+                    self.push(proc, self.now + duration, done);
+                }
+                Effect::ScheduleTick { at } => {
+                    let li = self.li(proc);
+                    let at = at.max(self.now);
+                    if self.tick_at[li] > self.now && self.tick_at[li] <= at + 1e-12 {
+                        continue;
+                    }
+                    self.tick_at[li] = at;
+                    self.tick_gen[li] += 1;
+                    let gen = self.tick_gen[li];
+                    self.push(proc, at, EventKind::Tick { proc, gen });
+                }
+                Effect::Halt => {
+                    debug_assert!(self.live > 0, "halt underflow");
+                    self.live = self.live.saturating_sub(1);
+                }
+            }
+        }
+        if coalesced > 0 {
+            let li = self.li(proc);
+            self.procs[li].policy.counters_mut().messages_coalesced += coalesced;
+        }
+    }
+
+    /// Boot every owned process at t = 0 (rank order, as the
+    /// single-threaded engine does).
+    pub(crate) fn boot(&mut self, effects: &mut Vec<Effect>) {
+        for k in 0..self.procs.len() {
+            let g = ProcessId((self.lo + k) as u32);
+            self.procs[k].start(0.0, effects);
+            self.apply_effects(g, effects);
+        }
+    }
+
+    /// Enqueue the window's cross-shard arrivals and dispatch every local
+    /// event strictly before `horizon`.  Conservative safety: any event
+    /// dispatched here can only be affected by cross-shard messages sent at
+    /// `t ≥ t_window`, which arrive at `≥ t_window + lookahead = horizon` —
+    /// and those are exactly the ones held back by the strict `<`.
+    pub(crate) fn run_window(
+        &mut self,
+        horizon: f64,
+        inbox: Vec<OutFlight>,
+        effects: &mut Vec<Effect>,
+    ) {
+        for of in inbox {
+            let slot = self.stash_flight(of.flight);
+            self.queue.push(of.t, of.key, EventKind::Deliver { slot });
+        }
+        self.peak_pending = self.peak_pending.max(self.queue.len());
+        while let Some(Entry { t, item: kind, .. }) = self.queue.pop_before(horizon) {
+            if let EventKind::Tick { proc, gen } = kind {
+                if gen != self.tick_gen[self.li(proc)] {
+                    continue;
+                }
+            }
+            self.now = t;
+            self.events += 1;
+            if let EventKind::Deliver { slot } = kind {
+                let tail = self.env_slab[slot as usize]
+                    .as_ref()
+                    .map_or(0, |fl| fl.tail.len() as u64);
+                self.events += tail;
+            }
+            match kind {
+                EventKind::Deliver { slot } => {
+                    let fl = self.unstash_flight(slot);
+                    let (from, to) = (fl.head.from, fl.head.to);
+                    let sent_at = fl.sent_at;
+                    let li = self.li(to);
+                    self.procs[li].recorder.msg_flight(
+                        fl.head.msg.kind_name(),
+                        from,
+                        sent_at,
+                        self.now,
+                    );
+                    self.procs[li].on_message(fl.head, self.now, effects);
+                    self.apply_effects(to, effects);
+                    for msg in fl.tail {
+                        let li = self.li(to);
+                        let p = &mut self.procs[li];
+                        p.recorder.msg_flight(msg.kind_name(), from, sent_at, self.now);
+                        let env = Envelope { from, to, msg, wire_doubles: 0 };
+                        self.procs[li].on_message(env, self.now, effects);
+                        self.apply_effects(to, effects);
+                    }
+                }
+                EventKind::ExecDone { proc, rt, duration } => {
+                    let li = self.li(proc);
+                    self.procs[li].on_exec_complete(rt, Payload::Sim, duration, self.now, effects);
+                    self.apply_effects(proc, effects);
+                }
+                EventKind::Tick { proc, .. } => {
+                    let li = self.li(proc);
+                    self.procs[li].on_tick(self.now, effects);
+                    self.apply_effects(proc, effects);
+                }
+            }
+        }
+    }
+
+    /// Barrier hand-off: drained outboxes, earliest pending local event,
+    /// cumulative event count, and remaining live processes.
+    pub(crate) fn take_report(&mut self) -> ShardReport {
+        let mut out = Vec::new();
+        for (dst, v) in self.outboxes.iter_mut().enumerate() {
+            if !v.is_empty() {
+                out.push((dst, std::mem::take(v)));
+            }
+        }
+        ShardReport {
+            next_time: self.queue.next_time(),
+            outboxes: out,
+            events: self.events,
+            live: self.live,
+        }
+    }
+
+    #[cfg(test)]
+    pub(crate) fn events(&self) -> u64 {
+        self.events
+    }
+
+    #[cfg(test)]
+    pub(crate) fn pending(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::core::graph::GraphBuilder;
+    use crate::core::process::ProcessParams;
+    use crate::core::task::TaskKind;
+    use crate::net::message::Msg;
+    use crate::net::topology::Topology;
+
+    /// A 2-rank world split into 2 shards; returns shard 1 (owning rank 1).
+    fn lone_shard() -> Shard {
+        let mut cfg = Config::default();
+        cfg.processes = 2;
+        cfg.dlb_enabled = false;
+        cfg.validate().expect("valid");
+        let mut b = GraphBuilder::new();
+        let d = b.data(ProcessId(0), 8, 8);
+        b.task(TaskKind::Synthetic, vec![], d, 1_000, None);
+        let graph = b.build();
+        let params = ProcessParams::from_config(&cfg);
+        let shard_of = Arc::new(vec![0u32, 1u32]);
+        let net = NetworkModel::with_topology(cfg.net_latency, cfg.doubles_per_sec, Topology::Flat);
+        let procs = vec![ProcessState::new(ProcessId(1), 2, graph, params, cfg.seed)];
+        Shard::new(1, 1, procs, 2, net, shard_of, false, 2)
+    }
+
+    #[test]
+    fn arrival_exactly_at_the_horizon_is_not_processed_early() {
+        // The conservative contract at its boundary: a cross-shard message
+        // whose arrival lands exactly ON the horizon must wait for the next
+        // window — another shard may still emit an event at that instant.
+        let mut shard = lone_shard();
+        let mut effects = Vec::new();
+        let horizon = 5e-6;
+        let inbox = vec![OutFlight {
+            t: horizon,
+            key: 0,
+            flight: Flight::sent(
+                Envelope {
+                    from: ProcessId(0),
+                    to: ProcessId(1),
+                    msg: Msg::Shutdown,
+                    wire_doubles: 0,
+                },
+                0.0,
+            ),
+        }];
+        shard.run_window(horizon, inbox, &mut effects);
+        assert_eq!(shard.events(), 0, "boundary arrival dispatched early");
+        assert_eq!(shard.pending(), 1, "arrival must stay queued");
+        assert_eq!(shard.live, 1);
+        // next window opens past the arrival: now it dispatches
+        shard.run_window(2.0 * horizon, Vec::new(), &mut effects);
+        assert_eq!(shard.events(), 1);
+        assert_eq!(shard.pending(), 0);
+        assert_eq!(shard.live, 0, "Shutdown halts the rank");
+        assert_eq!(shard.now, horizon);
+    }
+
+    #[test]
+    fn strictly_earlier_arrival_is_processed_in_window() {
+        let mut shard = lone_shard();
+        let mut effects = Vec::new();
+        let horizon = 5e-6;
+        let inbox = vec![OutFlight {
+            t: horizon / 2.0,
+            key: 0,
+            flight: Flight::sent(
+                Envelope {
+                    from: ProcessId(0),
+                    to: ProcessId(1),
+                    msg: Msg::Shutdown,
+                    wire_doubles: 0,
+                },
+                0.0,
+            ),
+        }];
+        shard.run_window(horizon, inbox, &mut effects);
+        assert_eq!(shard.events(), 1);
+        assert_eq!(shard.live, 0);
+    }
+}

@@ -212,6 +212,42 @@ fn tracing_on_is_bit_identical_to_tracing_off_for_every_policy() {
     }
 }
 
+/// The tentpole contract of the sharded engine: `--sim-threads N` is
+/// bit-identical to the single-threaded oracle on every policy × adaptive
+/// cell — makespan bits, end-time bits, event count, and the full counter
+/// set, aggregate and per-rank.  The skewed bag forces heavy cross-shard
+/// migration, so every pairing message crosses the window barrier.
+#[test]
+fn parallel_engine_matches_single_thread_fingerprints_for_every_policy() {
+    for policy in PolicyKind::ALL {
+        for adaptive in [false, true] {
+            let cfg = cfg_for(policy, adaptive, 1);
+            let single = SimEngine::from_config(&cfg, bag_graph(24)).run().expect("single");
+            let mut pcfg = cfg.clone();
+            pcfg.sim_threads = 2;
+            pcfg.validate().expect("valid");
+            let par = ductr::sim::run_config(&pcfg, bag_graph(24)).expect("sharded");
+            let tag = format!("{policy} (adaptive {adaptive})");
+            assert_eq!(
+                par.makespan.to_bits(),
+                single.makespan.to_bits(),
+                "{tag}: makespan diverged across engines"
+            );
+            assert_eq!(
+                par.end_time.to_bits(),
+                single.end_time.to_bits(),
+                "{tag}: end time diverged across engines"
+            );
+            assert_eq!(par.events_processed, single.events_processed, "{tag}: event count");
+            assert_eq!(par.counters, single.counters, "{tag}: aggregate counters");
+            assert_eq!(
+                par.per_process_counters, single.per_process_counters,
+                "{tag}: per-rank counters"
+            );
+        }
+    }
+}
+
 /// Snapshot comparison.  When `tests/golden/determinism.txt` exists the
 /// current fingerprints must match it bit for bit; when it does not (first
 /// run on a new toolchain/checkout) it is written, and the test passes with

@@ -8,7 +8,7 @@ use std::collections::BinaryHeap;
 use std::sync::Arc;
 
 use ductr::apps::{bag, rand_dag};
-use ductr::config::{Config, Strategy};
+use ductr::config::{Config, PolicyKind, Strategy, TopologyKind};
 use ductr::core::graph::TaskGraph;
 use ductr::core::ids::ProcessId;
 use ductr::net::topology::Topology;
@@ -541,6 +541,79 @@ fn prop_trace_spans_well_formed_and_run_unperturbed() {
                     ));
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// sharded parallel engine (PR 7): under any policy × topology × process
+// count × shard count, the conservatively-windowed engine must be
+// *bit-identical* to the single-threaded oracle — makespan bits, event
+// count, and every DLB counter, aggregate and per-rank.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct ShardScenario {
+    base: Scenario,
+    policy: PolicyKind,
+    topology: TopologyKind,
+    shards: usize,
+}
+
+fn gen_shard_scenario(g: &mut Gen) -> ShardScenario {
+    let mut base = gen_scenario(g);
+    // keep P small enough that 25 dual runs stay fast, large enough that
+    // every shard count in the table can actually split the ranks
+    base.processes = g.usize_in(2..17).max(2);
+    ShardScenario {
+        base,
+        policy: PolicyKind::ALL[g.usize_in(0..4).min(3)],
+        topology: [
+            TopologyKind::Flat,
+            TopologyKind::Ring,
+            TopologyKind::Torus,
+            TopologyKind::Cluster,
+        ][g.usize_in(0..4).min(3)],
+        shards: [1, 2, 3, 8][g.usize_in(0..4).min(3)],
+    }
+}
+
+#[test]
+fn prop_sharded_engine_bit_identical_to_single_thread() {
+    forall(25, 0x5A4D, gen_shard_scenario, |s| -> Result<(), String> {
+        let mut cfg = config_of(&s.base);
+        cfg.policy = s.policy;
+        cfg.topology = s.topology;
+        cfg.validate().map_err(|e| format!("{s:?}: {e}"))?;
+        let g = build_graph(&s.base);
+        let single = SimEngine::from_config(&cfg, Arc::clone(&g))
+            .run()
+            .map_err(|e| format!("{s:?}: single: {e}"))?;
+        let mut pcfg = cfg.clone();
+        pcfg.sim_threads = s.shards.min(s.base.processes);
+        pcfg.validate().map_err(|e| format!("{s:?}: {e}"))?;
+        let par = ductr::sim::run_config(&pcfg, g).map_err(|e| format!("{s:?}: sharded: {e}"))?;
+        if par.makespan.to_bits() != single.makespan.to_bits() {
+            return Err(format!(
+                "{s:?}: makespan diverged ({} vs {})",
+                par.makespan, single.makespan
+            ));
+        }
+        if par.events_processed != single.events_processed {
+            return Err(format!(
+                "{s:?}: event count diverged ({} vs {})",
+                par.events_processed, single.events_processed
+            ));
+        }
+        if par.counters != single.counters {
+            return Err(format!(
+                "{s:?}: aggregate counters diverged\n  sharded {:?}\n  single  {:?}",
+                par.counters, single.counters
+            ));
+        }
+        if par.per_process_counters != single.per_process_counters {
+            return Err(format!("{s:?}: per-process counters diverged"));
         }
         Ok(())
     });
