@@ -76,7 +76,7 @@ pub fn initial_data(dag: &CholeskyDag, a: &Dense, processes: usize) -> InitialDa
         for j in 0..=i {
             let h: DataId = dag.handle(i, j);
             let home = dag.graph.meta(h).home;
-            init[home.idx()].push((h, Payload::Real(block_of(a, i, j, dag.block))));
+            init[home.idx()].push((h, Payload::real_from(block_of(a, i, j, dag.block))));
         }
     }
     init

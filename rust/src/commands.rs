@@ -34,7 +34,14 @@ SUBCOMMANDS:
                       diff against a committed baseline — fails the run on
                       an events/sec regression; --sim-threads N adds a
                       threads=N row per cell, gated bit-for-bit against its
-                      threads=1 twin)
+                      threads=1 twin);
+                      --real switches to the threaded-runtime matrix
+                      (P × policy × cores on the imbalanced bag, real
+                      threads + shaped wire): reports wallclock makespan and
+                      round-latency p95 from the span recorder, writes
+                      BENCH_real.json, and hard-fails any DLB cell that
+                      stops migrating work — behavior gates, never timing,
+                      so --real --smoke is safe on loaded CI runners
     experiment <id>   regenerate a paper figure: fig1 | fig3 | fig4 | fig5 | sec4 | ablation | compare | all
     trace             run one workload with the span recorder armed, print
                       latency percentiles, and write a Chrome trace-event
@@ -424,22 +431,58 @@ fn cmd_compare(args: &mut Args) -> Result<()> {
 /// The DES hot-path baseline (the perf trajectory record, BENCH_pr5.json).
 fn cmd_bench(args: &mut Args) -> Result<()> {
     let smoke = args.get_bool("smoke")?;
+    let real = args.get_bool("real")?;
     let seed = args.get_u64("seed")?.unwrap_or(1);
     // Same 0-is-a-typo contract as the run flag: each cell always gets its
     // threads=1 oracle row; N > 1 adds a sharded row gated against it.
-    let threads = match args.get_usize("sim-threads")? {
+    let threads_flag = args.get_usize("sim-threads")?;
+    let threads = match threads_flag {
         Some(0) => bail!("--sim-threads: must be ≥ 1, got 0"),
         Some(n) => n,
         None => 1,
     };
     let baseline = args.get_str("baseline");
+    let out_flag = args.get_str("out");
+    args.finish().map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
+
+    if real {
+        // The threaded matrix: wallclock numbers, so no cross-machine
+        // --baseline timing gate (behavior gates live inside the run) and
+        // no DES shard dimension.
+        if threads_flag.is_some() {
+            bail!("--sim-threads applies to the DES bench, not --real");
+        }
+        if baseline.is_some() {
+            bail!(
+                "--baseline applies to the DES bench, not --real \
+                 (wallclock timings are machine-dependent; --real gates on \
+                 completion + migration counters instead)"
+            );
+        }
+        let repo_real = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_real.json");
+        let out = match out_flag {
+            Some(o) => o,
+            None if smoke => {
+                std::env::temp_dir().join("ductr_bench_real_smoke.json").display().to_string()
+            }
+            None if std::path::Path::new(repo_real).exists() => repo_real.to_string(),
+            None => "BENCH_real.json".to_string(),
+        };
+        let r = ductr::experiments::bench_real::run(seed, smoke)?;
+        print!("{}", r.render());
+        r.write_json(std::path::Path::new(&out))
+            .map_err(|e| anyhow!("writing {out}: {e}"))?;
+        println!("real-mode baseline → {out}");
+        return Ok(());
+    }
+
     // Full sweeps default to the committed baseline at this checkout's
     // repo root (compile-time anchor, checked at runtime so a copied
     // binary on another machine falls back to the current directory
     // instead of failing or touching an unrelated file).  Smoke runs must
     // not overwrite the baseline — they default to a temp path.
     let repo_baseline = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pr5.json");
-    let out = match args.get_str("out") {
+    let out = match out_flag {
         Some(o) => o,
         None if smoke => {
             std::env::temp_dir().join("ductr_bench_smoke.json").display().to_string()
@@ -447,7 +490,6 @@ fn cmd_bench(args: &mut Args) -> Result<()> {
         None if std::path::Path::new(repo_baseline).exists() => repo_baseline.to_string(),
         None => "BENCH_pr5.json".to_string(),
     };
-    args.finish().map_err(|e| anyhow!("{e}\n\n{USAGE}"))?;
     // Read the baseline BEFORE anything is written: the default full-sweep
     // out path IS the committed baseline, so loading later would diff the
     // fresh run against its own just-written numbers (always passing) and

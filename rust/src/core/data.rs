@@ -5,6 +5,8 @@
 //! mode payloads are size-only; in real mode they carry `f32` block data fed
 //! to the PJRT kernels.
 
+use std::sync::Arc;
+
 use super::ids::{DataId, ProcessId};
 
 /// Static metadata for one data handle.
@@ -32,11 +34,23 @@ pub enum Payload {
     /// Simulation mode: the value is not materialized, only its size (in
     /// doubles) is modeled by the network.
     Sim,
-    /// Real mode: row-major f32 block contents.
-    Real(Vec<f32>),
+    /// Real mode: row-major f32 block contents, shared by reference.
+    ///
+    /// `Arc` because blocks are immutable once produced (the graph's
+    /// WAR/WAW edges guarantee no in-place update races — see `DataStore`
+    /// below): the store, an in-flight `TaskExport`, and a worker's kernel
+    /// argument list may all alias the same allocation, so cloning a
+    /// payload is pointer-sized instead of a block copy.
+    Real(Arc<[f32]>),
 }
 
 impl Payload {
+    /// Wrap freshly produced block contents (the one copy a block ever
+    /// pays: `Vec` → shared slice at creation).
+    pub fn real_from(v: Vec<f32>) -> Payload {
+        Payload::Real(v.into())
+    }
+
     pub fn is_real(&self) -> bool {
         matches!(self, Payload::Real(_))
     }
@@ -44,6 +58,15 @@ impl Payload {
     pub fn real(&self) -> Option<&[f32]> {
         match self {
             Payload::Real(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// A shared handle to the block contents (no copy); `None` for
+    /// control-plane / sim payloads.
+    pub fn real_arc(&self) -> Option<Arc<[f32]>> {
+        match self {
+            Payload::Real(v) => Some(Arc::clone(v)),
             _ => None,
         }
     }
@@ -119,7 +142,7 @@ mod tests {
         let mut s = DataStore::new();
         let id = DataId(3);
         assert!(!s.contains(id));
-        s.insert(id, Payload::Real(vec![1.0, 2.0]));
+        s.insert(id, Payload::real_from(vec![1.0, 2.0]));
         assert!(s.contains(id));
         assert_eq!(s.get(id).and_then(|p| p.real()), Some(&[1.0f32, 2.0][..]));
         let taken = s.take(id).expect("present");
@@ -131,7 +154,7 @@ mod tests {
     fn overwrite_replaces() {
         let mut s = DataStore::new();
         s.insert(DataId(0), Payload::Sim);
-        s.insert(DataId(0), Payload::Real(vec![5.0]));
+        s.insert(DataId(0), Payload::real_from(vec![5.0]));
         assert!(s.get(DataId(0)).expect("present").is_real());
         assert_eq!(s.len(), 1);
     }
@@ -147,6 +170,23 @@ mod tests {
         assert!(s.take(DataId(3)).is_none());
         assert_eq!(s.take(DataId(7)), Some(Payload::Sim));
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn payload_clone_shares_the_allocation() {
+        let p = Payload::real_from(vec![1.0, 2.0, 3.0]);
+        let q = p.clone();
+        let (a, b) = (p.real_arc().expect("real"), q.real_arc().expect("real"));
+        assert!(Arc::ptr_eq(&a, &b), "clone must alias, not copy");
+        assert_eq!(p, q);
+        // reads through either handle see the same contents
+        assert_eq!(q.real(), Some(&[1.0f32, 2.0, 3.0][..]));
+    }
+
+    #[test]
+    fn real_arc_is_none_for_control_payloads() {
+        assert!(Payload::None.real_arc().is_none());
+        assert!(Payload::Sim.real_arc().is_none());
     }
 
     #[test]

@@ -851,6 +851,58 @@ mod tests {
         assert_eq!(ps.counters().tasks_exported, 7);
     }
 
+    /// Payload ownership rule: shipping a task's inputs in a `TaskExport`
+    /// aliases the store's `Arc` blocks — no deep copy on export — and the
+    /// exporter can still read its local copy afterwards (a concurrent
+    /// local consumer of the same version must keep working).
+    #[test]
+    fn exported_task_inputs_alias_the_store_blocks() {
+        let mut b = GraphBuilder::new();
+        let shared = b.data(ProcessId(0), 8, 8); // producer-less v0 input
+        for _ in 0..10 {
+            let d = b.data(ProcessId(0), 8, 8);
+            b.task(TaskKind::Synthetic, vec![shared], d, 1000, None);
+        }
+        let mut ps = ProcessState::new(ProcessId(0), 2, b.build(), params(true, 2, 0), 1);
+        ps.store.insert(shared, Payload::real_from(vec![7.0; 64]));
+        let _ = run_start(&mut ps);
+        let _ = deliver(
+            &mut ps,
+            envelope(1, 0, Msg::PairRequest { round: 1, role: Role::Idle, load: 0, eta: 0.0 }),
+            0.001,
+        );
+        let effects = deliver(
+            &mut ps,
+            envelope(1, 0, Msg::PairConfirm { round: 1, load: 0, eta: 0.0 }),
+            0.002,
+        );
+        let tasks = effects
+            .iter()
+            .find_map(|e| match e {
+                Effect::Send(env) => match &env.msg {
+                    Msg::TaskExport { tasks, .. } => Some(tasks),
+                    _ => None,
+                },
+                _ => None,
+            })
+            .expect("busy side must export");
+        let store_arc =
+            ps.store.get(shared).and_then(|p| p.real_arc()).expect("block still local");
+        let mut aliased = 0;
+        for mt in tasks {
+            for (d, p) in &mt.inputs {
+                if *d == shared {
+                    let sent = p.real_arc().expect("real input shipped");
+                    assert!(Arc::ptr_eq(&sent, &store_arc), "export must alias, not copy");
+                    aliased += 1;
+                }
+            }
+        }
+        assert!(aliased > 0, "exported tasks carry the shared input");
+        // local read-through is unaffected by the export in flight
+        assert_eq!(ps.store.get(shared).and_then(|p| p.real()), Some(&[7.0f32; 64][..]));
+    }
+
     #[test]
     fn task_export_receipt_enqueues_migrated_tasks() {
         // p1's view: receives 2 tasks of p0's

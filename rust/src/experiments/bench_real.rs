@@ -1,0 +1,270 @@
+//! `ductr bench --real` — the threaded-runtime fast-path baseline: a real
+//! (wallclock, multi-thread) matrix over P × policy × cores on the
+//! imbalanced synthetic bag, reporting makespan and round-latency
+//! percentiles from the span recorder.
+//!
+//! Unlike the DES bench (`experiments::bench`), these numbers are wallclock
+//! and therefore machine- and scheduler-dependent — there is no baseline
+//! regression gate on timing.  What the run *does* gate on, hard, is
+//! behavior: every cell must complete, and every DLB-on cell must actually
+//! migrate work (a cell whose coordinator stopped answering the pairing
+//! protocol fails the whole bench, which is exactly the regression the
+//! async-outbox / event-driven-coordinator fast path exists to prevent).
+//! That makes `--smoke` safe for CI on loaded shared runners.
+
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::anyhow;
+use crate::config::{Config, PolicyKind};
+use crate::core::graph::{GraphBuilder, TaskGraph};
+use crate::core::ids::ProcessId;
+use crate::core::task::TaskKind;
+use crate::metrics::LatencyReport;
+use crate::runtime::{run_threaded, InitialData};
+use crate::util::error::Result;
+
+/// One threaded cell: a policy (or DLB off) at a process/core count.
+#[derive(Debug, Clone)]
+pub struct RealBenchCase {
+    pub name: String,
+    pub processes: usize,
+    pub cores: usize,
+    /// `"off"` or the `PolicyKind` name.
+    pub policy: String,
+    pub tasks: usize,
+    /// Wallclock seconds, start → last task completion.
+    pub makespan: f64,
+    pub tasks_exported: u64,
+    pub rounds: u64,
+    pub round_p50: f64,
+    pub round_p95: f64,
+    pub qwait_p95: f64,
+    /// Whole-cell wall time (includes thread spawn/join overhead).
+    pub wall_secs: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct RealBenchReport {
+    pub seed: u64,
+    pub smoke: bool,
+    pub cases: Vec<RealBenchCase>,
+}
+
+/// The imbalanced bag: `n` independent tasks, all homed on rank 0 — the
+/// workload every DLB policy exists to spread.
+fn bag(n: usize, flops: u64) -> Arc<TaskGraph> {
+    let mut b = GraphBuilder::new();
+    for _ in 0..n {
+        let d = b.data(ProcessId(0), 16, 16);
+        b.task(TaskKind::Synthetic, vec![], d, flops, None);
+    }
+    b.build()
+}
+
+fn cell_config(
+    p: usize,
+    cores: usize,
+    policy: Option<PolicyKind>,
+    seed: u64,
+) -> Result<Config> {
+    let mut cfg = Config::default();
+    cfg.processes = p;
+    cfg.cores_per_process = cores;
+    cfg.seed = seed;
+    cfg.dlb_enabled = policy.is_some();
+    if let Some(pk) = policy {
+        cfg.policy = pk;
+    }
+    cfg.wt = 2;
+    cfg.delta = 0.001;
+    cfg.flops_per_sec = 1e9;
+    // shaped wire so every cell exercises the async outbox: 200 µs per hop
+    // plus a finite bandwidth term, same cost model as the DES
+    cfg.net_latency = 0.0002;
+    cfg.doubles_per_sec = 5e7;
+    cfg.trace_enabled = true;
+    cfg.validate().map_err(|e| anyhow!("bench --real config: {e}"))?;
+    Ok(cfg)
+}
+
+fn policy_label(policy: Option<PolicyKind>) -> String {
+    match policy {
+        None => "off".to_string(),
+        Some(pk) => pk.to_string(),
+    }
+}
+
+/// Run the matrix.  `smoke` shrinks it to a seconds-scale CI profile.
+pub fn run(seed: u64, smoke: bool) -> Result<RealBenchReport> {
+    let (p_list, cores_list): (&[usize], &[usize]) =
+        if smoke { (&[2, 4], &[2]) } else { (&[2, 4, 8], &[1, 2]) };
+    let policies: Vec<Option<PolicyKind>> = if smoke {
+        vec![None, Some(PolicyKind::RandomPairing), Some(PolicyKind::WorkStealing)]
+    } else {
+        vec![
+            None,
+            Some(PolicyKind::RandomPairing),
+            Some(PolicyKind::WorkStealing),
+            Some(PolicyKind::Diffusion),
+        ]
+    };
+    // 1 ms tasks keep the smoke matrix in CI seconds; 2 ms in the full one
+    let (tasks_per_p, flops): (usize, u64) =
+        if smoke { (8, 1_000_000) } else { (12, 2_000_000) };
+
+    let mut cases = Vec::new();
+    for &p in p_list {
+        for &cores in cores_list {
+            for &policy in &policies {
+                let cfg = cell_config(p, cores, policy, seed)?;
+                let n = tasks_per_p * p;
+                let graph = bag(n, flops);
+                let init: InitialData = vec![vec![]; p];
+                let label = policy_label(policy);
+                let name = format!("bag P={p} cores={cores} {label}");
+                let t0 = Instant::now();
+                let r = run_threaded(&cfg, graph, init, false)
+                    .map_err(|e| anyhow!("{name}: {e}"))?;
+                let wall_secs = t0.elapsed().as_secs_f64();
+                // behavior gates (wallclock-independent): completion is
+                // implied by Ok; a DLB cell that moved nothing means the
+                // coordinator stopped answering the protocol
+                if r.makespan <= 0.0 {
+                    return Err(anyhow!("{name}: empty makespan"));
+                }
+                if policy.is_some() && r.counters.tasks_exported == 0 {
+                    return Err(anyhow!("{name}: DLB on but no task migrated"));
+                }
+                if r.counters.tasks_exported != r.counters.tasks_received {
+                    return Err(anyhow!(
+                        "{name}: exported {} != received {}",
+                        r.counters.tasks_exported,
+                        r.counters.tasks_received
+                    ));
+                }
+                let lat = LatencyReport::from_trace(&r.trace);
+                cases.push(RealBenchCase {
+                    name,
+                    processes: p,
+                    cores,
+                    policy: label,
+                    tasks: n,
+                    makespan: r.makespan,
+                    tasks_exported: r.counters.tasks_exported,
+                    rounds: r.counters.rounds,
+                    round_p50: lat.round.quantile(0.50),
+                    round_p95: lat.round.quantile(0.95),
+                    qwait_p95: lat.queue_wait.quantile(0.95),
+                    wall_secs,
+                });
+            }
+        }
+    }
+    Ok(RealBenchReport { seed, smoke, cases })
+}
+
+impl RealBenchReport {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "ductr bench --real (seed {}, {}): threaded fast path\n",
+            self.seed,
+            if self.smoke { "smoke" } else { "full" }
+        ));
+        s.push_str(
+            "case                              tasks   makespan   exported   rounds  round_p95  qwait_p95\n",
+        );
+        for c in &self.cases {
+            s.push_str(&format!(
+                "  {:<30} {:>6} {:>9.4}s {:>10} {:>8} {:>9.5}s {:>9.5}s\n",
+                c.name, c.tasks, c.makespan, c.tasks_exported, c.rounds, c.round_p95, c.qwait_p95
+            ));
+        }
+        s
+    }
+
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{{")?;
+        writeln!(f, "  \"generated_by\": \"ductr bench --real\",")?;
+        writeln!(f, "  \"placeholder\": false,")?;
+        writeln!(f, "  \"seed\": {},", self.seed)?;
+        writeln!(f, "  \"smoke\": {},", self.smoke)?;
+        writeln!(f, "  \"cases\": [")?;
+        for (i, c) in self.cases.iter().enumerate() {
+            let comma = if i + 1 < self.cases.len() { "," } else { "" };
+            writeln!(
+                f,
+                "    {{\"name\": \"{}\", \"processes\": {}, \"cores\": {}, \
+                 \"policy\": \"{}\", \"tasks\": {}, \"makespan\": {}, \
+                 \"tasks_exported\": {}, \"rounds\": {}, \
+                 \"round_p50\": {}, \"round_p95\": {}, \"qwait_p95\": {}, \
+                 \"wall_secs\": {}}}{comma}",
+                c.name,
+                c.processes,
+                c.cores,
+                c.policy,
+                c.tasks,
+                c.makespan,
+                c.tasks_exported,
+                c.rounds,
+                c.round_p50,
+                c.round_p95,
+                c.qwait_p95,
+                c.wall_secs
+            )?;
+        }
+        writeln!(f, "  ]")?;
+        writeln!(f, "}}")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One DLB-on smoke-profile cell end to end through the gates (the
+    /// full matrix is exercised by the CI `bench --real --smoke` step).
+    #[test]
+    fn one_real_cell_passes_the_behavior_gates() {
+        let cfg = cell_config(2, 2, Some(PolicyKind::RandomPairing), 1).expect("cfg");
+        let graph = bag(16, 1_000_000);
+        let r = run_threaded(&cfg, graph, vec![vec![]; 2], false).expect("run");
+        assert!(r.makespan > 0.0);
+        assert!(r.counters.tasks_exported > 0, "imbalanced bag must migrate");
+        assert_eq!(r.counters.tasks_exported, r.counters.tasks_received);
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let rep = RealBenchReport {
+            seed: 1,
+            smoke: true,
+            cases: vec![RealBenchCase {
+                name: "bag P=2 cores=2 pairing".into(),
+                processes: 2,
+                cores: 2,
+                policy: "pairing".into(),
+                tasks: 16,
+                makespan: 0.01,
+                tasks_exported: 5,
+                rounds: 3,
+                round_p50: 0.001,
+                round_p95: 0.002,
+                qwait_p95: 0.0005,
+                wall_secs: 0.02,
+            }],
+        };
+        assert!(rep.render().contains("bag P=2 cores=2 pairing"));
+        let path = std::env::temp_dir().join("ductr_bench_real_test.json");
+        rep.write_json(&path).expect("write");
+        let body = std::fs::read_to_string(&path).expect("read");
+        assert!(body.contains("\"generated_by\": \"ductr bench --real\""));
+        assert!(body.contains("\"tasks_exported\": 5"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

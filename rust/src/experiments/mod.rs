@@ -7,6 +7,7 @@
 
 pub mod ablation;
 pub mod bench;
+pub mod bench_real;
 pub mod compare;
 pub mod fig1;
 pub mod fig3;

@@ -276,7 +276,7 @@ mod tests {
         let data = Msg::TaskDone {
             task: TaskId(0),
             data: DataId(0),
-            payload: Payload::Real(vec![0.0; 100]),
+            payload: Payload::real_from(vec![0.0; 100]),
         };
         assert_eq!(data.wire_doubles(8), 108);
     }
@@ -290,8 +290,8 @@ mod tests {
                     task: TaskId(1),
                     origin: ProcessId(0),
                     inputs: vec![
-                        (DataId(0), Payload::Real(vec![0.0; 10])),
-                        (DataId(1), Payload::Real(vec![0.0; 20])),
+                        (DataId(0), Payload::real_from(vec![0.0; 10])),
+                        (DataId(1), Payload::real_from(vec![0.0; 20])),
                     ],
                 },
                 MigratedTask { task: TaskId(2), origin: ProcessId(0), inputs: vec![] },

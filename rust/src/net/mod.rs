@@ -8,4 +8,4 @@ pub mod transport;
 
 pub use message::{Envelope, Flight, MigratedTask, Msg, Role};
 pub use topology::Topology;
-pub use transport::{mesh, mesh_on, precise_wait, Mailbox, Router, Shaper};
+pub use transport::{mesh, mesh_on, precise_wait, FromEnvelope, Mailbox, Router, Shaper};

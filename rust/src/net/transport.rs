@@ -4,37 +4,86 @@
 //! The DES does not use this (it delivers envelopes through its event heap —
 //! `sim::network`); the `Router`/`Mailbox` pair is the real-mode equivalent
 //! with wallclock semantics.
+//!
+//! Shaping is **asynchronous**: `Router::send` never sleeps.  When a shaper
+//! is configured, the send stamps the envelope with its modeled arrival
+//! deadline (`hops × latency + doubles / R`, the same formula the DES's
+//! `NetworkModel` charges) and hands it to a dedicated net thread that
+//! releases envelopes in deadline order.  The caller — the coordinator
+//! thread, whose responsiveness the whole pairing protocol depends on —
+//! returns in O(1).  An earlier design waited out the delay inline on the
+//! sender, which stalled the coordinator for the full wire time of every
+//! protocol message.
 
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::collections::BinaryHeap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::time::{Duration, Instant};
 
 use crate::core::ids::ProcessId;
+use crate::util::fxhash::FxHashMap;
 
 use super::message::Envelope;
 use super::topology::Topology;
 
+/// What a mailbox channel carries.  The threaded runtime's coordinator
+/// multiplexes network messages and worker completions over ONE channel (so
+/// either kind of event wakes its park immediately), which means the mesh is
+/// generic over the event type it delivers into.  Plain `Envelope` mailboxes
+/// are the identity case.
+pub trait FromEnvelope: Send + 'static {
+    fn from_envelope(env: Envelope) -> Self;
+}
+
+impl FromEnvelope for Envelope {
+    fn from_envelope(env: Envelope) -> Self {
+        env
+    }
+}
+
 /// Sender side: can address any process.
-#[derive(Clone)]
-pub struct Router {
-    senders: Vec<Sender<Envelope>>,
+pub struct Router<E: FromEnvelope = Envelope> {
+    senders: Vec<Sender<E>>,
     shaper: Option<Shaper>,
     topology: Topology,
+    /// Handle to the net thread; `Some` iff a shaper is configured.
+    outbox: Option<Sender<Timed>>,
+}
+
+// Manual impl: `#[derive(Clone)]` would demand `E: Clone`, which event enums
+// holding non-Clone payloads (worker completions) cannot provide.  Cloning a
+// Router only clones channel handles.
+impl<E: FromEnvelope> Clone for Router<E> {
+    fn clone(&self) -> Self {
+        Router {
+            senders: self.senders.clone(),
+            shaper: self.shaper,
+            topology: self.topology,
+            outbox: self.outbox.clone(),
+        }
+    }
 }
 
 /// Receiver side: one per process.
-pub struct Mailbox {
+pub struct Mailbox<E = Envelope> {
     pub me: ProcessId,
-    rx: Receiver<Envelope>,
+    rx: Receiver<E>,
 }
 
 /// Build a fully-connected mesh for `p` processes (flat topology).
-pub fn mesh(p: usize, shaper: Option<Shaper>) -> (Router, Vec<Mailbox>) {
+pub fn mesh<E: FromEnvelope>(p: usize, shaper: Option<Shaper>) -> (Router<E>, Vec<Mailbox<E>>) {
     mesh_on(p, shaper, Topology::Flat)
 }
 
 /// Build a mesh whose shaper charges `hops(from, to)` of latency per
 /// message — the threaded-mode counterpart of the DES topology model.
-pub fn mesh_on(p: usize, shaper: Option<Shaper>, topology: Topology) -> (Router, Vec<Mailbox>) {
+///
+/// With a shaper, this also spawns the mesh's net thread (detached: it
+/// drains its holding queue and exits once every `Router` clone is gone).
+pub fn mesh_on<E: FromEnvelope>(
+    p: usize,
+    shaper: Option<Shaper>,
+    topology: Topology,
+) -> (Router<E>, Vec<Mailbox<E>>) {
     let mut senders = Vec::with_capacity(p);
     let mut mailboxes = Vec::with_capacity(p);
     for i in 0..p {
@@ -42,15 +91,25 @@ pub fn mesh_on(p: usize, shaper: Option<Shaper>, topology: Topology) -> (Router,
         senders.push(tx);
         mailboxes.push(Mailbox { me: ProcessId(i as u32), rx });
     }
-    (Router { senders, shaper, topology }, mailboxes)
+    let outbox = shaper.map(|_| {
+        let (tx, rx) = channel::<Timed>();
+        let senders = senders.clone();
+        std::thread::Builder::new()
+            .name("ductr-net".into())
+            .spawn(move || outbox_loop::<E>(rx, senders))
+            .expect("spawn net thread");
+        tx
+    });
+    (Router { senders, shaper, topology, outbox }, mailboxes)
 }
 
-impl Router {
-    /// Send an envelope to its destination; applies the shaper's serial
-    /// delay at the *sender* (models NIC injection time).
+impl<E: FromEnvelope> Router<E> {
+    /// Send an envelope to its destination.  O(1), never sleeps: a shaped
+    /// send stamps the arrival deadline and enqueues to the net thread; an
+    /// unshaped send delivers directly.
     ///
-    /// The destination is validated **before** the shaper runs: a bad
-    /// address must fail fast, not burn simulated NIC time first.
+    /// The destination is validated **before** anything is enqueued: a bad
+    /// address must fail fast at the caller.
     ///
     /// Sending to a process that has already halted (mailbox dropped) is
     /// not an error: during shutdown, in-flight DLB traffic may race the
@@ -61,11 +120,25 @@ impl Router {
         if to >= self.senders.len() {
             return Err(format!("no such process: {}", env.to));
         }
-        if let Some(sh) = &self.shaper {
-            sh.delay_hops(env.wire_doubles, self.topology.hops(env.from, env.to));
+        match (&self.shaper, &self.outbox) {
+            (Some(sh), Some(tx)) => {
+                let delay = sh.delay_for(env.wire_doubles, self.topology.hops(env.from, env.to));
+                // net thread gone only after every Router dropped — not here
+                let _ = tx.send(Timed { deadline: Instant::now() + delay, env });
+            }
+            _ => {
+                let _ = self.senders[to].send(E::from_envelope(env)); // closed mailbox == halted peer
+            }
         }
-        let _ = self.senders[to].send(env); // closed mailbox == halted peer
         Ok(())
+    }
+
+    /// A raw handle into `p`'s mailbox channel, bypassing shaping and
+    /// envelope wrapping.  This is how a process's worker threads inject
+    /// local events (exec completions) into the same channel the network
+    /// delivers to, so the coordinator has one unified thing to park on.
+    pub fn direct_sender(&self, p: ProcessId) -> Sender<E> {
+        self.senders[p.idx()].clone()
     }
 
     pub fn num_processes(&self) -> usize {
@@ -73,9 +146,9 @@ impl Router {
     }
 }
 
-impl Mailbox {
+impl<E> Mailbox<E> {
     /// Non-blocking poll.
-    pub fn try_recv(&self) -> Option<Envelope> {
+    pub fn try_recv(&self) -> Option<E> {
         match self.rx.try_recv() {
             Ok(e) => Some(e),
             Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => None,
@@ -83,8 +156,106 @@ impl Mailbox {
     }
 
     /// Blocking receive with timeout.
-    pub fn recv_timeout(&self, d: Duration) -> Option<Envelope> {
+    pub fn recv_timeout(&self, d: Duration) -> Option<E> {
         self.rx.recv_timeout(d).ok()
+    }
+}
+
+/// An envelope in the net thread's holding queue, due at `deadline`.
+struct Timed {
+    deadline: Instant,
+    env: Envelope,
+}
+
+/// Heap entry: earliest deadline first, arrival order (`seq`) among equals.
+struct Pending {
+    deadline: Instant,
+    seq: u64,
+    env: Envelope,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.deadline == other.deadline && self.seq == other.seq
+    }
+}
+impl Eq for Pending {}
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Pending {
+    // reversed: BinaryHeap is a max-heap, we pop the earliest deadline
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.deadline.cmp(&self.deadline).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// The net thread: hold each envelope until its deadline, then deliver.
+///
+/// FIFO per (src, dst) pair is preserved by clamping: a message's release
+/// instant is `max(its own deadline, the pair's previous release instant)`,
+/// so a small message can never overtake a big one on the same ordered pair
+/// (matching both mpsc's unshaped FIFO and the in-order channels the
+/// protocol's correctness argument assumes).  Messages of one sender reach
+/// this thread in send order through the outbox channel, which makes the
+/// clamp well-defined.
+///
+/// On disconnect (all routers dropped) the remaining queue is drained at its
+/// deadlines before the thread exits, so late shutdown traffic still lands.
+fn outbox_loop<E: FromEnvelope>(rx: Receiver<Timed>, senders: Vec<Sender<E>>) {
+    let mut heap: BinaryHeap<Pending> = BinaryHeap::new();
+    let mut floor: FxHashMap<(u32, u32), Instant> = FxHashMap::default();
+    let mut seq = 0u64;
+    let mut open = true;
+    while open || !heap.is_empty() {
+        // deliver everything due
+        let now = Instant::now();
+        while heap.peek().is_some_and(|p| p.deadline <= now) {
+            let p = heap.pop().expect("peeked");
+            let to = p.env.to.idx();
+            let _ = senders[to].send(E::from_envelope(p.env)); // closed == halted peer
+        }
+        let next = heap.peek().map(|p| p.deadline);
+        let received = if open {
+            match next {
+                // park until the next deadline OR the next enqueue
+                Some(d) => match rx.recv_timeout(d.saturating_duration_since(Instant::now())) {
+                    Ok(t) => Some(t),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        open = false;
+                        None
+                    }
+                },
+                None => match rx.recv() {
+                    Ok(t) => Some(t),
+                    Err(_) => {
+                        open = false;
+                        None
+                    }
+                },
+            }
+        } else {
+            // drain mode: wait out the earliest remaining deadline
+            if let Some(d) = next {
+                precise_wait(d.saturating_duration_since(Instant::now()));
+            }
+            None
+        };
+        if let Some(t) = received {
+            let key = (t.env.from.0, t.env.to.0);
+            let mut deadline = t.deadline;
+            if let Some(f) = floor.get(&key) {
+                if *f > deadline {
+                    deadline = *f;
+                }
+            }
+            floor.insert(key, deadline);
+            heap.push(Pending { deadline, seq, env: t.env });
+            seq += 1;
+        }
     }
 }
 
@@ -110,10 +281,10 @@ pub fn precise_wait(total: Duration) {
     }
 }
 
-/// Optional outbound delay to emulate a slower interconnect on a laptop:
-/// `latency + doubles/bandwidth` of [`precise_wait`] (sleep alone is too
-/// coarse under 1 ms on Linux for the sizes involved; spinning alone
-/// burned a full core per shaped sender).
+/// Delay model for emulating a slower interconnect on a laptop:
+/// `hops × latency + doubles / bandwidth`, identical to the DES's
+/// `NetworkModel::delay_between` (there is a parity test below).  Pure —
+/// the waiting happens on the net thread, never in the caller.
 #[derive(Debug, Clone, Copy)]
 pub struct Shaper {
     pub latency: Duration,
@@ -122,19 +293,15 @@ pub struct Shaper {
 }
 
 impl Shaper {
-    pub fn delay(&self, doubles: u64) {
-        self.delay_hops(doubles, 1)
-    }
-
-    /// Wait out `hops × latency + size / bandwidth` — the topology-aware
-    /// injection delay (bandwidth is paid once; latency per hop).
-    pub fn delay_hops(&self, doubles: u64, hops: u32) {
+    /// The modeled wire delay for `doubles` over `hops` (bandwidth is paid
+    /// once; latency per hop, with the same `hops ≥ 1` floor as the DES).
+    pub fn delay_for(&self, doubles: u64, hops: u32) -> Duration {
         let size_s = if self.doubles_per_sec.is_finite() && self.doubles_per_sec > 0.0 {
             doubles as f64 / self.doubles_per_sec
         } else {
             0.0
         };
-        precise_wait(self.latency * hops.max(1) + Duration::from_secs_f64(size_s));
+        self.latency * hops.max(1) + Duration::from_secs_f64(size_s)
     }
 }
 
@@ -154,7 +321,7 @@ mod tests {
 
     #[test]
     fn mesh_delivers_to_addressee_only() {
-        let (router, boxes) = mesh(3, None);
+        let (router, boxes): (Router, Vec<Mailbox>) = mesh(3, None);
         router.send(env(0, 2)).expect("send");
         assert!(boxes[0].try_recv().is_none());
         assert!(boxes[1].try_recv().is_none());
@@ -164,15 +331,16 @@ mod tests {
 
     #[test]
     fn unknown_destination_errors() {
-        let (router, _boxes) = mesh(2, None);
+        let (router, _boxes): (Router, Vec<Mailbox>) = mesh(2, None);
         assert!(router.send(env(0, 7)).is_err());
     }
 
     #[test]
-    fn unknown_destination_fails_before_shaper_delay() {
-        // a 50 ms shaper must NOT run for a bad address: validation first
+    fn unknown_destination_fails_before_enqueue() {
+        // a 50 ms shaper must not matter for a bad address: validation first,
+        // and nothing reaches the net thread
         let sh = Shaper { latency: Duration::from_millis(50), doubles_per_sec: f64::INFINITY };
-        let (router, _boxes) = mesh(2, Some(sh));
+        let (router, _boxes): (Router, Vec<Mailbox>) = mesh(2, Some(sh));
         let t0 = Instant::now();
         assert!(router.send(env(0, 9)).is_err());
         assert!(
@@ -182,20 +350,38 @@ mod tests {
         );
     }
 
+    /// The headline contract of the async outbox: the caller returns in
+    /// well under a millisecond while the receiver still observes the full
+    /// modeled (≥ 5 ms) delay.
+    #[test]
+    fn send_returns_immediately_receiver_sees_full_delay() {
+        let sh = Shaper { latency: Duration::from_millis(5), doubles_per_sec: f64::INFINITY };
+        let (router, boxes): (Router, Vec<Mailbox>) = mesh(2, Some(sh));
+        let t0 = Instant::now();
+        router.send(env(0, 1)).expect("send");
+        let sent = t0.elapsed();
+        assert!(sent < Duration::from_millis(1), "Router::send slept: {sent:?}");
+        assert!(boxes[1].recv_timeout(Duration::from_secs(1)).is_some(), "delivered");
+        let arrived = t0.elapsed();
+        assert!(arrived >= Duration::from_millis(5), "arrived early: {arrived:?}");
+    }
+
     #[test]
     fn topology_mesh_charges_per_hop_latency() {
         use crate::net::topology::Topology;
         let sh = Shaper { latency: Duration::from_millis(2), doubles_per_sec: f64::INFINITY };
-        let (router, boxes) = mesh_on(8, Some(sh), Topology::Ring { len: 8 });
+        let (router, boxes): (Router, Vec<Mailbox>) =
+            mesh_on(8, Some(sh), Topology::Ring { len: 8 });
         let t0 = Instant::now();
         router.send(env(0, 4)).expect("send"); // 4 hops on the ring
+        assert!(t0.elapsed() < Duration::from_millis(2), "send must not wait the wire out");
+        assert!(boxes[4].recv_timeout(Duration::from_secs(1)).is_some());
         assert!(t0.elapsed() >= Duration::from_millis(7), "4 hops × 2 ms expected");
-        assert!(boxes[4].try_recv().is_some());
     }
 
     #[test]
     fn fifo_per_sender() {
-        let (router, boxes) = mesh(2, None);
+        let (router, boxes): (Router, Vec<Mailbox>) = mesh(2, None);
         for i in 0..10 {
             let mut e = env(0, 1);
             e.msg = Msg::OwnerDone { proc: ProcessId(i) };
@@ -209,9 +395,46 @@ mod tests {
         }
     }
 
+    /// Deadline ordering alone would invert a big-then-small send (the small
+    /// message's own deadline lands first); the per-(src,dst) floor clamps
+    /// the small one behind the big one, keeping the pair FIFO.
+    #[test]
+    fn shaped_fifo_preserved_per_pair() {
+        let sh = Shaper { latency: Duration::from_micros(100), doubles_per_sec: 1e6 };
+        let (router, boxes): (Router, Vec<Mailbox>) = mesh(2, Some(sh));
+        let mut big = env(0, 1);
+        big.wire_doubles = 5000; // 5 ms of wire time
+        big.msg = Msg::OwnerDone { proc: ProcessId(100) };
+        let mut small = env(0, 1);
+        small.wire_doubles = 0; // would arrive first unclamped
+        small.msg = Msg::OwnerDone { proc: ProcessId(200) };
+        router.send(big).expect("send big");
+        router.send(small).expect("send small");
+        let first = boxes[1].recv_timeout(Duration::from_secs(1)).expect("first");
+        let second = boxes[1].recv_timeout(Duration::from_secs(1)).expect("second");
+        match (first.msg, second.msg) {
+            (Msg::OwnerDone { proc: a }, Msg::OwnerDone { proc: b }) => {
+                assert_eq!(a, ProcessId(100), "send order must be arrival order");
+                assert_eq!(b, ProcessId(200));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shaped_messages_drain_after_routers_drop() {
+        // the net thread must deliver what it holds even when every Router
+        // is gone before the deadlines pass (shutdown-race traffic)
+        let sh = Shaper { latency: Duration::from_millis(3), doubles_per_sec: f64::INFINITY };
+        let (router, boxes): (Router, Vec<Mailbox>) = mesh(2, Some(sh));
+        router.send(env(0, 1)).expect("send");
+        drop(router);
+        assert!(boxes[1].recv_timeout(Duration::from_secs(1)).is_some(), "drained on exit");
+    }
+
     #[test]
     fn recv_timeout_expires() {
-        let (_router, boxes) = mesh(1, None);
+        let (_router, boxes): (Router, Vec<Mailbox>) = mesh(1, None);
         let t0 = Instant::now();
         assert!(boxes[0].recv_timeout(Duration::from_millis(10)).is_none());
         assert!(t0.elapsed() >= Duration::from_millis(9));
@@ -219,7 +442,7 @@ mod tests {
 
     #[test]
     fn cross_thread_delivery() {
-        let (router, mut boxes) = mesh(2, None);
+        let (router, mut boxes): (Router, Vec<Mailbox>) = mesh(2, None);
         let mb1 = boxes.remove(1);
         let r2 = router.clone();
         let h = std::thread::spawn(move || {
@@ -230,19 +453,41 @@ mod tests {
     }
 
     #[test]
-    fn shaper_adds_measurable_delay() {
-        let sh = Shaper { latency: Duration::from_millis(2), doubles_per_sec: f64::INFINITY };
-        let t0 = Instant::now();
-        sh.delay(100);
-        assert!(t0.elapsed() >= Duration::from_millis(2));
+    fn direct_sender_bypasses_shaping() {
+        let sh = Shaper { latency: Duration::from_millis(50), doubles_per_sec: f64::INFINITY };
+        let (router, boxes): (Router, Vec<Mailbox>) = mesh(2, Some(sh));
+        router.direct_sender(ProcessId(1)).send(env(0, 1)).expect("send");
+        // no 50 ms wait: the raw handle goes straight into the mailbox
+        assert!(boxes[1].recv_timeout(Duration::from_millis(5)).is_some());
     }
 
     #[test]
-    fn shaper_bandwidth_term() {
-        let sh = Shaper { latency: Duration::ZERO, doubles_per_sec: 1e6 };
-        let t0 = Instant::now();
-        sh.delay(5000); // 5 ms at 1e6 doubles/s
-        assert!(t0.elapsed() >= Duration::from_millis(4));
+    fn shaper_delay_for_latency_and_bandwidth_terms() {
+        let sh = Shaper { latency: Duration::from_millis(2), doubles_per_sec: f64::INFINITY };
+        assert_eq!(sh.delay_for(100, 1), Duration::from_millis(2));
+        assert_eq!(sh.delay_for(0, 3), Duration::from_millis(6));
+        let bw = Shaper { latency: Duration::ZERO, doubles_per_sec: 1e6 };
+        let d = bw.delay_for(5000, 1); // 5 ms at 1e6 doubles/s
+        assert!(d >= Duration::from_millis(4) && d <= Duration::from_millis(6), "{d:?}");
+        // hops floor: 0 hops still pays one latency, like the DES
+        assert_eq!(sh.delay_for(0, 0), Duration::from_millis(2));
+    }
+
+    /// Real mode and sim mode must price the wire identically: the Shaper
+    /// is the wallclock twin of the DES's `NetworkModel::delay_between`.
+    #[test]
+    fn shaper_matches_des_cost_model() {
+        use crate::net::topology::Topology;
+        use crate::sim::network::NetworkModel;
+        let topo = Topology::Ring { len: 8 };
+        let nm = NetworkModel { latency: 0.003, doubles_per_sec: 2e6, topology: topo };
+        let sh = Shaper { latency: Duration::from_secs_f64(0.003), doubles_per_sec: 2e6 };
+        for (from, to, doubles) in [(0u32, 1u32, 0u64), (0, 4, 4096), (2, 7, 123), (5, 5, 64)] {
+            let des = nm.delay_between(ProcessId(from), ProcessId(to), doubles);
+            let hops = topo.hops(ProcessId(from), ProcessId(to));
+            let real = sh.delay_for(doubles, hops).as_secs_f64();
+            assert!((des - real).abs() < 1e-12, "{from}->{to} ({doubles}): des={des} real={real}");
+        }
     }
 
     #[test]

@@ -5,16 +5,31 @@
 //! Architecture matches the paper's hybrid MPI-thread model (and DuctTeip's
 //! dedicated management thread): the coordinator thread owns the
 //! `ProcessState` and *never blocks on computation* — it services the
-//! mailbox, the DLB timers, and dispatches ready tasks to worker threads.
-//! If task execution blocked the coordinator, a busy process would be
-//! unreachable for a full task duration and the pairing protocol would
-//! starve precisely when load balancing is needed (we measured exactly
-//! that with an earlier inline-execution design: 100% failed rounds).
+//! network, worker completions, and the DLB timers, and dispatches ready
+//! tasks to the worker pool.  If task execution blocked the coordinator, a
+//! busy process would be unreachable for a full task duration and the
+//! pairing protocol would starve precisely when load balancing is needed
+//! (we measured exactly that with an earlier inline-execution design: 100%
+//! failed rounds).
+//!
+//! The fast path is built from three pieces:
+//!
+//! - **One unified event channel.**  Network envelopes and worker
+//!   completions arrive through the same mailbox (`CoordEvent`), so the
+//!   coordinator parks on a single `recv_timeout` and *any* event wakes it
+//!   immediately.  An earlier loop polled both sources and parked on the
+//!   mailbox alone with a 1 ms cap — a completion landing mid-park waited
+//!   out the full millisecond, 25% of a 4 ms task.
+//! - **Asynchronous sends.**  `Router::send` is an O(1) enqueue; the mesh's
+//!   net thread waits out the shaped wire delay (see `net::transport`).
+//! - **A shared dispatch queue.**  Workers pop from one `Injector` instead
+//!   of private round-robin channels, so an idle core never sits behind a
+//!   long task assigned to a busy sibling (`sched::injector`).
 //!
 //! The coordinator contains no scheduling/DLB logic of its own — it is an
 //! interpreter over the same `ProcessState` the DES drives.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -30,7 +45,9 @@ use crate::core::task::TaskKind;
 use crate::metrics::counters::DlbCounters;
 use crate::metrics::trace::RunTraces;
 use crate::metrics::RunTrace;
-use crate::net::transport::{mesh_on, Mailbox, Router, Shaper};
+use crate::net::message::Envelope;
+use crate::net::transport::{mesh_on, FromEnvelope, Mailbox, Router, Shaper};
+use crate::sched::injector::Injector;
 use crate::sched::queue::ReadyTask;
 
 use super::manifest::Manifest;
@@ -56,21 +73,34 @@ pub struct RealRunResult {
 /// Per-process initial data (handle → value), indexed by process.
 pub type InitialData = Vec<Vec<(DataId, Payload)>>;
 
+/// Everything that can wake a coordinator: a network envelope or a worker
+/// completion, multiplexed over the process's one mailbox channel.
+enum CoordEvent {
+    Net(Envelope),
+    Done(ExecDone),
+}
+
+impl FromEnvelope for CoordEvent {
+    fn from_envelope(env: Envelope) -> Self {
+        CoordEvent::Net(env)
+    }
+}
+
 /// A task dispatched to a worker: everything needed without touching the
 /// coordinator's state.
 struct ExecReq {
     rt: ReadyTask,
     kind: TaskKind,
     flops: u64,
-    /// Owned copies of the kernel inputs (real mode).
-    args: Vec<Vec<f32>>,
+    /// Shared handles to the kernel inputs (real mode) — pointer-sized
+    /// aliases of the store's blocks, not copies.
+    args: Vec<Arc<[f32]>>,
 }
 
 struct ExecDone {
     rt: ReadyTask,
     output: Payload,
     duration: f64,
-    was_kernel: bool,
 }
 
 /// Run `graph` under `cfg` on real threads.  `use_pjrt` selects kernel
@@ -91,15 +121,18 @@ pub fn run_threaded(
         None
     };
 
+    // Same cost model as the DES (`NetworkModel`): hops × latency + size/R.
+    // Bandwidth comes from the config like everything else — an earlier
+    // version pinned it to infinity and silently dropped the size term.
     let shaper = if cfg.net_latency > 0.0 {
         Some(Shaper {
             latency: Duration::from_secs_f64(cfg.net_latency),
-            doubles_per_sec: f64::INFINITY,
+            doubles_per_sec: cfg.doubles_per_sec,
         })
     } else {
         None
     };
-    let (router, mailboxes) = mesh_on(p, shaper, cfg.build_topology());
+    let (router, mailboxes) = mesh_on::<CoordEvent>(p, shaper, cfg.build_topology());
     let params = ProcessParams::from_config(cfg);
     let epoch = Instant::now();
 
@@ -120,25 +153,25 @@ pub fn run_threaded(
             for (d, v) in data {
                 ps.store.insert(d, v);
             }
-            // spawn workers
-            let (done_tx, done_rx) = channel::<ExecDone>();
-            let mut req_txs: Vec<Sender<ExecReq>> = Vec::with_capacity(cores);
+            // worker pool over one shared queue; completions go into the
+            // coordinator's own mailbox channel (unshaped — they are local)
+            let queue: Arc<Injector<ExecReq>> = Arc::new(Injector::new());
+            let done_tx = router.direct_sender(me);
             let mut workers = Vec::with_capacity(cores);
             for w in 0..cores {
-                let (req_tx, req_rx) = channel::<ExecReq>();
-                req_txs.push(req_tx);
+                let queue = Arc::clone(&queue);
                 let done_tx = done_tx.clone();
                 let manifest = manifest.clone();
                 workers.push(
                     std::thread::Builder::new()
                         .name(format!("ductr-p{i}-w{w}"))
-                        .spawn(move || worker_loop(req_rx, done_tx, manifest, block, flops_per_sec))
+                        .spawn(move || worker_loop(queue, done_tx, manifest, block, flops_per_sec))
                         .expect("spawn worker"),
                 );
             }
-            drop(done_tx);
 
-            let r = coordinator_loop(&mut ps, mailbox, router, epoch, req_txs, done_rx);
+            let r = coordinator_loop(&mut ps, mailbox, router, epoch, &queue);
+            queue.close();
             let mut kernel_execs = 0;
             for w in workers {
                 kernel_execs += w.join().map_err(|e| anyhow!("worker panicked: {e:?}"))?;
@@ -196,21 +229,22 @@ struct ProcessWrap {
     kernel_executions: u64,
 }
 
-/// Worker: execute tasks as they arrive; returns its kernel-execution count.
+/// Worker: pop tasks off the shared queue as cores free up; returns its
+/// kernel-execution count.  Exits when the queue closes (normal shutdown)
+/// or the coordinator's channel is gone (it halted mid-flight).
 fn worker_loop(
-    req_rx: Receiver<ExecReq>,
-    done_tx: Sender<ExecDone>,
+    queue: Arc<Injector<ExecReq>>,
+    done_tx: Sender<CoordEvent>,
     manifest: Option<Arc<Manifest>>,
     block: usize,
     flops_per_sec: f64,
 ) -> u64 {
     // PJRT client per worker thread (Rc-internal, not Send)
-    let mut lib: Option<KernelLibrary> =
-        manifest.and_then(|m| KernelLibrary::new(m, block).ok());
+    let mut lib: Option<KernelLibrary> = manifest.and_then(|m| KernelLibrary::new(m, block).ok());
     let mut kernel_execs = 0u64;
-    while let Ok(req) = req_rx.recv() {
+    while let Some(req) = queue.pop_blocking() {
         let t0 = Instant::now();
-        let (output, was_kernel) = match req.kind {
+        let output = match req.kind {
             TaskKind::Synthetic => {
                 // Emulate the modeled duration without pinning the core for
                 // all of it: sleep the bulk, spin only the precision residue
@@ -222,106 +256,100 @@ fn worker_loop(
                 // saturation (real-kernel tasks still burn real CPU).
                 let dur = req.flops as f64 / flops_per_sec;
                 crate::net::transport::precise_wait(Duration::from_secs_f64(dur));
-                (Payload::Sim, false)
+                Payload::Sim
             }
             kind => {
                 let lib = lib.as_mut().expect("kernel task but PJRT disabled");
-                let bufs: Vec<&[f32]> = req.args.iter().map(|v| v.as_slice()).collect();
+                let bufs: Vec<&[f32]> = req.args.iter().map(|a| a.as_ref()).collect();
                 match lib.execute(kind, &bufs) {
                     Ok(out) => {
                         kernel_execs += 1;
-                        (Payload::Real(out), true)
+                        Payload::real_from(out)
                     }
                     Err(e) => panic!("kernel {kind} failed: {e:#}"),
                 }
             }
         };
         let duration = t0.elapsed().as_secs_f64();
-        if done_tx
-            .send(ExecDone { rt: req.rt, output, duration, was_kernel })
-            .is_err()
-        {
+        if done_tx.send(CoordEvent::Done(ExecDone { rt: req.rt, output, duration })).is_err() {
             break; // coordinator gone (halted)
         }
     }
     kernel_execs
 }
 
-/// The coordinator event loop: mailbox + completions + timers; dispatches
-/// executions to workers round-robin and never blocks on compute.
+/// The coordinator event loop: one unified channel (network + completions)
+/// plus a deadline-aware park until exactly the next DLB timer.  Never
+/// blocks on compute, never sleeps on the wire, and wakes the instant
+/// anything happens — the event-driven replacement for the old
+/// poll-then-park-1ms cycle.
 fn coordinator_loop(
     ps: &mut ProcessState,
-    mailbox: Mailbox,
-    router: Router,
+    events: Mailbox<CoordEvent>,
+    router: Router<CoordEvent>,
     epoch: Instant,
-    req_txs: Vec<Sender<ExecReq>>,
-    done_rx: Receiver<ExecDone>,
+    queue: &Injector<ExecReq>,
 ) -> Result<()> {
     let now = || epoch.elapsed().as_secs_f64();
+    /// Liveness backstop when no timer is armed: bounds the damage of a
+    /// missed-wake bug to a visible stall instead of a hang.  NOT a poll
+    /// interval — any event interrupts it, so it is never on the hot path.
+    const IDLE_BACKSTOP: Duration = Duration::from_millis(100);
     // One scratch buffer for the whole run: every ProcessState step appends
     // into it, the apply pass below drains it in order.
     let mut pending: Vec<Effect> = Vec::with_capacity(64);
     ps.start(now(), &mut pending);
     let mut next_tick = f64::INFINITY;
-    let mut next_worker = 0usize;
-    let mut halted = false;
 
     loop {
-        // inbound messages
-        while let Some(env) = mailbox.try_recv() {
-            ps.on_message(env, now(), &mut pending);
-        }
-        // completed executions
-        while let Ok(done) = done_rx.try_recv() {
-            let _ = done.was_kernel;
-            ps.on_exec_complete(done.rt, done.output, done.duration, now(), &mut pending);
-        }
-        // timers
-        if now() >= next_tick {
-            next_tick = f64::INFINITY;
-            ps.on_tick(now(), &mut pending);
-        }
-        // apply effects
-        let acted = !pending.is_empty();
+        // apply effects of the last step (sends are O(1) enqueues)
+        let mut halted = false;
         for e in pending.drain(..) {
             match e {
                 Effect::Send(env) => router.send(env).map_err(|e| anyhow!("router: {e}"))?,
-                Effect::StartExec { task } => {
-                    dispatch_exec(ps, task, &req_txs, &mut next_worker)?;
-                }
+                Effect::StartExec { task } => dispatch_exec(ps, task, queue)?,
                 Effect::ScheduleTick { at } => next_tick = next_tick.min(at),
                 Effect::Halt => halted = true,
             }
         }
         if halted {
-            // workers stop when their request channels drop
+            // workers stop when the shared queue closes (caller's job)
             return Ok(());
         }
-        if !acted {
-            // idle: park until the next timer or message
-            let wait = if next_tick.is_finite() {
-                (next_tick - now()).clamp(0.0, 0.001)
-            } else {
-                0.001
-            };
-            if wait > 0.0 {
-                if let Some(env) = mailbox.recv_timeout(Duration::from_secs_f64(wait)) {
-                    ps.on_message(env, now(), &mut pending);
-                }
+        // due timer?
+        if now() >= next_tick {
+            next_tick = f64::INFINITY;
+            ps.on_tick(now(), &mut pending);
+            continue;
+        }
+        // drain without parking while events are queued; park only when
+        // idle, until exactly the next timer (or the liveness backstop)
+        let ev = match events.try_recv() {
+            Some(ev) => Some(ev),
+            None => {
+                let wait = if next_tick.is_finite() {
+                    Duration::from_secs_f64((next_tick - now()).max(0.0))
+                } else {
+                    IDLE_BACKSTOP
+                };
+                events.recv_timeout(wait)
             }
+        };
+        match ev {
+            Some(CoordEvent::Net(env)) => ps.on_message(env, now(), &mut pending),
+            Some(CoordEvent::Done(d)) => {
+                ps.on_exec_complete(d.rt, d.output, d.duration, now(), &mut pending)
+            }
+            None => {} // timer due (or backstop); handled at the loop top
         }
     }
 }
 
-/// Clone the task's inputs out of the store and ship it to a worker.
-fn dispatch_exec(
-    ps: &ProcessState,
-    rt: ReadyTask,
-    req_txs: &[Sender<ExecReq>],
-    next_worker: &mut usize,
-) -> Result<()> {
+/// Gather the task's inputs as shared handles and enqueue it for whichever
+/// worker frees up first.
+fn dispatch_exec(ps: &ProcessState, rt: ReadyTask, queue: &Injector<ExecReq>) -> Result<()> {
     let node = ps.graph.task(rt.task);
-    let args: Vec<Vec<f32>> = if node.kind == TaskKind::Synthetic {
+    let args: Vec<Arc<[f32]>> = if node.kind == TaskKind::Synthetic {
         Vec::new()
     } else {
         let mut v = Vec::with_capacity(node.args.len());
@@ -330,17 +358,14 @@ fn dispatch_exec(
                 .store
                 .get(a)
                 .ok_or_else(|| anyhow!("missing input {a} for {}", TaskId::idx(rt.task)))?;
-            match p.real() {
-                Some(buf) => v.push(buf.to_vec()),
+            match p.real_arc() {
+                Some(buf) => v.push(buf), // aliases the store's block
                 None => return Err(anyhow!("non-real payload for {a} in real mode")),
             }
         }
         v
     };
-    let req = ExecReq { rt, kind: node.kind, flops: node.flops, args };
-    let w = *next_worker % req_txs.len();
-    *next_worker = next_worker.wrapping_add(1);
-    req_txs[w].send(req).map_err(|_| anyhow!("worker channel closed"))?;
+    queue.push(ExecReq { rt, kind: node.kind, flops: node.flops, args });
     Ok(())
 }
 
@@ -463,6 +488,117 @@ mod tests {
         assert!(
             r.makespan < 0.060,
             "4 cores × 2 waves of 10ms ≈ 20ms, got {}",
+            r.makespan
+        );
+    }
+
+    /// Regression for the mid-park completion stall: an `ExecDone` must
+    /// wake the coordinator in ≪ 1 ms.  The old loop parked on the mailbox
+    /// alone with a 1 ms cap, so 30 back-to-back 0.2 ms tasks paid ~1 ms
+    /// each (≈ 30 ms total); the unified channel finishes in ~6 ms.
+    #[test]
+    fn completion_wakes_coordinator_immediately() {
+        let mut cfg = Config::default();
+        cfg.processes = 1;
+        cfg.cores_per_process = 1;
+        cfg.dlb_enabled = false;
+        cfg.flops_per_sec = 1e9;
+        cfg.validate().expect("valid");
+        let mut b = GraphBuilder::new();
+        for _ in 0..30 {
+            let d = b.data(ProcessId(0), 8, 8);
+            b.task(TaskKind::Synthetic, vec![], d, 200_000, None); // 0.2 ms
+        }
+        let g = b.build();
+        let r = run_threaded(&cfg, g, vec![vec![]], false).expect("run");
+        assert!(
+            r.makespan < 0.015,
+            "completions must wake the coordinator, not wait out a poll: {}",
+            r.makespan
+        );
+    }
+
+    /// End-to-end satellite check for the bandwidth plumb: a 4096-double
+    /// TaskDone crossing the wire at R = 1e6 doubles/s must cost ≥ ~4 ms.
+    /// The old runtime pinned `doubles_per_sec` to infinity, so this chain
+    /// finished in well under a millisecond of wire time.
+    #[test]
+    fn threaded_charges_the_bandwidth_term() {
+        let mut cfg = Config::default();
+        cfg.processes = 2;
+        cfg.dlb_enabled = false;
+        cfg.flops_per_sec = 1e9;
+        cfg.net_latency = 0.0002;
+        cfg.doubles_per_sec = 1e6;
+        cfg.validate().expect("valid");
+        let mut b = GraphBuilder::new();
+        let d0 = b.data(ProcessId(0), 64, 64); // 4096 doubles on the wire
+        b.task(TaskKind::Synthetic, vec![], d0, 100_000, None);
+        let d1 = b.data(ProcessId(1), 8, 8);
+        b.task(TaskKind::Synthetic, vec![d0], d1, 100_000, None);
+        let g = b.build();
+        let r = run_threaded(&cfg, g, vec![vec![], vec![]], false).expect("run");
+        assert!(
+            r.makespan >= 0.004,
+            "4096 doubles at 1e6/s must charge ≥ 4 ms of wire time, got {}",
+            r.makespan
+        );
+    }
+
+    /// Shared-queue head-of-line test: 1 long + 6 short tasks on 2 cores.
+    /// With pop-time assignment one worker takes the long task and the
+    /// other drains every short one (all done by ~30 ms); the old
+    /// round-robin channels parked half the shorts behind the long task
+    /// (≥ 55 ms).
+    #[test]
+    fn shared_queue_avoids_head_of_line_blocking() {
+        use crate::metrics::TraceEvent;
+        let mut cfg = Config::default();
+        cfg.processes = 1;
+        cfg.cores_per_process = 2;
+        cfg.dlb_enabled = false;
+        cfg.flops_per_sec = 1e9;
+        cfg.trace_enabled = true;
+        cfg.validate().expect("valid");
+        let mut b = GraphBuilder::new();
+        let d = b.data(ProcessId(0), 8, 8);
+        b.task(TaskKind::Synthetic, vec![], d, 50_000_000, None); // 50 ms
+        for _ in 0..6 {
+            let d = b.data(ProcessId(0), 8, 8);
+            b.task(TaskKind::Synthetic, vec![], d, 5_000_000, None); // 5 ms
+        }
+        let g = b.build();
+        let r = run_threaded(&cfg, g, vec![vec![]], false).expect("run");
+        let mut short_ends = Vec::new();
+        for e in r.trace.per_process.iter().flatten() {
+            if let TraceEvent::ExecEnd { task, t, .. } = e {
+                if task.idx() > 0 {
+                    short_ends.push(*t);
+                }
+            }
+        }
+        assert_eq!(short_ends.len(), 6, "all short tasks traced");
+        let worst = short_ends.iter().cloned().fold(0.0f64, f64::max);
+        assert!(
+            worst < 0.045,
+            "a short task waited behind the long one (head-of-line): {worst}"
+        );
+    }
+
+    /// Satellite: the coordinator must keep answering the pairing protocol
+    /// while 5 ms-latency envelopes are in flight.  With the old blocking
+    /// sends the coordinator slept the wire time out per message; now the
+    /// imbalanced bag still migrates and beats the 64 ms serial floor.
+    #[test]
+    fn dlb_pairs_under_shaped_sends() {
+        let (mut cfg, g, init) = bag(24, 4, true);
+        cfg.net_latency = 0.005;
+        cfg.validate().expect("valid");
+        let r = run_threaded(&cfg, g, init, false).expect("run");
+        assert!(r.counters.tasks_exported > 0, "must migrate despite shaped sends");
+        assert!(
+            r.makespan < 0.090,
+            "migration must beat the 24 × 4 ms serial floor: {}",
             r.makespan
         );
     }

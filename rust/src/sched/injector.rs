@@ -1,0 +1,177 @@
+//! A shared FIFO work queue (injector) for the threaded runtime's worker
+//! pool: one producer (the coordinator), many blocking consumers (workers).
+//!
+//! This replaces the earlier per-worker channels + round-robin dispatch.
+//! Round-robin assigns a task to a worker at *dispatch* time, so a short
+//! task could sit behind a long one on a busy worker's private channel
+//! while a sibling idled — classic head-of-line blocking.  With a single
+//! shared queue, assignment happens at *pop* time: whichever worker frees
+//! up first takes the oldest waiting task, so an idle core can never wait
+//! behind work it could have run (John et al. 2022's shared-queue executor
+//! shape).
+//!
+//! Mutex + Condvar over a `VecDeque` is deliberate: the queue holds at most
+//! a process's ready surplus (tens of entries), pops happen once per task
+//! (milliseconds apart), and the consumers must *block*, not spin — a
+//! Chase–Lev deque would buy contention throughput this path never needs.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+pub struct Injector<T> {
+    state: Mutex<State<T>>,
+    available: Condvar,
+}
+
+struct State<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Injector<T> {
+    pub fn new() -> Self {
+        Injector {
+            state: Mutex::new(State { queue: VecDeque::new(), closed: false }),
+            available: Condvar::new(),
+        }
+    }
+
+    /// Enqueue one item and wake one waiting consumer.  Pushing after
+    /// `close` is allowed and the item is still drained (the coordinator
+    /// closes only after its event loop halts, so this path is unused, but
+    /// the queue itself does not care).
+    pub fn push(&self, item: T) {
+        let mut s = self.state.lock().expect("injector poisoned");
+        s.queue.push_back(item);
+        drop(s);
+        self.available.notify_one();
+    }
+
+    /// Dequeue the oldest item, blocking while the queue is empty and open.
+    /// Returns `None` only when the queue is closed **and** drained — the
+    /// consumer's signal to exit.
+    pub fn pop_blocking(&self) -> Option<T> {
+        let mut s = self.state.lock().expect("injector poisoned");
+        loop {
+            if let Some(item) = s.queue.pop_front() {
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.available.wait(s).expect("injector poisoned");
+        }
+    }
+
+    /// Mark the queue closed and wake every consumer so they can drain the
+    /// remainder and exit.
+    pub fn close(&self) {
+        let mut s = self.state.lock().expect("injector poisoned");
+        s.closed = true;
+        drop(s);
+        self.available.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("injector poisoned").queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Default for Injector<T> {
+    fn default() -> Self {
+        Injector::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    #[test]
+    fn fifo_order_single_consumer() {
+        let q = Injector::new();
+        for i in 0..5 {
+            q.push(i);
+        }
+        assert_eq!(q.len(), 5);
+        for i in 0..5 {
+            assert_eq!(q.pop_blocking(), Some(i));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn close_drains_then_signals_exit() {
+        let q = Injector::new();
+        q.push(1);
+        q.push(2);
+        q.close();
+        // items pushed before close are not lost
+        assert_eq!(q.pop_blocking(), Some(1));
+        assert_eq!(q.pop_blocking(), Some(2));
+        assert_eq!(q.pop_blocking(), None);
+    }
+
+    #[test]
+    fn push_wakes_a_blocked_consumer() {
+        let q = Arc::new(Injector::new());
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let v = q2.pop_blocking();
+            (v, t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        q.push(42usize);
+        let (v, waited) = h.join().expect("join");
+        assert_eq!(v, Some(42));
+        assert!(waited >= Duration::from_millis(15), "was blocked, not spinning");
+    }
+
+    #[test]
+    fn close_wakes_all_blocked_consumers() {
+        let q: Arc<Injector<usize>> = Arc::new(Injector::new());
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || q.pop_blocking())
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        for c in consumers {
+            assert_eq!(c.join().expect("join"), None);
+        }
+    }
+
+    #[test]
+    fn multiple_consumers_partition_the_work() {
+        let q = Arc::new(Injector::new());
+        for i in 0..100usize {
+            q.push(i);
+        }
+        q.close();
+        let workers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop_blocking() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        let mut all: Vec<usize> =
+            workers.into_iter().flat_map(|w| w.join().expect("join")).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>(), "each item taken exactly once");
+    }
+}

@@ -1,6 +1,9 @@
 //! Scheduling primitives: the ready queue whose length is the paper's
-//! workload measure w_i(t).
+//! workload measure w_i(t), and the shared worker-pool injector the
+//! threaded runtime dispatches through.
 
+pub mod injector;
 pub mod queue;
 
+pub use injector::Injector;
 pub use queue::{ReadyQueue, ReadyTask};
