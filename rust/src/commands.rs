@@ -6,7 +6,7 @@ use ductr::{anyhow, bail};
 use ductr::apps::{bag, gemv_chain, rand_dag};
 use ductr::cholesky;
 use ductr::cli::Args;
-use ductr::config::{Config, Grid, Mode, PolicyKind, Strategy, TopologyKind, Workload};
+use ductr::config::{Config, Grid, Mode, PolicyKind, Strategy, Workload};
 use ductr::core::task::TaskKind;
 use ductr::dlb::threshold::calibrate_from_traces;
 use ductr::experiments::{ablation, compare, fig1, fig3, fig4, fig5, sec4};
@@ -61,8 +61,12 @@ RUN FLAGS (defaults in parentheses):
     --nb N              blocks per matrix dimension (12)
     --block N           block size; real mode needs a matching artifact (64)
     --dlb on|off        dynamic load balancing (on)
-    --policy P          balancer: pairing|stealing|hierarchical|diffusion (pairing)
-    --topology T        interconnect: flat|ring|torus|cluster (flat)
+    --policy P          balancer: pairing|stealing|hierarchical|diffusion|
+                        sos-diffusion (pairing)
+    --topology T        interconnect: flat|ring|torus|cluster, or graph-backed:
+                        dragonfly:a,p,h | fattree:k | randreg:d | graph:FILE
+                        (edge-list file of `u-v` tokens; inline edges via
+                        --set network.graph_edges=\"0-1 1-2 ...\") (flat)
     --strategy S        basic|equalizing|smart (basic)
     --wt N              busy threshold W_T (5)
     --delta SECONDS     search back-off / exchange period δ (0.010)
@@ -139,7 +143,8 @@ fn config_from_args(args: &mut Args) -> Result<Config> {
         cfg.policy = PolicyKind::parse(&p)?;
     }
     if let Some(t) = args.get_str("topology") {
-        cfg.topology = TopologyKind::parse(&t)?;
+        // Routes `graph:FILE` into cfg.graph_file; plain kinds parse as-is.
+        cfg.set_topology_str(&t)?;
     }
     if let Some(s) = args.get_str("strategy") {
         cfg.strategy = Strategy::parse(&s)?;

@@ -129,6 +129,12 @@ pub enum PolicyKind {
     /// First-order neighborhood diffusion over the network topology
     /// (Demirel & Sbalzarini 2013).
     Diffusion,
+    /// Second-order (SOS) diffusion: adds a momentum term carrying the
+    /// previous round's flows, with β derived from the topology's spectral
+    /// radius (Demirel & Sbalzarini 2013, §second-order schemes).
+    /// Converges in strictly fewer rounds than first-order diffusion on
+    /// poorly-conditioned shapes (rings, large tori).
+    SosDiffusion,
 }
 
 impl PolicyKind {
@@ -138,17 +144,19 @@ impl PolicyKind {
             "stealing" | "work_stealing" => Ok(PolicyKind::WorkStealing),
             "hierarchical" | "hier" => Ok(PolicyKind::Hierarchical),
             "diffusion" => Ok(PolicyKind::Diffusion),
+            "sos-diffusion" | "sos_diffusion" | "sos" => Ok(PolicyKind::SosDiffusion),
             other => Err(ConfigError::new(format!(
-                "unknown policy: {other} (pairing|stealing|hierarchical|diffusion)"
+                "unknown policy: {other} (pairing|stealing|hierarchical|diffusion|sos-diffusion)"
             ))),
         }
     }
 
-    pub const ALL: [PolicyKind; 4] = [
+    pub const ALL: [PolicyKind; 5] = [
         PolicyKind::RandomPairing,
         PolicyKind::WorkStealing,
         PolicyKind::Hierarchical,
         PolicyKind::Diffusion,
+        PolicyKind::SosDiffusion,
     ];
 }
 
@@ -159,12 +167,20 @@ impl fmt::Display for PolicyKind {
             PolicyKind::WorkStealing => "stealing",
             PolicyKind::Hierarchical => "hierarchical",
             PolicyKind::Diffusion => "diffusion",
+            PolicyKind::SosDiffusion => "sos-diffusion",
         })
     }
 }
 
 /// Interconnect shape selector; realized into `net::Topology` by
 /// [`Config::build_topology`].
+///
+/// The first four shapes answer distances in closed form at any scale; the
+/// graph-backed shapes (`dragonfly:a,p,h`, `fattree:k`, `randreg:d`,
+/// `graph`) materialize a `net::GraphTopo` with a precomputed all-pairs
+/// distance table, built once per run.  `Graph` itself carries no payload —
+/// the edge source lives in `Config::graph_edges` / `Config::graph_file`,
+/// so this selector stays `Copy` (experiment grids iterate arrays of it).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TopologyKind {
     /// Uniform single-hop (the paper's implicit model).
@@ -176,17 +192,56 @@ pub enum TopologyKind {
     /// Two-level cluster: `network.cluster_nodes` groups with a per-hop
     /// inter-node penalty.
     Cluster,
+    /// Dragonfly: `a·h + 1` groups of `a` routers (intra-group cliques,
+    /// one global link per group pair), `p` ranks per router.
+    Dragonfly { a: usize, p: usize, h: usize },
+    /// Two-level fat tree with `k` leaf switches and `k/2` ranks each —
+    /// any two ranks are at most two hops apart.
+    FatTree { k: usize },
+    /// Random `d`-regular graph over all processes, seeded by `run.seed`.
+    RandReg { d: usize },
+    /// Explicit edge list from `network.graph_edges` (inline) or
+    /// `network.graph_file` (path) — `--topology graph:FILE` sets both.
+    Graph,
 }
 
 impl TopologyKind {
+    /// Parse a topology selector.  Graph-backed shapes take inline
+    /// parameters (`dragonfly:2,4,1`, `fattree:4`, `randreg:3`); the bare
+    /// `graph` form expects its edges from the config fields, which
+    /// `Config::set_topology_str` fills for the `graph:FILE` spelling.
     pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        let bad_num =
+            |spec: &str| ConfigError::new(format!("bad topology parameter in: {spec}"));
+        if let Some(args) = s.strip_prefix("dragonfly:") {
+            let parts: Vec<&str> = args.split(',').collect();
+            if parts.len() != 3 {
+                return Err(ConfigError::new(format!(
+                    "dragonfly needs three parameters a,p,h — got: {s}"
+                )));
+            }
+            let a = parts[0].trim().parse().map_err(|_| bad_num(s))?;
+            let p = parts[1].trim().parse().map_err(|_| bad_num(s))?;
+            let h = parts[2].trim().parse().map_err(|_| bad_num(s))?;
+            return Ok(TopologyKind::Dragonfly { a, p, h });
+        }
+        if let Some(arg) = s.strip_prefix("fattree:") {
+            let k = arg.trim().parse().map_err(|_| bad_num(s))?;
+            return Ok(TopologyKind::FatTree { k });
+        }
+        if let Some(arg) = s.strip_prefix("randreg:") {
+            let d = arg.trim().parse().map_err(|_| bad_num(s))?;
+            return Ok(TopologyKind::RandReg { d });
+        }
         match s {
             "flat" => Ok(TopologyKind::Flat),
             "ring" => Ok(TopologyKind::Ring),
             "torus" => Ok(TopologyKind::Torus),
             "cluster" => Ok(TopologyKind::Cluster),
+            "graph" => Ok(TopologyKind::Graph),
             other => Err(ConfigError::new(format!(
-                "unknown topology: {other} (flat|ring|torus|cluster)"
+                "unknown topology: {other} \
+                 (flat|ring|torus|cluster|dragonfly:a,p,h|fattree:k|randreg:d|graph[:FILE])"
             ))),
         }
     }
@@ -194,12 +249,16 @@ impl TopologyKind {
 
 impl fmt::Display for TopologyKind {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(match self {
-            TopologyKind::Flat => "flat",
-            TopologyKind::Ring => "ring",
-            TopologyKind::Torus => "torus",
-            TopologyKind::Cluster => "cluster",
-        })
+        match self {
+            TopologyKind::Flat => f.write_str("flat"),
+            TopologyKind::Ring => f.write_str("ring"),
+            TopologyKind::Torus => f.write_str("torus"),
+            TopologyKind::Cluster => f.write_str("cluster"),
+            TopologyKind::Dragonfly { a, p, h } => write!(f, "dragonfly:{a},{p},{h}"),
+            TopologyKind::FatTree { k } => write!(f, "fattree:{k}"),
+            TopologyKind::RandReg { d } => write!(f, "randreg:{d}"),
+            TopologyKind::Graph => f.write_str("graph"),
+        }
     }
 }
 
@@ -361,6 +420,13 @@ pub struct Config {
     pub cluster_nodes: usize,
     /// Cluster topology: hops charged for an inter-node message.
     pub inter_node_hops: u64,
+    /// Inline undirected edge list for `topology = graph`: whitespace- or
+    /// comma-separated `u-v` tokens (e.g. `"0-1 1-2 2-0"`).  Takes
+    /// precedence over `graph_file` when both are set.
+    pub graph_edges: String,
+    /// Path to an edge-list file for `topology = graph` (same token
+    /// format); `--topology graph:FILE` sets this.
+    pub graph_file: String,
 
     // [artifacts]
     pub artifacts_dir: String,
@@ -416,6 +482,8 @@ impl Default for Config {
             topology: TopologyKind::Flat,
             cluster_nodes: 0,
             inter_node_hops: 4,
+            graph_edges: String::new(),
+            graph_file: String::new(),
             artifacts_dir: "artifacts".to_string(),
             trace_enabled: false,
             trace_out: String::new(),
@@ -542,6 +610,8 @@ impl Config {
         get_string(t, "network", "topology", &mut topology_s)?;
         get_usize(t, "network", "cluster_nodes", &mut self.cluster_nodes)?;
         get_u64(t, "network", "inter_hops", &mut self.inter_node_hops)?;
+        get_string(t, "network", "graph_edges", &mut self.graph_edges)?;
+        get_string(t, "network", "graph_file", &mut self.graph_file)?;
 
         get_string(t, "artifacts", "dir", &mut self.artifacts_dir)?;
         get_bool(t, "trace", "enabled", &mut self.trace_enabled)?;
@@ -551,7 +621,7 @@ impl Config {
         self.workload = Workload::parse(&workload_s)?;
         self.strategy = Strategy::parse(&strategy_s)?;
         self.policy = PolicyKind::parse(&policy_s)?;
-        self.topology = TopologyKind::parse(&topology_s)?;
+        self.set_topology_str(&topology_s)?;
         if !grid_s.is_empty() {
             self.grid = Some(Grid::parse(&grid_s)?);
         }
@@ -588,16 +658,40 @@ impl Config {
         self.nb * self.block
     }
 
+    /// Interpret a topology selector string, routing the `graph:FILE`
+    /// spelling into `graph_file` (the bare kinds go straight to
+    /// `TopologyKind::parse`).  Shared by the config table, `--set`
+    /// overrides, and `--topology` on the CLI.
+    pub fn set_topology_str(&mut self, s: &str) -> Result<(), ConfigError> {
+        if let Some(path) = s.strip_prefix("graph:") {
+            if path.is_empty() {
+                return Err(ConfigError::new("graph:FILE needs a file path"));
+            }
+            self.topology = TopologyKind::Graph;
+            self.graph_file = path.to_string();
+            return Ok(());
+        }
+        self.topology = TopologyKind::parse(s)?;
+        Ok(())
+    }
+
     /// Realize the configured interconnect shape over `processes` ranks.
     ///
     /// - `torus` uses the effective process grid as its dimensions;
     /// - `cluster` groups ranks into `cluster_nodes` nodes (squarest
     ///   factorization rows when 0/auto) with `inter_node_hops` per
-    ///   inter-node message.
-    pub fn build_topology(&self) -> crate::net::topology::Topology {
+    ///   inter-node message;
+    /// - the graph-backed shapes construct a `GraphTopo` (CSR adjacency +
+    ///   all-pairs distance table) — construction can fail, which is why
+    ///   `Config::validate` runs this fallible path: a malformed graph is
+    ///   a config error at startup, never a panic mid-run.
+    pub fn try_build_topology(&self) -> Result<crate::net::topology::Topology, ConfigError> {
+        use crate::net::graph;
         use crate::net::topology::Topology;
+        use std::sync::Arc;
         let p = self.processes;
-        match self.topology {
+        let graph_err = |e: String| ConfigError::new(format!("network.topology: {e}"));
+        Ok(match self.topology {
             TopologyKind::Flat => Topology::Flat,
             TopologyKind::Ring => Topology::Ring { len: p.max(1) },
             TopologyKind::Torus => {
@@ -617,7 +711,46 @@ impl Config {
                     inter_hops: self.inter_node_hops.max(1) as u32,
                 }
             }
-        }
+            TopologyKind::Dragonfly { a, p: rp, h } => {
+                Topology::Graph(Arc::new(graph::dragonfly(a, rp, h).map_err(graph_err)?))
+            }
+            TopologyKind::FatTree { k } => {
+                Topology::Graph(Arc::new(graph::fat_tree(k).map_err(graph_err)?))
+            }
+            TopologyKind::RandReg { d } => Topology::Graph(Arc::new(
+                graph::random_regular(p, d, self.seed).map_err(graph_err)?,
+            )),
+            TopologyKind::Graph => {
+                let (text, origin);
+                if !self.graph_edges.is_empty() {
+                    text = self.graph_edges.clone();
+                    origin = "network.graph_edges".to_string();
+                } else if !self.graph_file.is_empty() {
+                    text = std::fs::read_to_string(&self.graph_file).map_err(|e| {
+                        ConfigError::new(format!(
+                            "network.graph_file: cannot read {}: {e}",
+                            self.graph_file
+                        ))
+                    })?;
+                    origin = self.graph_file.clone();
+                } else {
+                    return Err(ConfigError::new(
+                        "topology = graph needs network.graph_edges or network.graph_file",
+                    ));
+                }
+                let (n, edges) = graph::parse_edge_list(&text).map_err(graph_err)?;
+                let label = format!("graph[{origin}]");
+                Topology::Graph(Arc::new(
+                    graph::GraphTopo::from_edges(n, &edges, label).map_err(graph_err)?,
+                ))
+            }
+        })
+    }
+
+    /// Infallible shorthand for callers past validation — a `Config` that
+    /// passed `validate()` cannot fail here.
+    pub fn build_topology(&self) -> crate::net::topology::Topology {
+        self.try_build_topology().expect("validated config builds its topology")
     }
 
     pub fn validate(&self) -> Result<(), ConfigError> {
@@ -703,8 +836,11 @@ impl Config {
         // Topology-distance contract: the realized shape must give every
         // rank its own slot; `hops` stays total regardless, but an
         // under-sized shape would strand the excess ranks (empty neighbor
-        // sets — their load could never leave under diffusion).
-        let topo = self.build_topology();
+        // sets — their load could never leave under diffusion).  Graph
+        // shapes additionally reject here when the node count differs from
+        // run.processes in either direction — there is no silent modulo
+        // folding of out-of-shape ranks onto graph nodes.
+        let topo = self.try_build_topology()?;
         if !topo.covers(self.processes) {
             return Err(ConfigError::new(format!(
                 "topology {} does not cover run.processes = {}",
@@ -898,10 +1034,110 @@ mod tests {
 
     #[test]
     fn all_policies_listed_once() {
-        assert_eq!(PolicyKind::ALL.len(), 4);
+        assert_eq!(PolicyKind::ALL.len(), 5);
         for p in PolicyKind::ALL {
             assert_eq!(PolicyKind::parse(&p.to_string()).expect("roundtrip"), p);
         }
+        assert_eq!(PolicyKind::parse("sos").expect("alias"), PolicyKind::SosDiffusion);
+        assert_eq!(
+            PolicyKind::parse("sos_diffusion").expect("alias"),
+            PolicyKind::SosDiffusion
+        );
+    }
+
+    #[test]
+    fn graph_topology_kinds_parse_and_roundtrip() {
+        let kinds = [
+            TopologyKind::Dragonfly { a: 2, p: 4, h: 1 },
+            TopologyKind::FatTree { k: 4 },
+            TopologyKind::RandReg { d: 3 },
+            TopologyKind::Graph,
+        ];
+        for k in kinds {
+            // Display → parse must round-trip: `apply_table` re-parses the
+            // Display string when a file does not override it.
+            assert_eq!(TopologyKind::parse(&k.to_string()).expect("roundtrip"), k);
+        }
+        assert!(TopologyKind::parse("dragonfly:2,4").is_err(), "needs 3 params");
+        assert!(TopologyKind::parse("fattree:four").is_err());
+        assert!(TopologyKind::parse("randreg:").is_err());
+    }
+
+    #[test]
+    fn graph_file_spelling_sets_path() {
+        let mut c = Config::default();
+        c.set_topology_str("graph:/tmp/edges.txt").expect("parse");
+        assert_eq!(c.topology, TopologyKind::Graph);
+        assert_eq!(c.graph_file, "/tmp/edges.txt");
+        assert!(c.set_topology_str("graph:").is_err(), "empty path rejected");
+        assert!(c.set_topology_str("mesh").is_err());
+    }
+
+    #[test]
+    fn inline_graph_edges_build_and_validate() {
+        let doc = r#"
+            [run]
+            processes = 4
+            [network]
+            topology = "graph"
+            graph_edges = "0-1 1-2 2-3 3-0"
+        "#;
+        let c = Config::from_str_toml(doc).expect("4-cycle parses");
+        assert_eq!(c.topology, TopologyKind::Graph);
+        let t = c.build_topology();
+        use crate::core::ids::ProcessId;
+        assert_eq!(t.hops(ProcessId(0), ProcessId(2)), 2);
+        assert!(t.covers(4));
+    }
+
+    #[test]
+    fn bad_graphs_fail_in_validate_not_mid_run() {
+        // disconnected
+        let doc = "[run]\nprocesses = 4\n[network]\ntopology = \"graph\"\ngraph_edges = \"0-1 2-3\"";
+        assert!(Config::from_str_toml(doc).is_err());
+        // node count != processes: no silent modulo (satellite regression)
+        let doc = "[run]\nprocesses = 5\n[network]\ntopology = \"graph\"\ngraph_edges = \"0-1 1-2 2-3 3-0\"";
+        assert!(Config::from_str_toml(doc).is_err());
+        // graph topology with no edge source
+        let doc = "[run]\nprocesses = 4\n[network]\ntopology = \"graph\"";
+        assert!(Config::from_str_toml(doc).is_err());
+        // missing file surfaces as a config error
+        let mut c = Config::default();
+        c.processes = 4;
+        c.topology = TopologyKind::Graph;
+        c.graph_file = "/nonexistent/edges.txt".to_string();
+        assert!(c.validate().is_err());
+        // generator whose node count misses run.processes is caught too
+        let mut c = Config::default();
+        c.processes = 10;
+        c.topology = TopologyKind::FatTree { k: 4 }; // 8 ranks ≠ 10
+        assert!(c.validate().is_err());
+        // randreg needs n·d even
+        let mut c = Config::default();
+        c.processes = 5;
+        c.topology = TopologyKind::RandReg { d: 3 };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn generator_topologies_cover_their_exact_rank_count() {
+        let mut c = Config::default();
+        c.processes = 12; // dragonfly a=2,p=2,h=1 → (2·1+1)·2·2 = 12
+        c.set_topology_str("dragonfly:2,2,1").expect("parse");
+        c.validate().expect("exact cover");
+        assert!(c.build_topology().covers(12));
+
+        let mut c = Config::default();
+        c.processes = 8; // fattree k=4 → k²/2 = 8
+        c.set_topology_str("fattree:4").expect("parse");
+        c.validate().expect("exact cover");
+
+        let mut c = Config::default();
+        c.processes = 10;
+        c.set_topology_str("randreg:3").expect("parse");
+        c.validate().expect("10·3 even, connected w.h.p. with retries");
+        // same seed → same graph: build twice and compare
+        assert_eq!(c.build_topology(), c.build_topology());
     }
 
     #[test]

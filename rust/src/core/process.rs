@@ -20,7 +20,7 @@ use std::sync::Arc;
 use crate::config::{Config, PolicyKind, Strategy};
 use crate::dlb::pairing::PairingConfig;
 use crate::dlb::policy::{
-    self, AdaptiveConfig, BalancerPolicy, PolicyAction, PolicyObs, PolicySpec,
+    self, AdaptiveConfig, BalancerPolicy, PolicyAction, PolicyObs, PolicySpec, SosParams,
 };
 use crate::dlb::strategy::{select_exports, PartnerInfo};
 use crate::dlb::{CostModel, PerfRecorder};
@@ -76,6 +76,10 @@ pub struct ProcessParams {
     /// Hierarchical stealing: consecutive failed intra-node attempts before
     /// a hunt escalates to remote nodes.
     pub local_tries: usize,
+    /// Second-order diffusion coefficients, derived from the topology once
+    /// per run (a power iteration — O(P·E), too heavy per rank).  `Some`
+    /// exactly when `policy` is `SosDiffusion`.
+    pub sos: Option<SosParams>,
     /// Wrap the policy in the AIMD δ controller (`dlb.adaptive_delta`).
     pub adaptive_delta: bool,
     pub delta_min: f64,
@@ -94,11 +98,14 @@ impl ProcessParams {
         let mut cost = CostModel::new(c.flops_per_sec, c.doubles_per_sec);
         cost.task_overhead = c.task_overhead;
         cost.latency = c.net_latency;
+        let topology = c.build_topology();
+        let sos = (c.policy == PolicyKind::SosDiffusion)
+            .then(|| SosParams::for_topology(&topology, c.processes));
         ProcessParams {
             dlb_enabled: c.dlb_enabled,
             policy: c.policy,
             steal_half: c.steal_half,
-            topology: c.build_topology(),
+            topology,
             strategy: c.strategy,
             wt: c.wt,
             wt_gap: c.wt_gap,
@@ -108,6 +115,7 @@ impl ProcessParams {
                 confirm_timeout: c.confirm_timeout,
             },
             local_tries: c.local_tries,
+            sos,
             adaptive_delta: c.adaptive_delta,
             delta_min: c.delta_min,
             delta_max: c.delta_max,
@@ -130,6 +138,7 @@ impl ProcessParams {
             } else {
                 None
             },
+            sos: self.sos,
         }
     }
 }

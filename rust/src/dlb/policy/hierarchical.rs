@@ -215,6 +215,21 @@ mod tests {
     }
 
     #[test]
+    fn tiers_split_on_graph_distance_shells() {
+        use crate::net::graph::GraphTopo;
+        use std::sync::Arc;
+        // Path 0–1–2–3–4: from rank 1 the local tier is the 1-hop shell
+        // {0, 2}; the ladder escalates outward through the BFS distance
+        // table exactly as it does through the closed-form shapes.
+        let g = GraphTopo::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)], "path5")
+            .expect("path graph");
+        let t = Topology::Graph(Arc::new(g));
+        let l = LocalityLadder::new(ProcessId(1), 3, &t, 5);
+        assert_eq!(l.local, vec![ProcessId(0), ProcessId(2)]);
+        assert_eq!(l.far, vec![ProcessId(3), ProcessId(4)], "ascending hops");
+    }
+
+    #[test]
     fn flat_topology_degenerates_to_uniform_stealing() {
         let l = LocalityLadder::new(ProcessId(0), 3, &Topology::Flat, 6);
         assert_eq!(l.local.len(), 5, "everyone is one hop away");

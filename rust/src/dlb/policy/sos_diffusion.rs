@@ -1,0 +1,471 @@
+//! Second-order (SOS) diffusion as a [`BalancerPolicy`].
+//!
+//! The second-order scheme of Demirel & Sbalzarini ("Balancing indivisible
+//! real-valued loads in arbitrary networks", 2013; arXiv:1308.0148): each
+//! exchange round the flow toward neighbor `j` is
+//!
+//! ```text
+//! x_ij(t) = β·α·(w_i − w_j)  +  (β − 1)·x_ij(t−1)
+//! ```
+//!
+//! — the first-order diffusive gradient plus a momentum term carrying the
+//! previous round's flow.  With the uniform diffusion coefficient
+//! `α = 1/(Δ_max + 1)` (Δ_max = the topology's maximum degree) and the
+//! over-relaxation factor `β = 2/(1 + √(1 − ρ²))`, where ρ is the second
+//! eigenvalue modulus of the diffusion matrix `M = I − αL`, the scheme's
+//! error contracts like the *square root* of first-order diffusion's rate —
+//! on a ring of 8 the per-round factor drops from ρ ≈ 0.80 to ≈ 0.26.
+//!
+//! ρ is not computed from a closed form: a deterministic power iteration on
+//! the sum-zero subspace of `M` (mean deflated every step) estimates it for
+//! *any* connected topology, including the graph-backed shapes.  The
+//! parameters are computed once per run ([`SosParams::for_topology`],
+//! invoked from `ProcessParams::from_config`) and shared by every rank —
+//! the scheme requires a uniform α, unlike first-order [`super::Diffusion`]
+//! which uses each rank's local degree.
+//!
+//! Flows are integerized exactly like the first-order policy (floor with a
+//! minimum quantum of one task on gradients ≥ 2) and shipping is push-only:
+//! a negative `x_ij` moves no tasks but *is* remembered, so the momentum
+//! term still damps overshoot.  Message pattern, counters, quiescence
+//! signaling, and [`super::AdaptiveDelta`] wrapping are identical to
+//! first-order diffusion — the only behavioral difference is how much flows.
+
+use crate::core::ids::ProcessId;
+use crate::dlb::pairing::PairingConfig;
+use crate::metrics::counters::DlbCounters;
+use crate::net::message::Msg;
+use crate::net::topology::Topology;
+use crate::util::rng::Rng;
+
+use super::{BalancerPolicy, PolicyAction, PolicyObs};
+
+/// Sentinel for "no load report received yet from this process".
+const NO_REPORT: usize = usize::MAX;
+
+/// The scheme's two global coefficients, derived from the topology once
+/// per run and shared by all ranks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SosParams {
+    /// Uniform diffusion coefficient `1/(Δ_max + 1)`.
+    pub alpha: f64,
+    /// Over-relaxation factor in `[1, 2)`; β = 1 degenerates the scheme to
+    /// first-order diffusion.
+    pub beta: f64,
+}
+
+impl SosParams {
+    /// Derive (α, β) for the given shape over `p` ranks.
+    pub fn for_topology(topology: &Topology, p: usize) -> SosParams {
+        // Complete graph (flat): every Laplacian eigenvalue but 0 equals p,
+        // so M = I − L/p annihilates the sum-zero subspace — ρ = 0, β = 1.
+        // Skipping the O(p²) adjacency materialization matters at large P.
+        if matches!(topology, Topology::Flat) {
+            return SosParams { alpha: 1.0 / p.max(1) as f64, beta: 1.0 };
+        }
+        let adj: Vec<Vec<usize>> = (0..p)
+            .map(|i| {
+                topology
+                    .neighbors(ProcessId(i as u32), p)
+                    .iter()
+                    .map(|q| q.idx())
+                    .collect()
+            })
+            .collect();
+        Self::from_adjacency(&adj)
+    }
+
+    /// (α, β) from an explicit adjacency structure: α from the maximum
+    /// degree, ρ by deterministic power iteration of `M = I − αL` on the
+    /// sum-zero subspace, β = 2/(1 + √(1 − ρ²)).
+    pub fn from_adjacency(adj: &[Vec<usize>]) -> SosParams {
+        let p = adj.len();
+        let maxdeg = adj.iter().map(|a| a.len()).max().unwrap_or(0);
+        let alpha = 1.0 / (maxdeg as f64 + 1.0);
+        if p < 2 || maxdeg == 0 {
+            return SosParams { alpha, beta: 1.0 };
+        }
+        // Deterministic start vector (Knuth multiplicative hash of the
+        // index), deflated onto the sum-zero subspace.  No RNG: parameter
+        // derivation must be reproducible across runs and ranks.
+        let mut v: Vec<f64> = (0..p)
+            .map(|i| (i.wrapping_mul(2_654_435_761) % 1000) as f64 / 1000.0)
+            .collect();
+        deflate(&mut v);
+        if !normalize(&mut v) {
+            // Hash degenerated (tiny p): any fixed sum-zero vector works.
+            v[0] = std::f64::consts::FRAC_1_SQRT_2;
+            v[1] = -std::f64::consts::FRAC_1_SQRT_2;
+        }
+        let mut w = vec![0.0f64; p];
+        let mut rho = 0.0f64;
+        for it in 0..200 {
+            // w = Mv = v − α·Lv
+            for (i, nbrs) in adj.iter().enumerate() {
+                let mut lv = nbrs.len() as f64 * v[i];
+                for &j in nbrs {
+                    lv -= v[j];
+                }
+                w[i] = v[i] - alpha * lv;
+            }
+            deflate(&mut w);
+            let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm < 1e-300 {
+                // v was (numerically) annihilated: no sum-zero spectrum left.
+                rho = 0.0;
+                break;
+            }
+            // ‖v‖ = 1, so the ratio is just ‖w‖.  Keep the max over the
+            // last iterations: with eigenvalues ±λ present the per-step
+            // ratio oscillates around λ rather than converging to it.
+            if it >= 190 {
+                rho = rho.max(norm);
+            }
+            for (vi, wi) in v.iter_mut().zip(&w) {
+                *vi = wi / norm;
+            }
+        }
+        let rho = rho.clamp(0.0, 0.999_999);
+        let beta = 2.0 / (1.0 + (1.0 - rho * rho).sqrt());
+        SosParams { alpha, beta }
+    }
+}
+
+fn deflate(v: &mut [f64]) {
+    let mean = v.iter().sum::<f64>() / v.len() as f64;
+    for x in v.iter_mut() {
+        *x -= mean;
+    }
+}
+
+fn normalize(v: &mut [f64]) -> bool {
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm < 1e-12 {
+        return false;
+    }
+    for x in v.iter_mut() {
+        *x /= norm;
+    }
+    true
+}
+
+pub struct SosDiffusion {
+    cfg: PairingConfig,
+    params: SosParams,
+    next_exchange_at: f64,
+    /// Latest load each neighbor reported, dense-indexed by process id
+    /// (`NO_REPORT` until the first report).
+    neighbor_loads: Vec<usize>,
+    /// Previous round's real-valued scheme flow toward each neighbor — the
+    /// second-order memory term.  Kept real-valued (the integerization
+    /// applies to shipping only), and bounded: |β−1| < 1 makes the
+    /// homogeneous recurrence a contraction.
+    prev_flow: Vec<f64>,
+    next_round: u64,
+    pub counters: DlbCounters,
+}
+
+impl SosDiffusion {
+    pub fn new(me: ProcessId, cfg: PairingConfig, params: SosParams) -> Self {
+        let _ = me; // per-process identity lives in the neighbor set
+        SosDiffusion {
+            cfg,
+            params,
+            next_exchange_at: 0.0,
+            neighbor_loads: Vec::new(),
+            prev_flow: Vec::new(),
+            next_round: 1,
+            counters: DlbCounters::default(),
+        }
+    }
+
+    fn load_of(&self, q: ProcessId) -> Option<usize> {
+        self.neighbor_loads.get(q.idx()).copied().filter(|&w| w != NO_REPORT)
+    }
+
+    fn set_load(&mut self, q: ProcessId, load: usize) {
+        if q.idx() >= self.neighbor_loads.len() {
+            self.neighbor_loads.resize(q.idx() + 1, NO_REPORT);
+        }
+        self.neighbor_loads[q.idx()] = load;
+    }
+
+    fn prev_flow_of(&self, q: ProcessId) -> f64 {
+        self.prev_flow.get(q.idx()).copied().unwrap_or(0.0)
+    }
+
+    fn set_prev_flow(&mut self, q: ProcessId, x: f64) {
+        if q.idx() >= self.prev_flow.len() {
+            self.prev_flow.resize(q.idx() + 1, 0.0);
+        }
+        self.prev_flow[q.idx()] = x;
+    }
+}
+
+impl BalancerPolicy for SosDiffusion {
+    fn name(&self) -> &'static str {
+        "sos-diffusion"
+    }
+
+    fn init(&mut self, now: f64, rng: &mut Rng) {
+        // stagger exchanges uniformly over one period
+        self.next_exchange_at = now + rng.next_f64() * self.cfg.delta;
+    }
+
+    fn poll(&mut self, obs: &mut PolicyObs<'_>, now: f64, out: &mut Vec<PolicyAction>) {
+        if now < self.next_exchange_at || obs.middle_zone || obs.neighbors.is_empty() {
+            return;
+        }
+        // Slight jitter keeps neighbors from exchanging in global lock-step.
+        self.next_exchange_at = now + self.cfg.delta * (0.75 + 0.5 * obs.rng.next_f64());
+        self.counters.rounds += 1;
+
+        // 1. Tell every neighbor our load (their gradient input).
+        for &q in obs.neighbors {
+            self.counters.requests_sent += 1;
+            out.push(PolicyAction::Send { to: q, msg: Msg::LoadReport { load: obs.workload } });
+        }
+
+        // 2. Second-order flow toward every neighbor with a known load:
+        //    x = β·α·(w_i − w_j) + (β−1)·x_prev.  The memory is updated for
+        //    every computed flow — including negative ones, which ship
+        //    nothing here (push-only) but damp the next round.  Shipping is
+        //    the integerized positive part, bounded by the excess above W_T.
+        let SosParams { alpha, beta } = self.params;
+        let mut budget = obs.workload.saturating_sub(obs.wt);
+        let mut flowed = false;
+        let neighbors: &[ProcessId] = obs.neighbors;
+        for &q in neighbors {
+            let Some(wj) = self.load_of(q) else { continue };
+            let gradient = obs.workload as f64 - wj as f64;
+            let x = beta * alpha * gradient + (beta - 1.0) * self.prev_flow_of(q);
+            self.set_prev_flow(q, x);
+            if x <= 0.0 || wj >= obs.workload {
+                continue;
+            }
+            let gap = obs.workload - wj;
+            // ⌊x⌋ with a minimum quantum of one task for any gradient ≥ 2,
+            // exactly as the first-order policy integerizes: indivisible
+            // loads stall under pure fractional flow.
+            let mut flow = x.floor() as usize;
+            if flow == 0 && gap >= 2 {
+                flow = 1;
+            }
+            let flow = flow.min(budget);
+            if flow == 0 {
+                continue;
+            }
+            budget -= flow;
+            flowed = true;
+            let round = self.next_round;
+            self.next_round += 1;
+            self.counters.transactions += 1;
+            // assume the tasks land: avoids re-sending to the same
+            // neighbor next period before its report catches up
+            self.set_load(q, wj + flow);
+            out.push(PolicyAction::ExportCount { to: q, round, count: flow });
+            if budget == 0 {
+                break;
+            }
+        }
+        if !flowed {
+            // Nothing moved — the quiescence signal AdaptiveDelta lengthens
+            // the period on, same convention as first-order diffusion.
+            self.counters.failed_rounds += 1;
+        }
+    }
+
+    fn on_message(
+        &mut self,
+        _obs: &mut PolicyObs<'_>,
+        from: ProcessId,
+        msg: &Msg,
+        _now: f64,
+        _out: &mut Vec<PolicyAction>,
+    ) {
+        match *msg {
+            Msg::LoadReport { load } => {
+                self.counters.requests_received += 1;
+                self.set_load(from, load);
+            }
+            // Transfers are fire-and-forget: the ack needs no bookkeeping.
+            Msg::ExportAck { .. } => {}
+            _ => {}
+        }
+    }
+
+    fn on_transfer(
+        &mut self,
+        _obs: &mut PolicyObs<'_>,
+        _from: ProcessId,
+        _round: u64,
+        received: usize,
+        _now: f64,
+        _out: &mut Vec<PolicyAction>,
+    ) {
+        // Count the transfer on the receiving side too, matching the
+        // both-participants convention of the other policies.
+        if received > 0 {
+            self.counters.transactions += 1;
+        }
+    }
+
+    fn on_tick(&mut self, _now: f64, _rng: &mut Rng) {}
+
+    fn next_wakeup(&self) -> Option<f64> {
+        Some(self.next_exchange_at)
+    }
+
+    fn set_delta(&mut self, delta: f64) {
+        self.cfg.delta = delta;
+    }
+
+    fn engaged(&self) -> bool {
+        false
+    }
+
+    fn counters(&self) -> &DlbCounters {
+        &self.counters
+    }
+
+    fn counters_mut(&mut self) -> &mut DlbCounters {
+        &mut self.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::ObsBox;
+    use super::*;
+
+    fn sos(me: u32, params: SosParams) -> SosDiffusion {
+        SosDiffusion::new(ProcessId(me), PairingConfig::default(), params)
+    }
+
+    #[test]
+    fn ring_parameters_match_the_spectrum() {
+        // Ring of 8: Δ_max = 2 → α = 1/3; Laplacian eigenvalues
+        // 2 − 2cos(2πk/8) → ρ = max_k≠0 |1 − α·λ_k| = 1 − (2−√2)/3 ≈ 0.805,
+        // so β = 2/(1+√(1−ρ²)) ≈ 1.255.
+        let ring = Topology::Ring { len: 8 };
+        let p = SosParams::for_topology(&ring, 8);
+        assert!((p.alpha - 1.0 / 3.0).abs() < 1e-12, "alpha {}", p.alpha);
+        assert!((p.beta - 1.2549).abs() < 0.01, "beta {}", p.beta);
+    }
+
+    #[test]
+    fn torus_parameters_beat_the_closed_form_bound() {
+        // 3×3 torus (α = 1/5): the sum-zero spectrum of M is {0.4, −0.2},
+        // so ρ = 0.4 exactly; a degree-based closed-form bound would
+        // overestimate ρ badly here — the power iteration must find the
+        // true value, giving β = 2/(1+√0.84) ≈ 1.0436.
+        let t = Topology::Torus { rows: 3, cols: 3 };
+        let p = SosParams::for_topology(&t, 9);
+        assert!((p.alpha - 0.2).abs() < 1e-12);
+        assert!((p.beta - 1.0436).abs() < 0.005, "beta {}", p.beta);
+    }
+
+    #[test]
+    fn flat_and_degenerate_shapes_reduce_to_first_order() {
+        let p = SosParams::for_topology(&Topology::Flat, 16);
+        assert_eq!(p.beta, 1.0, "complete graph has no sum-zero spectrum");
+        let p = SosParams::from_adjacency(&[vec![]]);
+        assert_eq!(p.beta, 1.0, "singleton");
+    }
+
+    #[test]
+    fn graph_topology_derives_params_through_the_table() {
+        use crate::net::graph::GraphTopo;
+        use std::sync::Arc;
+        // 8-cycle as an explicit graph must agree with the Ring shape.
+        let edges: Vec<(usize, usize)> = (0..8).map(|i| (i, (i + 1) % 8)).collect();
+        let g = GraphTopo::from_edges(8, &edges, "cycle8").expect("cycle");
+        let via_graph = SosParams::for_topology(&Topology::Graph(Arc::new(g)), 8);
+        let via_ring = SosParams::for_topology(&Topology::Ring { len: 8 }, 8);
+        assert!((via_graph.alpha - via_ring.alpha).abs() < 1e-12);
+        assert!((via_graph.beta - via_ring.beta).abs() < 1e-9);
+    }
+
+    #[test]
+    fn first_exchange_reports_load_to_all_neighbors() {
+        let mut p = sos(0, SosParams { alpha: 0.5, beta: 1.5 });
+        let mut ob = ObsBox::new(0, 5, 10, 2);
+        ob.neighbors = vec![ProcessId(1), ProcessId(4)];
+        let mut out = Vec::new();
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        let reports = out
+            .iter()
+            .filter(|a| matches!(a, PolicyAction::Send { msg: Msg::LoadReport { load: 10 }, .. }))
+            .count();
+        assert_eq!(reports, 2);
+        assert!(!out.iter().any(|a| matches!(a, PolicyAction::ExportCount { .. })));
+    }
+
+    #[test]
+    fn momentum_term_carries_the_previous_flow() {
+        let mut p = sos(0, SosParams { alpha: 0.5, beta: 1.5 });
+        let mut ob = ObsBox::new(0, 2, 12, 0); // wt 0: budget is the full load
+        ob.neighbors = vec![ProcessId(1)];
+        let mut out = Vec::new();
+        p.on_message(&mut ob.obs(), ProcessId(1), &Msg::LoadReport { load: 0 }, 0.0, &mut out);
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        // round 1: x = 1.5·0.5·12 = 9 → ship 9, remember 9.0
+        let first: Vec<_> = exports(&out);
+        assert_eq!(first, vec![(ProcessId(1), 9)]);
+        // round 2 (ObsBox workload is static at 12; believed neighbor load
+        // is now 9): x = 0.75·3 + 0.5·9 = 6.75 → ship 6
+        out.clear();
+        let next = p.next_wakeup().expect("periodic");
+        p.poll(&mut ob.obs(), next, &mut out);
+        assert_eq!(exports(&out), vec![(ProcessId(1), 6)]);
+    }
+
+    #[test]
+    fn beta_one_matches_first_order_flow() {
+        let mut p = sos(0, SosParams { alpha: 1.0 / 3.0, beta: 1.0 });
+        let mut ob = ObsBox::new(0, 5, 12, 2);
+        ob.neighbors = vec![ProcessId(1), ProcessId(4)];
+        let mut out = Vec::new();
+        p.on_message(&mut ob.obs(), ProcessId(1), &Msg::LoadReport { load: 0 }, 0.0, &mut out);
+        p.on_message(&mut ob.obs(), ProcessId(4), &Msg::LoadReport { load: 12 }, 0.0, &mut out);
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        // identical to Diffusion: ⌊12/3⌋ = 4 to the lighter neighbor only
+        assert_eq!(exports(&out), vec![(ProcessId(1), 4)]);
+    }
+
+    #[test]
+    fn respects_wt_budget() {
+        let mut p = sos(0, SosParams { alpha: 0.5, beta: 1.8 });
+        let mut ob = ObsBox::new(0, 3, 6, 5); // only 1 above W_T
+        ob.neighbors = vec![ProcessId(1), ProcessId(2)];
+        let mut out = Vec::new();
+        p.on_message(&mut ob.obs(), ProcessId(1), &Msg::LoadReport { load: 0 }, 0.0, &mut out);
+        p.on_message(&mut ob.obs(), ProcessId(2), &Msg::LoadReport { load: 0 }, 0.0, &mut out);
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        let total: usize = exports(&out).iter().map(|&(_, c)| c).sum();
+        assert!(total <= 1, "must not dip below W_T: {out:?}");
+    }
+
+    #[test]
+    fn negative_flow_is_remembered_but_not_shipped() {
+        let mut p = sos(0, SosParams { alpha: 0.5, beta: 1.5 });
+        let mut ob = ObsBox::new(0, 2, 3, 0);
+        ob.neighbors = vec![ProcessId(1)];
+        let mut out = Vec::new();
+        // neighbor is heavier: gradient −7 → x = −5.25, nothing ships
+        p.on_message(&mut ob.obs(), ProcessId(1), &Msg::LoadReport { load: 10 }, 0.0, &mut out);
+        p.poll(&mut ob.obs(), 0.0, &mut out);
+        assert!(exports(&out).is_empty());
+        assert_eq!(p.counters.failed_rounds, 1, "quiescence signal for AdaptiveDelta");
+        assert!(p.prev_flow_of(ProcessId(1)) < 0.0, "memory keeps the pull term");
+    }
+
+    fn exports(out: &[PolicyAction]) -> Vec<(ProcessId, usize)> {
+        out.iter()
+            .filter_map(|a| match a {
+                PolicyAction::ExportCount { to, count, .. } => Some((*to, *count)),
+                _ => None,
+            })
+            .collect()
+    }
+}

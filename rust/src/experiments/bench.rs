@@ -1,8 +1,9 @@
 //! `ductr bench` — the repeatable DES hot-path baseline.
 //!
 //! Times full simulator runs on the standing workloads (block Cholesky,
-//! random layered DAG, hierarchical-stealing-on-cluster) across a process
-//! count sweep reaching P = 65 536, with every cell measured twice —
+//! random layered DAG, hierarchical-stealing-on-cluster, plus a smoke-only
+//! graph-fabric cell running second-order diffusion on a random-regular
+//! interconnect) across a process count sweep reaching P = 65 536, with every cell measured twice —
 //! transport coalescing off and on — and writes a JSON baseline
 //! (`BENCH_pr5.json` by default) so successive PRs have a perf trajectory
 //! to compare against: events/sec, makespan, and the pending-event
@@ -294,6 +295,22 @@ pub fn run(seed: u64, smoke: bool, threads: usize) -> Result<BenchReport> {
         let name = format!("rand_dag {}x{} P={p}", params.layers, params.width);
         let graph = rand_dag::build(p, params, seed);
         time_ab(&mut cases, "rand_dag", &c, &graph, &name, smoke, threads)?;
+
+        // the graph-fabric leg: second-order diffusion on a random-regular
+        // interconnect, so every push times the BFS-table topology path and
+        // the SOS policy hot loop (and, under --sim-threads, the sharded
+        // engine over a graph partition)
+        let p = 8;
+        let mut c = base_cfg(p, seed);
+        c.policy = PolicyKind::SosDiffusion;
+        c.topology = TopologyKind::RandReg { d: 3 };
+        c.validate().map_err(Error::new)?;
+        let mut params = rand_dag::DagParams::default();
+        params.layers = 6;
+        params.width = 8;
+        let name = format!("sos_randreg {}x{} P={p}", params.layers, params.width);
+        let graph = rand_dag::build(p, params, seed);
+        time_ab(&mut cases, "sos_randreg", &c, &graph, &name, smoke, threads)?;
     } else {
         // the P = 65 536 frontier cell: a sparse DAG over the full rank
         // count, parallel rows forced on.  DLB stays off (victim sampling
@@ -611,12 +628,17 @@ mod tests {
     #[test]
     fn smoke_sweep_runs_and_serializes() {
         let r = run(1, true, 1).expect("smoke bench");
-        // (3 workloads × 2 process counts + 1 large-P canary) × coalesce A/B
-        assert_eq!(r.cases.len(), 14);
+        // (3 workloads × 2 process counts + 1 large-P canary + 1 graph/SOS
+        // leg) × coalesce A/B
+        assert_eq!(r.cases.len(), 16);
         assert!(r.cases.iter().all(|c| c.threads == 1));
         assert!(r.cases.iter().all(|c| c.events > 0 && c.makespan > 0.0));
         assert!(r.cases.iter().all(|c| c.peak_pending_events > 0));
         assert!(r.cases.iter().any(|c| c.workload == "hier_cluster"));
+        assert!(
+            r.cases.iter().any(|c| c.workload == "sos_randreg"),
+            "smoke must exercise the graph-topology + SOS leg"
+        );
         assert!(
             r.cases.iter().any(|c| c.processes == 1024),
             "smoke must exercise the large-P path"
@@ -648,7 +670,7 @@ mod tests {
         r.write_json(&p).expect("json write");
         let body = std::fs::read_to_string(&p).expect("json read");
         assert!(body.starts_with('{') && body.trim_end().ends_with('}'));
-        assert_eq!(body.matches("\"name\"").count(), 14);
+        assert_eq!(body.matches("\"name\"").count(), 16);
         let _ = std::fs::remove_file(p);
     }
 
@@ -658,9 +680,9 @@ mod tests {
         // divergence, so reaching here means the canary held — the asserts
         // re-check the recorded rows pairwise for defense in depth.
         let r = run(3, true, 2).expect("sharded smoke bench");
-        assert_eq!(r.cases.len(), 28);
+        assert_eq!(r.cases.len(), 32);
         let twos: Vec<_> = r.cases.iter().filter(|c| c.threads == 2).collect();
-        assert_eq!(twos.len(), 14);
+        assert_eq!(twos.len(), 16);
         for c2 in twos {
             let c1 = r
                 .cases

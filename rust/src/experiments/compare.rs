@@ -3,9 +3,10 @@
 //!
 //! The question the policy subsystem exists to answer: how do the paper's
 //! randomized pairing, classic work stealing, hierarchical locality-aware
-//! stealing, and neighborhood diffusion compare — on the same workloads,
-//! the same cost model, the same deterministic simulator — as the
-//! interconnect gets less flat, and does the AIMD δ controller help?
+//! stealing, and the two diffusion schemes (first-order and second-order)
+//! compare — on the same workloads, the same cost model, the same
+//! deterministic simulator — as the interconnect gets less flat, and does
+//! the AIMD δ controller help?
 //!
 //! For every (workload, topology) cell the experiment runs a DLB-off
 //! baseline plus one run per (policy, adaptive on/off), reporting makespan,
@@ -45,10 +46,17 @@ impl CompareWorkload {
     }
 }
 
-/// Topologies under comparison (flat = the paper's network, torus and
-/// cluster = the shapes where locality starts to matter).
-pub const TOPOLOGIES: [TopologyKind; 3] =
-    [TopologyKind::Flat, TopologyKind::Torus, TopologyKind::Cluster];
+/// Topologies under comparison (flat = the paper's network; torus and
+/// cluster = the closed-form shapes where locality starts to matter;
+/// randreg:3 = a graph-backed shape answering from the BFS distance table —
+/// sparse, small-diameter, the regime where SOS diffusion's spectral tuning
+/// pays off).
+pub const TOPOLOGIES: [TopologyKind; 4] = [
+    TopologyKind::Flat,
+    TopologyKind::Torus,
+    TopologyKind::Cluster,
+    TopologyKind::RandReg { d: 3 },
+];
 
 /// One run's outcome.
 #[derive(Debug, Clone)]
@@ -139,7 +147,7 @@ fn run_one(w: CompareWorkload, cfg: &Config) -> Result<(f64, DlbCounters, Latenc
     }
 }
 
-/// Run the full sweep: 2 workloads × 3 topologies × (off + 4 policies × 2
+/// Run the full sweep: 2 workloads × 4 topologies × (off + 5 policies × 2
 /// adaptive settings).
 pub fn run(seed: u64, quick: bool) -> Result<CompareResult> {
     let mut rows = Vec::new();
@@ -274,8 +282,8 @@ mod tests {
     #[test]
     fn quick_compare_covers_the_grid_and_is_deterministic() {
         let a = run(3, true).expect("run a");
-        // 2 workloads × 3 topologies × (1 baseline + 4 policies × 2 adaptive)
-        assert_eq!(a.rows.len(), 2 * 3 * 9);
+        // 2 workloads × 4 topologies × (1 baseline + 5 policies × 2 adaptive)
+        assert_eq!(a.rows.len(), 2 * 4 * 11);
         for r in &a.rows {
             assert!(r.makespan > 0.0, "{r:?}");
             // every run executes tasks, so queue-wait always has samples;
@@ -351,6 +359,8 @@ mod tests {
         let table = r.render();
         assert!(table.contains("cholesky"));
         assert!(table.contains("hierarchical"));
+        assert!(table.contains("sos-diffusion"), "SOS rows in the table");
+        assert!(table.contains("randreg:3"), "graph-topology leg in the table");
         assert!(table.contains("inter_node"));
         let p = std::env::temp_dir().join("ductr_compare_test.csv");
         r.write_csv(&p).expect("csv");

@@ -1,0 +1,552 @@
+//! Arbitrary-graph interconnects backing `Topology::Graph`: CSR adjacency
+//! plus an all-pairs BFS distance table, both built once per run.
+//!
+//! The four legacy shapes (`flat|ring|torus|cluster`) keep their closed-form
+//! O(1) `hops` — a dense distance table at the bench's P = 65 536 Ring
+//! frontier would be gigabytes — so only `GraphTopo` materializes the
+//! table.  Everything the rest of the stack needs reads from these two
+//! arrays: `hops` (one table lookup), diffusion's `neighbors` (one CSR
+//! row), hierarchical stealing's distance shells (one table row,
+//! counting-sorted), the parallel DES's cut-aware shard partition, and the
+//! SOS diffusion policy's spectral bound (degree + adjacency).
+//!
+//! Construction validates what `Config::validate` promises the engines:
+//! the graph is symmetric by construction (every edge is inserted both
+//! ways), self-loop-free, and connected — a bad graph is an error here,
+//! never a mid-run surprise.
+
+use crate::util::rng::Rng;
+
+/// Hard cap on graph-backed ranks: the dense distance table is `n² × 2`
+/// bytes (32 MiB at the cap).  The closed-form legacy shapes cover the
+/// larger scales.
+pub const MAX_GRAPH_RANKS: usize = 4096;
+
+/// An undirected, connected, simple graph in CSR form with its all-pairs
+/// BFS distance table.  One rank per node.
+#[derive(Clone, PartialEq, Eq)]
+pub struct GraphTopo {
+    n: usize,
+    /// CSR row offsets, `n + 1` entries.
+    xadj: Vec<u32>,
+    /// CSR column indices; each row sorted ascending.
+    adj: Vec<u32>,
+    /// Row-major `n × n` hop distances.
+    dist: Vec<u16>,
+    diameter: u32,
+    label: String,
+}
+
+impl std::fmt::Debug for GraphTopo {
+    // The table is n² entries — summarize instead of dumping it.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GraphTopo")
+            .field("label", &self.label)
+            .field("n", &self.n)
+            .field("edges", &(self.adj.len() / 2))
+            .field("diameter", &self.diameter)
+            .finish()
+    }
+}
+
+impl GraphTopo {
+    /// Build from an undirected edge list over nodes `0..n`.  Duplicate
+    /// edges collapse; self-loops, out-of-range endpoints, and
+    /// disconnected graphs are errors.
+    pub fn from_edges(
+        n: usize,
+        edges: &[(usize, usize)],
+        label: impl Into<String>,
+    ) -> Result<GraphTopo, String> {
+        let label = label.into();
+        if n == 0 {
+            return Err(format!("graph '{label}': must have at least one node"));
+        }
+        if n > MAX_GRAPH_RANKS {
+            return Err(format!(
+                "graph '{label}': {n} nodes exceeds the {MAX_GRAPH_RANKS}-rank cap \
+                 (the distance table is dense; use a closed-form topology beyond it)"
+            ));
+        }
+        let mut nbr: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &(u, v) in edges {
+            if u == v {
+                return Err(format!("graph '{label}': self-loop at node {u}"));
+            }
+            if u >= n || v >= n {
+                return Err(format!(
+                    "graph '{label}': edge {u}-{v} exceeds node count {n}"
+                ));
+            }
+            nbr[u].push(v as u32);
+            nbr[v].push(u as u32);
+        }
+        for row in nbr.iter_mut() {
+            row.sort_unstable();
+            row.dedup();
+        }
+        let mut xadj: Vec<u32> = Vec::with_capacity(n + 1);
+        xadj.push(0);
+        let mut adj: Vec<u32> = Vec::new();
+        for row in &nbr {
+            adj.extend_from_slice(row);
+            xadj.push(adj.len() as u32);
+        }
+
+        // All-pairs BFS.  n ≤ 4096 keeps every distance well inside u16.
+        let mut dist = vec![u16::MAX; n * n];
+        let mut diameter: u32 = 0;
+        let mut queue: std::collections::VecDeque<u32> = std::collections::VecDeque::new();
+        for s in 0..n {
+            let row = &mut dist[s * n..(s + 1) * n];
+            row[s] = 0;
+            queue.clear();
+            queue.push_back(s as u32);
+            while let Some(u) = queue.pop_front() {
+                let du = row[u as usize];
+                let (lo, hi) = (xadj[u as usize] as usize, xadj[u as usize + 1] as usize);
+                for &v in &adj[lo..hi] {
+                    if row[v as usize] == u16::MAX {
+                        row[v as usize] = du + 1;
+                        queue.push_back(v);
+                    }
+                }
+            }
+            for (t, &d) in row.iter().enumerate() {
+                if d == u16::MAX {
+                    return Err(format!(
+                        "graph '{label}': disconnected (node {t} unreachable from node {s})"
+                    ));
+                }
+                diameter = diameter.max(d as u32);
+            }
+        }
+
+        Ok(GraphTopo { n, xadj, adj, dist, diameter, label })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn diameter(&self) -> u32 {
+        self.diameter
+    }
+
+    /// CSR neighbor row of node `i`, sorted ascending (empty when out of
+    /// range).
+    pub fn neighbors_of(&self, i: usize) -> &[u32] {
+        if i >= self.n {
+            return &[];
+        }
+        &self.adj[self.xadj[i] as usize..self.xadj[i + 1] as usize]
+    }
+
+    /// One row of the distance table (empty when out of range).
+    pub fn dist_row(&self, i: usize) -> &[u16] {
+        if i >= self.n {
+            return &[];
+        }
+        &self.dist[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Total hop metric: 0 iff `a == b`, table lookup in range, and 1 for
+    /// out-of-range ranks — a plain fallback, **no** modulo aliasing onto
+    /// in-shape slots (`Config::validate` rejects runs whose rank count
+    /// differs from the node count, so this path is a misconfiguration
+    /// guard only).
+    pub fn hops(&self, a: usize, b: usize) -> u32 {
+        if a == b {
+            return 0;
+        }
+        if a < self.n && b < self.n {
+            // connected ⇒ ≥ 1 for distinct nodes
+            self.dist[a * self.n + b] as u32
+        } else {
+            1
+        }
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n)
+            .map(|i| (self.xadj[i + 1] - self.xadj[i]) as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Undirected edge list with `u < v`, ascending.
+    fn edge_list(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.adj.len() / 2);
+        for u in 0..self.n {
+            for &v in self.neighbors_of(u) {
+                if (u as u32) < v {
+                    out.push((u as u32, v));
+                }
+            }
+        }
+        out
+    }
+
+    /// Partition `p` ranks into at most `shards` **contiguous** blocks,
+    /// greedily nudging each block boundary (within half a block of the
+    /// balanced split) to the position crossed by the fewest edges.  The
+    /// sharded DES requires contiguous rank intervals (`sim::shard`
+    /// addresses its ranks as `lo..hi`); within that constraint fewer cut
+    /// edges means less cross-shard traffic per window.  Ties prefer the
+    /// balanced position.  Returns `shard_of[rank]`, non-decreasing with
+    /// no gaps in the shard ids.
+    pub fn shard_partition(&self, p: usize, shards: usize) -> Vec<u32> {
+        let shards = shards.clamp(1, p.max(1));
+        let block = p.div_ceil(shards).max(1);
+        let edges = self.edge_list();
+        let slack = block / 2;
+        let mut bounds: Vec<usize> = Vec::with_capacity(shards.saturating_sub(1));
+        let mut prev = 0usize;
+        for i in 1..shards {
+            let init = (i * block).min(p);
+            let lo = init.saturating_sub(slack).max(prev);
+            let hi = (init + slack).min(p).max(lo);
+            let mut best = (usize::MAX, usize::MAX, usize::MAX, lo);
+            for cand in lo..=hi {
+                let cut = edges
+                    .iter()
+                    .filter(|&&(u, v)| (u as usize) < cand && cand <= v as usize)
+                    .count();
+                let key = (cut, cand.abs_diff(init), cand, cand);
+                if (key.0, key.1, key.2) < (best.0, best.1, best.2) {
+                    best = key;
+                }
+            }
+            prev = best.3;
+            bounds.push(prev);
+        }
+        // Materialize, renumbering so coincident boundaries (empty blocks)
+        // never leave a gap in the shard-id sequence.
+        let mut out = vec![0u32; p];
+        let mut id: u32 = 0;
+        let mut start = 0usize;
+        for &b in bounds.iter().chain(std::iter::once(&p)) {
+            if b > start {
+                for slot in out.iter_mut().take(b).skip(start) {
+                    *slot = id;
+                }
+                id += 1;
+                start = b;
+            }
+        }
+        out
+    }
+}
+
+/// Parse a whitespace/comma-separated `u-v` edge list (e.g. `"0-1 1-2
+/// 2-0"`).  The node count is the largest endpoint + 1.
+pub fn parse_edge_list(text: &str) -> Result<(usize, Vec<(usize, usize)>), String> {
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    let mut max_node = 0usize;
+    for tok in text.split(|c: char| c.is_whitespace() || c == ',' || c == ';') {
+        if tok.is_empty() {
+            continue;
+        }
+        let (u, v) = tok
+            .split_once('-')
+            .ok_or_else(|| format!("edge '{tok}' is not of the form u-v"))?;
+        let u: usize = u.trim().parse().map_err(|_| format!("bad node id in edge '{tok}'"))?;
+        let v: usize = v.trim().parse().map_err(|_| format!("bad node id in edge '{tok}'"))?;
+        max_node = max_node.max(u).max(v);
+        edges.push((u, v));
+    }
+    if edges.is_empty() {
+        return Err("edge list is empty".to_string());
+    }
+    Ok((max_node + 1, edges))
+}
+
+/// Canonical dragonfly: `g = a·h + 1` groups of `a` routers (intra-group
+/// clique), each router with `h` global links assigned consecutively so
+/// every group pair shares exactly one link, and `p` ranks per router
+/// (intra-router clique; each router-level edge realized as same-slot rank
+/// edges).  `n = (a·h + 1) · a · p`.
+pub fn dragonfly(a: usize, p: usize, h: usize) -> Result<GraphTopo, String> {
+    if a == 0 || p == 0 || h == 0 {
+        return Err("dragonfly a,p,h must all be ≥ 1".to_string());
+    }
+    let g = a * h + 1;
+    let routers = g * a;
+    let n = routers * p;
+    let label = format!("dragonfly{a}x{p}x{h}");
+    let mut router_edges: Vec<(usize, usize)> = Vec::new();
+    // intra-group router cliques
+    for grp in 0..g {
+        for r1 in 0..a {
+            for r2 in (r1 + 1)..a {
+                router_edges.push((grp * a + r1, grp * a + r2));
+            }
+        }
+    }
+    // one global link per group pair: group g1's (g2-g1-1)-th link slot to
+    // group g2's (g-1-(g2-g1))-th — router = slot / h on each side
+    for g1 in 0..g {
+        for g2 in (g1 + 1)..g {
+            let r1 = (g2 - g1 - 1) / h;
+            let r2 = (g - 1 - (g2 - g1)) / h;
+            router_edges.push((g1 * a + r1, g2 * a + r2));
+        }
+    }
+    // expand routers to ranks
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    for router in 0..routers {
+        for s1 in 0..p {
+            for s2 in (s1 + 1)..p {
+                edges.push((router * p + s1, router * p + s2));
+            }
+        }
+    }
+    for &(ra, rb) in &router_edges {
+        for s in 0..p {
+            edges.push((ra * p + s, rb * p + s));
+        }
+    }
+    GraphTopo::from_edges(n, &edges, label)
+}
+
+/// Two-level leaf–spine fold of a k-ary fat tree: `k` leaves of `k/2`
+/// ranks each; ranks on one leaf form a clique, and every leaf pair is
+/// joined by same-slot edges (any two ranks are ≤ 2 hops apart, the
+/// uniform-bisection property the full folded Clos provides).  `n = k²/2`.
+pub fn fat_tree(k: usize) -> Result<GraphTopo, String> {
+    if k < 2 || k % 2 != 0 {
+        return Err(format!("fattree k must be even and ≥ 2, got {k}"));
+    }
+    let per = k / 2;
+    let n = k * per;
+    let label = format!("fattree{k}");
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    for leaf in 0..k {
+        for s1 in 0..per {
+            for s2 in (s1 + 1)..per {
+                edges.push((leaf * per + s1, leaf * per + s2));
+            }
+        }
+    }
+    for l1 in 0..k {
+        for l2 in (l1 + 1)..k {
+            for s in 0..per {
+                edges.push((l1 * per + s, l2 * per + s));
+            }
+        }
+    }
+    GraphTopo::from_edges(n, &edges, label)
+}
+
+/// Random d-regular graph on `n` nodes via the configuration model: pair
+/// up `n·d` stubs under a seeded shuffle, retry (reseeding
+/// deterministically) until the pairing is simple and connected.
+pub fn random_regular(n: usize, d: usize, seed: u64) -> Result<GraphTopo, String> {
+    if n < 2 {
+        return Err(format!("randreg needs ≥ 2 nodes, got {n}"));
+    }
+    if d == 0 || d >= n {
+        return Err(format!("randreg degree must satisfy 1 ≤ d < n, got d={d}, n={n}"));
+    }
+    if n * d % 2 != 0 {
+        return Err(format!("randreg requires n·d even, got n={n}, d={d}"));
+    }
+    if d < 2 && n > 2 {
+        return Err(format!("randreg d=1 is a disconnected matching for n={n} > 2"));
+    }
+    let label = format!("randreg{d}x{n}");
+    for attempt in 0..256u64 {
+        let mut rng = Rng::new(seed.wrapping_add(attempt.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+        let mut stubs: Vec<usize> = (0..n).flat_map(|v| std::iter::repeat(v).take(d)).collect();
+        rng.shuffle(&mut stubs);
+        let mut pairs: Vec<(usize, usize)> = stubs
+            .chunks_exact(2)
+            .map(|c| (c[0].min(c[1]), c[0].max(c[1])))
+            .collect();
+        if pairs.iter().any(|&(u, v)| u == v) {
+            continue; // self-loop — redraw
+        }
+        pairs.sort_unstable();
+        if pairs.windows(2).any(|w| w[0] == w[1]) {
+            continue; // multi-edge — redraw
+        }
+        match GraphTopo::from_edges(n, &pairs, label.clone()) {
+            Ok(g) => return Ok(g),
+            Err(_) => continue, // disconnected — redraw
+        }
+    }
+    Err(format!(
+        "randreg{d}x{n}: no simple connected pairing found in 256 attempts (seed {seed})"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_graph_distances_and_diameter() {
+        let g = GraphTopo::from_edges(4, &[(0, 1), (1, 2), (2, 3)], "path4").expect("path");
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.diameter(), 3);
+        assert_eq!(g.hops(0, 0), 0);
+        assert_eq!(g.hops(0, 3), 3);
+        assert_eq!(g.hops(3, 0), 3, "symmetric");
+        assert_eq!(g.neighbors_of(1), &[0, 2]);
+        assert_eq!(g.dist_row(0), &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn duplicate_edges_collapse() {
+        let g =
+            GraphTopo::from_edges(3, &[(0, 1), (1, 0), (1, 2), (1, 2)], "dup").expect("dedup");
+        assert_eq!(g.neighbors_of(1), &[0, 2]);
+        assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn bad_graphs_are_errors_not_panics() {
+        assert!(GraphTopo::from_edges(0, &[], "empty").is_err());
+        assert!(GraphTopo::from_edges(3, &[(0, 0)], "loop").is_err());
+        assert!(GraphTopo::from_edges(3, &[(0, 5)], "oob").is_err());
+        // 2 components
+        assert!(GraphTopo::from_edges(4, &[(0, 1), (2, 3)], "split").is_err());
+        // isolated node
+        assert!(GraphTopo::from_edges(3, &[(0, 1)], "stranded").is_err());
+        assert!(GraphTopo::from_edges(MAX_GRAPH_RANKS + 1, &[(0, 1)], "huge").is_err());
+    }
+
+    #[test]
+    fn single_node_graph_is_fine() {
+        let g = GraphTopo::from_edges(1, &[], "lone").expect("n=1");
+        assert_eq!(g.diameter(), 0);
+        assert!(g.neighbors_of(0).is_empty());
+    }
+
+    #[test]
+    fn out_of_range_hops_are_total_without_aliasing() {
+        // 4-cycle: aliasing rank 4 onto slot 0 would answer hops(0,4) = 0;
+        // the graph path must answer 1 (plain fallback) instead.
+        let g = GraphTopo::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)], "c4").expect("c4");
+        assert_eq!(g.hops(0, 4), 1);
+        assert_eq!(g.hops(9, 2), 1);
+        assert_eq!(g.hops(7, 7), 0, "self is 0 even out of range");
+        assert!(g.neighbors_of(4).is_empty());
+        assert!(g.dist_row(4).is_empty());
+    }
+
+    #[test]
+    fn edge_list_parses_and_rejects() {
+        let (n, edges) = parse_edge_list("0-1, 1-2\n2-0").expect("parse");
+        assert_eq!(n, 3);
+        assert_eq!(edges, vec![(0, 1), (1, 2), (2, 0)]);
+        assert!(parse_edge_list("").is_err());
+        assert!(parse_edge_list("0:1").is_err());
+        assert!(parse_edge_list("0-x").is_err());
+    }
+
+    #[test]
+    fn dragonfly_shape_and_connectivity() {
+        // a=2, p=2, h=1: g = 3 groups × 2 routers × 2 ranks = 12 ranks
+        let g = dragonfly(2, 2, 1).expect("dragonfly");
+        assert_eq!(g.n(), 12);
+        assert_eq!(g.label(), "dragonfly2x2x1");
+        // rank 0 (group 0, router 0, slot 0): router-mate 1, same-slot in
+        // router 1 of its group (rank 2), plus one global same-slot link
+        assert!(g.neighbors_of(0).contains(&1));
+        assert!(g.neighbors_of(0).contains(&2));
+        assert!(g.diameter() >= 2 && g.diameter() <= 5, "diameter {}", g.diameter());
+        assert!(dragonfly(0, 1, 1).is_err());
+    }
+
+    #[test]
+    fn fat_tree_is_two_hop_everywhere() {
+        let g = fat_tree(4).expect("fattree4"); // 4 leaves × 2 ranks
+        assert_eq!(g.n(), 8);
+        assert_eq!(g.diameter(), 2);
+        assert_eq!(g.hops(0, 1), 1, "leaf-mates adjacent");
+        assert_eq!(g.hops(0, 2), 1, "same slot across leaves adjacent");
+        assert_eq!(g.hops(0, 3), 2, "different leaf, different slot");
+        assert!(fat_tree(3).is_err(), "odd k rejected");
+        assert!(fat_tree(0).is_err());
+    }
+
+    #[test]
+    fn random_regular_has_uniform_degree_and_is_deterministic() {
+        let g = random_regular(10, 3, 42).expect("randreg");
+        assert_eq!(g.n(), 10);
+        for i in 0..10 {
+            assert_eq!(g.neighbors_of(i).len(), 3, "node {i} degree");
+        }
+        let h = random_regular(10, 3, 42).expect("again");
+        assert_eq!(g, h, "same seed ⇒ same graph");
+        let k = random_regular(10, 3, 43).expect("other seed");
+        // almost surely a different pairing
+        assert_ne!(g, k);
+        assert!(random_regular(10, 0, 1).is_err());
+        assert!(random_regular(10, 10, 1).is_err());
+        assert!(random_regular(5, 3, 1).is_err(), "n·d odd");
+        assert!(random_regular(6, 1, 1).is_err(), "d=1 matching disconnected");
+    }
+
+    #[test]
+    fn shard_partition_contiguous_balanced_and_cut_aware() {
+        // 8-cycle split into 2: any contiguous 2-split cuts exactly 2
+        // edges; the partition must stay contiguous and cover all ranks.
+        let ring = GraphTopo::from_edges(
+            8,
+            &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6), (6, 7), (7, 0)],
+            "c8",
+        )
+        .expect("c8");
+        let shard_of = ring.shard_partition(8, 2);
+        assert_eq!(shard_of.len(), 8);
+        for w in shard_of.windows(2) {
+            assert!(w[0] <= w[1], "non-decreasing: {shard_of:?}");
+        }
+        assert_eq!(*shard_of.last().expect("nonempty"), 1, "both shards populated");
+
+        // Two 4-cliques joined by one bridge edge (3-4): the balanced
+        // boundary is also the 1-edge cut, and the greedy pass must find it.
+        let mut edges = vec![(3usize, 4usize)];
+        for base in [0usize, 4] {
+            for i in 0..4 {
+                for j in (i + 1)..4 {
+                    edges.push((base + i, base + j));
+                }
+            }
+        }
+        let barbell = GraphTopo::from_edges(8, &edges, "barbell").expect("barbell");
+        assert_eq!(barbell.shard_partition(8, 2), vec![0, 0, 0, 0, 1, 1, 1, 1]);
+
+        // degenerate requests clamp instead of panicking
+        assert_eq!(ring.shard_partition(4, 0), vec![0, 0, 0, 0]);
+        assert!(ring.shard_partition(0, 3).is_empty());
+        let ids = ring.shard_partition(8, 100);
+        assert_eq!(ids, (0..8).map(|i| i as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shard_ids_never_gap() {
+        // A shape where a boundary could collapse onto its neighbor: ids
+        // must stay 0..k contiguous for the parallel engine's counting.
+        let path = GraphTopo::from_edges(3, &[(0, 1), (1, 2)], "p3").expect("p3");
+        let shard_of = path.shard_partition(3, 3);
+        let max = *shard_of.iter().max().expect("nonempty");
+        for id in 0..=max {
+            assert!(shard_of.contains(&id), "gap at shard {id}: {shard_of:?}");
+        }
+    }
+
+    #[test]
+    fn debug_is_compact() {
+        let g = fat_tree(4).expect("fattree");
+        let s = format!("{g:?}");
+        assert!(s.contains("fattree4") && s.contains("diameter"));
+        assert!(s.len() < 200, "must not dump the table: {s}");
+    }
+}

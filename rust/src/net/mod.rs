@@ -2,10 +2,12 @@
 //! threaded-mode transport (`transport`).  The DES mode delivers the same
 //! `Envelope`s through `sim::network` instead.
 
+pub mod graph;
 pub mod message;
 pub mod topology;
 pub mod transport;
 
+pub use graph::GraphTopo;
 pub use message::{Envelope, Flight, MigratedTask, Msg, Role};
 pub use topology::Topology;
 pub use transport::{mesh, mesh_on, precise_wait, FromEnvelope, Mailbox, Router, Shaper};

@@ -13,13 +13,21 @@
 //!
 //! All variants carry their own dimensions so `hops`/`neighbors` need no
 //! extra context; `Flat` reproduces the seed's uniform single-hop network
-//! exactly.
+//! exactly.  `Graph` generalizes the closed shapes to arbitrary connected
+//! graphs (`net::graph`: dragonfly / fat-tree / random-regular generators
+//! or a config-loaded edge list) answering from a CSR adjacency and a
+//! precomputed all-pairs BFS distance table; cloning shares the table via
+//! `Arc`, so a `Topology` stays cheap to pass around.
+
+use std::sync::Arc;
 
 use crate::core::ids::ProcessId;
 use crate::util::rng::Rng;
 
+use super::graph::GraphTopo;
+
 /// A process interconnect shape.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Topology {
     /// Fully connected, uniform single-hop (the paper's implicit model).
     Flat,
@@ -32,18 +40,23 @@ pub enum Topology {
     /// Intra-node messages are one hop; inter-node messages cost
     /// `inter_hops` hops (NIC + switch + NIC).
     Cluster { nodes: usize, per_node: usize, inter_hops: u32 },
+    /// Arbitrary connected graph, one rank per node; hops = BFS distance
+    /// from the precomputed table.
+    Graph(Arc<GraphTopo>),
 }
 
 impl Topology {
     /// Hops between two processes — **total**: 0 iff `from == to`, ≥ 1 for
     /// every distinct pair, for every shape and every rank.
     ///
-    /// Ranks outside the shape's dimensions are reduced modulo the slot
-    /// count first; when two *distinct* ranks alias to the same slot the
-    /// distance is still 1, never 0 — a message between two real processes
-    /// always crosses the wire.  (`Config::validate` rejects shapes whose
-    /// dimensions do not cover `run.processes`, so aliasing is a
-    /// misconfiguration guard, not a steady-state code path.)
+    /// Ranks outside a legacy shape's dimensions are reduced modulo the
+    /// slot count first; when two *distinct* ranks alias to the same slot
+    /// the distance is still 1, never 0 — a message between two real
+    /// processes always crosses the wire.  `Graph` never aliases: ranks
+    /// beyond the node count answer a plain 1.  (`Config::validate`
+    /// rejects shapes whose dimensions do not cover `run.processes`, so
+    /// either fallback is a misconfiguration guard, not a steady-state
+    /// code path.)
     pub fn hops(&self, from: ProcessId, to: ProcessId) -> u32 {
         if from == to {
             return 0;
@@ -85,6 +98,7 @@ impl Topology {
                     inter_hops.max(1)
                 }
             }
+            Topology::Graph(ref g) => g.hops(from.idx(), to.idx()),
         }
     }
 
@@ -98,6 +112,9 @@ impl Topology {
             Topology::Ring { len } => len == p,
             Topology::Torus { rows, cols } => rows * cols == p,
             Topology::Cluster { nodes, per_node, .. } => nodes * per_node == p,
+            // Exactly one rank per node — ranks ≥ the node count are a
+            // config error, not a silent modulo wrap.
+            Topology::Graph(ref g) => g.n() == p,
         }
     }
 
@@ -108,10 +125,16 @@ impl Topology {
     /// `Cluster` the block size is rounded up to a multiple of `per_node`
     /// so node-mates always co-locate — intra-node traffic (the 1-hop bulk
     /// of a cluster workload) then never crosses a shard boundary, and the
-    /// cross-shard lookahead grows to the inter-node price.  Later blocks
-    /// may end up empty (e.g. 4 ranks into 3 shards of block 2); empty
-    /// shards are simply never materialized by the coordinator.
+    /// cross-shard lookahead grows to the inter-node price.  `Graph`
+    /// keeps the contiguous-interval contract but greedily nudges each
+    /// block boundary to the position crossed by the fewest edges
+    /// (`GraphTopo::shard_partition`).  Later blocks may end up empty
+    /// (e.g. 4 ranks into 3 shards of block 2); empty shards are simply
+    /// never materialized by the coordinator.
     pub fn shard_partition(&self, p: usize, shards: usize) -> Vec<u32> {
+        if let Topology::Graph(g) = self {
+            return g.shard_partition(p, shards);
+        }
         let shards = shards.clamp(1, p.max(1));
         let mut block = p.div_ceil(shards).max(1);
         if let Topology::Cluster { per_node, .. } = *self {
@@ -127,12 +150,12 @@ impl Topology {
     /// and the lookahead is unbounded).
     ///
     /// Computed per shape in O(P) instead of scanning all pairs:
-    /// - `Flat`/`Ring`/`Torus` are connected graphs whose every edge costs
-    ///   1 hop, so any path between two differently-sharded ranks contains
-    ///   an edge that crosses a partition boundary — the minimum is 1
-    ///   whenever ≥ 2 shards are populated.  (Consecutive ranks are *not*
-    ///   always 1 hop apart on a torus; the crossing-edge argument is the
-    ///   proof, not rank adjacency.)
+    /// - `Flat`/`Ring`/`Torus`/`Graph` are connected graphs whose every
+    ///   edge costs 1 hop, so any path between two differently-sharded
+    ///   ranks contains an edge that crosses a partition boundary — the
+    ///   minimum is 1 whenever ≥ 2 shards are populated.  (Consecutive
+    ///   ranks are *not* always 1 hop apart on a torus or a graph; the
+    ///   crossing-edge argument is the proof, not rank adjacency.)
     /// - `Cluster`: 1 if some node's ranks span two shards, otherwise every
     ///   cross-shard pair is cross-node and costs `inter_hops`.
     pub fn min_cross_partition_hops(&self, shard_of: &[u32]) -> Option<u32> {
@@ -144,7 +167,10 @@ impl Topology {
             return None;
         }
         match *self {
-            Topology::Flat | Topology::Ring { .. } | Topology::Torus { .. } => Some(1),
+            Topology::Flat
+            | Topology::Ring { .. }
+            | Topology::Torus { .. }
+            | Topology::Graph(_) => Some(1),
             Topology::Cluster { per_node, inter_hops, .. } => {
                 let split_node = per_node > 0
                     && shard_of
@@ -166,7 +192,8 @@ impl Topology {
     /// - ring: the two adjacent ranks;
     /// - torus: the 4-neighborhood;
     /// - cluster: all same-node ranks plus the same-slot rank in the two
-    ///   adjacent nodes (nodes form a ring), so load can leave a node.
+    ///   adjacent nodes (nodes form a ring), so load can leave a node;
+    /// - graph: the CSR adjacency row (symmetric by construction).
     pub fn neighbors(&self, me: ProcessId, p: usize) -> Vec<ProcessId> {
         let m = me.idx();
         let mut out: Vec<usize> = Vec::new();
@@ -206,6 +233,9 @@ impl Topology {
                         }
                     }
                 }
+                Topology::Graph(ref g) => {
+                    out.extend(g.neighbors_of(m).iter().map(|&v| v as usize));
+                }
             }
         }
         out.sort_unstable();
@@ -219,15 +249,40 @@ impl Topology {
     /// hierarchical stealing's escalation ladder.  The leading run of
     /// minimum-distance entries is the "local" tier: the cluster node, or
     /// the same adjacency shell diffusion exchanges with on ring/torus.
+    ///
+    /// One shared cache path for every shape: distances come from a single
+    /// per-rank pass (`Graph` reads its precomputed BFS table row, the
+    /// legacy shapes their closed forms), then a counting sort over the
+    /// distance shells emits the table in O(p + diameter) — ascending rank
+    /// within each shell, identical order to sorting by `(hops, rank)`.
     pub fn neighbors_by_distance(&self, me: ProcessId, p: usize) -> Vec<(ProcessId, u32)> {
-        let mut out: Vec<(ProcessId, u32)> = (0..p)
-            .filter(|&i| i != me.idx())
-            .map(|i| {
-                let q = ProcessId(i as u32);
-                (q, self.hops(me, q))
-            })
-            .collect();
-        out.sort_unstable_by_key(|&(q, h)| (h, q.0));
+        let m = me.idx();
+        let mut hops_of: Vec<u32> = Vec::with_capacity(p);
+        let mut max_h: u32 = 0;
+        for q in 0..p {
+            let h = if q == m { 0 } else { self.hops(me, ProcessId(q as u32)) };
+            max_h = max_h.max(h);
+            hops_of.push(h);
+        }
+        // bucket counts → prefix offsets → ascending-rank emission
+        let mut count = vec![0usize; max_h as usize + 2];
+        for (q, &h) in hops_of.iter().enumerate() {
+            if q != m {
+                count[h as usize + 1] += 1;
+            }
+        }
+        for i in 1..count.len() {
+            count[i] += count[i - 1];
+        }
+        let total = p - usize::from(m < p);
+        let mut out = vec![(ProcessId(0), 0u32); total];
+        for (q, &h) in hops_of.iter().enumerate() {
+            if q == m {
+                continue;
+            }
+            out[count[h as usize]] = (ProcessId(q as u32), h);
+            count[h as usize] += 1;
+        }
         out
     }
 
@@ -267,6 +322,7 @@ impl Topology {
             Topology::Ring { len } => format!("ring{len}"),
             Topology::Torus { rows, cols } => format!("torus{rows}x{cols}"),
             Topology::Cluster { nodes, per_node, .. } => format!("cluster{nodes}x{per_node}"),
+            Topology::Graph(ref g) => g.label().to_string(),
         }
     }
 }
@@ -530,5 +586,134 @@ mod tests {
         assert!(local as f64 / n as f64 > 0.85, "local draws {local}/{n}");
         // single-process population has nobody to draw
         assert_eq!(t.sample_near(p(0), 1, &mut rng), None);
+    }
+
+    // ------------------------------------------------------------------
+    // graph-backed variant
+    // ------------------------------------------------------------------
+
+    use crate::net::graph::GraphTopo;
+    use std::sync::Arc;
+
+    /// A 6-cycle as a Topology::Graph.
+    fn cycle6() -> Topology {
+        let edges = [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 0)];
+        Topology::Graph(Arc::new(GraphTopo::from_edges(6, &edges, "c6").expect("c6")))
+    }
+
+    #[test]
+    fn graph_hops_answer_from_the_table() {
+        let t = cycle6();
+        assert_eq!(t.hops(p(0), p(0)), 0);
+        assert_eq!(t.hops(p(0), p(1)), 1);
+        assert_eq!(t.hops(p(0), p(3)), 3);
+        assert_eq!(t.hops(p(0), p(5)), 1, "wraps like a ring");
+        assert_eq!(t.hops(p(5), p(0)), 1, "symmetric");
+    }
+
+    /// Satellite regression: graph ranks ≥ the node count must NOT alias
+    /// modulo the node count (the pre-PR-4 Ring bug) — `hops` answers a
+    /// plain total 1 and `covers` rejects the configuration outright.
+    #[test]
+    fn graph_out_of_shape_ranks_rejected_not_aliased() {
+        let t = cycle6();
+        // modulo aliasing would answer hops(0, 6) = 0 and hops(0, 9) = 3
+        assert_eq!(t.hops(p(0), p(6)), 1, "no wrap onto slot 0");
+        assert_eq!(t.hops(p(0), p(9)), 1, "no wrap onto slot 3");
+        assert_eq!(t.hops(p(7), p(7)), 0, "self stays 0");
+        assert!(t.covers(6), "exactly one rank per node");
+        assert!(!t.covers(5), "fewer ranks than nodes rejected");
+        assert!(!t.covers(7), "extra ranks rejected — no silent modulo");
+        assert!(t.neighbors(p(6), 7).is_empty(), "out-of-shape rank has no edges");
+    }
+
+    #[test]
+    fn graph_neighbors_come_from_csr_rows() {
+        let t = cycle6();
+        assert_eq!(t.neighbors(p(0), 6), vec![p(1), p(5)]);
+        assert_eq!(t.neighbors(p(3), 6), vec![p(2), p(4)]);
+        // symmetry + connectivity, same walk as the legacy shapes
+        let mut seen = vec![false; 6];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        while let Some(i) = stack.pop() {
+            for q in t.neighbors(p(i as u32), 6) {
+                assert!(t.neighbors(q, 6).contains(&p(i as u32)), "asymmetric at {i}");
+                if !seen[q.idx()] {
+                    seen[q.idx()] = true;
+                    stack.push(q.idx());
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "graph disconnected through Topology");
+    }
+
+    #[test]
+    fn graph_distance_ranking_matches_brute_force() {
+        let t = cycle6();
+        let ranked = t.neighbors_by_distance(p(2), 6);
+        let mut brute: Vec<(ProcessId, u32)> =
+            (0..6).filter(|&i| i != 2).map(|i| (p(i), t.hops(p(2), p(i)))).collect();
+        brute.sort_unstable_by_key(|&(q, h)| (h, q.0));
+        assert_eq!(ranked, brute);
+    }
+
+    /// The counting-sort path must reproduce the legacy sort order bit for
+    /// bit on every closed shape (the hierarchical ladder's tier layout
+    /// depends on it).
+    #[test]
+    fn distance_ranking_counting_sort_matches_legacy_order() {
+        let shapes: Vec<(Topology, usize)> = vec![
+            (Topology::Flat, 7),
+            (Topology::Ring { len: 9 }, 9),
+            (Topology::Torus { rows: 3, cols: 4 }, 12),
+            (Topology::Cluster { nodes: 4, per_node: 4, inter_hops: 4 }, 16),
+        ];
+        for (t, p_n) in shapes {
+            for me in 0..p_n {
+                let got = t.neighbors_by_distance(p(me as u32), p_n);
+                let mut want: Vec<(ProcessId, u32)> = (0..p_n)
+                    .filter(|&i| i != me)
+                    .map(|i| (p(i as u32), t.hops(p(me as u32), p(i as u32))))
+                    .collect();
+                want.sort_unstable_by_key(|&(q, h)| (h, q.0));
+                assert_eq!(got, want, "{t:?} me={me}");
+            }
+        }
+    }
+
+    #[test]
+    fn graph_shard_partition_feeds_positive_lookahead() {
+        let t = cycle6();
+        let shard_of = t.shard_partition(6, 2);
+        assert_eq!(shard_of.len(), 6);
+        for w in shard_of.windows(2) {
+            assert!(w[0] <= w[1], "contiguous intervals required: {shard_of:?}");
+        }
+        assert_eq!(
+            t.min_cross_partition_hops(&shard_of),
+            Some(1),
+            "connected unit-edge graph crosses at 1 hop"
+        );
+        assert_eq!(t.min_cross_partition_hops(&[0, 0, 0]), None);
+    }
+
+    #[test]
+    fn graph_label_and_sample_near() {
+        let t = cycle6();
+        assert_eq!(t.label(), "c6");
+        let mut rng = Rng::new(5);
+        let mut near = 0usize;
+        let n = 3000;
+        for _ in 0..n {
+            let q = t.sample_near(p(0), 6, &mut rng).expect("has peers");
+            assert_ne!(q, p(0));
+            if t.hops(p(0), q) == 1 {
+                near += 1;
+            }
+        }
+        // weights: 2 at 1/1, 2 at 1/4, 1 at 1/9 → near share = 2/2.61 ≈ 77%
+        let share = near as f64 / n as f64;
+        assert!(share > 0.68 && share < 0.86, "near share {share}");
     }
 }

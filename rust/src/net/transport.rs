@@ -57,7 +57,7 @@ impl<E: FromEnvelope> Clone for Router<E> {
         Router {
             senders: self.senders.clone(),
             shaper: self.shaper,
-            topology: self.topology,
+            topology: self.topology.clone(),
             outbox: self.outbox.clone(),
         }
     }
@@ -480,7 +480,7 @@ mod tests {
         use crate::net::topology::Topology;
         use crate::sim::network::NetworkModel;
         let topo = Topology::Ring { len: 8 };
-        let nm = NetworkModel { latency: 0.003, doubles_per_sec: 2e6, topology: topo };
+        let nm = NetworkModel { latency: 0.003, doubles_per_sec: 2e6, topology: topo.clone() };
         let sh = Shaper { latency: Duration::from_secs_f64(0.003), doubles_per_sec: 2e6 };
         for (from, to, doubles) in [(0u32, 1u32, 0u64), (0, 4, 4096), (2, 7, 123), (5, 5, 64)] {
             let des = nm.delay_between(ProcessId(from), ProcessId(to), doubles);

@@ -14,8 +14,9 @@ use crate::core::ids::ProcessId;
 use crate::net::topology::Topology;
 
 /// Latency/bandwidth model (R in doubles per second, as in §4), plus the
-/// interconnect shape.
-#[derive(Debug, Clone, Copy)]
+/// interconnect shape.  (Not `Copy`: graph-backed topologies carry an
+/// `Arc`'d distance table — clone instead, it is cheap.)
+#[derive(Debug, Clone)]
 pub struct NetworkModel {
     /// Per-hop latency, seconds.
     pub latency: f64,
@@ -126,7 +127,7 @@ mod tests {
     #[test]
     fn min_cross_shard_delay_lower_bounds_every_cross_pair() {
         let t = Topology::Cluster { nodes: 2, per_node: 4, inter_hops: 4 };
-        let n = NetworkModel::with_topology(1e-6, 1e8, t);
+        let n = NetworkModel::with_topology(1e-6, 1e8, t.clone());
         let shard_of = t.shard_partition(8, 2); // node-aligned: [0,0,0,0,1,1,1,1]
         let la = n.min_cross_shard_delay(&shard_of).expect("two shards");
         assert!((la - 4e-6).abs() < 1e-18, "inter-node tier: {la}");

@@ -95,7 +95,7 @@ impl ParallelSimEngine {
                 lo,
                 procs,
                 p,
-                network,
+                network.clone(),
                 Arc::clone(&shard_of),
                 cfg.coalesce,
                 n,

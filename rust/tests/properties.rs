@@ -11,6 +11,8 @@ use ductr::apps::{bag, rand_dag};
 use ductr::config::{Config, PolicyKind, Strategy, TopologyKind};
 use ductr::core::graph::TaskGraph;
 use ductr::core::ids::ProcessId;
+use ductr::dlb::policy::SosParams;
+use ductr::net::graph::{self, GraphTopo};
 use ductr::net::topology::Topology;
 use ductr::sim::calendar::CalendarQueue;
 use ductr::sim::engine::SimEngine;
@@ -185,16 +187,36 @@ struct TopoCase {
     p: usize,
 }
 
+/// A random connected simple graph: a uniform spanning tree (each node
+/// attaches to an earlier one) plus extra random chords.  `from_edges`
+/// dedupes the chords and guarantees connectivity, so `expect` is safe.
+fn gen_graph(g: &mut Gen) -> Arc<GraphTopo> {
+    let n = g.usize_in(2..13).max(2);
+    let mut edges = Vec::new();
+    for i in 1..n {
+        edges.push((g.usize_in(0..i), i));
+    }
+    for _ in 0..g.usize_in(0..n) {
+        let a = g.usize_in(0..n);
+        let b = g.usize_in(0..n);
+        if a != b {
+            edges.push((a, b));
+        }
+    }
+    Arc::new(GraphTopo::from_edges(n, &edges, "prop-rand").expect("spanning tree is connected"))
+}
+
 fn gen_shape(g: &mut Gen) -> Topology {
-    match g.usize_in(0..4) {
+    match g.usize_in(0..5) {
         0 => Topology::Flat,
         1 => Topology::Ring { len: g.usize_in(1..13) },
         2 => Topology::Torus { rows: g.usize_in(1..6), cols: g.usize_in(1..6) },
-        _ => Topology::Cluster {
+        3 => Topology::Cluster {
             nodes: g.usize_in(1..6),
             per_node: g.usize_in(1..6),
             inter_hops: g.usize_in(1..8) as u32,
         },
+        _ => Topology::Graph(gen_graph(g)),
     }
 }
 
@@ -233,7 +255,7 @@ fn prop_hops_zero_diagonal_positive_symmetric() {
 /// accepts): every rank's neighbor set is non-empty, self-free, symmetric,
 /// and the neighbor graph is connected — diffusion's liveness conditions.
 fn gen_covering(g: &mut Gen) -> TopoCase {
-    match g.usize_in(0..4) {
+    match g.usize_in(0..8).min(7) {
         0 => TopoCase { topo: Topology::Flat, p: g.usize_in(2..24).max(2) },
         1 => {
             let len = g.usize_in(2..16).max(2);
@@ -244,13 +266,37 @@ fn gen_covering(g: &mut Gen) -> TopoCase {
             let cols = g.usize_in(1..6);
             TopoCase { topo: Topology::Torus { rows, cols }, p: rows * cols }
         }
-        _ => {
+        3 => {
             let nodes = g.usize_in(2..6).max(2);
             let per_node = g.usize_in(1..6);
             TopoCase {
                 topo: Topology::Cluster { nodes, per_node, inter_hops: g.usize_in(1..8) as u32 },
                 p: nodes * per_node,
             }
+        }
+        4 => {
+            let gr = gen_graph(g);
+            let p = gr.n();
+            TopoCase { topo: Topology::Graph(gr), p }
+        }
+        5 => {
+            let (a, rp) = (g.usize_in(2..4).max(2), g.usize_in(1..3).max(1));
+            let gr = graph::dragonfly(a, rp, 1).expect("valid dragonfly params");
+            let p = gr.n();
+            TopoCase { topo: Topology::Graph(Arc::new(gr)), p }
+        }
+        6 => {
+            let k = 2 * g.usize_in(1..3).max(1); // 2 or 4
+            let gr = graph::fat_tree(k).expect("valid fat-tree k");
+            let p = gr.n();
+            TopoCase { topo: Topology::Graph(Arc::new(gr)), p }
+        }
+        _ => {
+            let n = 2 * g.usize_in(2..7).max(2); // even, 4..12
+            let gr = graph::random_regular(n, 3, g.u64_in(1..1_000_000))
+                .expect("3-regular pairing exists for even n ≥ 4");
+            let p = gr.n();
+            TopoCase { topo: Topology::Graph(Arc::new(gr)), p }
         }
     }
 }
@@ -314,6 +360,83 @@ fn prop_distance_ranking_is_complete_and_sorted() {
             for w in ranked.windows(2) {
                 if (w[0].1, w[0].0.idx()) >= (w[1].1, w[1].0.idx()) {
                     return Err(format!("{c:?}: table not sorted at {w:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// On covering shapes `hops` is a genuine metric: the triangle inequality
+/// must hold through every intermediate rank.  (Out-of-shape ranks are
+/// excluded — their distance is pinned to 1 by contract, which is not a
+/// metric completion.)
+#[test]
+fn prop_hops_triangle_inequality_on_covering_shapes() {
+    forall(60, 0x7419, gen_covering, |c| -> Result<(), String> {
+        let h = |a: usize, b: usize| c.topo.hops(ProcessId(a as u32), ProcessId(b as u32));
+        for a in 0..c.p {
+            for b in 0..c.p {
+                let direct = h(a, b);
+                for m in 0..c.p {
+                    if direct > h(a, m) + h(m, b) {
+                        return Err(format!(
+                            "{c:?}: hops({a},{b})={direct} > hops({a},{m}) + hops({m},{b}) \
+                             = {} + {}",
+                            h(a, m),
+                            h(m, b)
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The BFS distance table behind `Topology::Graph` is complete (no
+/// unreachable pair survives construction), symmetric, zero exactly on the
+/// diagonal, 1 exactly on CSR adjacency, triangle-consistent, and its
+/// maximum is the advertised diameter.
+#[test]
+fn prop_graph_distance_table_complete_and_metric() {
+    forall(60, 0x94AF, gen_graph, |g| -> Result<(), String> {
+        let n = g.n();
+        let mut max_d = 0u32;
+        for i in 0..n {
+            let row = g.dist_row(i);
+            if row.len() != n {
+                return Err(format!("{g:?}: row {i} has {} entries, want {n}", row.len()));
+            }
+            for j in 0..n {
+                let d = row[j];
+                if d == u16::MAX {
+                    return Err(format!("{g:?}: table hole at ({i},{j})"));
+                }
+                if (i == j) != (d == 0) {
+                    return Err(format!("{g:?}: dist({i},{j}) = {d}"));
+                }
+                if d != g.dist_row(j)[i] {
+                    return Err(format!("{g:?}: table asymmetric at ({i},{j})"));
+                }
+                let adjacent = g.neighbors_of(i).contains(&(j as u32));
+                if adjacent != (d == 1) {
+                    return Err(format!(
+                        "{g:?}: adjacency and distance disagree at ({i},{j}): adj={adjacent} d={d}"
+                    ));
+                }
+                max_d = max_d.max(d as u32);
+            }
+        }
+        if max_d != g.diameter() {
+            return Err(format!("{g:?}: max table entry {max_d} ≠ diameter {}", g.diameter()));
+        }
+        for a in 0..n {
+            for b in 0..n {
+                for m in 0..n {
+                    if g.dist_row(a)[b] > g.dist_row(a)[m] + g.dist_row(m)[b] {
+                        return Err(format!("{g:?}: BFS triangle violated at ({a},{m},{b})"));
+                    }
                 }
             }
         }
@@ -566,15 +689,21 @@ fn gen_shard_scenario(g: &mut Gen) -> ShardScenario {
     // keep P small enough that 25 dual runs stay fast, large enough that
     // every shard count in the table can actually split the ranks
     base.processes = g.usize_in(2..17).max(2);
+    let topology = [
+        TopologyKind::Flat,
+        TopologyKind::Ring,
+        TopologyKind::Torus,
+        TopologyKind::Cluster,
+        TopologyKind::RandReg { d: 3 },
+    ][g.usize_in(0..5).min(4)];
+    if matches!(topology, TopologyKind::RandReg { .. }) {
+        // 3-regular graphs need an even rank count of at least 4
+        base.processes = (base.processes.max(4) + 1) & !1;
+    }
     ShardScenario {
         base,
-        policy: PolicyKind::ALL[g.usize_in(0..4).min(3)],
-        topology: [
-            TopologyKind::Flat,
-            TopologyKind::Ring,
-            TopologyKind::Torus,
-            TopologyKind::Cluster,
-        ][g.usize_in(0..4).min(3)],
+        policy: PolicyKind::ALL[g.usize_in(0..PolicyKind::ALL.len()).min(PolicyKind::ALL.len() - 1)],
+        topology,
         shards: [1, 2, 3, 8][g.usize_in(0..4).min(3)],
     }
 }
@@ -614,6 +743,82 @@ fn prop_sharded_engine_bit_identical_to_single_thread() {
         }
         if par.per_process_counters != single.per_process_counters {
             return Err(format!("{s:?}: per-process counters diverged"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// second-order diffusion (PR 9): on the idealized continuous-load
+// iteration — the scheme the integerized policy approximates — the
+// spectrally-tuned SOS recurrence must reach balance in no more rounds
+// than first-order diffusion with the same α.  Checked with the
+// *production* coefficients from `SosParams::for_topology` on random
+// rings and tori, the poorly-conditioned shapes the scheme targets.
+// ---------------------------------------------------------------------
+
+fn gen_diffusion_shape(g: &mut Gen) -> TopoCase {
+    if g.bool() {
+        let len = g.usize_in(6..17).max(6);
+        TopoCase { topo: Topology::Ring { len }, p: len }
+    } else {
+        let rows = g.usize_in(3..6).max(3);
+        let cols = g.usize_in(3..6).max(3);
+        TopoCase { topo: Topology::Torus { rows, cols }, p: rows * cols }
+    }
+}
+
+/// Rounds of the continuous diffusion iteration until every rank is within
+/// 0.5 tasks of the mean, starting from a 1000-task spike at rank 0.
+/// `second_order = false` runs w(t+1) = M·w(t); `true` runs the SOS
+/// recurrence w(t+1) = β·M·w(t) + (1−β)·w(t−1), seeded with one plain step
+/// exactly as the policy seeds its zeroed flow memory.
+fn rounds_to_balance(topo: &Topology, p: usize, second_order: bool) -> usize {
+    let params = SosParams::for_topology(topo, p);
+    let nbrs: Vec<Vec<usize>> = (0..p)
+        .map(|i| topo.neighbors(ProcessId(i as u32), p).iter().map(|q| q.idx()).collect())
+        .collect();
+    let step = |w: &[f64]| -> Vec<f64> {
+        (0..p)
+            .map(|i| {
+                let s: f64 = nbrs[i].iter().map(|&j| w[j] - w[i]).sum();
+                w[i] + params.alpha * s
+            })
+            .collect()
+    };
+    let mut prev = vec![0.0f64; p];
+    prev[0] = 1000.0;
+    let mean = 1000.0 / p as f64;
+    let balanced = |w: &[f64]| w.iter().all(|&x| (x - mean).abs() < 0.5);
+    if balanced(&prev) {
+        return 0;
+    }
+    let mut cur = step(&prev);
+    for round in 1..=10_000 {
+        if balanced(&cur) {
+            return round;
+        }
+        let next: Vec<f64> = if second_order {
+            let m = step(&cur);
+            (0..p).map(|i| params.beta * m[i] + (1.0 - params.beta) * prev[i]).collect()
+        } else {
+            step(&cur)
+        };
+        prev = std::mem::replace(&mut cur, next);
+    }
+    usize::MAX
+}
+
+#[test]
+fn prop_sos_balances_in_no_more_rounds_than_fos() {
+    forall(16, 0x505F, gen_diffusion_shape, |c| -> Result<(), String> {
+        let fos = rounds_to_balance(&c.topo, c.p, false);
+        let sos = rounds_to_balance(&c.topo, c.p, true);
+        if fos == usize::MAX {
+            return Err(format!("{c:?}: first-order iteration never balanced"));
+        }
+        if sos > fos {
+            return Err(format!("{c:?}: second-order took {sos} rounds vs first-order {fos}"));
         }
         Ok(())
     });
