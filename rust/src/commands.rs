@@ -78,6 +78,10 @@ RUN FLAGS (defaults in parentheses):
     --sim-threads N     shard the DES across N worker threads (conservative
                         time-windowed sync; results stay bit-identical to
                         the single-threaded engine) (1)
+    --sim-window MODE   sharded-DES barrier protocol: matrix = distance-aware
+                        per-shard horizons with sparse barriers, scalar =
+                        the global min-delay horizon, every shard commanded
+                        every window (matrix)
     --seed N            run seed (1)
     --trace FILE.csv    write per-process workload traces
     --trace-record on|off  arm the structured span recorder: prints round /
@@ -185,6 +189,9 @@ fn config_from_args(args: &mut Args) -> Result<Config> {
             bail!("--sim-threads: must be ≥ 1, got 0");
         }
         cfg.sim_threads = n;
+    }
+    if let Some(v) = args.get_str("sim-window") {
+        cfg.sim_window = crate::config::WindowMode::parse(&v).map_err(|e| anyhow!("{e}"))?;
     }
     // Same on/off contract again for the span recorder: a typo'd value must
     // not silently run untraced (or traced) — it errors.

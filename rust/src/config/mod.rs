@@ -5,4 +5,6 @@ pub mod parser;
 pub mod schema;
 
 pub use parser::{parse, Table, Value};
-pub use schema::{Config, ConfigError, Grid, Mode, PolicyKind, Strategy, TopologyKind, Workload};
+pub use schema::{
+    Config, ConfigError, Grid, Mode, PolicyKind, Strategy, TopologyKind, WindowMode, Workload,
+};

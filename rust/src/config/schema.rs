@@ -111,6 +111,42 @@ impl fmt::Display for Strategy {
     }
 }
 
+/// Horizon protocol of the sharded DES coordinator (`sim::parallel`).
+/// Both modes are bit-identical to the single-threaded oracle; they differ
+/// only in how many barrier windows (and worker wakeups) a run costs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowMode {
+    /// Distance-aware per-shard horizons from the S×S inter-shard delay
+    /// matrix, with sparse barriers (shards already at their horizon with
+    /// an empty inbox are not commanded).  The default.
+    Matrix,
+    /// The original protocol: one global `t_next + min cross-shard delay`
+    /// horizon, every shard commanded every window.  Kept as the A/B
+    /// baseline for the window-count win.
+    Scalar,
+}
+
+impl WindowMode {
+    pub fn parse(s: &str) -> Result<Self, ConfigError> {
+        match s {
+            "matrix" | "distance" => Ok(WindowMode::Matrix),
+            "scalar" | "global" => Ok(WindowMode::Scalar),
+            other => Err(ConfigError::new(format!(
+                "unknown sim window mode: {other} (matrix|scalar)"
+            ))),
+        }
+    }
+}
+
+impl fmt::Display for WindowMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            WindowMode::Matrix => "matrix",
+            WindowMode::Scalar => "scalar",
+        })
+    }
+}
+
 /// Which distributed balancer drives migration (the policy subsystem —
 /// `dlb::policy`).  The paper's protocol is `RandomPairing`; the other two
 /// are the strongest competitors from the literature, runnable in the same
@@ -403,6 +439,11 @@ pub struct Config {
     /// in dispatch order) and `net_latency > 0` (the lookahead window is
     /// derived from the cross-shard latency floor).
     pub sim_threads: usize,
+    /// Coordinator horizon protocol under `sim_threads > 1`: distance-aware
+    /// per-shard horizons with sparse barriers (`matrix`, the default) or
+    /// the original global scalar-lookahead barrier (`scalar`).  Bit-wise
+    /// irrelevant to results; only window counts differ.
+    pub sim_window: WindowMode,
 
     // [cost]  (paper §4: S flops/s, R doubles/s; Rackham S/R ≈ 40)
     pub flops_per_sec: f64,
@@ -473,6 +514,7 @@ impl Default for Config {
             delta_max: 0.050,
             coalesce: false,
             sim_threads: 1,
+            sim_window: WindowMode::Matrix,
             flops_per_sec: 8.8e9,
             doubles_per_sec: 2.2e8, // S/R = 40, the paper's machine balance
             exec_jitter: 0.0,
@@ -566,6 +608,7 @@ impl Config {
         let mut strategy_s = self.strategy.to_string();
         let mut policy_s = self.policy.to_string();
         let mut topology_s = self.topology.to_string();
+        let mut window_s = self.sim_window.to_string();
         let mut grid_s = String::new();
 
         get_string(t, "run", "mode", &mut mode_s)?;
@@ -599,6 +642,7 @@ impl Config {
 
         get_bool(t, "sim", "coalesce", &mut self.coalesce)?;
         get_usize(t, "sim", "threads", &mut self.sim_threads)?;
+        get_string(t, "sim", "window", &mut window_s)?;
 
         get_f64(t, "cost", "flops_per_sec", &mut self.flops_per_sec)?;
         get_f64(t, "cost", "doubles_per_sec", &mut self.doubles_per_sec)?;
@@ -621,6 +665,7 @@ impl Config {
         self.workload = Workload::parse(&workload_s)?;
         self.strategy = Strategy::parse(&strategy_s)?;
         self.policy = PolicyKind::parse(&policy_s)?;
+        self.sim_window = WindowMode::parse(&window_s)?;
         self.set_topology_str(&topology_s)?;
         if !grid_s.is_empty() {
             self.grid = Some(Grid::parse(&grid_s)?);
@@ -1184,6 +1229,20 @@ mod tests {
         let mut c = Config::default();
         c.sim_threads = 2;
         c.validate().expect("2 threads over 10 ranks is fine");
+    }
+
+    #[test]
+    fn sim_window_parses_and_defaults_to_matrix() {
+        let c = Config::default();
+        assert_eq!(c.sim_window, WindowMode::Matrix, "distance-aware horizons by default");
+        let c = Config::from_str_toml("[sim]\nwindow = \"scalar\"").expect("parse");
+        assert_eq!(c.sim_window, WindowMode::Scalar);
+        let c = Config::from_str_toml("[sim]\nwindow = \"distance\"").expect("alias");
+        assert_eq!(c.sim_window, WindowMode::Matrix);
+        let mut c = Config::default();
+        c.apply_overrides(["sim.window=\"global\""]).expect("override alias");
+        assert_eq!(c.sim_window, WindowMode::Scalar);
+        assert!(Config::from_str_toml("[sim]\nwindow = \"sideways\"").is_err());
     }
 
     #[test]

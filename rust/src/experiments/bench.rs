@@ -1,9 +1,10 @@
 //! `ductr bench` — the repeatable DES hot-path baseline.
 //!
 //! Times full simulator runs on the standing workloads (block Cholesky,
-//! random layered DAG, hierarchical-stealing-on-cluster, plus a smoke-only
-//! graph-fabric cell running second-order diffusion on a random-regular
-//! interconnect) across a process count sweep reaching P = 65 536, with every cell measured twice —
+//! random layered DAG, hierarchical-stealing-on-cluster, plus graph-fabric
+//! cells running second-order diffusion on a random-regular interconnect —
+//! a small one in the smoke profile, a P = 512 one in the full sweep)
+//! across a process count sweep reaching P = 65 536, with every cell measured twice —
 //! transport coalescing off and on — and writes a JSON baseline
 //! (`BENCH_pr5.json` by default) so successive PRs have a perf trajectory
 //! to compare against: events/sec, makespan, and the pending-event
@@ -13,8 +14,14 @@
 //! cell is timed again under the sharded parallel engine, and the run
 //! *hard-fails* if any threads = N row's deterministic outputs (events,
 //! makespan bits, DLB counters) differ from its threads = 1 twin — the
-//! in-run synchronization canary.  The full sweep always includes one
-//! P = 65 536 frontier cell with the parallel rows forced on.
+//! in-run synchronization canary.  The full sweep always includes a
+//! P = 65 536 frontier cell and the P = 512 graph-fabric cell with the
+//! parallel rows forced on (≥ 4 shards).  Sharded rows also record the
+//! coordinator's window statistics (`windows`, `window_cmds_sent`,
+//! `window_cmds_skipped`) — deterministic under the seed like `events` —
+//! and the graph-fabric cells re-run each sharded row under the legacy
+//! scalar-lookahead protocol (`windows_scalar`), hard-failing if the
+//! distance-aware horizons cost more barriers or diverge bit-wise.
 //!
 //! `--baseline FILE` re-reads a committed baseline and prints per-case
 //! deltas; on any matching (name, coalesce, threads) case the command
@@ -38,7 +45,7 @@ use std::time::Duration;
 
 use crate::apps::rand_dag;
 use crate::cholesky::{self, ProcessGrid};
-use crate::config::{Config, PolicyKind, TopologyKind};
+use crate::config::{Config, PolicyKind, TopologyKind, WindowMode};
 use crate::core::graph::TaskGraph;
 use crate::metrics::LatencyReport;
 use crate::sim::engine::SimResult;
@@ -87,6 +94,19 @@ pub struct BenchCase {
     pub qwait_p50: f64,
     pub qwait_p95: f64,
     pub qwait_p99: f64,
+    /// Coordinator barrier windows of this run (0 for threads = 1 rows —
+    /// the single-threaded engine has no windows).  Deterministic under
+    /// the seed, so diffable across commits like `events`.
+    pub windows: u64,
+    /// `WindowCmd`s dispatched / skipped by the sparse-barrier rule.
+    pub window_cmds_sent: u64,
+    pub window_cmds_skipped: u64,
+    /// Window count of the same cell re-run under the legacy scalar-L
+    /// protocol (`[sim] window = "scalar"`), recorded only on the
+    /// graph-fabric A/B cells; 0 = not measured.  `windows` ≤ this is
+    /// enforced in-run — the distance-aware horizons must never cost more
+    /// barriers than the global-minimum protocol they replace.
+    pub windows_scalar: u64,
 }
 
 #[derive(Debug)]
@@ -152,6 +172,13 @@ fn time_case(cfg: &Config, graph: &Arc<TaskGraph>, name: &str, smoke: bool) -> (
 /// Time one workload cell under coalescing off *and* on; with
 /// `threads > 1` each coalesce row gets a sharded-engine twin, gated
 /// bit-for-bit against the single-threaded row before it is recorded.
+///
+/// `scalar_ab` additionally re-runs each sharded row (untimed) under the
+/// legacy scalar-lookahead protocol and records its window count in
+/// `windows_scalar` — the A/B that makes the distance-aware horizon win a
+/// number in the baseline.  The run hard-fails if the scalar twin's
+/// deterministic outputs diverge (both protocols must be bit-identical to
+/// the oracle) or if the matrix protocol needed *more* windows.
 #[allow(clippy::too_many_arguments)]
 fn time_ab(
     cases: &mut Vec<BenchCase>,
@@ -161,6 +188,7 @@ fn time_ab(
     name: &str,
     smoke: bool,
     threads: usize,
+    scalar_ab: bool,
 ) -> Result<()> {
     let start = cases.len();
     let tasks = graph.num_tasks();
@@ -195,6 +223,34 @@ fn time_ab(
                 )));
             }
             cases.push(case(workload, name, c.processes, tasks, coalesce, t, &rp, wallp));
+            if scalar_ab {
+                let mut cs = c.clone();
+                cs.sim_window = WindowMode::Scalar;
+                let rs = crate::sim::run_config(&cs, Arc::clone(graph))
+                    .expect("bench scalar-window run");
+                if rs.events_processed != r1.events_processed
+                    || rs.makespan.to_bits() != r1.makespan.to_bits()
+                    || rs.counters != r1.counters
+                {
+                    return Err(Error::msg(format!(
+                        "bench canary: {name} (coalesce {coalesce}) diverged under \
+                         the scalar window protocol: events {} vs {}",
+                        rs.events_processed, r1.events_processed
+                    )));
+                }
+                if rs.window.windows < rp.window.windows {
+                    return Err(Error::msg(format!(
+                        "bench canary: {name} (coalesce {coalesce}) took more windows \
+                         under distance-aware horizons ({}) than the scalar protocol \
+                         ({}) — the per-pair lookahead must dominate the global one",
+                        rp.window.windows, rs.window.windows
+                    )));
+                }
+                cases
+                    .last_mut()
+                    .expect("sharded row just pushed")
+                    .windows_scalar = rs.window.windows;
+            }
         }
     }
     // One extra untimed run with the recorder armed fills the latency
@@ -247,7 +303,7 @@ pub fn run(seed: u64, smoke: bool, threads: usize) -> Result<BenchReport> {
         cfg.validate().map_err(Error::new)?;
         let dag = cholesky::build(cfg.nb, cfg.block, ProcessGrid::new(cfg.effective_grid()));
         let name = format!("cholesky nb={} P={p}", cfg.nb);
-        time_ab(&mut cases, "cholesky", &cfg, &dag.graph, &name, smoke, threads)?;
+        time_ab(&mut cases, "cholesky", &cfg, &dag.graph, &name, smoke, threads, false)?;
 
         // --- random layered DAG --------------------------------------
         let (cfg, graph, name) = if smoke {
@@ -261,7 +317,7 @@ pub fn run(seed: u64, smoke: bool, threads: usize) -> Result<BenchReport> {
         } else {
             rand_dag_case(p, seed)
         };
-        time_ab(&mut cases, "rand_dag", &cfg, &graph, &name, smoke, threads)?;
+        time_ab(&mut cases, "rand_dag", &cfg, &graph, &name, smoke, threads, false)?;
 
         // --- locality layer: hierarchical stealing + adaptive δ on the
         //     cluster fabric (PR 4's policy hot path) -------------------
@@ -280,7 +336,7 @@ pub fn run(seed: u64, smoke: bool, threads: usize) -> Result<BenchReport> {
         }
         let name = format!("hier_cluster {}x{} P={p}", params.layers, params.width);
         let graph = rand_dag::build(p, params, seed);
-        time_ab(&mut cases, "hier_cluster", &c, &graph, &name, smoke, threads)?;
+        time_ab(&mut cases, "hier_cluster", &c, &graph, &name, smoke, threads, false)?;
     }
 
     if smoke {
@@ -294,7 +350,7 @@ pub fn run(seed: u64, smoke: bool, threads: usize) -> Result<BenchReport> {
         params.width = 64;
         let name = format!("rand_dag {}x{} P={p}", params.layers, params.width);
         let graph = rand_dag::build(p, params, seed);
-        time_ab(&mut cases, "rand_dag", &c, &graph, &name, smoke, threads)?;
+        time_ab(&mut cases, "rand_dag", &c, &graph, &name, smoke, threads, false)?;
 
         // the graph-fabric leg: second-order diffusion on a random-regular
         // interconnect, so every push times the BFS-table topology path and
@@ -310,7 +366,7 @@ pub fn run(seed: u64, smoke: bool, threads: usize) -> Result<BenchReport> {
         params.width = 8;
         let name = format!("sos_randreg {}x{} P={p}", params.layers, params.width);
         let graph = rand_dag::build(p, params, seed);
-        time_ab(&mut cases, "sos_randreg", &c, &graph, &name, smoke, threads)?;
+        time_ab(&mut cases, "sos_randreg", &c, &graph, &name, smoke, threads, true)?;
     } else {
         // the P = 65 536 frontier cell: a sparse DAG over the full rank
         // count, parallel rows forced on.  DLB stays off (victim sampling
@@ -329,7 +385,25 @@ pub fn run(seed: u64, smoke: bool, threads: usize) -> Result<BenchReport> {
         params.width = 64;
         let name = format!("rand_dag {}x{} P={p}", params.layers, params.width);
         let graph = rand_dag::build(p, params, seed);
-        time_ab(&mut cases, "rand_dag", &c, &graph, &name, smoke, threads.max(2))?;
+        time_ab(&mut cases, "rand_dag", &c, &graph, &name, smoke, threads.max(4), false)?;
+
+        // the graph-fabric frontier: second-order diffusion over a
+        // random-regular interconnect at P = 512, parallel rows forced on
+        // with the scalar-window A/B armed — the cell where the
+        // distance-aware horizons have multi-hop shard separation to
+        // exploit, so `windows` vs `windows_scalar` is the headline
+        // number of the protocol.
+        let p = 512;
+        let mut c = base_cfg(p, seed);
+        c.policy = PolicyKind::SosDiffusion;
+        c.topology = TopologyKind::RandReg { d: 3 };
+        c.validate().map_err(Error::new)?;
+        let mut params = rand_dag::DagParams::default();
+        params.layers = 8;
+        params.width = 128;
+        let name = format!("randreg_fabric {}x{} P={p}", params.layers, params.width);
+        let graph = rand_dag::build(p, params, seed);
+        time_ab(&mut cases, "randreg_fabric", &c, &graph, &name, smoke, threads.max(4), true)?;
     }
 
     Ok(BenchReport { seed, smoke, cases })
@@ -365,6 +439,10 @@ fn case(
         qwait_p50: 0.0,
         qwait_p95: 0.0,
         qwait_p99: 0.0,
+        windows: r.window.windows,
+        window_cmds_sent: r.window.cmds_sent,
+        window_cmds_skipped: r.window.cmds_skipped,
+        windows_scalar: 0,
     }
 }
 
@@ -373,7 +451,7 @@ impl BenchReport {
     pub fn render(&self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "ductr bench (seed {}{})\n{:<28} {:>6} {:>7} {:>4} {:>3} {:>10} {:>11} {:>10} {:>10} {:>12}\n",
+            "ductr bench (seed {}{})\n{:<28} {:>6} {:>7} {:>4} {:>3} {:>10} {:>11} {:>10} {:>10} {:>12} {:>9} {:>9}\n",
             self.seed,
             if self.smoke { ", smoke" } else { "" },
             "case",
@@ -385,11 +463,13 @@ impl BenchReport {
             "makespan",
             "peak-pend",
             "coalesced",
-            "events/s"
+            "events/s",
+            "windows",
+            "w-skip"
         ));
         for c in &self.cases {
             s.push_str(&format!(
-                "{:<28} {:>6} {:>7} {:>4} {:>3} {:>10} {:>11.4} {:>10} {:>10} {:>12.0}\n",
+                "{:<28} {:>6} {:>7} {:>4} {:>3} {:>10} {:>11.4} {:>10} {:>10} {:>12.0} {:>9} {:>9}\n",
                 c.name,
                 c.processes,
                 c.tasks,
@@ -399,7 +479,9 @@ impl BenchReport {
                 c.makespan,
                 c.peak_pending_events,
                 c.messages_coalesced,
-                c.events_per_sec
+                c.events_per_sec,
+                c.windows,
+                c.window_cmds_skipped
             ));
         }
         s
@@ -425,7 +507,9 @@ impl BenchReport {
                  \"peak_pending_events\": {}, \"messages_coalesced\": {}, \
                  \"wall_secs\": {}, \"events_per_sec\": {}, \
                  \"round_p50\": {}, \"round_p95\": {}, \"round_p99\": {}, \
-                 \"qwait_p50\": {}, \"qwait_p95\": {}, \"qwait_p99\": {}}}{comma}",
+                 \"qwait_p50\": {}, \"qwait_p95\": {}, \"qwait_p99\": {}, \
+                 \"windows\": {}, \"window_cmds_sent\": {}, \
+                 \"window_cmds_skipped\": {}, \"windows_scalar\": {}}}{comma}",
                 c.name,
                 c.workload,
                 c.processes,
@@ -443,7 +527,11 @@ impl BenchReport {
                 c.round_p99,
                 c.qwait_p50,
                 c.qwait_p95,
-                c.qwait_p99
+                c.qwait_p99,
+                c.windows,
+                c.window_cmds_sent,
+                c.window_cmds_skipped,
+                c.windows_scalar
             )?;
         }
         writeln!(f, "  ]")?;
@@ -664,6 +752,14 @@ mod tests {
             r.cases.iter().any(|c| c.round_p95 > 0.0),
             "some smoke cell must record pair-search rounds"
         );
+        // threads = 1 everywhere → the single-threaded engine, which has no
+        // coordinator windows; the window columns must read zero
+        assert!(r.cases.iter().all(|c| {
+            c.windows == 0
+                && c.window_cmds_sent == 0
+                && c.window_cmds_skipped == 0
+                && c.windows_scalar == 0
+        }));
         let rendered = r.render();
         assert!(rendered.contains("events/s"));
         let p = std::env::temp_dir().join("ductr_bench_smoke.json");
@@ -692,6 +788,21 @@ mod tests {
             assert_eq!(c2.events, c1.events, "{}", c2.name);
             assert_eq!(c2.makespan.to_bits(), c1.makespan.to_bits(), "{}", c2.name);
             assert_eq!(c2.messages_coalesced, c1.messages_coalesced, "{}", c2.name);
+            // window stats are a sharded-engine artifact
+            assert!(c2.windows >= 1, "{}: sharded rows must record windows", c2.name);
+            assert_eq!(c1.windows, 0, "{}: oracle rows have no windows", c1.name);
+            if c2.workload == "sos_randreg" {
+                // the smoke graph-fabric cell runs the scalar A/B twin
+                assert!(
+                    c2.windows_scalar > 0 && c2.windows <= c2.windows_scalar,
+                    "{}: matrix windows {} vs scalar {}",
+                    c2.name,
+                    c2.windows,
+                    c2.windows_scalar
+                );
+            } else {
+                assert_eq!(c2.windows_scalar, 0, "{}: A/B only on the fabric cell", c2.name);
+            }
         }
     }
 
@@ -730,6 +841,10 @@ mod tests {
                 qwait_p50: 0.0,
                 qwait_p95: 0.0,
                 qwait_p99: 0.0,
+                windows: 0,
+                window_cmds_sent: 0,
+                window_cmds_skipped: 0,
+                windows_scalar: 0,
             }],
         }
     }

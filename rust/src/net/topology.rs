@@ -185,6 +185,194 @@ impl Topology {
         }
     }
 
+    /// Per-pair minimum `hops` between partition blocks: a row-major
+    /// `n × n` matrix with `n = max shard id + 1`, where entry `[j·n + i]`
+    /// is the minimum of `hops(a, b)` over all pairs with rank `a` in
+    /// shard `j` and rank `b` in shard `i`.  The diagonal is 0; entries
+    /// touching a shard id that owns no rank stay `u32::MAX` (no such
+    /// message exists, so it constrains nothing).  `None` when fewer than
+    /// two shards are populated — then there is no cross-shard traffic at
+    /// all and the caller's window is unbounded.
+    ///
+    /// This is the per-pair generalization of
+    /// [`Self::min_cross_partition_hops`]: the sharded DES
+    /// (`sim::parallel`) turns each row into a per-shard lookahead, so a
+    /// far-apart block pair buys a window proportional to its distance
+    /// instead of the global minimum.  Every entry is therefore ≥ the
+    /// scalar bound, and the matrix is symmetric because `hops` is.
+    ///
+    /// Cost per shape (never O(P²) pair scans):
+    /// - `Flat`: all populated off-diagonal pairs are 1 — O(P + S²);
+    /// - `Ring`/`Torus`: one multi-source BFS per shard over the unit-edge
+    ///   cycle/grid — O(S·P); the closed-form `hops` of these shapes *is*
+    ///   the BFS distance (out-of-shape ranks fold onto their modulo slot
+    ///   exactly as `hops` does, with the same `max(1)` floor for distinct
+    ///   ranks sharing a slot);
+    /// - `Cluster`: `inter_hops` for every populated pair, collapsed to 1
+    ///   for pairs co-resident in some node — O(P + S²);
+    /// - `Graph`: one multi-source BFS per shard over the CSR adjacency —
+    ///   O(S·(V+E)); ranks beyond the node count answer `hops` = 1, so
+    ///   they pin their shard's rows and columns to 1 (a misconfiguration
+    ///   guard — `Config::validate` rejects non-covering graphs).
+    pub fn cross_partition_hops_matrix(&self, shard_of: &[u32]) -> Option<Vec<u32>> {
+        let n = shard_of.iter().map(|&s| s as usize + 1).max().unwrap_or(0);
+        let mut populated = vec![false; n];
+        for &s in shard_of {
+            populated[s as usize] = true;
+        }
+        if populated.iter().filter(|&&b| b).count() < 2 {
+            return None;
+        }
+        let mut m = vec![u32::MAX; n * n];
+        for s in 0..n {
+            m[s * n + s] = 0;
+        }
+        // Fill every populated off-diagonal pair with one value — the
+        // degenerate-shape fallback (`hops` answers 1 whenever a shape has
+        // fewer than two slots) and the uniform tiers below.
+        let fill = |m: &mut [u32], populated: &[bool], h: u32| {
+            for j in 0..n {
+                for i in 0..n {
+                    if i != j && populated[j] && populated[i] {
+                        let e = &mut m[j * n + i];
+                        *e = (*e).min(h);
+                    }
+                }
+            }
+        };
+        // Multi-source BFS per shard over a unit-edge cell graph; ranks
+        // map onto cells via `cell_of` (`None` = out-of-shape, handled by
+        // the caller).  Matches `hops` because each shape's closed form is
+        // its cell graph's BFS metric.
+        let bfs = |m: &mut [u32],
+                   cells: usize,
+                   cell_of: &dyn Fn(usize) -> Option<usize>,
+                   neigh: &dyn Fn(usize, &mut Vec<usize>)| {
+            use std::collections::VecDeque;
+            let mut dist = vec![u32::MAX; cells];
+            let mut q: VecDeque<usize> = VecDeque::new();
+            let mut scratch: Vec<usize> = Vec::with_capacity(8);
+            for j in 0..n {
+                dist.iter_mut().for_each(|d| *d = u32::MAX);
+                q.clear();
+                for (r, &s) in shard_of.iter().enumerate() {
+                    if s as usize == j {
+                        if let Some(c) = cell_of(r) {
+                            if dist[c] == u32::MAX {
+                                dist[c] = 0;
+                                q.push_back(c);
+                            }
+                        }
+                    }
+                }
+                if q.is_empty() {
+                    // Shard j owns no in-shape rank: nothing can originate
+                    // there (Ring/Torus map every rank in-shape, so this is
+                    // an unpopulated id; Graph's out-of-shape senders are
+                    // pinned by the caller) — leave the row untouched.
+                    continue;
+                }
+                while let Some(c) = q.pop_front() {
+                    let d = dist[c];
+                    scratch.clear();
+                    neigh(c, &mut scratch);
+                    for &v in &scratch {
+                        if dist[v] == u32::MAX {
+                            dist[v] = d + 1;
+                            q.push_back(v);
+                        }
+                    }
+                }
+                for (r, &s) in shard_of.iter().enumerate() {
+                    let i = s as usize;
+                    if i == j {
+                        continue;
+                    }
+                    // Unreached or out-of-shape destination: `hops` answers
+                    // a plain total 1 for such ranks.
+                    let h = match cell_of(r) {
+                        Some(c) if dist[c] != u32::MAX => dist[c].max(1),
+                        _ => 1,
+                    };
+                    let e = &mut m[j * n + i];
+                    *e = (*e).min(h);
+                }
+            }
+        };
+        match *self {
+            Topology::Flat => fill(&mut m, &populated, 1),
+            Topology::Ring { len } => {
+                if len < 2 {
+                    fill(&mut m, &populated, 1);
+                } else {
+                    bfs(&mut m, len, &|r| Some(r % len), &|c, out| {
+                        out.push((c + 1) % len);
+                        out.push((c + len - 1) % len);
+                    });
+                }
+            }
+            Topology::Torus { rows, cols } => {
+                let cells = rows * cols;
+                if cells < 2 {
+                    fill(&mut m, &populated, 1);
+                } else {
+                    bfs(&mut m, cells, &|r| Some(r % cells), &|c, out| {
+                        let (r, cc) = (c / cols, c % cols);
+                        out.push(((r + 1) % rows) * cols + cc);
+                        out.push(((r + rows - 1) % rows) * cols + cc);
+                        out.push(r * cols + (cc + 1) % cols);
+                        out.push(r * cols + (cc + cols - 1) % cols);
+                    });
+                }
+            }
+            Topology::Cluster { nodes, per_node, inter_hops } => {
+                let slots = nodes * per_node;
+                if slots < 2 {
+                    fill(&mut m, &populated, 1);
+                } else {
+                    fill(&mut m, &populated, inter_hops.max(1));
+                    // Shard pairs sharing a node meet at the 1-hop tier.
+                    let mut node_shards: Vec<Vec<usize>> = vec![Vec::new(); nodes];
+                    for (r, &s) in shard_of.iter().enumerate() {
+                        let node = (r % slots) / per_node;
+                        if !node_shards[node].contains(&(s as usize)) {
+                            node_shards[node].push(s as usize);
+                        }
+                    }
+                    for in_node in &node_shards {
+                        for &a in in_node {
+                            for &b in in_node {
+                                if a != b {
+                                    m[a * n + b] = 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Topology::Graph(ref g) => {
+                let nodes = g.n();
+                bfs(&mut m, nodes.max(1), &|r| (r < nodes).then_some(r), &|c, out| {
+                    out.extend(g.neighbors_of(c).iter().map(|&v| v as usize));
+                });
+                // Out-of-shape ranks (`hops` = 1 to everything) pin their
+                // shard's row *and* column — they can be the sender too.
+                for (r, &s) in shard_of.iter().enumerate() {
+                    if r >= nodes {
+                        let s = s as usize;
+                        for i in 0..n {
+                            if i != s && populated[i] {
+                                m[s * n + i] = 1;
+                                m[i * n + s] = 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Some(m)
+    }
+
     /// The neighbor set diffusion exchanges load with.  Always symmetric
     /// (j ∈ N(i) ⇔ i ∈ N(j)), never contains `me`, sorted ascending.
     ///
@@ -566,6 +754,96 @@ mod tests {
         // fewer than two populated shards → no cross-shard traffic at all
         assert_eq!(Topology::Flat.min_cross_partition_hops(&[0, 0, 0]), None);
         assert_eq!(Topology::Flat.min_cross_partition_hops(&[]), None);
+    }
+
+    /// Oracle for `cross_partition_hops_matrix`: the O(P²) scan over every
+    /// rank pair it is forbidden from doing.
+    fn brute_hops_matrix(t: &Topology, shard_of: &[u32]) -> Option<Vec<u32>> {
+        let n = shard_of.iter().map(|&s| s as usize + 1).max().unwrap_or(0);
+        let mut pop = vec![false; n];
+        shard_of.iter().for_each(|&s| pop[s as usize] = true);
+        if pop.iter().filter(|&&b| b).count() < 2 {
+            return None;
+        }
+        let mut m = vec![u32::MAX; n * n];
+        (0..n).for_each(|s| m[s * n + s] = 0);
+        for (a, &sa) in shard_of.iter().enumerate() {
+            for (b, &sb) in shard_of.iter().enumerate() {
+                if sa != sb {
+                    let e = &mut m[sa as usize * n + sb as usize];
+                    *e = (*e).min(t.hops(p(a as u32), p(b as u32)).max(1));
+                }
+            }
+        }
+        Some(m)
+    }
+
+    #[test]
+    fn hops_matrix_matches_brute_force_per_shape() {
+        let cases: Vec<(Topology, usize)> = vec![
+            (Topology::Flat, 7),
+            (Topology::Ring { len: 9 }, 9),
+            (Topology::Ring { len: 16 }, 16),
+            (Topology::Torus { rows: 3, cols: 4 }, 12),
+            (Topology::Torus { rows: 4, cols: 4 }, 16),
+            (Topology::Cluster { nodes: 4, per_node: 4, inter_hops: 4 }, 16),
+            (cycle6(), 6),
+            // out-of-shape ranks: ring slots alias modulo len, graph ranks
+            // beyond the node count answer 1 — the matrix must agree
+            (Topology::Ring { len: 4 }, 6),
+            (cycle6(), 8),
+        ];
+        for (t, p_n) in cases {
+            for shards in 1..=4usize {
+                let shard_of = t.shard_partition(p_n, shards);
+                let got = t.cross_partition_hops_matrix(&shard_of);
+                let want = brute_hops_matrix(&t, &shard_of);
+                assert_eq!(got, want, "{t:?} p={p_n} shards={shards}");
+                if let Some(m) = got {
+                    let n = shard_of.iter().map(|&s| s as usize + 1).max().unwrap();
+                    let min = m
+                        .iter()
+                        .enumerate()
+                        .filter(|&(k, &h)| k / n != k % n && h != u32::MAX)
+                        .map(|(_, &h)| h)
+                        .min();
+                    assert_eq!(
+                        min,
+                        t.min_cross_partition_hops(&shard_of),
+                        "{t:?} p={p_n} shards={shards}: matrix min vs scalar"
+                    );
+                    for j in 0..n {
+                        for i in 0..n {
+                            assert_eq!(m[j * n + i], m[i * n + j], "asymmetric ({j},{i})");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hops_matrix_handles_noncontiguous_and_gapped_ids() {
+        // Hand-built partitions the contiguous `shard_partition` never
+        // emits: interleaved blocks and a gap in the id space.
+        let ring = Topology::Ring { len: 8 };
+        for shard_of in [
+            vec![0u32, 1, 0, 1, 0, 1, 0, 1],
+            vec![0, 0, 2, 2, 0, 0, 2, 2],
+            vec![3, 0, 0, 0, 0, 0, 0, 3],
+        ] {
+            let got = ring.cross_partition_hops_matrix(&shard_of);
+            assert_eq!(got, brute_hops_matrix(&ring, &shard_of), "{shard_of:?}");
+        }
+        // gapped ids: unpopulated rows/cols stay MAX (never 1)
+        let m = ring.cross_partition_hops_matrix(&[0, 0, 2, 2, 0, 0, 2, 2]).unwrap();
+        let n = 3;
+        for i in 0..n {
+            if i != 1 {
+                assert_eq!(m[n + i], u32::MAX, "unpopulated row leaked a bound");
+                assert_eq!(m[i * n + 1], u32::MAX, "unpopulated col leaked a bound");
+            }
+        }
     }
 
     #[test]

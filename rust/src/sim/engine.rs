@@ -70,6 +70,37 @@ pub struct SimResult {
     pub peak_pending_events: usize,
     /// Aggregate compute utilization: Σ flops / (P · S · makespan).
     pub utilization: f64,
+    /// Coordinator window statistics (all-zero for the single-threaded
+    /// engine, which has no windows).  Excluded from the bit-identity
+    /// contract with the sharded engine — it describes the execution
+    /// strategy, not the simulated system.
+    pub window: WindowStats,
+}
+
+/// Barrier-protocol statistics of a sharded run (`sim::parallel`): how many
+/// coordinator windows the run took and how sparse the barriers were.  The
+/// measurable half of the distance-aware lookahead protocol — fewer windows
+/// and more skipped commands at identical event counts is the win.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WindowStats {
+    /// Coordinator barrier iterations.
+    pub windows: u64,
+    /// `WindowCmd`s actually dispatched to shard workers.
+    pub cmds_sent: u64,
+    /// Shard-window slots skipped by the sparse-barrier rule (shard already
+    /// at/past its horizon with an empty inbox — cached report reused).
+    pub cmds_skipped: u64,
+}
+
+impl WindowStats {
+    /// Mean events dispatched per coordinator window.
+    pub fn events_per_window(&self, events: u64) -> f64 {
+        if self.windows == 0 {
+            0.0
+        } else {
+            events as f64 / self.windows as f64
+        }
+    }
 }
 
 /// Errors a simulation can hit (budget guards — a correct run never does).
@@ -439,6 +470,7 @@ impl SimEngine {
             events_processed: events,
             peak_pending_events: self.peak_pending,
             utilization,
+            window: WindowStats::default(),
         }
     }
 }

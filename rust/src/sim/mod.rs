@@ -18,7 +18,7 @@ pub mod parallel;
 mod shard;
 
 pub use calendar::CalendarQueue;
-pub use engine::{SimEngine, SimError, SimResult};
+pub use engine::{SimEngine, SimError, SimResult, WindowStats};
 pub use network::NetworkModel;
 pub use parallel::ParallelSimEngine;
 

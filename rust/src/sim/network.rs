@@ -72,6 +72,77 @@ impl NetworkModel {
             .min_cross_partition_hops(shard_of)
             .map(|hops| hops.max(1) as f64 * self.latency)
     }
+
+    /// Per-pair generalization of [`Self::min_cross_shard_delay`]: the S×S
+    /// minimum delay matrix `L[j][i]` = (min hops between shard j's and
+    /// shard i's blocks) × latency, size term at its zero lower bound.  Each
+    /// entry is a safe per-pair lookahead under the identical monotonicity
+    /// argument — a message shard j sends at `t ≥ next_j` to shard i arrives
+    /// at `t + delay ≥ next_j + L[j][i]`, so shard i may run strictly below
+    /// `min_j≠i (next_j + L[j][i])`.  Every entry ≥ the scalar bound, and
+    /// the matrix minimum equals it bit-exactly (same `hops.max(1) as f64 ×
+    /// latency` expression over the same minimum).  `None` when fewer than
+    /// two shards are populated.
+    pub fn cross_shard_delay_matrix(&self, shard_of: &[u32]) -> Option<ShardDelays> {
+        let hops = self.topology.cross_partition_hops_matrix(shard_of)?;
+        let n = (hops.len() as f64).sqrt() as usize;
+        debug_assert_eq!(n * n, hops.len());
+        let delays = hops
+            .iter()
+            .enumerate()
+            .map(|(k, &h)| {
+                if k / n == k % n {
+                    0.0
+                } else if h == u32::MAX {
+                    // Unpopulated shard id: no rank can send from / to it,
+                    // so it never constrains a horizon.
+                    f64::INFINITY
+                } else {
+                    h.max(1) as f64 * self.latency
+                }
+            })
+            .collect();
+        Some(ShardDelays { n, delays })
+    }
+}
+
+/// Row-major S×S minimum inter-shard delay matrix (seconds), produced by
+/// [`NetworkModel::cross_shard_delay_matrix`].  Diagonal 0, unpopulated
+/// pairs `+∞`, all other entries strictly positive whenever latency is
+/// (enforced by `Config::validate` for `--sim-threads > 1`).
+#[derive(Debug, Clone)]
+pub struct ShardDelays {
+    n: usize,
+    delays: Vec<f64>,
+}
+
+impl ShardDelays {
+    /// Number of shard slots (max shard id + 1, populated or not).
+    pub fn shards(&self) -> usize {
+        self.n
+    }
+
+    /// Minimum delay of any message shard `from` can send to shard `to`.
+    pub fn delay(&self, from: usize, to: usize) -> f64 {
+        self.delays[from * self.n + to]
+    }
+
+    /// The matrix minimum over off-diagonal populated pairs — bit-identical
+    /// to the old scalar `min_cross_shard_delay` bound.
+    pub fn min_delay(&self) -> f64 {
+        let mut m = f64::INFINITY;
+        for j in 0..self.n {
+            for i in 0..self.n {
+                if i != j {
+                    let d = self.delays[j * self.n + i];
+                    if d < m {
+                        m = d;
+                    }
+                }
+            }
+        }
+        m
+    }
 }
 
 #[cfg(test)]
@@ -141,6 +212,89 @@ mod tests {
         }
         // single populated shard → unbounded window
         assert_eq!(n.min_cross_shard_delay(&[0, 0, 0]), None);
+    }
+
+    #[test]
+    fn delay_matrix_symmetric_and_dominates_scalar() {
+        // Every shape the sharded engine can see: the matrix must be
+        // symmetric (hops is), entry-wise ≥ the scalar lookahead, finite on
+        // populated pairs, and its minimum bit-identical to the scalar.
+        let shapes = [
+            Topology::Flat,
+            Topology::Ring { len: 12 },
+            Topology::Torus { rows: 3, cols: 4 },
+            Topology::Cluster { nodes: 3, per_node: 4, inter_hops: 5 },
+        ];
+        for t in shapes {
+            for shards in [2usize, 3, 4] {
+                let n = NetworkModel::with_topology(1e-6, 1e8, t.clone());
+                let shard_of = t.shard_partition(12, shards);
+                let m = n.cross_shard_delay_matrix(&shard_of).expect("populated");
+                let scalar = n.min_cross_shard_delay(&shard_of).expect("populated");
+                assert_eq!(m.min_delay().to_bits(), scalar.to_bits(), "{t:?}/{shards}");
+                for j in 0..m.shards() {
+                    assert_eq!(m.delay(j, j), 0.0);
+                    for i in 0..m.shards() {
+                        assert_eq!(
+                            m.delay(j, i).to_bits(),
+                            m.delay(i, j).to_bits(),
+                            "{t:?}/{shards} asymmetric at ({j},{i})"
+                        );
+                        if i != j {
+                            let d = m.delay(j, i);
+                            assert!(d.is_finite(), "{t:?}/{shards} ∞ at ({j},{i})");
+                            assert!(d >= scalar, "{t:?}/{shards} entry {d} < scalar {scalar}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delay_matrix_separates_far_ring_blocks() {
+        // Ring of 16 in 4 contiguous blocks of 4: adjacent blocks touch at
+        // 1 hop, opposite blocks ([0..4) vs [8..12)) are 5 hops apart — the
+        // per-pair win the scalar bound cannot see.
+        let t = Topology::Ring { len: 16 };
+        let n = NetworkModel::with_topology(1e-6, 1e8, t.clone());
+        let shard_of = t.shard_partition(16, 4);
+        let m = n.cross_shard_delay_matrix(&shard_of).expect("populated");
+        assert!((m.delay(0, 1) - 1e-6).abs() < 1e-18);
+        assert!((m.delay(0, 2) - 5e-6).abs() < 1e-18, "far pair: {}", m.delay(0, 2));
+        assert!((m.delay(1, 3) - 5e-6).abs() < 1e-18);
+        // And every entry is exactly min-over-pairs hops × latency.
+        for j in 0..4 {
+            for i in 0..4 {
+                if i == j {
+                    continue;
+                }
+                let mut best = u32::MAX;
+                for a in 0..16u32 {
+                    for b in 0..16u32 {
+                        if shard_of[a as usize] == j as u32 && shard_of[b as usize] == i as u32 {
+                            best = best.min(t.hops(ProcessId(a), ProcessId(b)).max(1));
+                        }
+                    }
+                }
+                let want = best as f64 * 1e-6;
+                assert_eq!(m.delay(j, i).to_bits(), want.to_bits(), "({j},{i})");
+            }
+        }
+    }
+
+    #[test]
+    fn delay_matrix_none_only_when_single_shard_populated() {
+        let n = NetworkModel::new(1e-6, 1e8);
+        assert!(n.cross_shard_delay_matrix(&[0, 0, 0]).is_none());
+        assert!(n.cross_shard_delay_matrix(&[]).is_none());
+        assert!(n.cross_shard_delay_matrix(&[0, 0, 1]).is_some());
+        // Gap in shard ids: id 1 unpopulated → its rows/cols are ∞, but the
+        // populated pair is finite and the matrix still exists.
+        let m = n.cross_shard_delay_matrix(&[0, 2, 2]).expect("two populated");
+        assert_eq!(m.shards(), 3);
+        assert!(m.delay(0, 2).is_finite());
+        assert!(m.delay(0, 1).is_infinite() && m.delay(1, 2).is_infinite());
     }
 
     #[test]

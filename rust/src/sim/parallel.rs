@@ -1,41 +1,73 @@
 //! The sharded DES coordinator: conservative time-windowed parallel
 //! execution over `Shard` workers.
 //!
-//! Synchronization protocol (classic conservative / lookahead-based PDES):
+//! Synchronization protocol (classic conservative / lookahead-based PDES,
+//! distance-aware since PR 10):
 //!
 //! 1. partition the P ranks into S contiguous shards
-//!    (`Topology::shard_partition` — node-aligned on clusters);
-//! 2. derive the lookahead L = `NetworkModel::min_cross_shard_delay`, a
-//!    lower bound on the delay of *any* message crossing a shard boundary;
-//! 3. repeat: find the earliest pending event time `t_next` anywhere, run
-//!    every shard concurrently up to the horizon `t_next + L` (strict `<`),
-//!    then exchange the cross-shard flights produced during the window and
-//!    advance.
+//!    (`Topology::shard_partition` — node-aligned on clusters,
+//!    edge-cut-aware on graphs);
+//! 2. precompute the S×S minimum inter-shard delay matrix
+//!    `L = NetworkModel::cross_shard_delay_matrix`: `L[j][i]` lower-bounds
+//!    the delay of *any* message from shard j to shard i (min hops between
+//!    the two blocks × latency, size term at its zero bound);
+//! 3. repeat: snapshot each shard's earliest pending work
+//!    `next_eff[j] = min(local queue next, earliest undelivered inbound
+//!    flight)`, give shard i its own horizon
+//!    `h_i = min_{j≠i} (next_eff[j] + L[j][i])`, run the commanded shards
+//!    concurrently up to their horizons (strict `<`), then exchange the
+//!    cross-shard flights produced during the window and advance.
 //!
-//! Safety: a cross-shard message sent inside the window (at `t ≥ t_next`)
-//! arrives at `t + delay ≥ t_next + L` — at or past the horizon — so no
-//! shard can dispatch an event that a message it has not yet seen could
-//! precede.  Combined with the engine's parallel-stable event keys
+//! Safety, per pair: anything shard j dispatches from here on happens at
+//! `t ≥ next_eff[j]`, so a message it sends to shard i arrives at
+//! `t + delay ≥ next_eff[j] + L[j][i] ≥ h_i` — at or past i's horizon.
+//! Correctly-rounded f64 `+`/`×` are weakly monotone, so the bound
+//! survives rounding bit-exactly, and a strict `< h_i` pop never
+//! dispatches an event a message shard i has not yet seen could precede.
+//! Combined with the engine's parallel-stable event keys
 //! (`emit × P + rank`), every shard dispatches exactly the subsequence of
 //! the single-threaded (time, key) order it owns, and the run is
 //! bit-identical to `SimEngine`: same makespan, same counters, same
-//! fingerprints.  The only intentional deviations: `peak_pending_events`
+//! fingerprints.  The old global protocol (one `t_next + min L` horizon
+//! for everyone) is the special case where every `L[j][i]` is collapsed
+//! to the matrix minimum and every `next_eff[j]` to the global minimum —
+//! kept selectable as `[sim] window = "scalar"` for A/B window counts.
+//!
+//! **Sparse barriers.**  A shard that cannot act this window — its inbox
+//! is empty and its next local event is at or past its horizon — is not
+//! sent a `WindowCmd` at all: its worker stays parked on the channel and
+//! its cached report (next event time, cumulative events, live count)
+//! remains valid because nothing on that shard can have changed.  On
+//! topologies where the hot set is far from the rest, this removes the
+//! per-window wakeup/report round-trip for every idle shard; with the
+//! scalar protocol every shard is commanded every window.  Progress: the
+//! shard holding the globally-earliest work always has
+//! `h_i ≥ t_next + min L > t_next`, so at least one shard is commanded
+//! each window (the degenerate `t + L == t` rounding case at extreme
+//! magnitudes is answered with `SimError::Deadlock` instead of a
+//! livelock).
+//!
+//! The only intentional deviations from the oracle: `peak_pending_events`
 //! is the sum of per-shard peaks (an upper bound on the true global
-//! high-water mark), budget errors are window-granular, and `stop_when`
-//! is unsupported (callers needing early-stop predicates use `SimEngine`).
+//! high-water mark), budget errors are window-granular, `stop_when` is
+//! unsupported (callers needing early-stop predicates use `SimEngine`),
+//! and `SimResult::window` carries the barrier statistics (all-zero from
+//! the single-threaded engine, and excluded from the bit-identity
+//! contract — it describes the execution strategy, not the simulated
+//! system).
 
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use crate::config::Config;
+use crate::config::{Config, WindowMode};
 use crate::core::graph::TaskGraph;
 use crate::core::ids::ProcessId;
 use crate::core::process::{Effect, ProcessParams, ProcessState};
 use crate::metrics::counters::DlbCounters;
 use crate::metrics::recorder::RunTrace;
 use crate::metrics::trace::RunTraces;
-use crate::sim::engine::{SimError, SimResult};
-use crate::sim::network::NetworkModel;
+use crate::sim::engine::{SimError, SimResult, WindowStats};
+use crate::sim::network::{NetworkModel, ShardDelays};
 use crate::sim::shard::{OutFlight, Shard, ShardReport};
 
 /// One barrier-to-barrier work order for a shard worker.
@@ -48,14 +80,24 @@ struct WindowCmd {
 /// dispatch between the two lives in `sim::run_config`.
 pub struct ParallelSimEngine {
     shards: Vec<Shard>,
-    /// Conservative window length (∞ when only one shard is populated —
-    /// then the whole run is a single window and the worker just drains).
+    /// Scalar window length — the delay-matrix minimum (∞ when only one
+    /// shard is populated: the whole run is then a single window and the
+    /// worker just drains).  The `scalar` protocol's only lookahead; the
+    /// `matrix` protocol's progress floor.
     lookahead: f64,
+    /// Per-pair minimum inter-shard delays; `None` iff a single shard is
+    /// populated.
+    delays: Option<ShardDelays>,
+    window_mode: WindowMode,
     p: usize,
     graph: Arc<TaskGraph>,
     flops_per_sec: f64,
     pub max_events: u64,
     pub max_time: f64,
+    /// `WindowCmd`s dispatched to each shard by the last `run()` —
+    /// observability for the sparse-barrier rule (an idle far shard should
+    /// sit near zero while the hot shards track the window count).
+    pub cmds_per_shard: Vec<u64>,
 }
 
 impl ParallelSimEngine {
@@ -67,7 +109,10 @@ impl ParallelSimEngine {
         let shard_of = Arc::new(topo.shard_partition(p, threads));
         let network =
             NetworkModel::with_topology(cfg.net_latency, cfg.doubles_per_sec, topo);
-        let lookahead = network.min_cross_shard_delay(&shard_of).unwrap_or(f64::INFINITY);
+        let delays = network.cross_shard_delay_matrix(&shard_of);
+        // The matrix minimum is bit-identical to the historical
+        // `min_cross_shard_delay` scalar (same min hops, same expression).
+        let lookahead = delays.as_ref().map_or(f64::INFINITY, ShardDelays::min_delay);
         debug_assert!(
             cfg.exec_jitter == 0.0,
             "Config::validate rejects exec_jitter > 0 under sim.threads > 1"
@@ -75,10 +120,16 @@ impl ParallelSimEngine {
         // Shard ids from the partition are contiguous and all populated.
         let n = shard_of.last().map_or(0, |&s| s as usize + 1).max(1);
         let flops_per_sec = params.cost.flops_per_sec;
+        // Single pass over the partition for the block bounds (the ids are
+        // non-decreasing, so each shard owns one contiguous rank interval).
+        let mut counts = vec![0usize; n];
+        for &s in shard_of.iter() {
+            counts[s as usize] += 1;
+        }
         let mut shards = Vec::with_capacity(n);
         let mut lo = 0usize;
-        for sid in 0..n {
-            let hi = shard_of.iter().filter(|&&s| s <= sid as u32).count();
+        for (sid, &count) in counts.iter().enumerate() {
+            let hi = lo + count;
             let procs: Vec<ProcessState> = (lo..hi)
                 .map(|r| {
                     ProcessState::new(
@@ -105,22 +156,29 @@ impl ParallelSimEngine {
         ParallelSimEngine {
             shards,
             lookahead,
+            delays,
+            window_mode: cfg.sim_window,
             p,
             graph,
             flops_per_sec,
             max_events: 500_000_000,
             max_time: f64::INFINITY,
+            cmds_per_shard: vec![0; n],
         }
     }
 
     /// Run to completion; bit-identical results to `SimEngine::run` (see
-    /// module docs for the two intentional deviations).
+    /// module docs for the intentional deviations).
     pub fn run(&mut self) -> Result<SimResult, SimError> {
         let n = self.shards.len();
         let shards_in = std::mem::take(&mut self.shards);
         let lookahead = self.lookahead;
+        let delays = self.delays.clone();
+        let mode = self.window_mode;
         let max_time = self.max_time;
         let max_events = self.max_events;
+        let mut stats = WindowStats::default();
+        let mut cmds_per_shard = vec![0u64; n];
 
         let outcome: Result<(Vec<Shard>, u64), SimError> = std::thread::scope(|scope| {
             let mut cmd_txs: Vec<mpsc::Sender<WindowCmd>> = Vec::with_capacity(n);
@@ -150,30 +208,58 @@ impl ParallelSimEngine {
             }
             drop(shard_tx);
 
+            // Undelivered cross-shard flights per destination, plus the
+            // earliest arrival among them — maintained incrementally as
+            // outboxes are routed (never re-scanned per window).
             let mut pending: Vec<Vec<OutFlight>> = (0..n).map(|_| Vec::new()).collect();
+            let mut pending_min = vec![f64::INFINITY; n];
             let mut nexts: Vec<Option<f64>> = vec![None; n];
             let mut shard_events = vec![0u64; n];
             let mut shard_live = vec![0usize; n];
-            // Post-boot and per-barrier: collect in shard order so routing
-            // is deterministic (keys make pop order independent of it, but
-            // determinism in the transport layer costs nothing).
-            for i in 0..n {
-                let r = rep_rxs[i].recv().expect("shard worker alive");
+            let mut route = |r: ShardReport,
+                             i: usize,
+                             pending: &mut Vec<Vec<OutFlight>>,
+                             pending_min: &mut Vec<f64>,
+                             nexts: &mut Vec<Option<f64>>,
+                             shard_events: &mut Vec<u64>,
+                             shard_live: &mut Vec<usize>| {
                 for (dst, v) in r.outboxes {
+                    for of in &v {
+                        if of.t < pending_min[dst] {
+                            pending_min[dst] = of.t;
+                        }
+                    }
                     pending[dst].extend(v);
                 }
                 nexts[i] = r.next_time;
                 shard_events[i] = r.events;
                 shard_live[i] = r.live;
+            };
+            // Post-boot and per-barrier: collect in shard order so routing
+            // is deterministic (keys make pop order independent of it, but
+            // determinism in the transport layer costs nothing).
+            for (i, rx) in rep_rxs.iter().enumerate() {
+                let r = rx.recv().expect("shard worker alive");
+                route(
+                    r,
+                    i,
+                    &mut pending,
+                    &mut pending_min,
+                    &mut nexts,
+                    &mut shard_events,
+                    &mut shard_live,
+                );
             }
+            let mut horizons = vec![f64::INFINITY; n];
+            let mut commanded = vec![false; n];
             loop {
+                // Earliest pending work anywhere: a shard's local queue or
+                // an undelivered flight parked at the coordinator.
                 let mut t_next = f64::INFINITY;
-                for nt in nexts.iter().flatten() {
-                    t_next = t_next.min(*nt);
-                }
-                for inbox in &pending {
-                    for of in inbox {
-                        t_next = t_next.min(of.t);
+                for i in 0..n {
+                    let eff = nexts[i].unwrap_or(f64::INFINITY).min(pending_min[i]);
+                    if eff < t_next {
+                        t_next = eff;
                     }
                 }
                 if !t_next.is_finite() {
@@ -183,19 +269,90 @@ impl ParallelSimEngine {
                     drop(cmd_txs);
                     return Err(SimError::TimeBudget(t_next));
                 }
-                let horizon = t_next + lookahead;
-                for (i, tx) in cmd_txs.iter().enumerate() {
+                stats.windows += 1;
+                match (mode, &delays) {
+                    (WindowMode::Matrix, Some(d)) => {
+                        // h_i = min over the other shards of the earliest
+                        // time their next send could reach i.
+                        for i in 0..n {
+                            let mut h = f64::INFINITY;
+                            for j in 0..n {
+                                if j == i {
+                                    continue;
+                                }
+                                let eff =
+                                    nexts[j].unwrap_or(f64::INFINITY).min(pending_min[j]);
+                                if eff.is_finite() {
+                                    let bound = eff + d.delay(j, i);
+                                    if bound < h {
+                                        h = bound;
+                                    }
+                                }
+                            }
+                            horizons[i] = h;
+                        }
+                    }
+                    // Scalar protocol, and the single-populated-shard case
+                    // (lookahead ∞): one global horizon for everyone.
+                    _ => {
+                        let h = t_next + lookahead;
+                        if !(h > t_next) {
+                            // t_next + L rounded back onto t_next: no event
+                            // can ever clear the strict `<` pop — report it
+                            // instead of spinning.
+                            drop(cmd_txs);
+                            return Err(SimError::Deadlock {
+                                live: shard_live.iter().sum(),
+                            });
+                        }
+                        horizons.iter_mut().for_each(|hi| *hi = h);
+                    }
+                }
+                let mut sent_any = false;
+                for i in 0..n {
+                    // Sparse barrier: nothing to deliver and nothing the
+                    // shard could pop below its horizon — the cached report
+                    // is still exact, skip the round-trip.  (Matrix mode
+                    // only: the scalar protocol is kept faithful to the
+                    // original all-shards barrier for A/B comparison.)
+                    let skip = mode == WindowMode::Matrix
+                        && pending[i].is_empty()
+                        && nexts[i].map_or(true, |t| t >= horizons[i]);
+                    commanded[i] = !skip;
+                    if skip {
+                        stats.cmds_skipped += 1;
+                        continue;
+                    }
                     let inbox = std::mem::take(&mut pending[i]);
-                    tx.send(WindowCmd { horizon, inbox }).expect("shard worker alive");
+                    pending_min[i] = f64::INFINITY;
+                    cmd_txs[i]
+                        .send(WindowCmd { horizon: horizons[i], inbox })
+                        .expect("shard worker alive");
+                    stats.cmds_sent += 1;
+                    cmds_per_shard[i] += 1;
+                    sent_any = true;
+                }
+                if !sent_any {
+                    // Every horizon rounded onto its shard's next event
+                    // (possible only at extreme time magnitudes): no
+                    // command can make progress.
+                    drop(cmd_txs);
+                    return Err(SimError::Deadlock { live: shard_live.iter().sum() });
                 }
                 for i in 0..n {
-                    let r = rep_rxs[i].recv().expect("shard worker alive");
-                    for (dst, v) in r.outboxes {
-                        pending[dst].extend(v);
+                    if !commanded[i] {
+                        continue;
                     }
-                    nexts[i] = r.next_time;
-                    shard_events[i] = r.events;
-                    shard_live[i] = r.live;
+                    let r = rep_rxs[i].recv().expect("shard worker alive");
+                    route(
+                        r,
+                        i,
+                        &mut pending,
+                        &mut pending_min,
+                        &mut nexts,
+                        &mut shard_events,
+                        &mut shard_live,
+                    );
                 }
                 let events: u64 = shard_events.iter().sum();
                 if events > max_events {
@@ -214,8 +371,10 @@ impl ParallelSimEngine {
         });
 
         let (shards, events) = outcome?;
-        let result = Self::collect(self.p, &self.graph, self.flops_per_sec, &shards, events);
+        let result =
+            Self::collect(self.p, &self.graph, self.flops_per_sec, &shards, events, stats);
         self.shards = shards;
+        self.cmds_per_shard = cmds_per_shard;
         Ok(result)
     }
 
@@ -226,6 +385,7 @@ impl ParallelSimEngine {
         flops_per_sec: f64,
         shards: &[Shard],
         events: u64,
+        window: WindowStats,
     ) -> SimResult {
         let mut traces = RunTraces::new(p);
         let mut counters = DlbCounters::default();
@@ -265,6 +425,7 @@ impl ParallelSimEngine {
             events_processed: events,
             peak_pending_events: peak,
             utilization,
+            window,
         }
     }
 }
@@ -272,6 +433,7 @@ impl ParallelSimEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::TopologyKind;
     use crate::core::graph::GraphBuilder;
     use crate::core::task::TaskKind;
     use crate::sim::engine::SimEngine;
@@ -315,7 +477,28 @@ mod tests {
             let par = ParallelSimEngine::from_config(&cfg, g).run().expect("parallel");
             assert_bit_identical(&par, &single);
             assert!(par.counters.tasks_exported > 0, "work must migrate across shards");
+            assert!(par.window.windows > 0 && par.window.cmds_sent > 0, "stats recorded");
+            assert_eq!(single.window, WindowStats::default(), "oracle has no windows");
         }
+    }
+
+    #[test]
+    fn scalar_window_mode_is_bit_identical_and_never_sparse() {
+        let (mut cfg, g) = bag_cfg(32, 4, 7, 2);
+        cfg.sim_window = WindowMode::Scalar;
+        let single = {
+            let mut c1 = cfg.clone();
+            c1.sim_threads = 1;
+            SimEngine::from_config(&c1, Arc::clone(&g)).run().expect("single")
+        };
+        let par = ParallelSimEngine::from_config(&cfg, g).run().expect("parallel");
+        assert_bit_identical(&par, &single);
+        assert_eq!(par.window.cmds_skipped, 0, "scalar barriers are dense");
+        assert_eq!(
+            par.window.cmds_sent,
+            par.window.windows * 2,
+            "every shard commanded every window"
+        );
     }
 
     #[test]
@@ -380,5 +563,104 @@ mod tests {
         let par = ParallelSimEngine::from_config(&cfg, g).run().expect("parallel");
         assert_bit_identical(&par, &single);
         assert!(par.makespan > 0.0);
+    }
+
+    /// Chain of `len` tasks alternating between two home ranks.
+    fn chain_graph(a: u32, b_rank: u32, len: usize) -> Arc<TaskGraph> {
+        let mut b = GraphBuilder::new();
+        let mut prev = None;
+        for i in 0..len {
+            let home = ProcessId(if i % 2 == 0 { a } else { b_rank });
+            let d = b.data(home, 64, 64);
+            let args = match prev {
+                Some(pd) => vec![pd],
+                None => vec![],
+            };
+            b.task(TaskKind::Synthetic, args, d, 1_000_000, None);
+            prev = Some(d);
+        }
+        b.build()
+    }
+
+    /// Headline property of the distance-aware protocol: strictly fewer
+    /// coordinator windows than the scalar-L barrier on a multi-hop
+    /// topology at 3 shards, with bit-identical results.  The chain lives
+    /// entirely inside shard 0, so under matrix horizons the idle shards
+    /// never constrain it (`min` over the *other* shards is unbounded) and
+    /// it drains in one command; the scalar protocol crawls forward one
+    /// 2 µs lookahead at a time.
+    #[test]
+    fn matrix_mode_takes_fewer_windows_than_scalar() {
+        let mut cfg = Config::default();
+        cfg.processes = 12;
+        cfg.topology = TopologyKind::Ring;
+        cfg.dlb_enabled = false;
+        cfg.sim_threads = 3;
+        cfg.validate().expect("valid");
+        let g = chain_graph(0, 1, 10); // both homes in shard 0 = ranks [0..4)
+        let single = {
+            let mut c1 = cfg.clone();
+            c1.sim_threads = 1;
+            SimEngine::from_config(&c1, Arc::clone(&g)).run().expect("single")
+        };
+        let matrix =
+            ParallelSimEngine::from_config(&cfg, Arc::clone(&g)).run().expect("matrix");
+        let scalar = {
+            let mut c2 = cfg.clone();
+            c2.sim_window = WindowMode::Scalar;
+            ParallelSimEngine::from_config(&c2, g).run().expect("scalar")
+        };
+        assert_bit_identical(&matrix, &single);
+        assert_bit_identical(&scalar, &single);
+        assert!(
+            matrix.window.windows < scalar.window.windows,
+            "matrix {} windows vs scalar {}",
+            matrix.window.windows,
+            scalar.window.windows
+        );
+        assert!(matrix.window.cmds_skipped > 0, "idle shards must be skipped");
+        assert_eq!(scalar.window.cmds_skipped, 0);
+        assert_eq!(scalar.window.cmds_sent, scalar.window.windows * 3);
+    }
+
+    /// Sparse-barrier rule, observed per shard: a ping-pong chain between
+    /// shards 0 and 1 keeps them commanded nearly every window, while the
+    /// far idle shard 2 is only woken for the terminal shutdown flights —
+    /// and the run still terminates with oracle-identical results.
+    #[test]
+    fn idle_far_shard_is_skipped_while_ping_pong_terminates() {
+        let mut cfg = Config::default();
+        cfg.processes = 12;
+        cfg.topology = TopologyKind::Ring;
+        cfg.dlb_enabled = false;
+        cfg.sim_threads = 3;
+        cfg.validate().expect("valid");
+        // Shards on ring-12: ranks [0..4), [4..8), [8..12).  The chain
+        // alternates ranks 3 and 4 — every hand-off crosses shards 0↔1.
+        let g = chain_graph(3, 4, 10);
+        let single = {
+            let mut c1 = cfg.clone();
+            c1.sim_threads = 1;
+            SimEngine::from_config(&c1, Arc::clone(&g)).run().expect("single")
+        };
+        let mut eng = ParallelSimEngine::from_config(&cfg, g);
+        let par = eng.run().expect("parallel");
+        assert_bit_identical(&par, &single);
+        assert!(par.window.cmds_skipped > 0, "far shard must be skipped");
+        let cmds = &eng.cmds_per_shard;
+        assert!(
+            cmds[2] < cmds[0] && cmds[2] < cmds[1],
+            "far shard commanded {} times vs hot shards {}/{}",
+            cmds[2],
+            cmds[0],
+            cmds[1]
+        );
+        assert!(
+            cmds[2] * 2 < par.window.windows,
+            "far shard woken {} of {} windows",
+            cmds[2],
+            par.window.windows
+        );
+        assert!(cmds[2] > 0, "the shutdown broadcast still reaches shard 2");
     }
 }

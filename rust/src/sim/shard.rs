@@ -41,6 +41,10 @@ enum FlightRef {
 }
 
 /// Per-window report a worker hands the coordinator at the barrier.
+/// Everything here is cumulative or a snapshot of quiescent state, so the
+/// coordinator may reuse a cached report across windows in which the shard
+/// was not commanded (the sparse-barrier rule): an uncommanded shard
+/// cannot change any of these fields.
 #[derive(Debug)]
 pub(crate) struct ShardReport {
     /// Earliest pending local event, `None` when this shard is drained.
@@ -264,10 +268,13 @@ impl Shard {
     }
 
     /// Enqueue the window's cross-shard arrivals and dispatch every local
-    /// event strictly before `horizon`.  Conservative safety: any event
-    /// dispatched here can only be affected by cross-shard messages sent at
-    /// `t ≥ t_window`, which arrive at `≥ t_window + lookahead = horizon` —
-    /// and those are exactly the ones held back by the strict `<`.
+    /// event strictly before `horizon`.  Conservative safety: the
+    /// coordinator picked `horizon` so that anything another shard j can
+    /// still send this shard arrives at
+    /// `≥ next_eff_j + L[j][me] ≥ horizon` (per-pair matrix lookahead; the
+    /// scalar protocol is the same bound collapsed to the global minimum) —
+    /// those are exactly the events held back by the strict `<`.  The
+    /// shard never needs to know which protocol produced the number.
     pub(crate) fn run_window(
         &mut self,
         horizon: f64,

@@ -17,7 +17,7 @@
 
 use std::sync::Arc;
 
-use ductr::config::{Config, PolicyKind};
+use ductr::config::{Config, PolicyKind, WindowMode};
 use ductr::core::graph::{GraphBuilder, TaskGraph};
 use ductr::core::ids::ProcessId;
 use ductr::core::process::{Effect, ProcessParams, ProcessState};
@@ -223,27 +223,31 @@ fn parallel_engine_matches_single_thread_fingerprints_for_every_policy() {
         for adaptive in [false, true] {
             let cfg = cfg_for(policy, adaptive, 1);
             let single = SimEngine::from_config(&cfg, bag_graph(24)).run().expect("single");
-            let mut pcfg = cfg.clone();
-            pcfg.sim_threads = 2;
-            pcfg.validate().expect("valid");
-            let par = ductr::sim::run_config(&pcfg, bag_graph(24)).expect("sharded");
-            let tag = format!("{policy} (adaptive {adaptive})");
-            assert_eq!(
-                par.makespan.to_bits(),
-                single.makespan.to_bits(),
-                "{tag}: makespan diverged across engines"
-            );
-            assert_eq!(
-                par.end_time.to_bits(),
-                single.end_time.to_bits(),
-                "{tag}: end time diverged across engines"
-            );
-            assert_eq!(par.events_processed, single.events_processed, "{tag}: event count");
-            assert_eq!(par.counters, single.counters, "{tag}: aggregate counters");
-            assert_eq!(
-                par.per_process_counters, single.per_process_counters,
-                "{tag}: per-rank counters"
-            );
+            // Both barrier protocols must land on the oracle's bits.
+            for window in [WindowMode::Matrix, WindowMode::Scalar] {
+                let mut pcfg = cfg.clone();
+                pcfg.sim_threads = 2;
+                pcfg.sim_window = window;
+                pcfg.validate().expect("valid");
+                let par = ductr::sim::run_config(&pcfg, bag_graph(24)).expect("sharded");
+                let tag = format!("{policy} (adaptive {adaptive}, window {window})");
+                assert_eq!(
+                    par.makespan.to_bits(),
+                    single.makespan.to_bits(),
+                    "{tag}: makespan diverged across engines"
+                );
+                assert_eq!(
+                    par.end_time.to_bits(),
+                    single.end_time.to_bits(),
+                    "{tag}: end time diverged across engines"
+                );
+                assert_eq!(par.events_processed, single.events_processed, "{tag}: event count");
+                assert_eq!(par.counters, single.counters, "{tag}: aggregate counters");
+                assert_eq!(
+                    par.per_process_counters, single.per_process_counters,
+                    "{tag}: per-rank counters"
+                );
+            }
         }
     }
 }

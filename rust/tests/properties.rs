@@ -8,7 +8,7 @@ use std::collections::BinaryHeap;
 use std::sync::Arc;
 
 use ductr::apps::{bag, rand_dag};
-use ductr::config::{Config, PolicyKind, Strategy, TopologyKind};
+use ductr::config::{Config, PolicyKind, Strategy, TopologyKind, WindowMode};
 use ductr::core::graph::TaskGraph;
 use ductr::core::ids::ProcessId;
 use ductr::dlb::policy::SosParams;
@@ -719,30 +719,75 @@ fn prop_sharded_engine_bit_identical_to_single_thread() {
         let single = SimEngine::from_config(&cfg, Arc::clone(&g))
             .run()
             .map_err(|e| format!("{s:?}: single: {e}"))?;
-        let mut pcfg = cfg.clone();
-        pcfg.sim_threads = s.shards.min(s.base.processes);
-        pcfg.validate().map_err(|e| format!("{s:?}: {e}"))?;
-        let par = ductr::sim::run_config(&pcfg, g).map_err(|e| format!("{s:?}: sharded: {e}"))?;
-        if par.makespan.to_bits() != single.makespan.to_bits() {
-            return Err(format!(
-                "{s:?}: makespan diverged ({} vs {})",
-                par.makespan, single.makespan
-            ));
+        // Both barrier protocols — the distance-aware per-shard horizons
+        // with sparse barriers (Matrix) and the legacy global-minimum
+        // lookahead (Scalar) — must reproduce the oracle bit-for-bit on
+        // every policy × topology × shard-count draw.
+        let shards = s.shards.min(s.base.processes);
+        // Block rounding can populate fewer shards than requested (e.g.
+        // 5 ranks over 4 shards → blocks of 2 → 3 shards); the command
+        // accounting below needs the count the engine actually built.
+        let part = cfg.build_topology().shard_partition(s.base.processes, shards);
+        let built = part.iter().copied().max().map_or(1u64, |m| m as u64 + 1);
+        let mut stats = Vec::new();
+        for mode in [WindowMode::Matrix, WindowMode::Scalar] {
+            let mut pcfg = cfg.clone();
+            pcfg.sim_threads = shards;
+            pcfg.sim_window = mode;
+            pcfg.validate().map_err(|e| format!("{s:?}: {e}"))?;
+            let par = ductr::sim::run_config(&pcfg, Arc::clone(&g))
+                .map_err(|e| format!("{s:?} [{mode}]: sharded: {e}"))?;
+            if par.makespan.to_bits() != single.makespan.to_bits() {
+                return Err(format!(
+                    "{s:?} [{mode}]: makespan diverged ({} vs {})",
+                    par.makespan, single.makespan
+                ));
+            }
+            if par.events_processed != single.events_processed {
+                return Err(format!(
+                    "{s:?} [{mode}]: event count diverged ({} vs {})",
+                    par.events_processed, single.events_processed
+                ));
+            }
+            if par.counters != single.counters {
+                return Err(format!(
+                    "{s:?} [{mode}]: aggregate counters diverged\n  sharded {:?}\n  single  {:?}",
+                    par.counters, single.counters
+                ));
+            }
+            if par.per_process_counters != single.per_process_counters {
+                return Err(format!("{s:?} [{mode}]: per-process counters diverged"));
+            }
+            stats.push(par.window);
         }
-        if par.events_processed != single.events_processed {
-            return Err(format!(
-                "{s:?}: event count diverged ({} vs {})",
-                par.events_processed, single.events_processed
-            ));
-        }
-        if par.counters != single.counters {
-            return Err(format!(
-                "{s:?}: aggregate counters diverged\n  sharded {:?}\n  single  {:?}",
-                par.counters, single.counters
-            ));
-        }
-        if par.per_process_counters != single.per_process_counters {
-            return Err(format!("{s:?}: per-process counters diverged"));
+        let (matrix, scalar) = (stats[0], stats[1]);
+        if shards > 1 {
+            // Window-stat consistency: every window classifies each shard
+            // as commanded or skipped; the scalar protocol never skips;
+            // per-pair horizons dominate the global one, so the matrix
+            // protocol never needs more windows.
+            for (mode, w) in [("matrix", matrix), ("scalar", scalar)] {
+                if w.windows == 0 {
+                    return Err(format!("{s:?} [{mode}]: sharded run recorded no windows"));
+                }
+                if w.cmds_sent + w.cmds_skipped != w.windows * built {
+                    return Err(format!(
+                        "{s:?} [{mode}]: {} sent + {} skipped != {} windows x {built} shards",
+                        w.cmds_sent, w.cmds_skipped, w.windows
+                    ));
+                }
+            }
+            if scalar.cmds_skipped != 0 {
+                return Err(format!("{s:?}: scalar protocol skipped {} cmds", scalar.cmds_skipped));
+            }
+            if matrix.windows > scalar.windows {
+                return Err(format!(
+                    "{s:?}: matrix took {} windows, scalar {}",
+                    matrix.windows, scalar.windows
+                ));
+            }
+        } else if matrix != Default::default() || scalar != Default::default() {
+            return Err(format!("{s:?}: single-shard run recorded window stats"));
         }
         Ok(())
     });
