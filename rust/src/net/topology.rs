@@ -288,11 +288,25 @@ impl Topology {
                     if i == j {
                         continue;
                     }
-                    // Unreached or out-of-shape destination: `hops` answers
-                    // a plain total 1 for such ranks.
                     let h = match cell_of(r) {
-                        Some(c) if dist[c] != u32::MAX => dist[c].max(1),
-                        _ => 1,
+                        // Out-of-shape destination: `hops` answers a plain
+                        // total 1 for such ranks.
+                        None => 1,
+                        Some(c) => {
+                            // An in-shape cell is always reachable: the
+                            // ring/torus cell graphs are connected by
+                            // construction and `GraphTopo::from_edges`
+                            // rejects disconnected graphs — an unreached
+                            // cell is a broken invariant, not a distance
+                            // (and `u32::MAX` stays "no such message",
+                            // never a silent 1).
+                            debug_assert!(
+                                dist[c] != u32::MAX,
+                                "in-shape cell {c} unreachable from shard {j}: \
+                                 disconnected topology"
+                            );
+                            dist[c].max(1)
+                        }
                     };
                     let e = &mut m[j * n + i];
                     *e = (*e).min(h);

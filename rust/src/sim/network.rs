@@ -74,39 +74,94 @@ impl NetworkModel {
     }
 
     /// Per-pair generalization of [`Self::min_cross_shard_delay`]: the S×S
-    /// minimum delay matrix `L[j][i]` = (min hops between shard j's and
-    /// shard i's blocks) × latency, size term at its zero lower bound.  Each
-    /// entry is a safe per-pair lookahead under the identical monotonicity
-    /// argument — a message shard j sends at `t ≥ next_j` to shard i arrives
-    /// at `t + delay ≥ next_j + L[j][i]`, so shard i may run strictly below
-    /// `min_j≠i (next_j + L[j][i])`.  Every entry ≥ the scalar bound, and
-    /// the matrix minimum equals it bit-exactly (same `hops.max(1) as f64 ×
-    /// latency` expression over the same minimum).  `None` when fewer than
-    /// two shards are populated.
+    /// minimum delay matrix `D[j][i]` = (**metric closure** of the min hops
+    /// between shard blocks) × latency, size term at its zero lower bound.
+    ///
+    /// The raw block-min matrix from
+    /// [`Topology::cross_partition_hops_matrix`] lower-bounds *direct*
+    /// sends only, and it need not satisfy the triangle inequality (a
+    /// gateway shard with one rank near shard j's block and another near
+    /// shard i's can have `L[j][k] + L[k][i] < L[j][i]`).  The horizon
+    /// safety argument in `sim::parallel` must also cover *relayed* chains
+    /// — j wakes k, k's induced send reaches i — whose total delay is a
+    /// path sum, so each entry is closed over paths with Floyd–Warshall
+    /// before use: `D[j][i] = min over shard paths of Σ hops`.  The
+    /// closure runs on exact integer hops (S ≤ thread count, so S³ is
+    /// trivial) and only then converts with the same single
+    /// `hops as f64 × latency` rounding the scalar bound uses; a chain's
+    /// simulated arrival accumulates `t ← fl(t + delay_m)` with every
+    /// `delay_m ≥ fl(hops_m × latency)`, which weak monotonicity keeps at
+    /// or above `fl(next_j + D[j][i])` in the non-degenerate regime the
+    /// engine operates in (the `t + L == t` extreme-magnitude corner is
+    /// answered by its Deadlock guard).
+    ///
+    /// Alongside the matrix, [`ShardDelays::echo`] gives each shard the
+    /// closed round-trip bound `min_j≠i (D[i][j] + D[j][i])` — the
+    /// earliest a chain *provoked by shard i's own sends* can return to i.
+    /// `sim::parallel` caps every horizon with it; without the cap a
+    /// shard whose peers are all drained would get an unbounded horizon
+    /// and simulate past the replies its own outbox will provoke.
+    ///
+    /// Every entry ≥ the scalar bound (closure path sums are sums of
+    /// entries ≥ the minimum), and the matrix minimum equals it
+    /// bit-exactly (the minimum entry cannot be shortened by a two-leg
+    /// path of entries each ≥ it).  `None` when fewer than two shards are
+    /// populated.
     pub fn cross_shard_delay_matrix(&self, shard_of: &[u32]) -> Option<ShardDelays> {
         let hops = self.topology.cross_partition_hops_matrix(shard_of)?;
         let n = (hops.len() as f64).sqrt() as usize;
         debug_assert_eq!(n * n, hops.len());
-        let delays = hops
+        // Metric closure in exact integer arithmetic; u64 so `MAX`
+        // (unpopulated, relays nothing) needs no overflow care.
+        let mut h: Vec<u64> = hops
+            .iter()
+            .map(|&x| if x == u32::MAX { u64::MAX } else { x as u64 })
+            .collect();
+        for k in 0..n {
+            for j in 0..n {
+                let hjk = h[j * n + k];
+                if hjk == u64::MAX {
+                    continue;
+                }
+                for i in 0..n {
+                    let hki = h[k * n + i];
+                    if hki != u64::MAX && hjk + hki < h[j * n + i] {
+                        h[j * n + i] = hjk + hki;
+                    }
+                }
+            }
+        }
+        let to_delay = |x: u64| {
+            if x == u64::MAX {
+                // Unpopulated shard id: no rank can send from / to it,
+                // so it never constrains a horizon.
+                f64::INFINITY
+            } else {
+                x.max(1) as f64 * self.latency
+            }
+        };
+        let delays: Vec<f64> = h
             .iter()
             .enumerate()
-            .map(|(k, &h)| {
-                if k / n == k % n {
-                    0.0
-                } else if h == u32::MAX {
-                    // Unpopulated shard id: no rank can send from / to it,
-                    // so it never constrains a horizon.
-                    f64::INFINITY
-                } else {
-                    h.max(1) as f64 * self.latency
+            .map(|(k, &x)| if k / n == k % n { 0.0 } else { to_delay(x) })
+            .collect();
+        let echo: Vec<f64> = (0..n)
+            .map(|i| {
+                let mut best = u64::MAX;
+                for j in 0..n {
+                    if j != i && h[i * n + j] != u64::MAX && h[j * n + i] != u64::MAX {
+                        best = best.min(h[i * n + j] + h[j * n + i]);
+                    }
                 }
+                to_delay(best)
             })
             .collect();
-        Some(ShardDelays { n, delays })
+        Some(ShardDelays { n, delays, echo })
     }
 }
 
-/// Row-major S×S minimum inter-shard delay matrix (seconds), produced by
+/// Row-major S×S minimum inter-shard delay matrix (seconds, metric-closed
+/// over shard paths), produced by
 /// [`NetworkModel::cross_shard_delay_matrix`].  Diagonal 0, unpopulated
 /// pairs `+∞`, all other entries strictly positive whenever latency is
 /// (enforced by `Config::validate` for `--sim-threads > 1`).
@@ -114,6 +169,8 @@ impl NetworkModel {
 pub struct ShardDelays {
     n: usize,
     delays: Vec<f64>,
+    /// Per-shard round-trip bound `min_j≠i (D[i][j] + D[j][i])`.
+    echo: Vec<f64>,
 }
 
 impl ShardDelays {
@@ -122,9 +179,17 @@ impl ShardDelays {
         self.n
     }
 
-    /// Minimum delay of any message shard `from` can send to shard `to`.
+    /// Minimum delay of any message chain originating in shard `from` —
+    /// direct or relayed through other shards — that can reach shard `to`.
     pub fn delay(&self, from: usize, to: usize) -> f64 {
         self.delays[from * self.n + to]
+    }
+
+    /// Minimum round trip leaving shard `i` and returning: a lower bound
+    /// on how long after its own earliest send a reply it provokes can
+    /// arrive back.  `+∞` when no other shard is populated.
+    pub fn echo(&self, i: usize) -> f64 {
+        self.echo[i]
     }
 
     /// The matrix minimum over off-diagonal populated pairs — bit-identical
@@ -251,36 +316,100 @@ mod tests {
         }
     }
 
+    /// Reference closure: O(P²) block-min over all rank pairs, then
+    /// Floyd–Warshall over the S×S integer hops — the oracle for what
+    /// `cross_shard_delay_matrix` must produce.
+    fn brute_closed_hops(t: &Topology, shard_of: &[u32], n: usize) -> Vec<u64> {
+        let mut h = vec![u64::MAX; n * n];
+        (0..n).for_each(|s| h[s * n + s] = 0);
+        for (a, &sa) in shard_of.iter().enumerate() {
+            for (b, &sb) in shard_of.iter().enumerate() {
+                if sa != sb {
+                    let e = &mut h[sa as usize * n + sb as usize];
+                    *e = (*e).min(
+                        t.hops(ProcessId(a as u32), ProcessId(b as u32)).max(1) as u64,
+                    );
+                }
+            }
+        }
+        for k in 0..n {
+            for j in 0..n {
+                for i in 0..n {
+                    if h[j * n + k] != u64::MAX && h[k * n + i] != u64::MAX {
+                        let via = h[j * n + k] + h[k * n + i];
+                        if via < h[j * n + i] {
+                            h[j * n + i] = via;
+                        }
+                    }
+                }
+            }
+        }
+        h
+    }
+
     #[test]
     fn delay_matrix_separates_far_ring_blocks() {
         // Ring of 16 in 4 contiguous blocks of 4: adjacent blocks touch at
-        // 1 hop, opposite blocks ([0..4) vs [8..12)) are 5 hops apart — the
-        // per-pair win the scalar bound cannot see.
+        // 1 hop; opposite blocks ([0..4) vs [8..12)) are 5 hops apart
+        // pairwise, closed to 2 via either adjacent block — a relayed
+        // chain really can bridge them in two 1-hop legs, so 2 is the
+        // honest lookahead, and it still doubles the scalar bound.
         let t = Topology::Ring { len: 16 };
         let n = NetworkModel::with_topology(1e-6, 1e8, t.clone());
         let shard_of = t.shard_partition(16, 4);
         let m = n.cross_shard_delay_matrix(&shard_of).expect("populated");
         assert!((m.delay(0, 1) - 1e-6).abs() < 1e-18);
-        assert!((m.delay(0, 2) - 5e-6).abs() < 1e-18, "far pair: {}", m.delay(0, 2));
-        assert!((m.delay(1, 3) - 5e-6).abs() < 1e-18);
-        // And every entry is exactly min-over-pairs hops × latency.
+        assert!((m.delay(0, 2) - 2e-6).abs() < 1e-18, "far pair: {}", m.delay(0, 2));
+        assert!((m.delay(1, 3) - 2e-6).abs() < 1e-18);
+        assert!(m.delay(0, 2) > m.delay(0, 1), "distance separation survives closure");
+        // And every entry is exactly the closed min-hops × latency.
+        let closed = brute_closed_hops(&t, &shard_of, 4);
         for j in 0..4 {
             for i in 0..4 {
                 if i == j {
                     continue;
                 }
-                let mut best = u32::MAX;
-                for a in 0..16u32 {
-                    for b in 0..16u32 {
-                        if shard_of[a as usize] == j as u32 && shard_of[b as usize] == i as u32 {
-                            best = best.min(t.hops(ProcessId(a), ProcessId(b)).max(1));
-                        }
-                    }
-                }
-                let want = best as f64 * 1e-6;
+                let want = closed[j * 4 + i] as f64 * 1e-6;
                 assert_eq!(m.delay(j, i).to_bits(), want.to_bits(), "({j},{i})");
             }
         }
+    }
+
+    #[test]
+    fn delay_matrix_is_metric_closed_with_echo_bounds() {
+        use crate::net::graph::GraphTopo;
+        use std::sync::Arc;
+        // Path graph 0-1-…-8 in 3 blocks of 3: the raw block-min matrix
+        // violates the triangle inequality (L(0,2) = d(2,6) = 4 while
+        // L(0,1) + L(1,2) = 1 + 1 = 2) — exactly the gateway-relay case
+        // the closure exists for.
+        let edges: Vec<(usize, usize)> = (0..8).map(|i| (i, i + 1)).collect();
+        let t = Topology::Graph(Arc::new(GraphTopo::from_edges(9, &edges, "path9").unwrap()));
+        let lat = 1e-6;
+        let nm = NetworkModel::with_topology(lat, 1e8, t.clone());
+        let shard_of = vec![0u32, 0, 0, 1, 1, 1, 2, 2, 2];
+        let m = nm.cross_shard_delay_matrix(&shard_of).expect("populated");
+        assert_eq!(m.delay(0, 1).to_bits(), lat.to_bits());
+        assert_eq!(m.delay(0, 2).to_bits(), (2.0 * lat).to_bits(), "closed via the gateway");
+        for j in 0..3 {
+            for k in 0..3 {
+                for i in 0..3 {
+                    assert!(
+                        m.delay(j, i) <= m.delay(j, k) + m.delay(k, i) + 1e-18,
+                        "triangle violated at ({j},{k},{i})"
+                    );
+                }
+            }
+        }
+        // echo(i) = min round trip through any other shard.
+        assert_eq!(m.echo(0).to_bits(), (2.0 * lat).to_bits());
+        assert_eq!(m.echo(1).to_bits(), (2.0 * lat).to_bits());
+        assert_eq!(m.echo(2).to_bits(), (2.0 * lat).to_bits());
+        // Single populated peer gone: echo is unbounded only when no other
+        // shard is populated — and then the whole matrix is None anyway.
+        let gapped = nm.cross_shard_delay_matrix(&[0, 2, 2]).expect("two populated");
+        assert!(gapped.echo(1).is_infinite(), "unpopulated id echoes nothing");
+        assert!(gapped.echo(0).is_finite() && gapped.echo(2).is_finite());
     }
 
     #[test]

@@ -8,28 +8,41 @@
 //!    (`Topology::shard_partition` — node-aligned on clusters,
 //!    edge-cut-aware on graphs);
 //! 2. precompute the S×S minimum inter-shard delay matrix
-//!    `L = NetworkModel::cross_shard_delay_matrix`: `L[j][i]` lower-bounds
-//!    the delay of *any* message from shard j to shard i (min hops between
-//!    the two blocks × latency, size term at its zero bound);
+//!    `D = NetworkModel::cross_shard_delay_matrix`: the block-min hop
+//!    distances **metric-closed over shard paths** (Floyd–Warshall on
+//!    exact integer hops) × latency, size term at its zero bound — so
+//!    `D[j][i]` lower-bounds the total delay of any message *chain*
+//!    originating in shard j that reaches shard i, relays through gateway
+//!    shards included, not just direct sends;
 //! 3. repeat: snapshot each shard's earliest pending work
 //!    `next_eff[j] = min(local queue next, earliest undelivered inbound
 //!    flight)`, give shard i its own horizon
-//!    `h_i = min_{j≠i} (next_eff[j] + L[j][i])`, run the commanded shards
-//!    concurrently up to their horizons (strict `<`), then exchange the
-//!    cross-shard flights produced during the window and advance.
+//!    `h_i = min( min_{j≠i} (next_eff[j] + D[j][i]),
+//!                next_eff[i] + min_{j≠i} (D[i][j] + D[j][i]) )`,
+//!    run the commanded shards concurrently up to their horizons
+//!    (strict `<`), then exchange the cross-shard flights produced during
+//!    the window and advance.
 //!
-//! Safety, per pair: anything shard j dispatches from here on happens at
-//! `t ≥ next_eff[j]`, so a message it sends to shard i arrives at
-//! `t + delay ≥ next_eff[j] + L[j][i] ≥ h_i` — at or past i's horizon.
-//! Correctly-rounded f64 `+`/`×` are weakly monotone, so the bound
-//! survives rounding bit-exactly, and a strict `< h_i` pop never
-//! dispatches an event a message shard i has not yet seen could precede.
-//! Combined with the engine's parallel-stable event keys
+//! Safety, per chain: any event that can still arrive at shard i starts
+//! from some shard s's pending work at `t ≥ next_eff[s]` and traverses
+//! shards `s → k₁ → … → i`, each leg paying at least its pairwise bound,
+//! so by the closure's triangle inequality it arrives at
+//! `≥ next_eff[s] + D[s][i]` when `s ≠ i`.  A chain shard i *itself*
+//! provokes (s = i) must leave and come back, paying at least the closed
+//! round trip through some peer — the echo term, which is why the horizon
+//! carries it: without the cap, a shard whose peers are all drained
+//! (`next_eff[j] = ∞`, e.g. DLB off with every remote task awaiting
+//! cross-shard data) would get an unbounded horizon and simulate past the
+//! replies its own outbox is about to provoke.  Correctly-rounded f64
+//! `+`/`×` are weakly monotone, so the bounds survive rounding
+//! bit-exactly in the engine's operating regime, and a strict `< h_i` pop
+//! never dispatches an event a message shard i has not yet seen could
+//! precede.  Combined with the engine's parallel-stable event keys
 //! (`emit × P + rank`), every shard dispatches exactly the subsequence of
 //! the single-threaded (time, key) order it owns, and the run is
 //! bit-identical to `SimEngine`: same makespan, same counters, same
 //! fingerprints.  The old global protocol (one `t_next + min L` horizon
-//! for everyone) is the special case where every `L[j][i]` is collapsed
+//! for everyone) is the special case where every `D[j][i]` is collapsed
 //! to the matrix minimum and every `next_eff[j]` to the global minimum —
 //! kept selectable as `[sim] window = "scalar"` for A/B window counts.
 //!
@@ -273,9 +286,16 @@ impl ParallelSimEngine {
                 match (mode, &delays) {
                     (WindowMode::Matrix, Some(d)) => {
                         // h_i = min over the other shards of the earliest
-                        // time their next send could reach i.
+                        // time their next send could reach i, capped by the
+                        // self-echo bound: a chain *provoked by shard i's
+                        // own sends* leaves at ≥ eff_i and pays at least the
+                        // closed round trip before a reply can return, a
+                        // constraint the j≠i terms cannot see when the
+                        // other shards are drained (eff_j = ∞).
                         for i in 0..n {
-                            let mut h = f64::INFINITY;
+                            let eff_i =
+                                nexts[i].unwrap_or(f64::INFINITY).min(pending_min[i]);
+                            let mut h = eff_i + d.echo(i);
                             for j in 0..n {
                                 if j == i {
                                     continue;
@@ -565,6 +585,51 @@ mod tests {
         assert!(par.makespan > 0.0);
     }
 
+    /// Regression for the unbounded-horizon / self-echo bug: shard 1
+    /// starts drained (its only task waits on cross-shard data, DLB off),
+    /// so without the echo cap shard 0's horizon is ∞ at the first barrier
+    /// and it simulates its entire independent local chain before the
+    /// reply its own send provokes (A → B on the far shard → C back home)
+    /// has arrived.  C then executes "in the past" on a rank the oracle
+    /// keeps busy until well after C's arrival, and the makespan diverges.
+    #[test]
+    fn echo_capped_horizon_keeps_cross_shard_replies_causal() {
+        let mut cfg = Config::default();
+        cfg.processes = 2;
+        cfg.dlb_enabled = false;
+        cfg.sim_threads = 2;
+        cfg.validate().expect("valid");
+        let mut b = GraphBuilder::new();
+        // Ping-pong: A (rank 0) → B (rank 1) → C (rank 0).
+        let da = b.data(ProcessId(0), 64, 64);
+        b.task(TaskKind::Synthetic, vec![], da, 1_000_000, None);
+        let db = b.data(ProcessId(1), 64, 64);
+        b.task(TaskKind::Synthetic, vec![da], db, 1_000_000, None);
+        let dc = b.data(ProcessId(0), 64, 64);
+        b.task(TaskKind::Synthetic, vec![db], dc, 1_000_000, None);
+        // Independent serial chain keeping rank 0 busy long past C's
+        // arrival — the work the reply must interleave with.
+        let mut prev = None;
+        for _ in 0..10 {
+            let d = b.data(ProcessId(0), 64, 64);
+            let args = match prev {
+                Some(pd) => vec![pd],
+                None => vec![],
+            };
+            b.task(TaskKind::Synthetic, args, d, 1_000_000, None);
+            prev = Some(d);
+        }
+        let g = b.build();
+        let single = {
+            let mut c1 = cfg.clone();
+            c1.sim_threads = 1;
+            SimEngine::from_config(&c1, Arc::clone(&g)).run().expect("single")
+        };
+        let par = ParallelSimEngine::from_config(&cfg, g).run().expect("parallel");
+        assert_bit_identical(&par, &single);
+        assert!(par.window.windows > 1, "echo cap must bound the first window");
+    }
+
     /// Chain of `len` tasks alternating between two home ranks.
     fn chain_graph(a: u32, b_rank: u32, len: usize) -> Arc<TaskGraph> {
         let mut b = GraphBuilder::new();
@@ -585,10 +650,11 @@ mod tests {
     /// Headline property of the distance-aware protocol: strictly fewer
     /// coordinator windows than the scalar-L barrier on a multi-hop
     /// topology at 3 shards, with bit-identical results.  The chain lives
-    /// entirely inside shard 0, so under matrix horizons the idle shards
-    /// never constrain it (`min` over the *other* shards is unbounded) and
-    /// it drains in one command; the scalar protocol crawls forward one
-    /// 2 µs lookahead at a time.
+    /// entirely inside shard 0, so under matrix horizons the drained idle
+    /// shards never constrain it — only the self-echo cap does, which is
+    /// a full round trip (2 hops) wide and swallows each link's local
+    /// delivery in the same window; the scalar protocol crawls forward
+    /// one 2 µs lookahead at a time, splitting every link in two.
     #[test]
     fn matrix_mode_takes_fewer_windows_than_scalar() {
         let mut cfg = Config::default();

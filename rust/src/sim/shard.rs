@@ -282,6 +282,16 @@ impl Shard {
         effects: &mut Vec<Effect>,
     ) {
         for of in inbox {
+            // Inbox flights enter the calendar directly (their event key
+            // was minted sender-side), bypassing `push()` — so restate its
+            // invariant here: a horizon-protocol bug otherwise dispatches
+            // time-travelling events and regresses `self.now` silently.
+            debug_assert!(
+                of.t >= self.now,
+                "cross-shard arrival in the past: {} < {}",
+                of.t,
+                self.now
+            );
             let slot = self.stash_flight(of.flight);
             self.queue.push(of.t, of.key, EventKind::Deliver { slot });
         }
@@ -423,6 +433,36 @@ mod tests {
         assert_eq!(shard.pending(), 0);
         assert_eq!(shard.live, 0, "Shutdown halts the rank");
         assert_eq!(shard.now, horizon);
+    }
+
+    /// The protocol invariant the coordinator's horizons exist to uphold:
+    /// no flight may be delivered behind a shard's dispatch frontier.  A
+    /// horizon bug that breaks it must fail fast in debug builds, not
+    /// silently regress `now`.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "cross-shard arrival in the past")]
+    fn inbox_flight_behind_now_panics_in_debug() {
+        let mut shard = lone_shard();
+        let mut effects = Vec::new();
+        let mk = |t: f64, key: u64| OutFlight {
+            t,
+            key,
+            flight: Flight::sent(
+                Envelope {
+                    from: ProcessId(0),
+                    to: ProcessId(1),
+                    msg: Msg::Shutdown,
+                    wire_doubles: 0,
+                },
+                0.0,
+            ),
+        };
+        // Advance the frontier to 4 µs…
+        shard.run_window(1e-5, vec![mk(4e-6, 0)], &mut effects);
+        assert_eq!(shard.now, 4e-6);
+        // …then a later window delivers a flight dated before it.
+        shard.run_window(1e-4, vec![mk(2e-6, 2)], &mut effects);
     }
 
     #[test]
